@@ -1,0 +1,83 @@
+//! Fig 9 scaled reproduction: the LRA-style long-sequence suite.
+//!
+//! Trains the long-sequence encoder (dense vs Pixelfly) on each of the
+//! five synthetic LRA tasks, reporting accuracy and step time, plus the
+//! cost-model projection of the attention speedup at paper scale
+//! (including the Reformer-style bucketing baseline, which is measured on
+//! the Rust substrate since its mask is not static).
+//!
+//! Run: `cargo run --release --example lra_suite -- [--steps 60]`
+
+use anyhow::Result;
+use pixelfly::coordinator::{TrainConfig, Trainer};
+use pixelfly::costmodel::{attention_cost, Device};
+use pixelfly::data::lra::LraTask;
+use pixelfly::patterns::{baselines, BlockMask};
+use pixelfly::runtime::{artifacts_dir, Engine};
+use pixelfly::util::{Args, Rng};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 60);
+    let presets = ["lra_dense_train", "lra_pixelfly_train"];
+
+    let mut table: Vec<(String, Vec<f64>, f64)> = presets
+        .iter()
+        .map(|p| (p.to_string(), Vec::new(), 0.0))
+        .collect();
+
+    for task in LraTask::all() {
+        for (pi, preset) in presets.iter().enumerate() {
+            let mut engine = Engine::new(&artifacts_dir())?;
+            let cfg = TrainConfig {
+                preset: preset.to_string(),
+                steps,
+                lr: args.f32_or("lr", 1e-3),
+                warmup: steps / 10,
+                log_every: steps.max(1),
+                eval_batches: args.usize_or("eval-batches", 6),
+                seed: args.u64_or("seed", 0),
+                lra_task: Some(task),
+            };
+            let mut trainer = Trainer::new(&mut engine, cfg)?;
+            let r = trainer.train()?;
+            let acc = r.final_eval.map(|e| e.accuracy).unwrap_or(f64::NAN);
+            println!("{:<20} {:<12} acc={acc:.3} step={:.1}ms", preset, task.name(),
+                     r.step_time.as_ref().unwrap().mean_ms());
+            table[pi].1.push(acc);
+            table[pi].2 += r.step_time.as_ref().unwrap().mean_ms();
+        }
+    }
+
+    println!("\n=== Fig 9 (scaled): LRA-style suite ===");
+    print!("{:<20}", "model");
+    for t in LraTask::all() {
+        print!(" {:>10}", t.name());
+    }
+    println!(" {:>8} {:>12}", "avg", "step-sum(ms)");
+    for (name, accs, ms) in &table {
+        print!("{name:<20}");
+        for a in accs {
+            print!(" {a:>10.3}");
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        println!(" {avg:>8.3} {ms:>12.1}");
+    }
+
+    // cost-model projection at paper scale (seq 4096, block 32)
+    println!("\ncost-model attention speedup at paper scale (seq=4096, b=32, d=64):");
+    let dev = Device::with_block(32);
+    let nb = 4096 / 32;
+    let dense = attention_cost(&BlockMask::ones(nb, nb), 32, 64, 8, &dev);
+    let pix = attention_cost(&baselines::pixelfly_attention_mask(nb, 4, 1), 32, 64, 8, &dev);
+    let mut rng = Rng::new(0);
+    let reformer_mask = baselines::reformer_bucket_mask(nb, 8, &mut rng);
+    // reformer pays hashing + irregular gather: model as 2x the mask cost
+    let reformer = attention_cost(&reformer_mask, 32, 64, 8, &dev);
+    println!("  pixelfly: {:.1}x   reformer-like: {:.2}x (before 2x gather penalty: {:.2}x)",
+             dense.total / pix.total,
+             dense.total / (2.0 * reformer.total),
+             dense.total / reformer.total);
+    println!("  (paper Fig 9: Pixelfly 5.2x, Reformer 0.8x)");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Appendix I reproduction: budget allocation across the paper's model zoo.
+//!
+//! For every preset schema, compare the §3.3 rule of thumb against the
+//! Appendix-I closed-form/waterfilling allocator, show the per-layer
+//! densities, and the projected end-to-end speedup — including the §5.3
+//! ablation that sparsifying only attention (or only MLP) caps the
+//! speedup.
+//!
+//! Run: `cargo run --release --example plan_budget`
+
+use anyhow::Result;
+use pixelfly::coordinator::budget::{self, Allocation};
+use pixelfly::coordinator::planner;
+use pixelfly::costmodel::Device;
+use pixelfly::models::{self, LayerType};
+use pixelfly::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let budget_frac = args.f64_or("budget", 0.1);
+    let block = args.usize_or("block", 32);
+    let dev = Device::with_block(block);
+
+    println!("=== Appendix I: allocation across the model zoo (budget {:.0}%) ===",
+             budget_frac * 100.0);
+    println!("{:<14} {:>10} {:>12} {:>12} {:>12}",
+             "model", "params(M)", "thumb spd", "closed spd", "plan dens");
+    for name in ["mixer-s16", "mixer-b16", "vit-s16", "vit-b16", "gpt2-small",
+                 "gpt2-medium"] {
+        let schema = models::preset(name, 32).unwrap();
+        let thumb = budget::rule_of_thumb(&schema, budget_frac, &dev);
+        let opt = budget::cost_optimal(&schema, budget_frac, &dev);
+        let plan = planner::plan_model(&schema, &thumb, block);
+        println!("{:<14} {:>10.1} {:>11.2}x {:>11.2}x {:>12.3}",
+                 name,
+                 schema.total_params() as f64 / 1e6,
+                 budget::projected_speedup(&schema, &thumb, &dev),
+                 budget::projected_speedup(&schema, &opt, &dev),
+                 plan.total_density);
+    }
+
+    // §5.3 ablation: single-component sparsification
+    println!("\n=== §5.3 ablation: sparsify one component only (vit-s16) ===");
+    let schema = models::preset("vit-s16", 32).unwrap();
+    let fractions = schema.compute_fractions(&dev);
+    println!("compute fractions:");
+    for (lt, f) in &fractions {
+        println!("  {:<12} {:>6.1}%", lt.name(), f * 100.0);
+    }
+    let mk = |attn: f64, mlp: f64| Allocation {
+        densities: vec![
+            (LayerType::AttnProj, attn),
+            (LayerType::AttnScore, attn),
+            (LayerType::Mlp, mlp),
+            (LayerType::TokenMix, mlp),
+        ],
+        lowrank_share: 0.25,
+    };
+    let both = budget::rule_of_thumb(&schema, budget_frac, &dev);
+    println!("\n{:<28} {:>10}", "strategy", "speedup");
+    for (name, alloc) in [
+        ("attention only @ 10%", mk(0.1, 1.0)),
+        ("MLP only @ 10%", mk(1.0, 0.1)),
+        ("balanced (rule of thumb)", both),
+    ] {
+        println!("{:<28} {:>9.2}x", name,
+                 budget::projected_speedup(&schema, &alloc, &dev));
+    }
+    println!("\n(paper: only sparsifying one of attention/MLP leaves the other\n\
+              as the bottleneck — balanced allocation gives ~2x over that)");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: the smallest end-to-end tour of the public API.
+//!
+//! 1. Plan a sparsity budget for a model schema (pure Rust, no artifacts).
+//! 2. Inspect the flat-butterfly mask the plan selects.
+//! 3. Load the PJRT engine and train a Pixelfly mixer for a few steps.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once, for step 3; steps 1–2 always work.)
+
+use anyhow::Result;
+use pixelfly::coordinator::{budget, planner, TrainConfig, Trainer};
+use pixelfly::costmodel::Device;
+use pixelfly::models;
+use pixelfly::patterns::flat_butterfly_mask;
+use pixelfly::runtime::{artifacts_dir, Engine};
+
+fn main() -> Result<()> {
+    // --- 1. budget allocation (paper §3.3 step 1) -------------------------
+    let dev = Device::with_block(32);
+    let schema = models::preset("vit-s16", 32).unwrap();
+    let alloc = budget::rule_of_thumb(&schema, 0.1, &dev);
+    println!("vit-s16 @ 10% budget:");
+    for (lt, d) in &alloc.densities {
+        println!("  {:<12} density {:.3}", lt.name(), d);
+    }
+    println!("  projected speedup {:.2}x\n",
+             budget::projected_speedup(&schema, &alloc, &dev));
+
+    // --- 2. mask selection (paper §3.3 step 2) ----------------------------
+    let plan = planner::plan_layer(
+        pixelfly::models::LayerType::Mlp, 512, 512, 32, 0.2, 0.25);
+    println!("512x512 MLP @ 20%: max_stride={} rank={} achieved={:.3}",
+             plan.max_stride, plan.rank, plan.achieved_density);
+    let mask = flat_butterfly_mask(16, plan.max_stride.min(16));
+    println!("flat butterfly mask (16 blocks/side, {} nnz blocks):", mask.nnz());
+    for i in 0..16 {
+        let row: String = (0..16).map(|j| if mask.get(i, j) { '#' } else { '.' }).collect();
+        println!("  {row}");
+    }
+
+    // --- 3. train a few steps through the PJRT engine ---------------------
+    let dir = artifacts_dir();
+    if !dir.join("manifest.rtxt").exists() {
+        println!("\n(artifacts not built — run `make artifacts` to enable training)");
+        return Ok(());
+    }
+    let mut engine = Engine::new(&dir)?;
+    let cfg = TrainConfig {
+        preset: "mixer_s_pixelfly".into(),
+        steps: 10,
+        eval_batches: 2,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&mut engine, cfg)?;
+    let report = trainer.train()?;
+    println!("\n{}", report.summary_line());
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Fig 13 reproduction: speed–accuracy tradeoff as the Pixelfly budget
+//! varies, plus the §5.3 low-rank/butterfly split ablation.
+//!
+//! Accuracy comes from short PJRT training runs of the Pixelfly mixer at
+//! different effective budgets (via training-step counts at fixed
+//! pattern — the lowered artifacts fix the pattern, so the density axis
+//! is swept with the cost model while the accuracy axis checks that the
+//! fixed-pattern model matches its dense counterpart at matched steps).
+//!
+//! Run: `cargo run --release --example tradeoff_sweep -- [--steps 80]`
+
+use anyhow::Result;
+use pixelfly::coordinator::{budget, TrainConfig, Trainer};
+use pixelfly::costmodel::Device;
+use pixelfly::models;
+use pixelfly::patterns::butterfly::{flat_butterfly_nnz_blocks, max_stride_for_budget};
+use pixelfly::runtime::{artifacts_dir, Engine};
+use pixelfly::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 80);
+
+    // --- density -> projected speedup curve (the x-axis of Fig 13) -------
+    println!("=== Fig 13 x-axis: density -> projected speedup (mixer-b16) ===");
+    let dev = Device::with_block(32);
+    let schema = models::preset("mixer-b16", 32).unwrap();
+    println!("{:>10} {:>12}", "density", "speedup");
+    for budget_frac in [0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0] {
+        let alloc = budget::rule_of_thumb(&schema, budget_frac, &dev);
+        println!("{budget_frac:>10.2} {:>11.2}x",
+                 budget::projected_speedup(&schema, &alloc, &dev));
+    }
+
+    // --- §5.3 ablation: low-rank vs butterfly split at fixed budget ------
+    println!("\n=== §5.3: budget split between low-rank and butterfly ===");
+    let nb = 24usize; // 768/32
+    let total_budget = nb * nb / 5; // 20% density
+    println!("{:>14} {:>12} {:>12}", "lowrank share", "rank/32", "max_stride");
+    for share in [0.0, 0.25, 0.33, 0.5, 0.75] {
+        let lr_blocks = (share * total_budget as f64) as usize;
+        let rank_units = lr_blocks / (2 * nb); // U and V columns in blocks
+        let bf_budget = total_budget - lr_blocks;
+        let ms = max_stride_for_budget(nb.next_power_of_two() / 2, bf_budget.max(1));
+        println!("{share:>14.2} {rank_units:>12} {ms:>12}");
+    }
+    println!("(paper finds 1/4 low-rank + 3/4 butterfly best for accuracy)");
+
+    // --- accuracy check at matched steps (dense vs pixelfly) -------------
+    if artifacts_dir().join("manifest.rtxt").exists() && !args.bool("no-train") {
+        println!("\n=== accuracy at matched steps ({steps} steps) ===");
+        for preset in ["mixer_s_dense", "mixer_s_pixelfly"] {
+            let mut engine = Engine::new(&artifacts_dir())?;
+            let cfg = TrainConfig {
+                preset: preset.into(),
+                steps,
+                eval_batches: 8,
+                ..Default::default()
+            };
+            let mut t = Trainer::new(&mut engine, cfg)?;
+            let r = t.train()?;
+            println!("{:<20} acc={:.3} loss={:.4} params={}",
+                     preset,
+                     r.final_eval.map(|e| e.accuracy).unwrap_or(f64::NAN),
+                     r.final_loss(),
+                     r.param_count);
+        }
+    }
+    Ok(())
+}

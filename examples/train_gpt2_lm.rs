@@ -1,0 +1,60 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): train the
+//! GPT-2-style decoder — dense vs Pixelfly — on the synthetic Markov
+//! corpus for a few hundred steps through the full stack (Rust loop →
+//! PJRT train-step executable → Pallas-lowered block-sparse GEMMs), log
+//! both loss curves, and report tokens/sec + perplexity.
+//!
+//! Run: `cargo run --release --example train_gpt2_lm -- [--steps 300]`
+//! Results are recorded in EXPERIMENTS.md (Fig 8 scaled reproduction).
+
+use anyhow::Result;
+use pixelfly::coordinator::{TrainConfig, Trainer};
+use pixelfly::runtime::{artifacts_dir, Engine};
+use pixelfly::util::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 300);
+    let presets = args.str_or("presets", "gpt2_s_dense,gpt2_s_pixelfly,gpt2_s_bigbird");
+
+    let mut results = Vec::new();
+    for preset in presets.split(',') {
+        let mut engine = Engine::new(&artifacts_dir())?;
+        let cfg = TrainConfig {
+            preset: preset.trim().into(),
+            steps,
+            lr: args.f32_or("lr", 3e-3),
+            warmup: steps / 10,
+            log_every: (steps / 20).max(1),
+            eval_batches: args.usize_or("eval-batches", 8),
+            seed: args.u64_or("seed", 0),
+            lra_task: None,
+        };
+        println!("=== training {preset} for {steps} steps ===");
+        let mut trainer = Trainer::new(&mut engine, cfg)?;
+        let r = trainer.train()?;
+        println!("{}", r.summary_line());
+        println!("loss curve:\n{}", r.curve_tsv());
+        results.push(r);
+    }
+
+    println!("\n=== Fig 8 (scaled): WikiText-103 -> synthetic Markov corpus ===");
+    println!("{:<22} {:>8} {:>10} {:>12} {:>14}",
+             "model", "ppl", "step(ms)", "tokens/s", "params");
+    let base = results
+        .first()
+        .and_then(|r| r.step_time.as_ref())
+        .map(|s| s.mean_ns)
+        .unwrap_or(1.0);
+    for r in &results {
+        let ppl = r.final_eval.map(|e| e.perplexity()).unwrap_or(f64::NAN);
+        let st = r.step_time.as_ref().unwrap();
+        println!("{:<22} {:>8.2} {:>10.1} {:>12.0} {:>14} ({:.2}x)",
+                 r.preset, ppl, st.mean_ms(), r.throughput, r.param_count,
+                 base / st.mean_ns);
+    }
+    println!("\n(paper: GPT-2-Small 22.2 ppl; Pixelfly 22.5 ppl at 2.1x — here the\n\
+              comparison is ppl parity at matched steps + params/FLOPs reduction;\n\
+              wall-clock on CPU-PJRT is testbed-specific, see EXPERIMENTS.md)");
+    Ok(())
+}

@@ -1,0 +1,318 @@
+"""AOT driver: lower every (model x pattern) entry point to HLO text.
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator
+then loads `artifacts/*.hlo.txt` via the xla crate's PJRT CPU client and
+never calls back into Python.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+For every artifact we also emit:
+  - the initial state (params/opt-state leaves) as a raw little-endian
+    .bin blob per leaf under artifacts/state/<artifact>/<leaf-index>.bin
+  - a manifest entry recording the flat input/output signature (names,
+    shapes, dtypes in pytree flatten order) so Rust can build PJRT
+    literals without re-tracing anything.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--preset NAME ...]
+        [--full]   (--full adds the larger bench presets)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers, model as model_lib, train as train_lib
+from .kernels import block_sparse as _bs
+
+# CPU-PJRT artifacts lower the BSR contraction through the XLA-native
+# gather+einsum backend (perf pass; the Pallas kernels remain the
+# TPU-shaped path and the pytest correctness target — see
+# kernels/block_sparse.py::set_backend).
+_bs.set_backend("xla")
+
+DT_NAME = {np.dtype("float32"): "f32", np.dtype("int32"): "s32"}
+
+
+def to_hlo_text(fn, *example_args) -> str:
+    # keep_unused=True: the Rust side feeds EVERY manifest input, so the
+    # lowered program must keep the full signature even if jax would prune
+    # arguments that do not reach the outputs (e.g. opt-state leaves of
+    # frozen layers).
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_sig(path, leaf):
+    name = "/".join(str(getattr(k, "key", k)) for k in path)
+    arr = np.asarray(leaf)
+    return {"name": name, "shape": list(arr.shape),
+            "dtype": DT_NAME[arr.dtype]}
+
+
+def flat_signature(tree) -> list[dict]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [_leaf_sig(p, l) for p, l in leaves]
+
+
+def out_signature(fn, *args) -> list[dict]:
+    shapes = jax.eval_shape(fn, *args)
+    leaves = jax.tree_util.tree_leaves(shapes)
+    return [{"shape": list(l.shape), "dtype": DT_NAME[np.dtype(l.dtype)]}
+            for l in leaves]
+
+
+# ---------------------------------------------------------------------------
+# Presets: the model zoo of DESIGN.md's experiment index
+# ---------------------------------------------------------------------------
+
+def _mk(family, variant, **kw):
+    base = dict(family=family, variant=variant)
+    base.update(kw)
+    return model_lib.ModelConfig(**base)
+
+# Scaled-down stand-ins for the paper's model zoo (repro band 0: CPU-PJRT
+# testbed; dims are block-aligned and configurable upward).
+VISION = dict(d_model=128, n_layers=2, n_heads=4, seq_len=64, in_dim=48,
+              n_classes=10, block=8, max_stride=4, attn_max_stride=4)
+LM = dict(d_model=128, n_layers=2, n_heads=4, seq_len=128, in_dim=0,
+          n_classes=512, block=8, max_stride=4, attn_max_stride=4)
+LRA = dict(d_model=64, n_layers=1, n_heads=2, seq_len=512, in_dim=16,
+           n_classes=8, block=32, max_stride=2, attn_max_stride=2,
+           attn_global_blocks=1)
+NTK_TINY = dict(d_model=64, n_layers=1, n_heads=2, seq_len=32, in_dim=24,
+                n_classes=10, block=8, max_stride=2, attn_max_stride=2)
+
+PRESETS: dict[str, dict] = {
+    # --- vision training (Fig 5 / Fig 6 / Table 8) ---
+    "mixer_s_dense":    {"cfg": _mk("mixer", "dense", **VISION), "batch": 32,
+                         "entries": ["train_step", "forward_eval"]},
+    "mixer_s_pixelfly": {"cfg": _mk("mixer", "pixelfly", **VISION), "batch": 32,
+                         "entries": ["train_step", "forward_eval"]},
+    "mixer_s_random":   {"cfg": _mk("mixer", "random", **VISION), "batch": 32,
+                         "entries": ["train_step", "forward_eval"]},
+    "mixer_s_butterfly": {"cfg": _mk("mixer", "butterfly_product",
+                                     mlp_ratio=1, **VISION), "batch": 32,
+                          "entries": ["train_step", "forward_eval"]},
+    "vit_s_dense":      {"cfg": _mk("vit", "dense", **VISION), "batch": 32,
+                         "entries": ["train_step", "forward_eval"]},
+    "vit_s_pixelfly":   {"cfg": _mk("vit", "pixelfly", **VISION), "batch": 32,
+                         "entries": ["train_step", "forward_eval"]},
+    "vit_s_bigbird":    {"cfg": _mk("vit", "bigbird", attn_pattern="bigbird",
+                                    **VISION), "batch": 32,
+                         "entries": ["train_step", "forward_eval"]},
+    # --- language modeling (Fig 8), also the e2e driver ---
+    "gpt2_s_dense":     {"cfg": _mk("gpt2", "dense", attn_pattern="dense", **LM),
+                         "batch": 8, "entries": ["train_step", "forward_eval"]},
+    "gpt2_s_pixelfly":  {"cfg": _mk("gpt2", "pixelfly", **LM), "batch": 8,
+                         "entries": ["train_step", "forward_eval"]},
+    "gpt2_s_bigbird":   {"cfg": _mk("gpt2", "bigbird", attn_pattern="bigbird",
+                                    **LM), "batch": 8,
+                         "entries": ["train_step", "forward_eval"]},
+    # --- NTK comparison (Fig 4): one tiny ViT per candidate pattern ---
+    "ntk_dense":     {"cfg": _mk("vit", "dense", attn_pattern="dense",
+                                 **NTK_TINY), "batch": 32, "entries": ["ntk_gram"]},
+    "ntk_pixelfly":  {"cfg": _mk("vit", "pixelfly", **NTK_TINY), "batch": 32,
+                      "entries": ["ntk_gram"]},
+    "ntk_bigbird":   {"cfg": _mk("vit", "bigbird", attn_pattern="bigbird",
+                                 **NTK_TINY), "batch": 32, "entries": ["ntk_gram"]},
+    "ntk_random":    {"cfg": _mk("vit", "random", attn_pattern="random",
+                                 **NTK_TINY), "batch": 32, "entries": ["ntk_gram"]},
+    "ntk_lowrank":   {"cfg": _mk("vit", "lowrank", attn_pattern="local",
+                                 **NTK_TINY), "batch": 32, "entries": ["ntk_gram"]},
+    "ntk_local":     {"cfg": _mk("vit", "local", attn_pattern="local",
+                                 **NTK_TINY), "batch": 32, "entries": ["ntk_gram"]},
+}
+
+FULL_PRESETS: dict[str, dict] = {
+    # --- LRA-style long-sequence classification (Fig 9) — eval/bench with
+    #     the Pallas attention kernel actually skipping blocks ---
+    "lra_dense":    {"cfg": _mk("vit", "dense", attn_pattern="dense",
+                                kernel_attn=True, **LRA), "batch": 4,
+                     "entries": ["forward_eval"]},
+    "lra_pixelfly": {"cfg": _mk("vit", "pixelfly", kernel_attn=True, **LRA),
+                     "batch": 4, "entries": ["forward_eval"]},
+    "lra_pixelfly_train": {"cfg": _mk("vit", "pixelfly", **LRA), "batch": 4,
+                           "entries": ["train_step"]},
+    "lra_dense_train": {"cfg": _mk("vit", "dense", attn_pattern="dense", **LRA),
+                        "batch": 4, "entries": ["train_step"]},
+    # --- Fig 7: attention-bottleneck model (T2T-style long seq encoder) ---
+    "t2t_dense":    {"cfg": _mk("vit", "dense", attn_pattern="dense",
+                                kernel_attn=True, d_model=64, n_layers=1,
+                                n_heads=2, seq_len=256, in_dim=16,
+                                n_classes=10, block=16), "batch": 8,
+                     "entries": ["forward_eval"]},
+    "t2t_pixelfly": {"cfg": _mk("vit", "pixelfly", kernel_attn=True,
+                                d_model=64, n_layers=1, n_heads=2, seq_len=256,
+                                in_dim=16, n_classes=10, block=16,
+                                attn_max_stride=2), "batch": 8,
+                     "entries": ["forward_eval"]},
+    "t2t_bigbird":  {"cfg": _mk("vit", "bigbird", attn_pattern="bigbird",
+                                kernel_attn=True, d_model=64, n_layers=1,
+                                n_heads=2, seq_len=256, in_dim=16,
+                                n_classes=10, block=16), "batch": 8,
+                     "entries": ["forward_eval"]},
+    "t2t_sparsetrans": {"cfg": _mk("vit", "random",
+                                   attn_pattern="sparse_transformer",
+                                   kernel_attn=True, d_model=64, n_layers=1,
+                                   n_heads=2, seq_len=256, in_dim=16,
+                                   n_classes=10, block=16), "batch": 8,
+                        "entries": ["forward_eval"]},
+}
+
+
+def build_artifact(name: str, spec: dict, out_dir: str, state_dir: str,
+                   manifest: dict) -> None:
+    cfg = spec["cfg"]
+    batch = spec["batch"]
+    template = model_lib.init_model(cfg, seed=0)
+    stripped = layers.strip_static(template)
+    fns = train_lib.make_fns(cfg, template)
+    x, y = train_lib.example_batch(cfg, batch)
+    m0, v0 = train_lib.init_opt_state(stripped)
+    step0 = np.int32(0)
+    lr0 = np.float32(1e-3)
+
+    n_leaves = len(jax.tree_util.tree_leaves(stripped))
+    for entry in spec["entries"]:
+        fn = fns[entry]
+        if entry == "train_step":
+            args = (stripped, m0, v0, step0, lr0, x, y)
+        elif entry == "forward_eval":
+            args = (stripped, x, y)
+        else:  # ntk_gram
+            args = (stripped, x)
+        t0 = time.time()
+        hlo = to_hlo_text(fn, *args)
+        fname = f"{name}.{entry}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        manifest["artifacts"][f"{name}.{entry}"] = {
+            "file": fname,
+            "entry": entry,
+            "preset": name,
+            "batch": batch,
+            "inputs": flat_signature(args),
+            "outputs": out_signature(fn, *args),
+            "n_param_leaves": n_leaves,
+            "config": dataclasses.asdict(cfg),
+            "param_count": model_lib.param_count(stripped),
+            "flops_fwd": model_lib.flops_estimate(cfg, batch),
+        }
+        print(f"  {name}.{entry}: {len(hlo)/1e6:.2f} MB HLO "
+              f"({time.time()-t0:.1f}s)")
+
+    # initial state blobs (params in pytree flatten order)
+    sdir = os.path.join(state_dir, name)
+    os.makedirs(sdir, exist_ok=True)
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(stripped)):
+        np.asarray(leaf).tofile(os.path.join(sdir, f"param_{i:04d}.bin"))
+    manifest["states"][name] = {
+        "dir": f"state/{name}",
+        "param_leaves": flat_signature(stripped),
+    }
+
+
+def write_rtxt(manifest: dict, path: str) -> None:
+    """Line-based manifest for the Rust loader (no JSON parser needed).
+
+    Format (tab-separated):
+        artifact\t<key>\t<file>\t<entry>\t<preset>\t<batch>\t<n_param_leaves>\t<param_count>\t<flops_fwd>
+        in\t<name>\t<dtype>\t<dims space-separated, empty for scalar>
+        out\t<dtype>\t<dims>
+        cfg\t<field>\t<value>            (model config fields)
+        state\t<preset>\t<dir>\t<n_leaves>
+    Artifact blocks are introduced by their `artifact` line; `in`/`out`/
+    `cfg` lines apply to the most recent artifact.
+    """
+    with open(path, "w") as f:
+        for key, a in manifest["artifacts"].items():
+            f.write(f"artifact\t{key}\t{a['file']}\t{a['entry']}\t{a['preset']}"
+                    f"\t{a['batch']}\t{a['n_param_leaves']}\t{a['param_count']}"
+                    f"\t{a['flops_fwd']}\n")
+            for i in a["inputs"]:
+                dims = " ".join(str(d) for d in i["shape"])
+                f.write(f"in\t{i['name']}\t{i['dtype']}\t{dims}\n")
+            for o in a["outputs"]:
+                dims = " ".join(str(d) for d in o["shape"])
+                f.write(f"out\t{o['dtype']}\t{dims}\n")
+            for ck, cv in a["config"].items():
+                f.write(f"cfg\t{ck}\t{cv}\n")
+        for preset, s in manifest["states"].items():
+            f.write(f"state\t{preset}\t{s['dir']}\t{len(s['param_leaves'])}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", action="append", default=None,
+                    help="build only these presets (repeatable)")
+    ap.add_argument("--full", action="store_true",
+                    help="also build the larger bench presets")
+    # legacy single-file mode kept for the Makefile stamp
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    state_dir = os.path.join(out_dir, "state")
+    os.makedirs(state_dir, exist_ok=True)
+
+    zoo = dict(PRESETS)
+    if args.full:
+        zoo.update(FULL_PRESETS)
+    if args.preset:
+        all_presets = {**PRESETS, **FULL_PRESETS}
+        zoo = {k: all_presets[k] for k in args.preset}
+
+    manifest = {"artifacts": {}, "states": {}, "version": 1}
+    mpath = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(mpath):
+        try:
+            manifest = json.load(open(mpath))
+        except Exception:
+            pass
+
+    t0 = time.time()
+    failures = []
+    for name, spec in zoo.items():
+        print(f"[aot] building {name} ...")
+        try:
+            build_artifact(name, spec, out_dir, state_dir, manifest)
+        except Exception as e:  # keep going; report at the end
+            failures.append((name, repr(e)))
+            print(f"  FAILED: {e!r}")
+        # checkpoint the manifest after every preset so crashes lose nothing
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+        write_rtxt(manifest, os.path.join(out_dir, "manifest.rtxt"))
+    if failures:
+        print(f"[aot] {len(failures)} preset(s) failed: {failures}")
+        raise SystemExit(1)
+    # stamp file so Make can dependency-track the whole batch
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write(f"# artifact batch stamp {time.time()}\n")
+    print(f"[aot] done: {len(manifest['artifacts'])} artifacts "
+          f"in {time.time()-t0:.1f}s -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

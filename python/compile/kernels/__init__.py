@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for Pixelated Butterfly.
+
+Modules:
+    ref            pure-jnp oracles (the correctness ground truth)
+    block_sparse   BSR GEMM + custom VJP + tiled dense GEMM (hot path)
+    flat_butterfly flat block butterfly patterns / layer on top of BSR
+    butterfly      sequential block-butterfly product baseline (Eq. 1)
+    lowrank        low-rank term + combined Pixelfly GEMM
+    attention      block-sparse flash-style attention kernel
+"""
+
+from . import attention, block_sparse, butterfly, flat_butterfly, lowrank, ref  # noqa: F401

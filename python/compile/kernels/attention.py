@@ -1,0 +1,139 @@
+"""Block-sparse attention Pallas kernel (paper §3.3 + Appendix I.2).
+
+Attention score/softmax/value restricted to a static block mask — in
+Pixelfly the mask is flat-block-butterfly ∪ a block-aligned "global" stripe
+(the restricted low-rank form of Appendix I.2: a width-w horizontal +
+vertical global band has rank ≤ 2w).
+
+Kernel shape: flash-attention-style streaming softmax over only the visible
+key blocks of each query block row.  Grid = (heads, sq/b); each program
+holds one [b, d] query block in VMEM and walks its `s` visible key/value
+blocks with a fori_loop, maintaining the running (max, sum, acc) triple —
+the TPU analogue of the paper's threadblock-per-row GPU schedule, with the
+HBM→VMEM key/value streaming expressed by dynamic slices.
+
+Causal masking (for the GPT-2 decoder) is applied inside the kernel with an
+index comparison so the same visible-block table serves both directions.
+
+The backward pass for training uses the masked-dense reference
+(`ref.block_sparse_attention`), which is mathematically identical; this
+kernel is the inference/forward hot path and the numerics oracle target.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from . import block_sparse as bs
+
+
+def attention_block_mask(n_blocks: int, max_stride: int, global_blocks: int,
+                         causal: bool = False) -> np.ndarray:
+    """Pixelfly attention mask: flat butterfly ∪ global rows/cols.
+
+    `global_blocks` leading block rows AND columns are fully visible (the
+    block-aligned low-rank stripe of Appendix I.2).  If `causal`, the mask
+    is intersected with the block-level lower triangle (blocks strictly
+    above the diagonal removed; diagonal blocks keep intra-block causal
+    masking at score time).
+    """
+    mask = ref.flat_butterfly_block_mask(n_blocks, max_stride)
+    if global_blocks > 0:
+        mask[:global_blocks, :] = True
+        mask[:, :global_blocks] = True
+    if causal:
+        keep = np.tril(np.ones((n_blocks, n_blocks), dtype=bool))
+        mask &= keep
+    return mask
+
+
+def _attn_kernel(cols_ref, valid_ref, q_ref, k_ref, v_ref, o_ref, *,
+                 s: int, b: int, scale: float, causal: bool):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale  # [b, d]
+    d = q.shape[-1]
+    neg = jnp.float32(-1e30)
+
+    def body(t, carry):
+        m_prev, l_prev, acc = carry
+        j = cols_ref[t]
+        kblk = k_ref[pl.dslice(j * b, b), :].astype(jnp.float32)   # [b, d]
+        vblk = v_ref[pl.dslice(j * b, b), :].astype(jnp.float32)   # [b, d]
+        scores = jnp.dot(q, kblk.T)                                # [b, b]
+        ok = valid_ref[t] > 0
+        scores = jnp.where(ok, scores, neg)
+        if causal:
+            qpos = qi * b + jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+            kpos = j * b + jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+            scores = jnp.where(qpos >= kpos, scores, neg)
+        m_cur = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(scores - m_cur)
+        l_cur = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.dot(p, vblk)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((b, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, 1), jnp.float32)
+    a0 = jnp.zeros((b, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, s, body, (m0, l0, a0))
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def block_sparse_attention(q, k, v, block_mask: np.ndarray,
+                           scale: float | None = None, causal: bool = False):
+    """Block-sparse attention forward. q, k, v: [h, seq, d].
+
+    `block_mask` is [seq/b, seq/b] bool; every row must be nonempty (the
+    diagonal is always in the Pixelfly pattern).  Returns [h, seq, d].
+    """
+    h, sq, d = q.shape
+    nb = block_mask.shape[0]
+    b = sq // nb
+    assert sq == nb * b and k.shape == q.shape and v.shape == q.shape
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(d))
+    cols, s = ref.block_mask_to_indices(block_mask)
+    lens = ref.row_lengths(block_mask)
+    valid = (np.arange(s)[None, :] < lens[:, None]).astype(np.int32)
+    cols_j = jnp.asarray(cols)
+    valid_j = jnp.asarray(valid)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, s=s, b=b, scale=scale, causal=causal),
+        grid=(h, nb),
+        in_specs=[
+            pl.BlockSpec((None, s), lambda hi, qi: (qi, 0)),
+            pl.BlockSpec((None, s), lambda hi, qi: (qi, 0)),
+            pl.BlockSpec((None, b, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, sq, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, sq, d), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, b, d), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
+        interpret=True,
+    )(cols_j, valid_j, q, k, v)
+
+
+def attention_stats(n_blocks: int, block: int, d: int, block_mask: np.ndarray,
+                    bytes_per_elt: int = 4) -> dict:
+    """Cost accounting: visible-block fraction drives both FLOPs and DMA."""
+    nnz = int(block_mask.sum())
+    total = n_blocks * n_blocks
+    seq = n_blocks * block
+    dense_flops = 2 * seq * seq * d * 2           # qk^T and pv
+    sparse_flops = dense_flops * nnz / total
+    vmem = (block * d * 3 + block * block) * bytes_per_elt
+    return {
+        "visible_block_fraction": nnz / total,
+        "dense_flops": dense_flops,
+        "sparse_flops": sparse_flops,
+        "flop_reduction": dense_flops / max(sparse_flops, 1),
+        "vmem_bytes_per_step": vmem,
+    }

@@ -1,0 +1,407 @@
+"""Layer-1 Pallas kernels: block-sparse (BSR) GEMM, the Pixelfly hot path.
+
+The paper's compute hot-spot is `y = x @ W` where W is block-sparse with a
+*fixed* block pattern (flat block butterfly).  We implement it as a Pallas
+kernel over BSR storage:
+
+    values:      [nbr, s, b, b]   nonzero blocks, padded per block row
+    col_indices: [nbr, s] int32   column (block) index of each value block
+
+Grid = (m_tiles, nbr): each program computes the full contribution of input
+block-row I to all its ``s`` output blocks?  No — accumulation across I
+would race.  Instead we iterate *output*-block-major: the pattern is stored
+transposed for the forward pass, i.e. the caller passes the BSR form of W
+seen column-major: for output block J, ``col_indices[J, t]`` names the
+*input* block I_t contributing, and ``values[J, t]`` holds W[I_t, J].
+Each program (mi, J) then reduces over t with a fori_loop, dynamically
+slicing x — no cross-program accumulation, no races.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the x tile streamed per
+step is [tm, n_in] resident once per (mi) row of the grid; each fori step
+touches one b-wide column slice (one VMEM-resident block) and one b x b
+weight block — the HBM<->VMEM schedule the paper expressed with
+threadblocks.  `interpret=True` everywhere: CPU PJRT cannot run Mosaic.
+
+Gradients: `bsr_matmul` carries a `jax.custom_vjp` so the backward pass is
+also block-sparse (paper Definition A.3): dx = dy @ W^T is a BSR matmul
+with the transposed pattern, and dW is a per-nonzero-block outer product
+x_I^T dy_J computed by `bsr_weight_grad`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_TILE_M = 64
+
+# Backend switch (perf pass, EXPERIMENTS.md §Perf L2): "pallas" runs the
+# interpret-mode Pallas kernels (the TPU-shaped hot path; also the
+# correctness target), "xla" lowers the SAME BSR computation as
+# gather+einsum, which XLA-CPU fuses into tight GEMM loops — the right
+# backend for the CPU-PJRT artifacts.  aot.py selects "xla"; tests
+# cross-check the two against each other and against ref.py.
+_BACKEND = "pallas"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("pallas", "xla"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+class BsrPattern(NamedTuple):
+    """Static description of a fixed block-sparse pattern for y = x @ W.
+
+    All index tables are *output-block-major* (see module docstring):
+    ``fwd_cols[J, t]`` = input block feeding output block J;
+    ``bwd_cols[I, t]`` = output block feeding input-grad block I (i.e. the
+    same table for W^T);
+    ``perm`` maps output-major storage slots back to input-major (row, t)
+    slots so a single canonical ``values`` layout serves fwd, bwd and grad.
+
+    ``values`` throughout this module is output-major: values[J, t] =
+    W[fwd_cols[J, t], J].
+    """
+
+    nbr: int            # input blocks (rows of W, in blocks)
+    nbc: int            # output blocks (cols of W, in blocks)
+    block: int          # block size b
+    fwd_cols: np.ndarray   # [nbc, s_fwd] int32
+    bwd_cols: np.ndarray   # [nbr, s_bwd] int32
+    fwd_valid: np.ndarray  # [nbc, s_fwd] bool — False for padding slots
+    bwd_valid: np.ndarray  # [nbr, s_bwd] bool
+    # bwd_slot[I, t] = flat index into output-major values (J * s_fwd + tj)
+    # for the block W[I, bwd_cols[I, t]]; 0 for padding.
+    bwd_slot: np.ndarray   # [nbr, s_bwd] int32
+
+    @property
+    def s_fwd(self) -> int:
+        return self.fwd_cols.shape[1]
+
+    @property
+    def s_bwd(self) -> int:
+        return self.bwd_cols.shape[1]
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int(self.fwd_valid.sum())
+
+    def density(self) -> float:
+        return self.nnz_blocks / float(self.nbr * self.nbc)
+
+
+def make_pattern(block_mask: np.ndarray, block: int) -> BsrPattern:
+    """Build the static BsrPattern from an [nbr, nbc] boolean block mask."""
+    block_mask = np.asarray(block_mask, dtype=bool)
+    nbr, nbc = block_mask.shape
+    # output-major: for each output block J, the input blocks I with mask[I, J]
+    fwd_cols, s_fwd = ref.block_mask_to_indices(block_mask.T)
+    fwd_valid = np.zeros_like(fwd_cols, dtype=bool)
+    for j in range(nbc):
+        fwd_valid[j, : int(block_mask[:, j].sum())] = True
+    # input-major (the transposed pattern drives dx = dy @ W^T)
+    bwd_cols, s_bwd = ref.block_mask_to_indices(block_mask)
+    bwd_valid = np.zeros_like(bwd_cols, dtype=bool)
+    for i in range(nbr):
+        bwd_valid[i, : int(block_mask[i].sum())] = True
+    # locate each (I, J) nonzero in output-major flat storage
+    slot_of = {}
+    for j in range(nbc):
+        for t in range(s_fwd):
+            if fwd_valid[j, t]:
+                slot_of[(int(fwd_cols[j, t]), j)] = j * s_fwd + t
+    bwd_slot = np.zeros_like(bwd_cols)
+    for i in range(nbr):
+        for t in range(s_bwd):
+            if bwd_valid[i, t]:
+                bwd_slot[i, t] = slot_of[(i, int(bwd_cols[i, t]))]
+    return BsrPattern(nbr, nbc, block, fwd_cols.astype(np.int32),
+                      bwd_cols.astype(np.int32), fwd_valid, bwd_valid,
+                      bwd_slot.astype(np.int32))
+
+
+def pack_dense(w: np.ndarray, pat: BsrPattern) -> np.ndarray:
+    """Pack a dense [nbr*b, nbc*b] weight into output-major values."""
+    b = pat.block
+    vals = np.zeros((pat.nbc, pat.s_fwd, b, b), dtype=w.dtype)
+    for j in range(pat.nbc):
+        for t in range(pat.s_fwd):
+            if pat.fwd_valid[j, t]:
+                i = int(pat.fwd_cols[j, t])
+                vals[j, t] = w[i * b : (i + 1) * b, j * b : (j + 1) * b]
+    return vals
+
+
+def unpack_dense(values: np.ndarray, pat: BsrPattern) -> np.ndarray:
+    """Materialise dense W from output-major values (testing/inspection)."""
+    b = pat.block
+    w = np.zeros((pat.nbr * b, pat.nbc * b), dtype=np.asarray(values).dtype)
+    vals = np.asarray(values)
+    for j in range(pat.nbc):
+        for t in range(pat.s_fwd):
+            if pat.fwd_valid[j, t]:
+                i = int(pat.fwd_cols[j, t])
+                w[i * b : (i + 1) * b, j * b : (j + 1) * b] = vals[j, t]
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(cols_ref, x_ref, vals_ref, o_ref, *, s: int, b: int):
+    """One program computes output tile [tm, b] for output block J.
+
+    x_ref:    [tm, n_in]      (full input width; column slices read per step)
+    vals_ref: [s, b, b]       the J-th output block's weight blocks
+    cols_ref: [s]             input block indices (padded slots have zero
+                              value blocks, so they contribute nothing)
+    """
+    tm = o_ref.shape[0]
+
+    def body(t, acc):
+        i = cols_ref[t]
+        xblk = x_ref[:, pl.dslice(i * b, b)]
+        return acc + jnp.dot(xblk.astype(jnp.float32),
+                             vals_ref[t].astype(jnp.float32))
+
+    acc = jax.lax.fori_loop(0, s, body, jnp.zeros((tm, b), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _bsr_matmul_impl(x, values, cols, *, pat: BsrPattern, tile_m: int):
+    m, n_in = x.shape
+    b, s = pat.block, pat.s_fwd
+    assert n_in == pat.nbr * b, (n_in, pat.nbr, b)
+    tm = min(tile_m, m)
+    while m % tm:          # auto-shrink to a divisor of m
+        tm -= 1
+    grid = (m // tm, pat.nbc)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, s=s, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, s), lambda mi, j: (j, 0)),          # cols row J
+            pl.BlockSpec((tm, n_in), lambda mi, j: (mi, 0)),        # x tile
+            pl.BlockSpec((None, s, b, b), lambda mi, j: (j, 0, 0, 0)),  # vals J
+        ],
+        out_specs=pl.BlockSpec((tm, b), lambda mi, j: (mi, j)),
+        out_shape=jax.ShapeDtypeStruct((m, pat.nbc * b), x.dtype),
+        interpret=True,
+    )(cols, x, values)
+
+
+# ---------------------------------------------------------------------------
+# Weight-gradient kernel: dW[J, t] = x[:, I_t]^T @ dy[:, J]
+# ---------------------------------------------------------------------------
+
+def _wgrad_kernel(cols_ref, x_ref, dy_ref, o_ref, *, b: int):
+    t = pl.program_id(1)
+    i = cols_ref[t]
+    xblk = x_ref[:, pl.dslice(i * b, b)]
+    o_ref[...] = jnp.dot(
+        xblk.astype(jnp.float32).T, dy_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def _bsr_weight_grad(x, dy, cols, *, pat: BsrPattern):
+    m, n_in = x.shape
+    b, s = pat.block, pat.s_fwd
+    grid = (pat.nbc, s)
+    vals = pl.pallas_call(
+        functools.partial(_wgrad_kernel, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, s), lambda j, t: (j, 0)),
+            pl.BlockSpec((m, n_in), lambda j, t: (0, 0)),
+            pl.BlockSpec((m, None, b), lambda j, t: (0, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, b, b), lambda j, t: (j, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((pat.nbc, s, b, b), x.dtype),
+        interpret=True,
+    )(cols, x, dy.reshape(m, pat.nbc, b))
+    # zero the padding slots so padded value blocks stay exactly zero
+    valid = jnp.asarray(pat.fwd_valid)[:, :, None, None]
+    return jnp.where(valid, vals, jnp.zeros_like(vals))
+
+
+# ---------------------------------------------------------------------------
+# Public API with custom VJP
+# ---------------------------------------------------------------------------
+
+def _transposed_values(values, pat: BsrPattern):
+    """Re-index output-major values of W into output-major values of W^T.
+
+    For W^T the output blocks are W's input blocks I, and slot (I, t) must
+    hold W[I, bwd_cols[I, t]] = values.flat[bwd_slot[I, t]] transposed.
+    """
+    b = pat.block
+    flat = values.reshape(pat.nbc * pat.s_fwd, b, b)
+    gathered = flat[jnp.asarray(pat.bwd_slot).reshape(-1)]
+    gathered = gathered.reshape(pat.nbr, pat.s_bwd, b, b)
+    valid = jnp.asarray(pat.bwd_valid)[:, :, None, None]
+    gathered = jnp.where(valid, gathered, jnp.zeros_like(gathered))
+    return jnp.swapaxes(gathered, -1, -2)  # transpose each block
+
+
+def bsr_matmul(x, values, pat: BsrPattern, tile_m: int = DEFAULT_TILE_M):
+    """y = x @ W, W block-sparse with static pattern `pat` (differentiable).
+
+    x: [m, nbr*b]; values: output-major [nbc, s, b, b]; returns [m, nbc*b].
+    Dispatches on the module backend (see `set_backend`).
+    """
+    if _BACKEND == "xla":
+        return bsr_matmul_xla(x, values, pat)
+    return _bsr_matmul_vjp(x, values, pat, tile_m)
+
+
+def bsr_matmul_xla(x, values, pat: BsrPattern):
+    """Same BSR contraction as gather + einsum (XLA-native, autodiff'd by
+    jax): y[:, J] = sum_t x[:, cols[J, t]] @ values[J, t]."""
+    m = x.shape[0]
+    b, s = pat.block, pat.s_fwd
+    xb = x.reshape(m, pat.nbr, b)
+    cols = jnp.asarray(pat.fwd_cols)               # [nbc, s]
+    xg = xb[:, cols]                               # [m, nbc, s, b]
+    # mask padding slots INSIDE the computation: this also zeroes their
+    # cotangents, so the optimizer can never grow blocks outside the
+    # pattern (padded slots alias column 0 by convention)
+    valid = jnp.asarray(pat.fwd_valid)[:, :, None, None]
+    vals = jnp.where(valid, values, jnp.zeros_like(values))
+    y = jnp.einsum("mjsb,jsbc->mjc", xg, vals)
+    return y.reshape(m, pat.nbc * b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _bsr_matmul_vjp(x, values, pat, tile_m):
+    cols = jnp.asarray(pat.fwd_cols)
+    return _bsr_matmul_impl(x, values, cols, pat=pat, tile_m=tile_m)
+
+
+def _vjp_fwd(x, values, pat, tile_m):
+    return _bsr_matmul_vjp(x, values, pat, tile_m), (x, values)
+
+
+def _vjp_bwd(pat, tile_m, res, dy):
+    x, values = res
+    # dx = dy @ W^T — BSR matmul with the transposed pattern
+    pat_t = BsrPattern(
+        nbr=pat.nbc, nbc=pat.nbr, block=pat.block,
+        fwd_cols=pat.bwd_cols, bwd_cols=pat.fwd_cols,
+        fwd_valid=pat.bwd_valid, bwd_valid=pat.fwd_valid,
+        bwd_slot=np.zeros_like(pat.fwd_cols),  # unused in fwd-only call
+    )
+    vt = _transposed_values(values, pat)
+    dx = _bsr_matmul_impl(dy, vt, jnp.asarray(pat_t.fwd_cols), pat=pat_t,
+                          tile_m=tile_m)
+    dvals = _bsr_weight_grad(x, dy, jnp.asarray(pat.fwd_cols), pat=pat)
+    return dx, dvals
+
+
+_bsr_matmul_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Dense tiled GEMM (used for the low-rank path and as a Pallas baseline)
+# ---------------------------------------------------------------------------
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def tiled_matmul(x, w, tile_m: int = DEFAULT_TILE_M, tile_n: int = 128):
+    """Dense y = x @ w as a Pallas kernel (differentiable; grid over m, n
+    tiles with full-k panels).  Backward: dx = dy wᵀ, dw = xᵀ dy — both
+    expressed as tiled Pallas GEMMs again.  Under the "xla" backend this
+    is a plain jnp.dot (XLA's own GEMM)."""
+    if _BACKEND == "xla":
+        return x @ w
+    return _tiled_matmul_vjp(x, w, tile_m, tile_n)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _tiled_matmul_vjp(x, w, tile_m, tile_n):
+    return _tiled_matmul_impl(x, w, tile_m, tile_n)
+
+
+def _tiled_fwd(x, w, tile_m, tile_n):
+    return _tiled_matmul_impl(x, w, tile_m, tile_n), (x, w)
+
+
+def _tiled_bwd(tile_m, tile_n, res, dy):
+    x, w = res
+    dx = _tiled_matmul_impl(dy, w.T, tile_m, tile_n)
+    dw = _tiled_matmul_impl(x.T, dy, tile_m, tile_n)
+    return dx, dw
+
+
+_tiled_matmul_vjp.defvjp(_tiled_fwd, _tiled_bwd)
+
+
+def _tiled_matmul_impl(x, w, tile_m: int = DEFAULT_TILE_M, tile_n: int = 128):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    tm = min(tile_m, m)
+    while m % tm:
+        tm -= 1
+    tn = min(tile_n, n)
+    while n % tn:
+        tn -= 1
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda mi, ni: (mi, 0)),
+            pl.BlockSpec((k, tn), lambda mi, ni: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda mi, ni: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Structural performance accounting (TPU estimate; DESIGN.md §Perf)
+# ---------------------------------------------------------------------------
+
+def kernel_stats(pat: BsrPattern, m: int, tile_m: int = DEFAULT_TILE_M,
+                 bytes_per_elt: int = 4) -> dict:
+    """Analytic VMEM footprint + MXU utilisation estimate for bsr_matmul.
+
+    Per grid step the kernel holds: x tile [tm, nbr*b], one weight block
+    slab [s, b, b], accumulator [tm, b].  Useful MACs = nnz_blocks * tm * b
+    * b per m-tile; MXU capacity per step = b-aligned 128x128 issue.
+    """
+    b, s = pat.block, pat.s_fwd
+    tm = min(tile_m, m)
+    n_in = pat.nbr * b
+    vmem = (tm * n_in + s * b * b + tm * b) * bytes_per_elt
+    useful_macs = pat.nnz_blocks * tm * b * b
+    # grid steps per m-tile = nbc; each runs s matmuls of (tm x b x b)
+    issued = pat.nbc * s * tm * b * b
+    mxu_tile = 128
+    eff_dim = min(b, mxu_tile) / mxu_tile
+    return {
+        "vmem_bytes_per_step": vmem,
+        "useful_macs_per_mtile": useful_macs,
+        "issued_macs_per_mtile": issued,
+        "slot_occupancy": useful_macs / max(issued, 1),
+        "mxu_dim_efficiency": eff_dim,
+        "est_mxu_utilization": (useful_macs / max(issued, 1)) * eff_dim,
+    }

@@ -1,0 +1,93 @@
+"""Sequential block butterfly *product* baseline (paper Eq. 1, Fig 11).
+
+This is the thing Pixelfly replaces: y = x (I + λB_k)(I + λB_{k/2})…(I + λB_2)
+applied as log2(k) dependent sparse GEMMs.  Each factor B_s^{(n,b)} is a BSR
+matrix with exactly 2 nonzero blocks per block row (J = I and J = I ^ s/2),
+so every step is a `bsr_matmul` with s_fwd = 2 — but the steps are strictly
+sequential, which is the parallelization obstacle the paper flattens away.
+
+On TPU each factor multiply is a separate pallas_call — a full HBM round
+trip of the activations — versus ONE call for the flat form.  DMA-count
+accounting for both lives in `product_stats`.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import block_sparse as bs
+from . import ref
+
+
+def factor_patterns(n: int, block: int, max_stride: int) -> list[bs.BsrPattern]:
+    """Patterns for factors B_2, B_4, …, B_{max_stride} (block strides)."""
+    assert n % block == 0
+    nb = n // block
+    pats = []
+    stride = 2
+    while stride <= max_stride:
+        mask = ref.butterfly_factor_block_mask(nb, stride)
+        pats.append(bs.make_pattern(mask, block))
+        stride *= 2
+    return pats
+
+
+def init_factor_values(pats: Sequence[bs.BsrPattern], rng,
+                       scale: float | None = None,
+                       dtype=np.float32) -> list[np.ndarray]:
+    """Random values for each factor; fan-in is 2 blocks per row."""
+    out = []
+    for pat in pats:
+        b = pat.block
+        sc = scale if scale is not None else 1.0 / np.sqrt(2 * b)
+        vals = rng.standard_normal((pat.nbc, pat.s_fwd, b, b)) * sc
+        vals = vals * pat.fwd_valid[:, :, None, None]
+        out.append(vals.astype(dtype))
+    return out
+
+
+def butterfly_product_matmul(x, factor_values: Sequence, pats: Sequence[bs.BsrPattern],
+                             lam: float, tile_m: int = bs.DEFAULT_TILE_M):
+    """y = x ∏(I + λ B_s), factors given lowest-stride-first.
+
+    Right-multiplying a row-major x applies the highest-stride factor first
+    (matching ref.butterfly_product_matmul).  log2(k) sequential
+    pallas_calls — the Fig-11 baseline.
+    """
+    y = x
+    for vals, pat in zip(reversed(list(factor_values)), reversed(list(pats))):
+        y = y + lam * bs.bsr_matmul(y, jnp.asarray(vals), pat, tile_m)
+    return y
+
+
+def product_stats(n: int, block: int, max_stride: int, m: int,
+                  bytes_per_elt: int = 4) -> dict:
+    """DMA/launch accounting: product vs flat form (DESIGN.md §Perf).
+
+    The product form launches log2(k) kernels, each streaming the full
+    activation [m, n] HBM->VMEM->HBM; the flat form launches one kernel and
+    streams activations once.  This ratio is the structural source of the
+    paper's ~3x Fig-11 speedup.
+    """
+    import math
+    logk = int(math.log2(max_stride))
+    act_bytes = m * n * bytes_per_elt
+    product_traffic = logk * 2 * act_bytes  # read + write per factor
+    flat_traffic = 2 * act_bytes
+    nb = n // block
+    flat_weight_bytes = nb * (logk + 1) * block * block * bytes_per_elt
+    product_weight_bytes = logk * nb * 2 * block * block * bytes_per_elt
+    return {
+        "kernel_launches_product": logk,
+        "kernel_launches_flat": 1,
+        "activation_traffic_product": product_traffic,
+        "activation_traffic_flat": flat_traffic,
+        "weight_traffic_product": product_weight_bytes,
+        "weight_traffic_flat": flat_weight_bytes,
+        "traffic_ratio": (product_traffic + product_weight_bytes)
+                         / max(flat_traffic + flat_weight_bytes, 1),
+    }

@@ -1,0 +1,106 @@
+"""Flat block butterfly layer (paper §3.2/§3.3) on top of the BSR kernel.
+
+A flat block butterfly matrix of max stride k is a block-sparse matrix with
+the fixed XOR pattern {J = I} ∪ {J = I ^ 2^t : t < log2 k}; its matmul is a
+single `bsr_matmul` call — this is precisely the paper's point: the log-n
+*product* of butterfly factors collapses to *one* sparse GEMM with a static
+pattern, trading sequential kernel launches for one parallel kernel.
+
+Also provides the rectangular "stretch" of the square pattern used for
+non-square weights (paper Appendix I.4): the square pattern over
+min(nbr, nbc) blocks is tiled along the longer dimension.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import block_sparse as bs
+from . import ref
+
+
+def flat_butterfly_pattern(n: int, block: int, max_stride: int) -> bs.BsrPattern:
+    """BsrPattern for a square n x n flat block butterfly, block size b."""
+    assert n % block == 0
+    nb = n // block
+    mask = ref.flat_butterfly_block_mask(nb, max_stride)
+    return bs.make_pattern(mask, block)
+
+
+def stretched_mask(nbr: int, nbc: int, max_stride: int) -> np.ndarray:
+    """Rectangular flat butterfly mask (Appendix I.4 'stretch').
+
+    The square flat-butterfly pattern over the smaller block dimension is
+    repeated along the larger one, preserving per-row/column balance.
+    """
+    nsq = min(nbr, nbc)
+    # round the square pattern size down to a power of two for XOR validity
+    p2 = 1 << (nsq.bit_length() - 1)
+    ms = min(max_stride, p2)
+    base = ref.flat_butterfly_block_mask(p2, ms)
+    mask = np.zeros((nbr, nbc), dtype=bool)
+    for i in range(nbr):
+        for j in range(nbc):
+            mask[i, j] = base[i % p2, j % p2]
+    return mask
+
+
+def rect_flat_butterfly_pattern(n_in: int, n_out: int, block: int,
+                                max_stride: int) -> bs.BsrPattern:
+    """Rectangular flat block butterfly pattern for an n_in x n_out weight."""
+    assert n_in % block == 0 and n_out % block == 0
+    mask = stretched_mask(n_in // block, n_out // block, max_stride)
+    return bs.make_pattern(mask, block)
+
+
+def flat_butterfly_matmul(x, values, pat: bs.BsrPattern,
+                          tile_m: int = bs.DEFAULT_TILE_M):
+    """y = x @ B, B a flat block butterfly matrix in BSR form."""
+    return bs.bsr_matmul(x, values, pat, tile_m)
+
+
+def init_values(pat: bs.BsrPattern, key_or_rng, scale: float | None = None,
+                identity_residual: bool = True, dtype=np.float32) -> np.ndarray:
+    """Initialise flat-butterfly values.
+
+    Kaiming-style fan-in scaling using the *effective* fan-in (nonzero
+    elements per output column), so sparse layers start at the same
+    activation scale as dense ones — the paper notes Pixelfly trains with
+    the dense model's hyperparameters.  If `identity_residual`, the diagonal
+    blocks additionally get +I (the Definition 3.4 identity term).
+    """
+    rng = (np.random.default_rng(key_or_rng)
+           if isinstance(key_or_rng, (int, np.integer)) else key_or_rng)
+    b = pat.block
+    fan_in = max(int(pat.fwd_valid[0].sum()) * b, 1)
+    if scale is None:
+        scale = 1.0 / np.sqrt(fan_in)
+    vals = (rng.standard_normal((pat.nbc, pat.s_fwd, b, b)) * scale)
+    vals = vals * pat.fwd_valid[:, :, None, None]
+    if identity_residual:
+        eye = np.eye(b)
+        for j in range(pat.nbc):
+            for t in range(pat.s_fwd):
+                if pat.fwd_valid[j, t] and int(pat.fwd_cols[j, t]) == j % pat.nbr:
+                    vals[j, t] = vals[j, t] + eye
+                    break
+    return vals.astype(dtype)
+
+
+def max_stride_for_budget(nb: int, nnz_block_budget: int) -> int:
+    """Largest power-of-two max stride whose pattern fits the block budget.
+
+    Pattern nnz blocks = nb * (log2(k) + 1); pick the largest k (<= nb)
+    staying under `nnz_block_budget` (paper §3.3 step 2: 'pick the maximum
+    stride ... to fill up the budget').  Returns at least 1 (diagonal only).
+    """
+    k = 1
+    while k < nb:
+        nxt = k * 2
+        nnz = nb * (int(np.log2(nxt)) + 1)
+        if nnz > nnz_block_budget:
+            break
+        k = nxt
+    return k

@@ -1,0 +1,60 @@
+"""Low-rank term of the Pixelfly parameterisation (paper §3.3 step 3).
+
+W_lr = U V^T with U: [n_in, r], V: [n_out, r], r a multiple of the hardware
+block size so the low-rank factors are themselves block-aligned (paper
+§3.3 step 2).  The matmul is computed rank-first — (x @ U) @ V^T — two thin
+dense GEMMs via the Pallas tiled kernel, never materialising U V^T.
+
+The combined Pixelfly layer is `pixelfly_matmul`:
+    y = γ · (x @ B) + (1 − γ) · (x @ U) @ V^T
+with γ a learnable scalar (initialised 0.5 by the model code).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import block_sparse as bs
+
+
+def lowrank_matmul(x, u, v, tile_m: int = bs.DEFAULT_TILE_M):
+    """y = (x @ U) @ V^T via two tiled Pallas GEMMs.
+
+    Tile sizes fall back to full dims when the rank r is smaller than the
+    default tile (ranks are small multiples of the block size).
+    """
+    r = u.shape[1]
+    h = bs.tiled_matmul(x, u, tile_m=tile_m, tile_n=min(128, r))
+    return bs.tiled_matmul(h, v.T, tile_m=tile_m, tile_n=min(128, v.shape[0]))
+
+
+def pixelfly_matmul(x, values, pat: bs.BsrPattern, u, v, gamma,
+                    tile_m: int = bs.DEFAULT_TILE_M):
+    """Full Pixelfly GEMM: γ·(x@B) + (1−γ)·(x@U)V^T (differentiable)."""
+    sparse = bs.bsr_matmul(x, values, pat, tile_m)
+    lr = lowrank_matmul(x, u, v, tile_m)
+    return gamma * sparse + (1.0 - gamma) * lr
+
+
+def init_lowrank(n_in: int, n_out: int, rank: int, rng,
+                 dtype=np.float32) -> tuple[np.ndarray, np.ndarray]:
+    """Init U, V with 1/sqrt(fan) scaling balanced across the two factors."""
+    su = 1.0 / np.sqrt(n_in)
+    sv = 1.0 / np.sqrt(rank)
+    u = (rng.standard_normal((n_in, rank)) * su).astype(dtype)
+    v = (rng.standard_normal((n_out, rank)) * sv).astype(dtype)
+    return u, v
+
+
+def rank_for_budget(n_in: int, n_out: int, param_budget: int, block: int) -> int:
+    """Largest block-multiple rank with U,V params under `param_budget`.
+
+    Paper §3.3 step 2: rank is a multiple of the smallest supported block
+    size; the low-rank share is usually 1/4–1/3 of the layer budget.
+    Returns 0 when even rank=block does not fit.
+    """
+    per_rank = n_in + n_out
+    r = (param_budget // per_rank) // block * block
+    return max(int(r), 0)

@@ -1,0 +1,215 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each kernel in `block_sparse.py`,
+`flat_butterfly.py`, `butterfly.py`, `lowrank.py`, `attention.py` is checked
+against the function of the same name here by `python/tests/` (exact same
+math, written with dense jnp ops and explicit masks, no Pallas).
+
+Conventions
+-----------
+- A *block mask* is a boolean array of shape [nb_rows, nb_cols]: entry (I, J)
+  is True iff the b x b block at block coordinates (I, J) is nonzero.
+- BSR weight storage: ``values`` has shape [nb_rows, s, b, b] where ``s`` is
+  the (padded) number of nonzero blocks per block row, and ``col_indices``
+  has shape [nb_rows, s] (int32).  Padding entries carry col index 0 and an
+  all-zero value block, so no masking is needed in the matmul inner loop.
+- Matmul orientation: ``y = x @ W`` with x: [m, n_in], W: [n_in, n_out]
+  materialised from blocks as W[I*b:(I+1)*b, J*b:(J+1)*b] = block(I, J).
+  ``values[I, t]`` stores the block at (I, col_indices[I, t]) of W — i.e. it
+  is indexed by *input* block row I.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Mask / pattern construction (numpy; static, build-time only)
+# ---------------------------------------------------------------------------
+
+def flat_butterfly_block_mask(nb: int, max_stride: int) -> np.ndarray:
+    """Block mask of the flat butterfly pattern (paper Definition 3.4).
+
+    I + lambda * (B_2 + B_4 + ... + B_k) at block granularity: block (I, J)
+    is nonzero iff J == I (the identity / residual diagonal) or
+    J == I XOR 2^t for t = 0..log2(max_stride)-1.  ``nb`` is the number of
+    blocks per side; ``max_stride`` is k in Definition 3.4, measured in
+    *blocks* (a power of two, <= nb).
+    """
+    assert nb >= 1 and max_stride >= 1
+    assert max_stride & (max_stride - 1) == 0, "max_stride must be a power of 2"
+    assert max_stride <= nb, "max_stride cannot exceed the number of blocks"
+    mask = np.zeros((nb, nb), dtype=bool)
+    idx = np.arange(nb)
+    mask[idx, idx] = True
+    stride = 1
+    while stride < max_stride:
+        mask[idx, idx ^ stride] = True
+        stride *= 2
+    return mask
+
+
+def butterfly_factor_block_mask(nb: int, stride: int) -> np.ndarray:
+    """Block mask of a single block butterfly factor matrix B_stride^{(nb, b)}.
+
+    ``stride`` is the factor's butterfly stride measured in blocks (power of
+    two, 2 <= stride <= nb).  Block (I, J) is nonzero iff J == I or
+    J == I XOR (stride // 2).
+    """
+    assert stride >= 2 and stride & (stride - 1) == 0 and stride <= nb
+    mask = np.zeros((nb, nb), dtype=bool)
+    idx = np.arange(nb)
+    mask[idx, idx] = True
+    mask[idx, idx ^ (stride // 2)] = True
+    return mask
+
+
+def block_mask_to_element_mask(block_mask: np.ndarray, b: int) -> np.ndarray:
+    """Expand an [nbr, nbc] block mask to an [nbr*b, nbc*b] element mask."""
+    return np.kron(block_mask, np.ones((b, b), dtype=bool))
+
+
+def block_mask_to_indices(block_mask: np.ndarray) -> tuple[np.ndarray, int]:
+    """Convert a block mask to a padded per-row column index table.
+
+    Returns (col_indices [nbr, s] int32, s) where s = max nonzero blocks in
+    any row; rows with fewer nonzeros are padded with 0 (the caller must
+    zero the corresponding value blocks).
+    """
+    nbr = block_mask.shape[0]
+    per_row = [np.nonzero(block_mask[i])[0] for i in range(nbr)]
+    s = max((len(r) for r in per_row), default=0)
+    s = max(s, 1)
+    out = np.zeros((nbr, s), dtype=np.int32)
+    for i, r in enumerate(per_row):
+        out[i, : len(r)] = r
+    return out, s
+
+
+def row_lengths(block_mask: np.ndarray) -> np.ndarray:
+    """Number of nonzero blocks per block row."""
+    return block_mask.sum(axis=1).astype(np.int32)
+
+
+def dense_to_bsr(w: np.ndarray, block_mask: np.ndarray, b: int) -> tuple[np.ndarray, np.ndarray]:
+    """Extract BSR ``values`` [nbr, s, b, b] + ``col_indices`` from dense w.
+
+    w has shape [nbr*b, nbc*b].  Value blocks beyond a row's true nonzero
+    count are zeroed (they alias column 0 by the padding convention).
+    """
+    nbr, _ = block_mask.shape
+    cols, s = block_mask_to_indices(block_mask)
+    lens = row_lengths(block_mask)
+    vals = np.zeros((nbr, s, b, b), dtype=w.dtype)
+    for i in range(nbr):
+        for t in range(lens[i]):
+            j = cols[i, t]
+            vals[i, t] = w[i * b : (i + 1) * b, j * b : (j + 1) * b]
+    return vals, cols
+
+
+def bsr_to_dense(values: np.ndarray, col_indices: np.ndarray, n_cols_blocks: int) -> np.ndarray:
+    """Materialise the dense [nbr*b, n_cols_blocks*b] matrix from BSR parts.
+
+    Accumulates (+=) so duplicate padded (row, col-0) entries with zero
+    values are harmless.
+    """
+    values = np.asarray(values)
+    col_indices = np.asarray(col_indices)
+    nbr, s, b, _ = values.shape
+    w = np.zeros((nbr * b, n_cols_blocks * b), dtype=values.dtype)
+    for i in range(nbr):
+        for t in range(s):
+            j = int(col_indices[i, t])
+            w[i * b : (i + 1) * b, j * b : (j + 1) * b] += values[i, t]
+    return w
+
+
+def transpose_bsr_pattern(block_mask: np.ndarray) -> np.ndarray:
+    """Block mask of W^T given the block mask of W."""
+    return block_mask.T.copy()
+
+
+# ---------------------------------------------------------------------------
+# Reference computations (jnp; differentiable, lowerable)
+# ---------------------------------------------------------------------------
+
+def bsr_matmul(x, values, col_indices, nb_cols: int):
+    """Reference y = x @ W with W given in BSR form.
+
+    x: [m, nbr*b]; values: [nbr, s, b, b]; col_indices: [nbr, s];
+    output [m, nb_cols*b].  Written as gather + einsum (dense ops only).
+    """
+    nbr, s, b, _ = values.shape
+    m = x.shape[0]
+    xb = x.reshape(m, nbr, b)  # block view of input columns
+    # contributions[i, t] = x[:, block i] @ values[i, t]  -> [nbr, s, m, b]
+    contrib = jnp.einsum("mib,itbc->itmc", xb, values)
+    out = jnp.zeros((nb_cols, m, b), dtype=contrib.dtype)
+    flat = contrib.reshape(nbr * s, m, b)
+    cols = jnp.asarray(col_indices).reshape(nbr * s)
+    out = out.at[cols].add(flat)
+    return out.transpose(1, 0, 2).reshape(m, nb_cols * b)
+
+
+def masked_dense_matmul(x, w_dense, element_mask):
+    """y = x @ (w * mask) — the most literal oracle."""
+    return x @ (w_dense * element_mask.astype(w_dense.dtype))
+
+
+def flat_butterfly_matmul(x, values, col_indices, nb: int):
+    """Flat block butterfly matmul reference: identical to bsr_matmul with a
+    flat-butterfly index table; kept as its own name for test clarity."""
+    return bsr_matmul(x, values, col_indices, nb)
+
+
+def butterfly_product_matmul(x, factors_values, factors_cols, nb: int, lam: float):
+    """Reference of the *sequential residual product* baseline (paper Eq. 1).
+
+    y = x @ (I + lam*B_2)(I + lam*B_4)...(I + lam*B_k) with the factors given
+    lowest-stride-first; right-multiplying x applies the highest-stride
+    factor first, i.e. y = x (I + lam*B_k) ... then down to stride 2 — the
+    order matches Eq. (1) read left to right acting on a row vector.
+    """
+    y = x
+    for vals, cols in zip(reversed(factors_values), reversed(factors_cols)):
+        y = y + lam * bsr_matmul(y, vals, cols, nb)
+    return y
+
+
+def lowrank_matmul(x, u, v):
+    """y = x @ (U @ V^T) computed rank-first: (x @ U) @ V^T."""
+    return (x @ u) @ v.T
+
+
+def pixelfly_matmul(x, values, col_indices, nb, u, v, gamma):
+    """The full Pixelfly layer: W = gamma * B + (1 - gamma) * U V^T."""
+    return gamma * bsr_matmul(x, values, col_indices, nb) + (1.0 - gamma) * lowrank_matmul(x, u, v)
+
+
+def tiled_matmul(x, w):
+    """Dense matmul oracle for the tiled Pallas GEMM."""
+    return x @ w
+
+
+def block_sparse_attention(q, k, v, block_mask, scale=None):
+    """Reference block-sparse attention.
+
+    q, k, v: [h, sq, d] (heads folded with batch by the caller).
+    block_mask: [sq/b, sk/b] bool.  Scores outside the mask are -inf before
+    softmax — the canonical masked-dense formulation of block-sparse
+    attention, numerically identical to computing only visible blocks.
+    """
+    b = q.shape[-2] // block_mask.shape[0]
+    if scale is None:
+        scale = 1.0 / np.sqrt(q.shape[-1])
+    emask = jnp.asarray(block_mask_to_element_mask(np.asarray(block_mask), b))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    neg = jnp.asarray(-1e9, dtype=scores.dtype)
+    scores = jnp.where(emask[None, :, :], scores, neg)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)

@@ -1,0 +1,177 @@
+"""Layer-2 building blocks: linear-layer variants and norms.
+
+Every GEMM-bearing layer comes in the variants the paper compares:
+
+    dense              y = x W + b
+    pixelfly           y = (γ·B + (1−γ)·U Vᵀ) x + b      (paper §3.3)
+    butterfly_product  y = x ∏(I + λB_s) + b             (Eq. 1 baseline)
+    lowrank            y = (x U) Vᵀ + b
+    block_sparse       y = x (W ∘ M) + b  for an arbitrary block mask M
+                        (random / bigbird-style weight baselines)
+
+Parameters are plain nested dicts of jnp arrays so they flatten
+deterministically (sorted keys) for the AOT interface with the Rust side.
+The sparse paths call the Layer-1 Pallas kernels (with custom VJP), so the
+train step's HLO contains the block-sparse GEMMs on both passes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_sparse as bs
+from .kernels import butterfly as bf
+from .kernels import flat_butterfly as fb
+from .kernels import lowrank as lrk
+from . import patterns
+
+Params = dict[str, Any]
+
+# Static (non-array) kernel metadata per layer, keyed by layer path. Kept
+# outside the param pytree so jit sees it as compile-time constants.
+_STATIC: dict[int, Any] = {}
+
+
+def _register_static(obj) -> int:
+    key = len(_STATIC)
+    _STATIC[key] = obj
+    return key
+
+
+def static(key: int):
+    return _STATIC[key]
+
+
+def init_linear(rng: np.random.Generator, n_in: int, n_out: int, *,
+                variant: str, block: int = 8, max_stride: int = 4,
+                rank: int = 0, lam: float = 0.3, density: float = 0.1,
+                seed: int = 0, dtype=np.float32) -> Params:
+    """Initialise one linear layer of the requested variant.
+
+    Returns a params dict; the static pattern handle is stored under
+    '_static' as a plain int (traced as a constant, excluded from grads by
+    the optimizer's is-array filtering — it is a python int, which jax
+    treats as a static leaf we filter out before flattening).
+    """
+    p: Params = {"b": np.zeros((n_out,), dtype)}
+    if variant == "dense":
+        w = rng.standard_normal((n_in, n_out)) / math.sqrt(n_in)
+        p["w"] = w.astype(dtype)
+        p["_static"] = _register_static({"variant": variant})
+        return p
+
+    assert n_in % block == 0 and n_out % block == 0, (n_in, n_out, block)
+    nbi, nbo = n_in // block, n_out // block
+
+    if variant == "pixelfly":
+        pat = fb.rect_flat_butterfly_pattern(n_in, n_out, block, max_stride)
+        # gamma-compensated init (perf/quality pass, EXPERIMENTS.md §Perf
+        # L2 iter-2): W = gamma*B + (1-gamma)*UV^T with gamma0 = 0.5 halves
+        # each term's contribution, so both are scaled 1/gamma0 up at init
+        # to match the dense layer's output variance — this is what lets
+        # the sparse model reuse the dense hyperparameters (paper §5).
+        gamma0 = 0.5
+        fan_in = max(int(pat.fwd_valid[0].sum()) * block, 1)
+        p["values"] = fb.init_values(
+            pat, rng, scale=(1.0 / math.sqrt(fan_in)) / gamma0,
+            identity_residual=False, dtype=dtype)
+        r = rank if rank > 0 else block
+        u, v = lrk.init_lowrank(n_in, n_out, r, rng, dtype)
+        p["u"], p["v"] = (u / math.sqrt(1.0 - gamma0)).astype(dtype), \
+                         (v / math.sqrt(1.0 - gamma0)).astype(dtype)
+        p["gamma"] = np.asarray(gamma0, dtype)
+        p["_static"] = _register_static({"variant": variant, "pat": pat})
+    elif variant == "butterfly_product":
+        assert n_in == n_out, "product butterfly layers are square"
+        pats = bf.factor_patterns(n_in, block, max_stride)
+        vals = bf.init_factor_values(pats, rng, dtype=dtype)
+        for i, v in enumerate(vals):
+            p[f"f{i}"] = v
+        p["_static"] = _register_static(
+            {"variant": variant, "pats": pats, "lam": lam, "nf": len(pats)})
+    elif variant == "lowrank":
+        r = rank if rank > 0 else block
+        u, v = lrk.init_lowrank(n_in, n_out, r, rng, dtype)
+        p["u"], p["v"] = u, v
+        p["_static"] = _register_static({"variant": variant})
+    elif variant in ("random", "bigbird", "local"):
+        mask = patterns.make_weight_mask(
+            variant if variant != "local" else "local", nbi, nbo,
+            density=density, seed=seed)
+        pat = bs.make_pattern(mask, block)
+        w = rng.standard_normal((n_in, n_out)) / math.sqrt(max(n_in * pat.density(), 1))
+        p["values"] = bs.pack_dense(w.astype(dtype), pat)
+        p["_static"] = _register_static({"variant": "block_sparse", "pat": pat})
+    else:
+        raise ValueError(f"unknown linear variant {variant!r}")
+    return p
+
+
+def apply_linear(p: Params, x):
+    """Apply a linear layer; x: [m, n_in] -> [m, n_out]."""
+    meta = static(p["_static"])
+    variant = meta["variant"]
+    if variant == "dense":
+        y = x @ p["w"]
+    elif variant == "pixelfly":
+        y = lrk.pixelfly_matmul(x, p["values"], meta["pat"], p["u"], p["v"],
+                                p["gamma"])
+    elif variant == "butterfly_product":
+        vals = [p[f"f{i}"] for i in range(meta["nf"])]
+        y = bf.butterfly_product_matmul(x, vals, meta["pats"], meta["lam"])
+    elif variant == "lowrank":
+        y = lrk.lowrank_matmul(x, p["u"], p["v"])
+    elif variant == "block_sparse":
+        y = bs.bsr_matmul(x, p["values"], meta["pat"])
+    else:
+        raise ValueError(variant)
+    return y + p["b"]
+
+
+def linear_param_count(p: Params) -> int:
+    return sum(int(np.prod(v.shape)) for k, v in p.items()
+               if k != "_static" and hasattr(v, "shape"))
+
+
+def init_layernorm(n: int, dtype=np.float32) -> Params:
+    return {"g": np.ones((n,), dtype), "beta": np.zeros((n,), dtype)}
+
+
+def apply_layernorm(p: Params, x, eps: float = 1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * p["g"] + p["beta"]
+
+
+def init_embedding(rng, vocab: int, d: int, dtype=np.float32) -> Params:
+    return {"table": (rng.standard_normal((vocab, d)) * 0.02).astype(dtype)}
+
+
+def apply_embedding(p: Params, ids):
+    return p["table"][ids]
+
+
+def strip_static(tree):
+    """Drop the '_static' int leaves (compile-time metadata) from a pytree."""
+    if isinstance(tree, dict):
+        return {k: strip_static(v) for k, v in tree.items() if k != "_static"}
+    return tree
+
+
+def merge_static(stripped, template):
+    """Re-attach '_static' leaves from `template` onto a stripped pytree."""
+    if isinstance(template, dict):
+        out = {}
+        for k, v in template.items():
+            if k == "_static":
+                out[k] = v
+            else:
+                out[k] = merge_static(stripped[k], v)
+        return out
+    return stripped

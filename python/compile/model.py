@@ -1,0 +1,334 @@
+"""Layer-2 model families (paper §5): MLP-Mixer, ViT, GPT-2-style decoder.
+
+Each family is a pure function over a nested param dict; every GEMM is one
+of the `layers.init_linear` variants, so a single `variant=` switch yields
+the dense model, the Pixelfly model (flat block butterfly + low-rank), the
+butterfly-product baseline, or the random/bigbird block-sparse baselines —
+exactly the grid of §5's comparisons.
+
+Attention uses the masked-score formulation over the same block masks as
+the Pallas attention kernel (numerically identical, differentiable); the
+projection GEMMs go through the Pallas BSR path when sparse.
+
+All activations flatten the batch/sequence dims before GEMMs so the BSR
+kernel sees 2-D tiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, patterns
+from .kernels import ref
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Schema + sparsity plan for one model instance.
+
+    `variant` selects the weight-GEMM implementation; `attn_pattern` the
+    attention block mask.  `max_stride_*` and `rank` come out of the
+    Layer-3 budget planner (§3.3 steps 1–2); `block` is the hardware block
+    size b.
+    """
+
+    family: str = "mixer"           # mixer | vit | gpt2
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq_len: int = 64               # tokens / patches
+    in_dim: int = 48                # patch dim (vision); unused for gpt2
+    n_classes: int = 10             # classes (vision) / vocab (gpt2)
+    mlp_ratio: int = 2
+    block: int = 8
+    variant: str = "pixelfly"       # dense | pixelfly | butterfly_product |
+                                    # lowrank | random | bigbird | local
+    attn_pattern: str = "pixelfly"  # see patterns.make_attention_mask
+    max_stride: int = 4             # weight-pattern max stride (blocks)
+    attn_max_stride: int = 4
+    attn_global_blocks: int = 1
+    rank: int = 0                   # low-rank term; 0 -> block size
+    density: float = 0.2            # for random/bigbird weight masks
+    dtype: str = "float32"
+    # eval/bench artifacts can route attention through the Pallas
+    # block-sparse kernel (forward-only; real block skipping). Training
+    # keeps the masked-score formulation (differentiable, same numerics).
+    kernel_attn: bool = False
+
+    @property
+    def np_dtype(self):
+        return np.dtype(self.dtype)
+
+    @property
+    def d_mlp(self) -> int:
+        return self.d_model * self.mlp_ratio
+
+    def weight_variant(self) -> str:
+        # attention/MLP weight GEMM variant; "bigbird" baseline uses random
+        # block-sparse weights (the paper's representative baseline pairs
+        # bigbird attention with random/magnitude MLP sparsity).
+        if self.variant == "bigbird":
+            return "random"
+        return self.variant
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def _linear(rng, cfg: ModelConfig, n_in, n_out, *, square_ok=True, seed=0):
+    variant = cfg.weight_variant()
+    # the butterfly product baseline only exists for square GEMMs; fall back
+    # to flat pixelfly (no low-rank) for rectangular ones, like the paper's
+    # butterfly baseline which keeps dense rectangular projections
+    if variant == "butterfly_product" and n_in != n_out:
+        variant = "dense"
+    return layers.init_linear(
+        rng, n_in, n_out, variant=variant, block=cfg.block,
+        max_stride=cfg.max_stride, rank=cfg.rank, density=cfg.density,
+        seed=seed)
+
+
+def _mlp_init(rng, cfg: ModelConfig, d_in: int, d_hidden: int, seed=0) -> Params:
+    return {
+        "fc1": _linear(rng, cfg, d_in, d_hidden, seed=seed),
+        "fc2": _linear(rng, cfg, d_hidden, d_in, seed=seed + 1),
+    }
+
+
+def _mlp_apply(p: Params, x):
+    """x: [m, d] -> [m, d] with GELU."""
+    h = jax.nn.gelu(layers.apply_linear(p["fc1"], x))
+    return layers.apply_linear(p["fc2"], h)
+
+
+def _attn_init(rng, cfg: ModelConfig, seed=0) -> Params:
+    d = cfg.d_model
+    return {
+        "q": _linear(rng, cfg, d, d, seed=seed),
+        "k": _linear(rng, cfg, d, d, seed=seed + 1),
+        "v": _linear(rng, cfg, d, d, seed=seed + 2),
+        "o": _linear(rng, cfg, d, d, seed=seed + 3),
+    }
+
+
+def _attn_apply(p: Params, x, block_mask: np.ndarray, n_heads: int,
+                causal: bool, kernel_attn: bool = False):
+    """x: [B, S, D]. Block-sparse multi-head attention.
+
+    kernel_attn=False: masked-score formulation (differentiable; used by
+    train_step / ntk artifacts). kernel_attn=True: the Pallas flash-style
+    kernel that actually skips invisible blocks (eval/bench artifacts).
+    """
+    bsz, s, d = x.shape
+    hd = d // n_heads
+    flat = x.reshape(bsz * s, d)
+    q = layers.apply_linear(p["q"], flat).reshape(bsz, s, n_heads, hd)
+    k = layers.apply_linear(p["k"], flat).reshape(bsz, s, n_heads, hd)
+    v = layers.apply_linear(p["v"], flat).reshape(bsz, s, n_heads, hd)
+    q = q.transpose(0, 2, 1, 3)  # [B, H, S, hd]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if kernel_attn:
+        from .kernels import attention as attn_k
+        qf = q.reshape(bsz * n_heads, s, hd)
+        kf = k.reshape(bsz * n_heads, s, hd)
+        vf = v.reshape(bsz * n_heads, s, hd)
+        o = attn_k.block_sparse_attention(qf, kf, vf, block_mask,
+                                          causal=causal)
+        o = o.reshape(bsz, n_heads, s, hd)
+    else:
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+        b = s // block_mask.shape[0]
+        emask = ref.block_mask_to_element_mask(block_mask, b)
+        if causal:
+            emask = emask & np.tril(np.ones((s, s), dtype=bool))
+        scores = jnp.where(jnp.asarray(emask)[None, None], scores, -1e9)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    o = o.transpose(0, 2, 1, 3).reshape(bsz * s, d)
+    return layers.apply_linear(p["o"], o).reshape(bsz, s, d)
+
+
+def attention_mask_for(cfg: ModelConfig) -> np.ndarray:
+    nb = cfg.seq_len // cfg.block
+    return patterns.make_attention_mask(
+        cfg.attn_pattern, nb, max_stride=min(cfg.attn_max_stride, nb),
+        global_blocks=cfg.attn_global_blocks, causal=(cfg.family == "gpt2"))
+
+
+# ---------------------------------------------------------------------------
+# MLP-Mixer
+# ---------------------------------------------------------------------------
+
+def init_mixer(cfg: ModelConfig, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    p: Params = {
+        "embed": layers.init_linear(rng, cfg.in_dim, cfg.d_model, variant="dense"),
+        "head": layers.init_linear(rng, cfg.d_model, cfg.n_classes, variant="dense"),
+        "norm": layers.init_layernorm(cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        p[f"block{i}"] = {
+            "ln1": layers.init_layernorm(cfg.d_model),
+            "ln2": layers.init_layernorm(cfg.d_model),
+            # token mixing operates over the sequence dimension
+            "token_mlp": _mlp_init(rng, cfg, cfg.seq_len, cfg.seq_len * 2,
+                                   seed=10 * i),
+            "channel_mlp": _mlp_init(rng, cfg, cfg.d_model, cfg.d_mlp,
+                                     seed=10 * i + 5),
+        }
+    return p
+
+
+def apply_mixer(p: Params, cfg: ModelConfig, x):
+    """x: [B, S, in_dim] -> logits [B, n_classes]."""
+    bsz = x.shape[0]
+    h = layers.apply_linear(p["embed"], x.reshape(-1, cfg.in_dim))
+    h = h.reshape(bsz, cfg.seq_len, cfg.d_model)
+    for i in range(cfg.n_layers):
+        blk = p[f"block{i}"]
+        # token mixing: [B, S, D] -> transpose -> rows are channels
+        t = layers.apply_layernorm(blk["ln1"], h)
+        t = t.transpose(0, 2, 1).reshape(bsz * cfg.d_model, cfg.seq_len)
+        t = _mlp_apply(blk["token_mlp"], t)
+        t = t.reshape(bsz, cfg.d_model, cfg.seq_len).transpose(0, 2, 1)
+        h = h + t
+        # channel mixing
+        c = layers.apply_layernorm(blk["ln2"], h)
+        c = _mlp_apply(blk["channel_mlp"], c.reshape(-1, cfg.d_model))
+        h = h + c.reshape(bsz, cfg.seq_len, cfg.d_model)
+    h = layers.apply_layernorm(p["norm"], h).mean(axis=1)
+    return layers.apply_linear(p["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# ViT
+# ---------------------------------------------------------------------------
+
+def init_vit(cfg: ModelConfig, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    p: Params = {
+        "embed": layers.init_linear(rng, cfg.in_dim, cfg.d_model, variant="dense"),
+        "pos": (rng.standard_normal((cfg.seq_len, cfg.d_model)) * 0.02
+                ).astype(cfg.np_dtype),
+        "head": layers.init_linear(rng, cfg.d_model, cfg.n_classes, variant="dense"),
+        "norm": layers.init_layernorm(cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        p[f"block{i}"] = {
+            "ln1": layers.init_layernorm(cfg.d_model),
+            "ln2": layers.init_layernorm(cfg.d_model),
+            "attn": _attn_init(rng, cfg, seed=20 * i),
+            "mlp": _mlp_init(rng, cfg, cfg.d_model, cfg.d_mlp, seed=20 * i + 9),
+        }
+    return p
+
+
+def apply_vit(p: Params, cfg: ModelConfig, x):
+    """x: [B, S, in_dim] (pre-patchified) -> logits [B, n_classes]."""
+    bsz = x.shape[0]
+    amask = attention_mask_for(cfg)
+    h = layers.apply_linear(p["embed"], x.reshape(-1, cfg.in_dim))
+    h = h.reshape(bsz, cfg.seq_len, cfg.d_model) + p["pos"]
+    for i in range(cfg.n_layers):
+        blk = p[f"block{i}"]
+        h = h + _attn_apply(blk["attn"], layers.apply_layernorm(blk["ln1"], h),
+                            amask, cfg.n_heads, causal=False,
+                            kernel_attn=cfg.kernel_attn)
+        m = _mlp_apply(blk["mlp"],
+                       layers.apply_layernorm(blk["ln2"], h).reshape(-1, cfg.d_model))
+        h = h + m.reshape(bsz, cfg.seq_len, cfg.d_model)
+    h = layers.apply_layernorm(p["norm"], h).mean(axis=1)
+    return layers.apply_linear(p["head"], h)
+
+
+# ---------------------------------------------------------------------------
+# GPT-2-style decoder
+# ---------------------------------------------------------------------------
+
+def init_gpt2(cfg: ModelConfig, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    p: Params = {
+        "wte": layers.init_embedding(rng, cfg.n_classes, cfg.d_model),
+        "wpe": (rng.standard_normal((cfg.seq_len, cfg.d_model)) * 0.02
+                ).astype(cfg.np_dtype),
+        "norm": layers.init_layernorm(cfg.d_model),
+        "head": layers.init_linear(rng, cfg.d_model, cfg.n_classes, variant="dense"),
+    }
+    for i in range(cfg.n_layers):
+        p[f"block{i}"] = {
+            "ln1": layers.init_layernorm(cfg.d_model),
+            "ln2": layers.init_layernorm(cfg.d_model),
+            "attn": _attn_init(rng, cfg, seed=30 * i),
+            "mlp": _mlp_init(rng, cfg, cfg.d_model, cfg.d_mlp, seed=30 * i + 9),
+        }
+    return p
+
+
+def apply_gpt2(p: Params, cfg: ModelConfig, ids):
+    """ids: [B, S] int32 -> logits [B, S, vocab]."""
+    bsz, s = ids.shape
+    amask = attention_mask_for(cfg)
+    h = layers.apply_embedding(p["wte"], ids) + p["wpe"][:s]
+    for i in range(cfg.n_layers):
+        blk = p[f"block{i}"]
+        h = h + _attn_apply(blk["attn"], layers.apply_layernorm(blk["ln1"], h),
+                            amask, cfg.n_heads, causal=True,
+                            kernel_attn=cfg.kernel_attn)
+        m = _mlp_apply(blk["mlp"],
+                       layers.apply_layernorm(blk["ln2"], h).reshape(-1, cfg.d_model))
+        h = h + m.reshape(bsz, s, cfg.d_model)
+    h = layers.apply_layernorm(p["norm"], h)
+    return layers.apply_linear(p["head"], h.reshape(-1, cfg.d_model)
+                               ).reshape(bsz, s, cfg.n_classes)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + accounting
+# ---------------------------------------------------------------------------
+
+def init_model(cfg: ModelConfig, seed: int = 0) -> Params:
+    return {"mixer": init_mixer, "vit": init_vit, "gpt2": init_gpt2}[cfg.family](cfg, seed)
+
+
+def apply_model(p: Params, cfg: ModelConfig, x):
+    return {"mixer": apply_mixer, "vit": apply_vit, "gpt2": apply_gpt2}[cfg.family](p, cfg, x)
+
+
+def param_count(p) -> int:
+    if isinstance(p, dict):
+        return sum(param_count(v) for k, v in p.items() if k != "_static")
+    return int(np.prod(np.shape(p)))
+
+
+def flops_estimate(cfg: ModelConfig, batch: int) -> int:
+    """Rough forward GEMM FLOPs (dense-equivalent x density for sparse).
+
+    Mirrors the paper's Tables 4–5 FLOPs accounting: 2*m*n*k per GEMM,
+    scaled by the layer's density for sparse variants.
+    """
+    d, s, L = cfg.d_model, cfg.seq_len, cfg.n_layers
+    dens = 1.0
+    if cfg.variant in ("pixelfly", "random", "bigbird", "local"):
+        nb = max(d // cfg.block, 1)
+        ms = min(cfg.max_stride, nb)
+        dens = min((math.log2(ms) + 1) / nb if ms > 1 else 1.0 / nb, 1.0)
+    gemm = 0
+    if cfg.family == "mixer":
+        gemm = L * (2 * 2 * s * (s * 2) * d + 2 * 2 * d * cfg.d_mlp * s)
+    else:
+        attn_proj = 4 * 2 * s * d * d
+        attn_scores = 2 * 2 * s * s * d
+        mlp = 2 * 2 * s * d * cfg.d_mlp
+        gemm = L * (attn_proj * dens + attn_scores + mlp * dens)
+    return int(batch * gemm)

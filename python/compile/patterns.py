@@ -1,0 +1,131 @@
+"""Block-mask generators for every sparsity pattern the paper compares.
+
+All masks are *block masks* ([nb_rows, nb_cols] bool) per kernels/ref.py.
+These are used both for weight matrices (via BSR patterns) and attention
+(via the masked score path / the Pallas attention kernel), matching the
+paper's candidate set (Appendix K, Fig 12): local, global, butterfly,
+random — plus the composed baselines BigBird and Sparse-Transformer.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernels import ref
+
+
+def pixelfly_block_mask(nb: int, max_stride: int, global_blocks: int = 0) -> np.ndarray:
+    """Flat block butterfly ∪ optional global stripe (attention form)."""
+    m = ref.flat_butterfly_block_mask(nb, max_stride)
+    if global_blocks:
+        m[:global_blocks, :] = True
+        m[:, :global_blocks] = True
+    return m
+
+
+def local_block_mask(nb: int, window: int, nb_cols: int | None = None) -> np.ndarray:
+    """Block-banded local window; rectangular masks stretch the band along
+    the longer dimension (|i*nbc/nbr - j| <= window*stretch)."""
+    nbc = nb_cols or nb
+    i = np.arange(nb)[:, None].astype(float)
+    j = np.arange(nbc)[None, :].astype(float)
+    stretch = max(nbc / nb, nb / nbc, 1.0)
+    return np.abs(i * (nbc / nb) - j) <= window * stretch
+
+
+def global_block_mask(nb: int, width: int) -> np.ndarray:
+    """Global stripe only (the low-rank component, Appendix I.2)."""
+    m = np.zeros((nb, nb), dtype=bool)
+    m[:width, :] = True
+    m[:, :width] = True
+    return m
+
+
+def random_block_mask(nb_rows: int, nb_cols: int, density: float,
+                      rng: np.random.Generator) -> np.ndarray:
+    """Random block mask with every row/col guaranteed nonempty.
+
+    This is the pruning-literature baseline (magnitude pruning at init is
+    equivalent to random — paper Appendix K.1).
+    """
+    m = rng.random((nb_rows, nb_cols)) < density
+    m[np.arange(nb_rows), rng.integers(0, nb_cols, nb_rows)] = True
+    m[rng.integers(0, nb_rows, nb_cols), np.arange(nb_cols)] = True
+    return m
+
+
+def bigbird_block_mask(nb: int, window: int = 1, n_global: int = 1,
+                       n_random: int = 2,
+                       rng: np.random.Generator | None = None) -> np.ndarray:
+    """BigBird (Zaheer et al. 2020): local window + global + random blocks."""
+    rng = rng or np.random.default_rng(0)
+    m = local_block_mask(nb, window) | global_block_mask(nb, n_global)
+    for i in range(nb):
+        for j in rng.integers(0, nb, n_random):
+            m[i, j] = True
+    return m
+
+
+def sparse_transformer_block_mask(nb: int, stride: int | None = None) -> np.ndarray:
+    """Sparse Transformer (Child et al. 2019) strided pattern at block level:
+    local band + every stride-th column (the 'column attention' heads)."""
+    stride = stride or max(int(np.sqrt(nb)), 1)
+    m = local_block_mask(nb, 1)
+    m[:, ::stride] = True
+    return m
+
+
+def longformer_block_mask(nb: int, window: int = 2, n_global: int = 1) -> np.ndarray:
+    """Longformer: sliding window + global tokens (no random blocks)."""
+    return local_block_mask(nb, window) | global_block_mask(nb, n_global)
+
+
+def mask_density(m: np.ndarray) -> float:
+    return float(m.sum()) / m.size
+
+
+def make_weight_mask(kind: str, nb_in: int, nb_out: int, *, max_stride: int = 4,
+                     density: float = 0.1, seed: int = 0) -> np.ndarray:
+    """Weight-matrix block mask by pattern name (rectangular supported via
+    the Appendix I.4 stretch for butterfly-family patterns)."""
+    from .kernels import flat_butterfly as fb
+    rng = np.random.default_rng(seed)
+    if kind == "pixelfly" or kind == "butterfly_flat":
+        return fb.stretched_mask(nb_in, nb_out, max_stride)
+    if kind == "random":
+        return random_block_mask(nb_in, nb_out, density, rng)
+    if kind == "local":
+        return local_block_mask(nb_in, 1, nb_out)
+    if kind == "bigbird":
+        if nb_in == nb_out:
+            return bigbird_block_mask(nb_in, rng=rng)
+        return local_block_mask(nb_in, 1, nb_out) | random_block_mask(
+            nb_in, nb_out, 0.1, rng)
+    raise ValueError(f"unknown weight mask kind {kind!r}")
+
+
+def make_attention_mask(kind: str, nb: int, *, max_stride: int = 4,
+                        global_blocks: int = 1, causal: bool = False,
+                        seed: int = 0) -> np.ndarray:
+    """Attention block mask by pattern name."""
+    rng = np.random.default_rng(seed)
+    if kind == "dense":
+        m = np.ones((nb, nb), dtype=bool)
+    elif kind == "pixelfly":
+        m = pixelfly_block_mask(nb, max_stride, global_blocks)
+    elif kind == "bigbird":
+        m = bigbird_block_mask(nb, rng=rng)
+    elif kind == "sparse_transformer":
+        m = sparse_transformer_block_mask(nb)
+    elif kind == "longformer":
+        m = longformer_block_mask(nb)
+    elif kind == "local":
+        m = local_block_mask(nb, 1)
+    elif kind == "random":
+        m = random_block_mask(nb, nb, 0.2, rng)
+    else:
+        raise ValueError(f"unknown attention mask kind {kind!r}")
+    if causal:
+        m = m & np.tril(np.ones((nb, nb), dtype=bool))
+        m[np.arange(nb), np.arange(nb)] = True  # rows never empty
+    return m

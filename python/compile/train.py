@@ -1,0 +1,163 @@
+"""Layer-2 training step, losses, AdamW, and the empirical-NTK artifact.
+
+The Rust coordinator drives training through three AOT-compiled entry
+points per model instance (lowered once by aot.py, executed via PJRT):
+
+    train_step(params, m, v, step, lr, x, y) -> (loss, params', m', v')
+    forward_eval(params, x, y)               -> (loss, n_correct)
+    ntk_gram(params, x)                      -> [N, N] empirical NTK
+
+Params cross the boundary as a *stripped* pytree (no '_static' metadata
+leaves — those are compile-time constants closed over via the config's
+param template; see layers.strip_static/merge_static).  Dict pytrees
+flatten in sorted-key order, which is the ordering contract recorded in
+artifacts/manifest.json and mirrored by the Rust side.
+
+AdamW is implemented inline (bias-corrected, decoupled weight decay) so
+the whole optimizer lives inside the lowered HLO — one device round trip
+per step, nothing Python at runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, model as model_lib
+
+Params = dict[str, Any]
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+WEIGHT_DECAY = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels):
+    """Mean cross entropy; logits [N, C], labels [N] int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def lm_xent(logits, targets):
+    """Next-token cross entropy; logits [B, S, V], targets [B, S] int32."""
+    return softmax_xent(logits.reshape(-1, logits.shape[-1]),
+                        targets.reshape(-1))
+
+
+def model_loss(params, cfg: model_lib.ModelConfig, x, y):
+    logits = model_lib.apply_model(params, cfg, x)
+    if cfg.family == "gpt2":
+        return lm_xent(logits, y)
+    return softmax_xent(logits, y)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def init_opt_state(stripped_params):
+    zeros = jax.tree_util.tree_map(lambda a: np.zeros_like(a), stripped_params)
+    return zeros, jax.tree_util.tree_map(lambda a: np.zeros_like(a), stripped_params)
+
+
+def adamw_update(params, grads, m, v, step, lr, weight_decay=WEIGHT_DECAY):
+    """One AdamW step over matching pytrees. `step` is the *new* step
+    index (1-based) used for bias correction; lr a scalar."""
+    b1c = 1.0 - ADAM_B1 ** step
+    b2c = 1.0 - ADAM_B2 ** step
+
+    def upd(p, g, m_, v_):
+        m2 = ADAM_B1 * m_ + (1 - ADAM_B1) * g
+        v2 = ADAM_B2 * v_ + (1 - ADAM_B2) * (g * g)
+        mh = m2 / b1c
+        vh = v2 / b2c
+        p2 = p - lr * (mh / (jnp.sqrt(vh) + ADAM_EPS) + weight_decay * p)
+        return p2, m2, v2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Entry points (closed over the config + static template)
+# ---------------------------------------------------------------------------
+
+def make_fns(cfg: model_lib.ModelConfig, template: Params) -> dict[str, Callable]:
+    """Build train_step / forward_eval / ntk_gram for one model instance.
+
+    `template` is the full init params (with '_static' leaves); the
+    returned functions take/return the stripped pytree.
+    """
+
+    def loss_of(stripped, x, y):
+        full = layers.merge_static(stripped, template)
+        return model_loss(full, cfg, x, y)
+
+    def train_step(stripped, m, v, step, lr, x, y):
+        loss, grads = jax.value_and_grad(loss_of)(stripped, x, y)
+        new_step = step + 1
+        p2, m2, v2 = adamw_update(stripped, grads, m, v, new_step, lr)
+        return loss, p2, m2, v2, new_step
+
+    def forward_eval(stripped, x, y):
+        full = layers.merge_static(stripped, template)
+        logits = model_lib.apply_model(full, cfg, x)
+        if cfg.family == "gpt2":
+            loss = lm_xent(logits, y)
+            pred = logits.argmax(-1)
+            correct = (pred == y).sum()
+        else:
+            loss = softmax_xent(logits, y)
+            correct = (logits.argmax(-1) == y).sum()
+        return loss, correct.astype(jnp.int32)
+
+    def scalar_out(stripped, x1):
+        """Scalar network output for the NTK (sum of logits of one example)."""
+        full = layers.merge_static(stripped, template)
+        logits = model_lib.apply_model(full, cfg, x1[None])
+        return logits.sum()
+
+    def ntk_gram(stripped, x):
+        """Empirical NTK gram over the batch (paper Eq. 22).
+
+        K = J J^T accumulated leaf-by-leaf so the full Jacobian is never
+        materialised across parameters.
+        """
+        grads = jax.vmap(lambda xi: jax.grad(scalar_out)(stripped, xi))(x)
+        leaves = jax.tree_util.tree_leaves(grads)
+        n = x.shape[0]
+        k = jnp.zeros((n, n), jnp.float32)
+        for g in leaves:
+            gf = g.reshape(n, -1).astype(jnp.float32)
+            k = k + gf @ gf.T
+        return k
+
+    return {"train_step": train_step, "forward_eval": forward_eval,
+            "ntk_gram": ntk_gram}
+
+
+def example_batch(cfg: model_lib.ModelConfig, batch: int, seed: int = 0):
+    """Shape-correct example inputs for lowering (values irrelevant)."""
+    rng = np.random.default_rng(seed)
+    if cfg.family == "gpt2":
+        x = rng.integers(0, cfg.n_classes, (batch, cfg.seq_len)).astype(np.int32)
+        y = rng.integers(0, cfg.n_classes, (batch, cfg.seq_len)).astype(np.int32)
+    else:
+        x = rng.standard_normal((batch, cfg.seq_len, cfg.in_dim)).astype(np.float32)
+        y = rng.integers(0, cfg.n_classes, (batch,)).astype(np.int32)
+    return x, y

@@ -1,0 +1,126 @@
+"""AOT driver tests: lowering, signatures, manifest formats."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, layers, model as M, train as T
+
+
+TINY = M.ModelConfig(family="mixer", variant="pixelfly", d_model=16,
+                     n_layers=1, n_heads=2, seq_len=8, in_dim=8, n_classes=8,
+                     block=4, max_stride=2, attn_max_stride=2)
+
+
+class TestLowering:
+    def test_hlo_text_emitted(self):
+        tpl = M.init_model(TINY)
+        stripped = layers.strip_static(tpl)
+        fns = T.make_fns(TINY, tpl)
+        x, y = T.example_batch(TINY, 4)
+        hlo = aot.to_hlo_text(fns["forward_eval"], stripped, x, y)
+        assert "HloModule" in hlo
+        assert len(hlo) > 1000
+
+    def test_signature_matches_lowered_params(self):
+        # keep_unused=True must preserve the full flat signature
+        tpl = M.init_model(TINY)
+        stripped = layers.strip_static(tpl)
+        fns = T.make_fns(TINY, tpl)
+        x, y = T.example_batch(TINY, 4)
+        m, v = T.init_opt_state(stripped)
+        args = (stripped, m, v, np.int32(0), np.float32(1e-3), x, y)
+        sig = aot.flat_signature(args)
+        hlo = aot.to_hlo_text(fns["train_step"], *args)
+        # count entry-computation parameters: the ENTRY block is the last
+        # computation in the text; parameter indices are dense 0..N-1
+        entry = hlo[hlo.rindex("ENTRY"):]
+        import re
+        idxs = {int(m) for m in re.findall(r"parameter\((\d+)\)", entry)}
+        assert idxs == set(range(len(sig))), (sorted(idxs)[-3:], len(sig))
+
+    def test_out_signature_counts(self):
+        tpl = M.init_model(TINY)
+        stripped = layers.strip_static(tpl)
+        fns = T.make_fns(TINY, tpl)
+        x, y = T.example_batch(TINY, 4)
+        m, v = T.init_opt_state(stripped)
+        outs = aot.out_signature(fns["train_step"], stripped, m, v,
+                                 np.int32(0), np.float32(1e-3), x, y)
+        n_leaves = len(jax.tree_util.tree_leaves(stripped))
+        assert len(outs) == 3 * n_leaves + 2
+
+    def test_flat_signature_sorted_and_named(self):
+        tpl = M.init_model(TINY)
+        stripped = layers.strip_static(tpl)
+        sig = aot.flat_signature((stripped,))
+        names = [s["name"] for s in sig]
+        assert len(names) == len(set(names)), "names must be unique"
+        assert all(s["dtype"] in ("f32", "s32") for s in sig)
+
+
+class TestManifestFormats:
+    def _tiny_manifest(self):
+        return {
+            "artifacts": {
+                "t.train_step": {
+                    "file": "t.train_step.hlo.txt", "entry": "train_step",
+                    "preset": "t", "batch": 4, "n_param_leaves": 2,
+                    "param_count": 10, "flops_fwd": 99,
+                    "inputs": [
+                        {"name": "a/w", "dtype": "f32", "shape": [2, 2]},
+                        {"name": "step", "dtype": "s32", "shape": []},
+                    ],
+                    "outputs": [{"dtype": "f32", "shape": []}],
+                    "config": {"family": "mixer", "block": 4},
+                }
+            },
+            "states": {"t": {"dir": "state/t", "param_leaves": [1, 2]}},
+        }
+
+    def test_rtxt_roundtrip_fields(self, tmp_path):
+        m = self._tiny_manifest()
+        p = tmp_path / "manifest.rtxt"
+        aot.write_rtxt(m, str(p))
+        txt = p.read_text()
+        lines = [l.split("\t") for l in txt.strip().split("\n")]
+        art = [l for l in lines if l[0] == "artifact"][0]
+        assert art[1] == "t.train_step" and art[5] == "4" and art[6] == "2"
+        ins = [l for l in lines if l[0] == "in"]
+        assert ins[0][1] == "a/w" and ins[0][3] == "2 2"
+        assert ins[1][2] == "s32" and ins[1][3] == ""
+        states = [l for l in lines if l[0] == "state"]
+        assert states[0][1] == "t" and states[0][3] == "2"
+
+    def test_real_manifest_consistency(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        m = json.load(open(path))
+        for key, a in m["artifacts"].items():
+            if a["entry"] == "train_step":
+                p = a["n_param_leaves"]
+                assert len(a["outputs"]) == 3 * p + 2, key
+                # inputs: params + m + v + step + lr + x + y
+                assert len(a["inputs"]) == 3 * p + 4, key
+            hlo = os.path.join(os.path.dirname(path), a["file"])
+            assert os.path.exists(hlo), key
+
+
+class TestPresets:
+    def test_all_presets_constructible(self):
+        for name, spec in {**aot.PRESETS, **aot.FULL_PRESETS}.items():
+            cfg = spec["cfg"]
+            assert cfg.d_model % cfg.block == 0, name
+            assert cfg.seq_len % cfg.block == 0, name
+
+    def test_preset_names_match_entry_structure(self):
+        for name, spec in aot.PRESETS.items():
+            for e in spec["entries"]:
+                assert e in ("train_step", "forward_eval", "ntk_gram"), name

@@ -1,0 +1,115 @@
+"""Block-sparse attention kernel vs masked-dense oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn
+from compile.kernels import ref
+
+
+def _qkv(rng, h, sq, d):
+    return [jnp.asarray(rng.standard_normal((h, sq, d)).astype(np.float32))
+            for _ in range(3)]
+
+
+class TestMaskConstruction:
+    def test_global_stripe(self):
+        m = attn.attention_block_mask(8, 2, 2)
+        assert m[:2, :].all() and m[:, :2].all()
+
+    def test_causal_is_lower_triangular(self):
+        m = attn.attention_block_mask(8, 8, 1, causal=True)
+        assert not np.triu(m, 1).any()
+
+    def test_diagonal_always_present(self):
+        for ms in (1, 2, 4, 8):
+            m = attn.attention_block_mask(8, ms, 0)
+            assert np.diag(m).all()
+
+    def test_rank_bound_of_global_stripe(self):
+        # Appendix I.2: width-w global stripe has rank <= 2*w*b
+        nb, b, w = 8, 4, 1
+        m = attn.attention_block_mask(nb, 1, w)
+        m[np.arange(nb), np.arange(nb)] = False  # remove diagonal, keep stripe
+        dense = ref.block_mask_to_element_mask(m, b).astype(np.float32)
+        assert np.linalg.matrix_rank(dense) <= 2 * w * b
+
+
+class TestAttentionKernel:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(0)
+        h, nb, b, d = 2, 8, 8, 16
+        mask = attn.attention_block_mask(nb, 4, 1)
+        q, k, v = _qkv(rng, h, nb * b, d)
+        o = attn.block_sparse_attention(q, k, v, mask)
+        oref = ref.block_sparse_attention(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_causal_matches_masked_dense(self):
+        rng = np.random.default_rng(1)
+        h, nb, b, d = 1, 4, 8, 8
+        sq = nb * b
+        mask = attn.attention_block_mask(nb, 4, 1, causal=True)
+        q, k, v = _qkv(rng, h, sq, d)
+        o = attn.block_sparse_attention(q, k, v, mask, causal=True)
+        emask = ref.block_mask_to_element_mask(mask, b) & np.tril(np.ones((sq, sq), bool))
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(d)
+        s = jnp.where(jnp.asarray(emask)[None], s, -1e9)
+        oref = jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, -1), v)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_full_mask_equals_dense_attention(self):
+        rng = np.random.default_rng(2)
+        h, nb, b, d = 2, 4, 4, 8
+        mask = np.ones((nb, nb), dtype=bool)
+        q, k, v = _qkv(rng, h, nb * b, d)
+        o = attn.block_sparse_attention(q, k, v, mask)
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(d)
+        oref = jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, -1), v)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_rows_are_convex_combinations(self):
+        # softmax output must lie in the convex hull of visible v rows
+        rng = np.random.default_rng(3)
+        h, nb, b, d = 1, 4, 4, 4
+        mask = attn.attention_block_mask(nb, 2, 0)
+        q, k, _ = _qkv(rng, h, nb * b, d)
+        v = jnp.ones((h, nb * b, d), jnp.float32)
+        o = attn.block_sparse_attention(q, k, v, mask)
+        np.testing.assert_allclose(np.asarray(o), np.ones_like(o), rtol=1e-5)
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.sampled_from([4, 8]),
+       st.sampled_from([4, 8, 16]), st.integers(0, 2 ** 16), st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_attention_hypothesis(h, log_nb, b, d, seed, causal):
+    nb = 2 ** log_nb
+    rng = np.random.default_rng(seed)
+    ms = min(nb, 4)
+    mask = attn.attention_block_mask(nb, ms, 1, causal=causal)
+    q, k, v = _qkv(rng, h, nb * b, d)
+    o = attn.block_sparse_attention(q, k, v, mask, causal=causal)
+    if causal:
+        emask = ref.block_mask_to_element_mask(mask, b) & np.tril(
+            np.ones((nb * b, nb * b), bool))
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(d)
+        s = jnp.where(jnp.asarray(emask)[None], s, -1e9)
+        oref = jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, -1), v)
+    else:
+        oref = ref.block_sparse_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_attention_stats_flop_reduction():
+    nb = 16
+    mask = attn.attention_block_mask(nb, 2, 1)
+    s = attn.attention_stats(nb, 32, 64, mask)
+    assert 1 < s["flop_reduction"] <= nb * nb
+    assert abs(s["visible_block_fraction"] * s["flop_reduction"] - 1) < 1e-9

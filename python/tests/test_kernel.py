@@ -1,0 +1,329 @@
+"""Pallas BSR GEMM kernel vs the pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps the kernel's shape/dtype space (block size, block count,
+batch, max stride, dtype) and asserts allclose against `kernels.ref`; the
+deterministic tests pin the conventions (padding, packing, transposition,
+custom-VJP gradients).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import block_sparse as bs
+from compile.kernels import flat_butterfly as fb
+from compile.kernels import lowrank as lr
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _random_masked_dense(rng, mask, b, dtype=np.float32):
+    n_in, n_out = mask.shape[0] * b, mask.shape[1] * b
+    w = rng.standard_normal((n_in, n_out)).astype(dtype)
+    return w * ref.block_mask_to_element_mask(mask, b).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic convention tests
+# ---------------------------------------------------------------------------
+
+class TestPatternBuild:
+    def test_identity_only_pattern(self):
+        mask = np.eye(4, dtype=bool)
+        pat = bs.make_pattern(mask, 2)
+        assert pat.s_fwd == 1 and pat.nnz_blocks == 4
+        assert pat.density() == 0.25
+
+    def test_pack_unpack_roundtrip(self):
+        rng = np.random.default_rng(0)
+        mask = ref.flat_butterfly_block_mask(8, 8)
+        pat = bs.make_pattern(mask, 4)
+        w = _random_masked_dense(rng, mask, 4)
+        assert np.array_equal(bs.unpack_dense(bs.pack_dense(w, pat), pat), w)
+
+    def test_padding_slots_are_invalid(self):
+        # ragged mask: row 0 has 3 blocks, row 1 has 1
+        mask = np.array([[1, 1, 1], [0, 1, 0], [1, 0, 1]], dtype=bool)
+        pat = bs.make_pattern(mask, 2)
+        assert pat.s_fwd == max(int(mask[:, j].sum()) for j in range(3))
+        assert pat.nnz_blocks == int(mask.sum())
+        # every valid slot maps back to a True mask entry
+        for j in range(pat.nbc):
+            for t in range(pat.s_fwd):
+                if pat.fwd_valid[j, t]:
+                    assert mask[pat.fwd_cols[j, t], j]
+
+    def test_rectangular_pattern(self):
+        mask = fb.stretched_mask(8, 4, 4)
+        assert mask.shape == (8, 4)
+        assert mask.any(axis=1).all(), "every input block row feeds something"
+        assert mask.any(axis=0).all(), "every output block col is fed"
+
+
+class TestBsrMatmul:
+    def test_matches_masked_dense(self):
+        rng = np.random.default_rng(1)
+        mask = ref.flat_butterfly_block_mask(8, 4)
+        b = 8
+        pat = bs.make_pattern(mask, b)
+        w = _random_masked_dense(rng, mask, b)
+        x = jnp.asarray(rng.standard_normal((32, 8 * b)).astype(np.float32))
+        y = bs.bsr_matmul(x, jnp.asarray(bs.pack_dense(w, pat)), pat)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ jnp.asarray(w)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_matches_ref_bsr(self):
+        rng = np.random.default_rng(2)
+        mask = ref.flat_butterfly_block_mask(4, 2)
+        b = 4
+        pat = bs.make_pattern(mask, b)
+        w = _random_masked_dense(rng, mask, b)
+        vals_in, cols_in = ref.dense_to_bsr(w, mask, b)
+        x = jnp.asarray(rng.standard_normal((8, 4 * b)).astype(np.float32))
+        y_kernel = bs.bsr_matmul(x, jnp.asarray(bs.pack_dense(w, pat)), pat)
+        y_ref = ref.bsr_matmul(x, jnp.asarray(vals_in), cols_in, 4)
+        np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_rectangular_matmul(self):
+        rng = np.random.default_rng(3)
+        b = 4
+        mask = fb.stretched_mask(8, 16, 4)   # n_in=32 -> n_out=64
+        pat = bs.make_pattern(mask, b)
+        w = _random_masked_dense(rng, mask, b)
+        x = jnp.asarray(rng.standard_normal((16, 8 * b)).astype(np.float32))
+        y = bs.bsr_matmul(x, jnp.asarray(bs.pack_dense(w, pat)), pat)
+        assert y.shape == (16, 16 * b)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ jnp.asarray(w)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gradients_match_dense(self):
+        rng = np.random.default_rng(4)
+        mask = ref.flat_butterfly_block_mask(4, 4)
+        b = 4
+        pat = bs.make_pattern(mask, b)
+        w = _random_masked_dense(rng, mask, b)
+        x = jnp.asarray(rng.standard_normal((8, 4 * b)).astype(np.float32))
+        vals = jnp.asarray(bs.pack_dense(w, pat))
+        tgt = jnp.asarray(rng.standard_normal((8, 4 * b)).astype(np.float32))
+
+        def loss_k(x, v):
+            return ((bs.bsr_matmul(x, v, pat) - tgt) ** 2).sum()
+
+        def loss_d(x, w):
+            return ((x @ w - tgt) ** 2).sum()
+
+        gx, gv = jax.grad(loss_k, argnums=(0, 1))(x, vals)
+        gxd, gwd = jax.grad(loss_d, argnums=(0, 1))(x, jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gxd),
+                                   rtol=1e-3, atol=1e-3)
+        # dense weight grad masked to the pattern == unpacked kernel grad
+        emask = ref.block_mask_to_element_mask(mask, b)
+        np.testing.assert_allclose(bs.unpack_dense(np.asarray(gv), pat),
+                                   np.asarray(gwd) * emask,
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_weight_grad_padding_stays_zero(self):
+        rng = np.random.default_rng(5)
+        mask = np.array([[1, 1], [0, 1]], dtype=bool)  # ragged columns
+        pat = bs.make_pattern(mask, 2)
+        w = _random_masked_dense(rng, mask, 2)
+        x = jnp.asarray(rng.standard_normal((4, 4)).astype(np.float32))
+        vals = jnp.asarray(bs.pack_dense(w, pat))
+        gv = jax.grad(lambda v: (bs.bsr_matmul(x, v, pat) ** 2).sum())(vals)
+        gv = np.asarray(gv)
+        assert (gv[~pat.fwd_valid] == 0).all()
+
+    def test_jit_compiles(self):
+        rng = np.random.default_rng(6)
+        mask = ref.flat_butterfly_block_mask(4, 2)
+        pat = bs.make_pattern(mask, 4)
+        w = _random_masked_dense(rng, mask, 4)
+        x = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
+        f = jax.jit(lambda x, v: bs.bsr_matmul(x, v, pat))
+        y = f(x, jnp.asarray(bs.pack_dense(w, pat)))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ jnp.asarray(w)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestTiledMatmul:
+    def test_matches_dense(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal((64, 48)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((48, 128)).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(bs.tiled_matmul(x, w)),
+                                   np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+
+    def test_small_dims_fall_back(self):
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.standard_normal((4, 8)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(bs.tiled_matmul(x, w)),
+                                   np.asarray(x @ w), rtol=1e-4, atol=1e-4)
+
+
+class TestLowRankAndPixelfly:
+    def test_lowrank_matches_ref(self):
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.standard_normal((16, 32)).astype(np.float32))
+        u, v = lr.init_lowrank(32, 64, 8, rng)
+        y = lr.lowrank_matmul(x, jnp.asarray(u), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(ref.lowrank_matmul(x, u, v)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_pixelfly_combination(self):
+        rng = np.random.default_rng(10)
+        n, b = 32, 4
+        pat = fb.flat_butterfly_pattern(n, b, 4)
+        vals = jnp.asarray(fb.init_values(pat, 0))
+        u, v = lr.init_lowrank(n, n, 4, rng)
+        x = jnp.asarray(rng.standard_normal((8, n)).astype(np.float32))
+        for gamma in (0.0, 0.5, 1.0):
+            y = lr.pixelfly_matmul(x, vals, pat, jnp.asarray(u), jnp.asarray(v), gamma)
+            w = jnp.asarray(bs.unpack_dense(np.asarray(vals), pat))
+            yref = gamma * (x @ w) + (1 - gamma) * ((x @ u) @ v.T)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_rank_for_budget_block_aligned(self):
+        r = lr.rank_for_budget(256, 256, 256 * 64, 32)
+        assert r % 32 == 0 and r * (256 + 256) <= 256 * 64
+
+
+class TestKernelStats:
+    def test_utilization_bounds(self):
+        pat = fb.flat_butterfly_pattern(256, 32, 8)
+        s = bs.kernel_stats(pat, m=128)
+        assert 0 < s["est_mxu_utilization"] <= 1
+        assert s["useful_macs_per_mtile"] <= s["issued_macs_per_mtile"]
+
+    def test_vmem_grows_with_block(self):
+        a = bs.kernel_stats(fb.flat_butterfly_pattern(256, 32, 4), m=64)
+        b = bs.kernel_stats(fb.flat_butterfly_pattern(256, 64, 4), m=64)
+        assert b["vmem_bytes_per_step"] > 0 and a["vmem_bytes_per_step"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+@st.composite
+def bsr_cases(draw):
+    log_nb = draw(st.integers(1, 4))
+    nb = 2 ** log_nb
+    b = draw(st.sampled_from([2, 4, 8]))
+    max_stride = 2 ** draw(st.integers(0, log_nb))
+    m = draw(st.sampled_from([4, 8, 16, 32]))
+    seed = draw(st.integers(0, 2 ** 16))
+    dtype = draw(st.sampled_from([np.float32]))
+    return nb, b, max_stride, m, seed, dtype
+
+
+@given(bsr_cases())
+@settings(**SETTINGS)
+def test_bsr_matmul_hypothesis(case):
+    nb, b, max_stride, m, seed, dtype = case
+    rng = np.random.default_rng(seed)
+    mask = ref.flat_butterfly_block_mask(nb, max_stride)
+    pat = bs.make_pattern(mask, b)
+    w = _random_masked_dense(rng, mask, b, dtype)
+    x = jnp.asarray(rng.standard_normal((m, nb * b)).astype(dtype))
+    y = bs.bsr_matmul(x, jnp.asarray(bs.pack_dense(w, pat)), pat, tile_m=min(m, 16))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ jnp.asarray(w)),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_bsr_random_mask_hypothesis(log_r, log_c, seed):
+    """Arbitrary (non-butterfly) masks with at least one block per row/col."""
+    rng = np.random.default_rng(seed)
+    nbr, nbc = 2 ** log_r, 2 ** log_c
+    mask = rng.random((nbr, nbc)) < 0.4
+    mask[np.arange(nbr), rng.integers(0, nbc, nbr)] = True  # nonempty rows
+    mask[rng.integers(0, nbr, nbc), np.arange(nbc)] = True  # nonempty cols
+    b = 4
+    pat = bs.make_pattern(mask, b)
+    w = _random_masked_dense(rng, mask, b)
+    x = jnp.asarray(rng.standard_normal((8, nbr * b)).astype(np.float32))
+    y = bs.bsr_matmul(x, jnp.asarray(bs.pack_dense(w, pat)), pat, tile_m=8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ jnp.asarray(w)),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(bsr_cases())
+@settings(max_examples=6, deadline=None)
+def test_bsr_grad_hypothesis(case):
+    nb, b, max_stride, m, seed, dtype = case
+    rng = np.random.default_rng(seed)
+    mask = ref.flat_butterfly_block_mask(nb, max_stride)
+    pat = bs.make_pattern(mask, b)
+    w = _random_masked_dense(rng, mask, b, dtype)
+    x = jnp.asarray(rng.standard_normal((m, nb * b)).astype(dtype))
+    vals = jnp.asarray(bs.pack_dense(w, pat))
+    gx = jax.grad(lambda x: bs.bsr_matmul(x, vals, pat, tile_m=min(m, 16)).sum())(x)
+    gxd = jax.grad(lambda x: (x @ jnp.asarray(w)).sum())(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gxd), rtol=2e-3, atol=2e-3)
+
+
+class TestXlaBackend:
+    """The gather+einsum backend must match the Pallas kernels exactly
+    (it is what the CPU artifacts lower; see aot.py and §Perf L2)."""
+
+    def _setup(self, seed=0):
+        rng = np.random.default_rng(seed)
+        from compile.kernels import flat_butterfly as fb2
+        pat = fb2.flat_butterfly_pattern(32, 4, 4)
+        mask = ref.flat_butterfly_block_mask(8, 4)
+        w = (rng.standard_normal((32, 32))
+             * ref.block_mask_to_element_mask(mask, 4)).astype(np.float32)
+        vals = jnp.asarray(bs.pack_dense(w, pat))
+        x = jnp.asarray(rng.standard_normal((8, 32)).astype(np.float32))
+        return pat, mask, w, vals, x
+
+    def test_backends_agree(self):
+        pat, mask, w, vals, x = self._setup()
+        try:
+            bs.set_backend("pallas")
+            yp = bs.bsr_matmul(x, vals, pat)
+            bs.set_backend("xla")
+            yx = bs.bsr_matmul(x, vals, pat)
+        finally:
+            bs.set_backend("pallas")
+        np.testing.assert_allclose(np.asarray(yp), np.asarray(yx),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_xla_backend_padding_grads_zero(self):
+        # padded value slots must receive exactly-zero gradients, or the
+        # optimizer would grow blocks outside the pattern
+        rng = np.random.default_rng(1)
+        mask = np.array([[1, 1], [0, 1]], dtype=bool)  # ragged
+        pat = bs.make_pattern(mask, 2)
+        w = (rng.standard_normal((4, 4))
+             * ref.block_mask_to_element_mask(mask, 2)).astype(np.float32)
+        vals = jnp.asarray(bs.pack_dense(w, pat))
+        x = jnp.asarray(rng.standard_normal((4, 4)).astype(np.float32))
+        try:
+            bs.set_backend("xla")
+            g = jax.grad(lambda v: (bs.bsr_matmul(x, v, pat) ** 2).sum())(vals)
+        finally:
+            bs.set_backend("pallas")
+        g = np.asarray(g)
+        assert (g[~pat.fwd_valid] == 0).all()
+
+    def test_xla_tiled_matmul_is_dense(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+        try:
+            bs.set_backend("xla")
+            y = bs.tiled_matmul(x, w)
+        finally:
+            bs.set_backend("pallas")
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,191 @@
+"""Layer-2 model tests: shapes, variants, training behaviour, NTK."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import layers, model as M, train as T
+
+TINY = dict(d_model=32, n_layers=1, n_heads=2, seq_len=16, in_dim=12,
+            n_classes=16, block=4, max_stride=2, attn_max_stride=2)
+
+
+def make(family, variant, **kw):
+    base = {**TINY, **kw}
+    return M.ModelConfig(family=family, variant=variant, **base)
+
+
+FAMILIES = ["mixer", "vit", "gpt2"]
+VARIANTS = ["dense", "pixelfly", "random", "lowrank"]
+
+
+class TestShapes:
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_logit_shapes(self, family):
+        cfg = make(family, "pixelfly")
+        p = M.init_model(cfg)
+        x, _ = T.example_batch(cfg, 4)
+        out = M.apply_model(p, cfg, jnp.asarray(x))
+        if family == "gpt2":
+            assert out.shape == (4, cfg.seq_len, cfg.n_classes)
+        else:
+            assert out.shape == (4, cfg.n_classes)
+
+    @pytest.mark.parametrize("variant", VARIANTS)
+    def test_variants_all_run(self, variant):
+        cfg = make("vit", variant)
+        p = M.init_model(cfg)
+        x, _ = T.example_batch(cfg, 4)
+        out = M.apply_model(p, cfg, jnp.asarray(x))
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_butterfly_product_variant_square_mlp(self):
+        cfg = make("mixer", "butterfly_product", mlp_ratio=1)
+        p = M.init_model(cfg)
+        x, _ = T.example_batch(cfg, 4)
+        out = M.apply_model(p, cfg, jnp.asarray(x))
+        assert out.shape == (4, cfg.n_classes)
+
+    def test_kernel_attention_matches_masked_dense(self):
+        cfg = make("vit", "dense", attn_pattern="pixelfly")
+        cfg_k = dataclasses.replace(cfg, kernel_attn=True)
+        p = M.init_model(cfg)
+        x, _ = T.example_batch(cfg, 4)
+        a = M.apply_model(p, cfg, jnp.asarray(x))
+        b = M.apply_model(p, cfg_k, jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+class TestParamAccounting:
+    def test_pixelfly_fewer_params_than_dense(self):
+        dense = M.init_model(make("mixer", "dense"))
+        pix = M.init_model(make("mixer", "pixelfly"))
+        assert M.param_count(layers.strip_static(pix)) < M.param_count(
+            layers.strip_static(dense))
+
+    def test_param_count_ignores_static(self):
+        cfg = make("vit", "pixelfly")
+        p = M.init_model(cfg)
+        assert M.param_count(p) == M.param_count(layers.strip_static(p))
+
+    def test_flops_estimate_scales_with_batch(self):
+        cfg = make("gpt2", "dense")
+        assert M.flops_estimate(cfg, 8) == 2 * M.flops_estimate(cfg, 4)
+
+    def test_sparse_flops_below_dense(self):
+        d = M.flops_estimate(make("vit", "dense"), 8)
+        s = M.flops_estimate(make("vit", "pixelfly"), 8)
+        assert s < d
+
+
+class TestTraining:
+    @pytest.mark.parametrize("family,variant", [
+        ("mixer", "pixelfly"), ("gpt2", "pixelfly"), ("vit", "dense"),
+    ])
+    def test_loss_decreases(self, family, variant):
+        cfg = make(family, variant)
+        tpl = M.init_model(cfg)
+        stripped = layers.strip_static(tpl)
+        fns = T.make_fns(cfg, tpl)
+        x, y = T.example_batch(cfg, 8)
+        m, v = T.init_opt_state(stripped)
+        ts = jax.jit(fns["train_step"])
+        out = ts(stripped, m, v, jnp.int32(0), jnp.float32(3e-3), x, y)
+        first = float(out[0])
+        for _ in range(8):
+            out = ts(out[1], out[2], out[3], out[4], jnp.float32(3e-3), x, y)
+        assert float(out[0]) < first, f"{first} -> {float(out[0])}"
+
+    def test_step_counter_increments(self):
+        cfg = make("mixer", "dense")
+        tpl = M.init_model(cfg)
+        stripped = layers.strip_static(tpl)
+        fns = T.make_fns(cfg, tpl)
+        x, y = T.example_batch(cfg, 4)
+        m, v = T.init_opt_state(stripped)
+        out = fns["train_step"](stripped, m, v, jnp.int32(5), jnp.float32(1e-3), x, y)
+        assert int(out[4]) == 6
+
+    def test_eval_counts_correct(self):
+        cfg = make("vit", "dense")
+        tpl = M.init_model(cfg)
+        fns = T.make_fns(cfg, tpl)
+        x, y = T.example_batch(cfg, 8)
+        loss, correct = fns["forward_eval"](layers.strip_static(tpl), x, y)
+        assert 0 <= int(correct) <= 8
+        assert float(loss) > 0
+
+    def test_adamw_moves_all_leaves(self):
+        cfg = make("mixer", "pixelfly")
+        tpl = M.init_model(cfg)
+        stripped = layers.strip_static(tpl)
+        fns = T.make_fns(cfg, tpl)
+        x, y = T.example_batch(cfg, 4)
+        m, v = T.init_opt_state(stripped)
+        out = fns["train_step"](stripped, m, v, jnp.int32(0), jnp.float32(1e-2), x, y)
+        before = jax.tree_util.tree_leaves(stripped)
+        after = jax.tree_util.tree_leaves(out[1])
+        moved = sum(
+            not np.allclose(np.asarray(a), np.asarray(b)) for a, b in zip(before, after))
+        # AdamW with weight decay moves every trainable leaf
+        assert moved >= len(before) - 1, f"only {moved}/{len(before)} moved"
+
+
+class TestNtk:
+    def test_gram_is_psd(self):
+        cfg = make("vit", "pixelfly")
+        tpl = M.init_model(cfg)
+        fns = T.make_fns(cfg, tpl)
+        x, _ = T.example_batch(cfg, 6)
+        k = np.asarray(fns["ntk_gram"](layers.strip_static(tpl), x))
+        np.testing.assert_allclose(k, k.T, rtol=1e-4, atol=1e-4)
+        eig = np.linalg.eigvalsh((k + k.T) / 2)
+        assert eig.min() > -1e-2 * abs(eig.max())
+
+    def test_identical_inputs_identical_rows(self):
+        cfg = make("mixer", "dense")
+        tpl = M.init_model(cfg)
+        fns = T.make_fns(cfg, tpl)
+        x, _ = T.example_batch(cfg, 4)
+        x = np.asarray(x)
+        x[1] = x[0]
+        k = np.asarray(fns["ntk_gram"](layers.strip_static(tpl), jnp.asarray(x)))
+        np.testing.assert_allclose(k[0, 0], k[0, 1], rtol=1e-4)
+
+
+class TestStaticHandling:
+    def test_strip_merge_roundtrip(self):
+        cfg = make("vit", "pixelfly")
+        tpl = M.init_model(cfg)
+        stripped = layers.strip_static(tpl)
+        merged = layers.merge_static(stripped, tpl)
+
+        def no_static(t):
+            if isinstance(t, dict):
+                assert "_static" not in t or True
+                for k, v in t.items():
+                    if k == "_static":
+                        continue
+                    no_static(v)
+
+        def assert_same(a, b):
+            if isinstance(a, dict):
+                for k in a:
+                    if k == "_static":
+                        assert a[k] == b[k]
+                    else:
+                        assert_same(a[k], b[k])
+            else:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        assert_same(tpl, merged)
+
+    def test_stripped_has_no_static_leaves(self):
+        cfg = make("mixer", "pixelfly")
+        stripped = layers.strip_static(M.init_model(cfg))
+        leaves = jax.tree_util.tree_leaves(stripped)
+        assert all(hasattr(l, "shape") for l in leaves)

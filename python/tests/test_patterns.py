@@ -1,0 +1,87 @@
+"""Mask-generator tests (python side) + hypothesis invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import patterns
+from compile.kernels import flat_butterfly as fb
+from compile.kernels import ref
+
+
+class TestGenerators:
+    def test_bigbird_contains_components(self):
+        m = patterns.bigbird_block_mask(16, 1, 1, 2)
+        assert patterns.local_block_mask(16, 1).astype(bool)[
+            np.where(~m)].sum() == 0  # local ⊆ bigbird
+        assert m[:1, :].all() and m[:, :1].all()
+
+    def test_sparse_transformer_strides(self):
+        m = patterns.sparse_transformer_block_mask(16, 4)
+        assert m[:, ::4].all()
+
+    def test_longformer_no_random(self):
+        a = patterns.longformer_block_mask(16, 2, 1)
+        b = patterns.longformer_block_mask(16, 2, 1)
+        assert np.array_equal(a, b), "deterministic"
+
+    def test_rectangular_local(self):
+        m = patterns.local_block_mask(8, 1, 16)
+        assert m.shape == (8, 16)
+        assert m.any(axis=1).all() and m.any(axis=0).all()
+
+    def test_random_mask_nonempty(self):
+        rng = np.random.default_rng(0)
+        m = patterns.random_block_mask(12, 5, 0.05, rng)
+        assert m.any(axis=1).all() and m.any(axis=0).all()
+
+    def test_causal_attention_masks(self):
+        for kind in ["dense", "pixelfly", "bigbird", "local"]:
+            m = patterns.make_attention_mask(kind, 8, causal=True)
+            assert not np.triu(m, 1).any(), kind
+            assert np.diag(m).all(), kind
+
+    def test_mask_density(self):
+        m = np.eye(8, dtype=bool)
+        assert abs(patterns.mask_density(m) - 1 / 8) < 1e-12
+
+
+@given(st.integers(1, 5), st.integers(0, 5), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_pixelfly_mask_structure(log_nb, log_ms, g):
+    nb = 2 ** log_nb
+    ms = min(2 ** log_ms, nb)
+    gb = min(g, nb // 2)
+    m = patterns.pixelfly_block_mask(nb, ms, gb)
+    # diagonal always present; symmetric; global stripe complete
+    assert np.diag(m).all()
+    assert np.array_equal(m, m.T)
+    if gb:
+        assert m[:gb, :].all() and m[:, :gb].all()
+    expect_row = (int(np.log2(ms)) + 1 if ms > 1 else 1)
+    # rows outside the global stripe have exactly the butterfly count + gb
+    if gb < nb // 2:
+        row = m[nb - 1]
+        assert row.sum() >= expect_row
+
+
+@given(st.integers(2, 5), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_stretched_mask_balance(log_nb, ratio):
+    nbr = 2 ** log_nb
+    nbc = nbr * ratio
+    m = fb.stretched_mask(nbr, nbc, 4)
+    # every row has the same number of nonzero blocks (balanced compute)
+    counts = m.sum(axis=1)
+    assert counts.min() > 0
+    assert counts.max() - counts.min() <= counts.min(), counts
+
+
+@given(st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_flat_mask_block_merge_containment(log_nb):
+    # Theorem 4.1 mask form at random sizes
+    nb = 2 ** (log_nb + 1)
+    e_small = ref.block_mask_to_element_mask(ref.flat_butterfly_block_mask(nb, nb), 2)
+    e_big = ref.block_mask_to_element_mask(
+        ref.flat_butterfly_block_mask(nb // 2, nb // 2), 4)
+    assert (e_small <= e_big).all()

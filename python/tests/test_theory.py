@@ -1,0 +1,177 @@
+"""Numeric verification of the paper's theory section at small n.
+
+- Theorem 4.1: block butterfly with block size 2b contains block size b —
+  checked as mask containment of the realised product supports.
+- Theorem 4.3: || product − flat first-order ||_F <= eps for the prescribed
+  lambda — checked directly against the bound.
+- Theorem 4.4: the flat butterfly with small lambda is high-rank (rank grows
+  with n; in particular far above the low-rank regime) — motivates the +UVᵀ.
+- Theorem B.1 flavour: a block-clustered attention matrix is approximated
+  well by flat-block-butterfly + global(low-rank) but poorly by either a
+  pure low-rank or an equal-budget random sparse matrix.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile.kernels import butterfly as bf
+from compile.kernels import block_sparse as bs
+from compile.kernels import flat_butterfly as fb
+from compile.kernels import ref
+
+
+def _dense_factor(rng, nb, stride, b, scale=1.0):
+    mask = ref.butterfly_factor_block_mask(nb, stride)
+    w = rng.standard_normal((nb * b, nb * b)) * scale
+    return w * ref.block_mask_to_element_mask(mask, b)
+
+
+class TestTheorem41BlockContainment:
+    def test_factor_mask_at_2b_covers_b(self):
+        """The support of B_k^{(n,b)} is contained in that of block size 2b.
+
+        Mask-level form of Theorem 4.1: merging two adjacent b-blocks into a
+        2b block can only enlarge the support, so every block-size-b
+        butterfly factor support lies inside some block-size-2b factor mask.
+        """
+        nb = 8   # blocks at size b
+        b = 2
+        for stride in (2, 4, 8):
+            m_b = ref.butterfly_factor_block_mask(nb, stride)
+            e_b = ref.block_mask_to_element_mask(m_b, b)
+            # same matrix viewed at block size 2b: nb/2 blocks
+            if stride >= 4:
+                m_2b = ref.butterfly_factor_block_mask(nb // 2, stride // 2)
+            else:
+                # stride-2 factors at size b merge into the diagonal at 2b
+                m_2b = np.eye(nb // 2, dtype=bool)
+            e_2b = ref.block_mask_to_element_mask(m_2b, 2 * b)
+            assert (e_b <= e_2b).all(), f"stride {stride}"
+
+    def test_flat_mask_monotone_in_block_merge(self):
+        mask_b = ref.flat_butterfly_block_mask(8, 8)
+        e_b = ref.block_mask_to_element_mask(mask_b, 2)
+        mask_2b = ref.flat_butterfly_block_mask(4, 4)
+        e_2b = ref.block_mask_to_element_mask(mask_2b, 4)
+        assert (e_b <= e_2b).all()
+
+
+class TestTheorem43FlatApproximation:
+    @pytest.mark.parametrize("n,b", [(32, 2), (64, 4)])
+    def test_first_order_error_within_eps(self, n, b):
+        rng = np.random.default_rng(0)
+        nb = n // b
+        strides = [2 ** i for i in range(1, int(math.log2(nb)) + 1)]
+        factors = [_dense_factor(rng, nb, s, b) for s in strides]
+        bmax = max(np.linalg.norm(f) for f in factors)
+        eps = 0.05
+        c = 0.5
+        lam = c * math.sqrt(eps) / (math.log2(n) * bmax)
+        prod = np.eye(n)
+        for f in factors[::-1]:          # (I+λB_n)...(I+λB_2)
+            prod = prod @ (np.eye(n) + lam * f)
+        flat = np.eye(n) + lam * sum(factors)
+        err = np.linalg.norm(prod - flat)
+        assert err <= eps, (err, eps)
+
+    def test_error_scales_quadratically_in_lambda(self):
+        rng = np.random.default_rng(1)
+        n, b = 32, 2
+        nb = n // b
+        strides = [2 ** i for i in range(1, int(math.log2(nb)) + 1)]
+        factors = [_dense_factor(rng, nb, s, b) for s in strides]
+
+        def err(lam):
+            prod = np.eye(n)
+            for f in factors[::-1]:
+                prod = prod @ (np.eye(n) + lam * f)
+            return np.linalg.norm(prod - (np.eye(n) + lam * sum(factors)))
+
+        e1, e2 = err(1e-3), err(2e-3)
+        ratio = e2 / e1
+        assert 3.0 < ratio < 5.0, ratio  # ~4 = quadratic
+
+
+class TestTheorem44HighRank:
+    def test_flat_butterfly_is_full_rank_for_small_lambda(self):
+        rng = np.random.default_rng(2)
+        n, b = 64, 2
+        nb = n // b
+        strides = [2 ** i for i in range(1, int(math.log2(nb)) + 1)]
+        lam = 1e-2
+        m = np.eye(n) + lam * sum(_dense_factor(rng, nb, s, b) for s in strides)
+        assert np.linalg.matrix_rank(m) == n
+
+    def test_lowrank_cannot_represent_flat_butterfly(self):
+        """Best rank-r approximation of I + λΣB leaves Ω(1) error (r << n)."""
+        rng = np.random.default_rng(3)
+        n, b, r = 64, 2, 8
+        nb = n // b
+        strides = [2 ** i for i in range(1, int(math.log2(nb)) + 1)]
+        m = np.eye(n) + 1e-2 * sum(_dense_factor(rng, nb, s, b) for s in strides)
+        u, s, vt = np.linalg.svd(m)
+        approx = (u[:, :r] * s[:r]) @ vt[:r]
+        rel = np.linalg.norm(m - approx) / np.linalg.norm(m)
+        assert rel > 0.5
+
+
+class TestTheoremB1SparseLowRankSeparation:
+    def _clustered_attention(self, rng, n_clusters, b, d, beta, delta):
+        """Process 1: equal-size clusters -> block-diagonal-dominant attn."""
+        centers = rng.standard_normal((n_clusters, d)) / np.sqrt(d)
+        z = np.repeat(centers, b, axis=0) + rng.standard_normal(
+            (n_clusters * b, d)) * delta / np.sqrt(d)
+        a = z @ z.T
+        return np.exp(beta * a)
+
+    def test_butterfly_plus_lowrank_beats_either_alone(self):
+        rng = np.random.default_rng(4)
+        nb, b, d = 8, 8, 48
+        n = nb * b
+        m = self._clustered_attention(rng, nb, b, d, beta=math.log(n), delta=0.2)
+
+        # (a) flat block butterfly (contains block diagonal) + low-rank
+        bmask = ref.flat_butterfly_block_mask(nb, 2)
+        emask = ref.block_mask_to_element_mask(bmask, b)
+        sparse_part = m * emask
+        resid = m - sparse_part
+        u, s, vt = np.linalg.svd(resid)
+        r = 2 * b
+        combo = sparse_part + (u[:, :r] * s[:r]) @ vt[:r]
+        err_combo = np.linalg.norm(m - combo)
+
+        # (b) pure low-rank with matched budget (rank covering same params)
+        budget = int(emask.sum()) + r * 2 * n
+        r_pure = min(budget // (2 * n), n)
+        u, s, vt = np.linalg.svd(m)
+        pure_lr = (u[:, :r_pure] * s[:r_pure]) @ vt[:r_pure]
+        err_lr = np.linalg.norm(m - pure_lr)
+
+        # (c) random sparse with matched nnz
+        nnz = budget
+        flat_idx = rng.choice(n * n, size=min(nnz, n * n), replace=False)
+        rmask = np.zeros(n * n, dtype=bool)
+        rmask[flat_idx] = True
+        err_rand = np.linalg.norm(m - m * rmask.reshape(n, n))
+
+        assert err_combo < err_lr, (err_combo, err_lr)
+        assert err_combo < err_rand, (err_combo, err_rand)
+
+
+class TestBudgetHelpers:
+    def test_max_stride_fills_budget(self):
+        nb = 64
+        for budget_blocks in (64, 128, 256, 448):
+            k = fb.max_stride_for_budget(nb, budget_blocks)
+            nnz = nb * (int(math.log2(k)) + 1) if k > 1 else nb
+            assert nnz <= budget_blocks
+            if k < nb:
+                nxt = nb * (int(math.log2(k * 2)) + 1)
+                assert nxt > budget_blocks
+
+    def test_product_stats_ratio_gt_one(self):
+        st = bf.product_stats(1024, 32, 32, m=2048)
+        assert st["traffic_ratio"] > 1.5
+        assert st["kernel_launches_product"] == 5

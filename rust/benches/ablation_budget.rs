@@ -1,0 +1,82 @@
+//! §5.3 ablations as benches:
+//! (i)   low-rank/butterfly split (accuracy proxy: NTK distance)
+//! (ii)  block-size sweep (latency at fixed density — Table 7's axis)
+//! (iii) budget allocation (projected end-to-end speedup).
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::coordinator::budget::{self, Allocation};
+use pixelfly::costmodel::Device;
+use pixelfly::models::{self, LayerType};
+use pixelfly::ntk;
+use pixelfly::patterns::{baselines, flat_butterfly_mask, BlockMask};
+use pixelfly::sparse::{BsrMatrix, Matrix};
+use pixelfly::util::{Args, Rng};
+
+fn main() {
+    let args = Args::from_env();
+    let mut suite = BenchSuite::new("ablation_budget");
+
+    // (ii) block-size sweep at fixed density
+    let n = args.usize_or("n", 1024);
+    let batch = args.usize_or("batch", 256);
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(batch, n, 1.0, &mut rng);
+    println!("=== (ii) block-size sweep at ~12% density ===");
+    for b in [8usize, 16, 32, 64] {
+        let nb = n / b;
+        let ms = 2usize; // diag + 1 stride => density (log2(2)+1)/nb
+        let mask = flat_butterfly_mask(nb, ms.min(nb));
+        let w = BsrMatrix::random(&mask, b, 0.1, &mut Rng::new(1));
+        let mut y = Matrix::zeros(batch, n);
+        suite.bench(&format!("block_{b}"), &format!("density={:.3}", mask.density()), || {
+            w.matmul_into(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+    }
+
+    // (i) low-rank share ablation via NTK distance (accuracy proxy)
+    println!("\n=== (i) low-rank share (NTK distance to dense; lower=better) ===");
+    let nb = 16;
+    let block = 4;
+    let dim = nb * block;
+    let mut noise = Rng::new(2);
+    let data: Vec<Vec<f32>> = (0..16)
+        .map(|i| {
+            let mut c = Rng::new(700 + (i / 2) as u64);
+            (0..dim).map(|_| c.normal_f32() + 0.3 * noise.normal_f32()).collect()
+        })
+        .collect();
+    let dense_g = ntk::ntk_gram(&data, &ntk::supports_from_mask(&BlockMask::ones(nb, nb), block));
+    let total_budget = nb * nb / 4;
+    println!("{:>14} {:>12}", "lowrank share", "NTK dist");
+    for share in [0.0f64, 0.25, 0.5, 0.75, 1.0] {
+        let g_blocks = ((share * total_budget as f64) as usize / (2 * nb)).min(nb / 2);
+        let bf_budget = total_budget - (2 * g_blocks * nb).min(total_budget);
+        let ms = pixelfly::patterns::butterfly::max_stride_for_budget(nb, bf_budget.max(nb));
+        let mask = baselines::pixelfly_attention_mask(nb, if share < 1.0 { ms } else { 1 }, g_blocks);
+        let g = ntk::ntk_gram(&data, &ntk::supports_from_mask(&mask, block));
+        println!("{share:>14.2} {:>12.4}", ntk::relative_distance(&dense_g, &g));
+    }
+    println!("(paper: ~1/4 low-rank + 3/4 butterfly is best)");
+
+    // (iii) budget allocation strategies
+    println!("\n=== (iii) allocation strategy -> projected speedup (vit-s16) ===");
+    let dev = Device::with_block(32);
+    let schema = models::preset("vit-s16", 32).unwrap();
+    let mk = |attn: f64, mlp: f64| Allocation {
+        densities: vec![
+            (LayerType::AttnProj, attn),
+            (LayerType::AttnScore, attn),
+            (LayerType::Mlp, mlp),
+        ],
+        lowrank_share: 0.25,
+    };
+    for (name, alloc) in [
+        ("attention-only", mk(0.1, 1.0)),
+        ("mlp-only", mk(1.0, 0.1)),
+        ("balanced", budget::rule_of_thumb(&schema, 0.1, &dev)),
+    ] {
+        println!("  {name:<16} {:.2}x", budget::projected_speedup(&schema, &alloc, &dev));
+    }
+    suite.report();
+}

@@ -1,0 +1,52 @@
+//! Fig 11 / Appendix J: flat butterfly vs sequential butterfly product.
+//!
+//! Same O(n log k) FLOPs; the product form pays log2(k) full activation
+//! passes.  The paper measures up to 3x on a V100; the shape (flat wins,
+//! gap grows with stride) must hold on the Rust substrate too.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::sparse::butterfly_mm::ButterflyProduct;
+use pixelfly::sparse::Matrix;
+use pixelfly::util::{Args, Rng};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 1024);
+    let batch = args.usize_or("batch", 512); // paper: 2048 on V100
+    let block = args.usize_or("block", 32);
+    let mut suite = BenchSuite::new("fig11_flat_vs_product");
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(batch, n, 1.0, &mut rng);
+
+    let nb = n / block;
+    let mut speedups = Vec::new();
+    let mut k = 2;
+    while k <= nb {
+        let bp = ButterflyProduct::random(n, block, k, 0.1, &mut rng);
+        let flat = bp.flatten();
+        suite.bench(&format!("product_k{k}"), &format!("{} factors", bp.factors.len()), || {
+            std::hint::black_box(bp.matmul(&x));
+        });
+        let tp = suite.last_mean_ms();
+        let mut y = Matrix::zeros(batch, n);
+        suite.bench(&format!("flat_k{k}"), "1 sparse GEMM", || {
+            flat.matmul_into(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        let tf = suite.last_mean_ms();
+        speedups.push((k, tp / tf));
+        k *= 2;
+    }
+    suite.report();
+
+    println!("\nflat-vs-product speedup by max stride (paper: up to ~3x):");
+    for (k, s) in &speedups {
+        println!("  k={k:<4} {s:.2}x");
+    }
+    // the paper's qualitative claims: flat never loses, and the speedup at
+    // the largest stride exceeds the one at the smallest
+    assert!(speedups.iter().all(|(_, s)| *s > 0.9),
+            "flat should not lose: {speedups:?}");
+    assert!(speedups.last().unwrap().1 >= speedups.first().unwrap().1 * 0.8,
+            "gap should grow (or hold) with stride: {speedups:?}");
+}

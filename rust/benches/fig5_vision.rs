@@ -1,0 +1,63 @@
+//! Fig 5 / Table 4: vision-model training-step throughput, dense vs
+//! Pixelfly (Mixer + ViT), on the PJRT engine with the AOT artifacts.
+//!
+//! The accuracy columns of Fig 5 come from `examples/train_mixer_image`;
+//! this bench regenerates the Speedup column (step-time ratio at equal
+//! batch) plus params/FLOPs (Table 4 columns) from the manifest.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::coordinator::{TrainConfig, Trainer};
+use pixelfly::runtime::{artifacts_dir, Engine};
+use pixelfly::util::Rng;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.rtxt").exists() {
+        println!("fig5_vision: artifacts not built, skipping (run `make artifacts`)");
+        return;
+    }
+    let mut suite = BenchSuite::new("fig5_vision");
+    let presets = ["mixer_s_dense", "mixer_s_pixelfly", "mixer_s_random",
+                   "vit_s_dense", "vit_s_pixelfly", "vit_s_bigbird"];
+    let mut rows = Vec::new();
+    for preset in presets {
+        let mut engine = Engine::new(&dir).unwrap();
+        let cfg = TrainConfig {
+            preset: preset.into(),
+            steps: 1,
+            eval_batches: 0,
+            ..Default::default()
+        };
+        let mut trainer = match Trainer::new(&mut engine, cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("skip {preset}: {e}");
+                continue;
+            }
+        };
+        let mut rng = Rng::new(0);
+        trainer.step_once(&mut rng).unwrap(); // compile+warm
+        suite.bench(preset, "", || {
+            trainer.step_once(&mut rng).unwrap();
+        });
+        let (params, flops) = {
+            let key = format!("{preset}.train_step");
+            let a = trainer.engine.manifest.artifact(&key).unwrap();
+            (a.param_count, a.flops_fwd)
+        };
+        rows.push((preset, suite.last_mean_ms(), params, flops));
+    }
+    suite.report();
+
+    println!("\n=== Table 4 (scaled): params/FLOPs/step-time ===");
+    println!("{:<22} {:>10} {:>12} {:>12} {:>9}", "model", "params", "fwd FLOPs",
+             "step(ms)", "speedup");
+    for family in ["mixer_s", "vit_s"] {
+        let base = rows.iter().find(|(p, ..)| *p == format!("{family}_dense"))
+            .map(|(_, ms, ..)| *ms);
+        for (p, ms, params, flops) in rows.iter().filter(|(p, ..)| p.starts_with(family)) {
+            let sp = base.map(|b| b / ms).unwrap_or(f64::NAN);
+            println!("{p:<22} {params:>10} {flops:>12} {ms:>12.1} {sp:>8.2}x");
+        }
+    }
+}

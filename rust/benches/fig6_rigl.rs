@@ -1,0 +1,84 @@
+//! Fig 6: RigL vs Pixelfly training-cost comparison.
+//!
+//! RigL's dynamic mask needs (a) a dense gradient pass on update steps and
+//! (b) a mask/kernel rebuild after each update; Pixelfly's mask is static.
+//! We measure both on the Rust substrate at matched density: per-step
+//! sparse GEMM latency, the amortized RigL overhead, and the block-cover
+//! inflation of RigL's unstructured-at-block-level mask.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::costmodel::Device;
+use pixelfly::patterns::flat_butterfly_mask;
+use pixelfly::rigl::{init_random, rigl_step_cost, RigLConfig};
+use pixelfly::sparse::{dense::matmul_blocked_into, BsrMatrix, Matrix};
+use pixelfly::util::{Args, Rng};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 1024);
+    let batch = args.usize_or("batch", 128);
+    let block = 32;
+    let nb = n / block;
+    let mut suite = BenchSuite::new("fig6_rigl");
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(batch, n, 1.0, &mut rng);
+
+    // matched density: pixelfly stride-4 vs RigL random at same block count
+    let pix_mask = flat_butterfly_mask(nb, 4);
+    let density = pix_mask.density();
+    let mut rigl = init_random(nb, nb, density, 1);
+
+    let pix = BsrMatrix::random(&pix_mask, block, 0.1, &mut Rng::new(2));
+    let mut y = Matrix::zeros(batch, n);
+    suite.bench("pixelfly_step", &format!("density={density:.3} static mask"), || {
+        pix.matmul_into(&x, &mut y);
+        std::hint::black_box(&y);
+    });
+    let t_pix = suite.last_mean_ms();
+
+    // RigL steady-state: sparse fwd + periodic (dense grad + mask rebuild)
+    let w_dense = Matrix::randn(n, n, 0.1, &mut Rng::new(3));
+    let grads = Matrix::randn(n, n, 0.1, &mut Rng::new(4));
+    let cfg = RigLConfig { period: 100, alpha: 0.3, total_steps: 10_000 };
+    let mut step = 0usize;
+    suite.bench("rigl_step_amortized", "sparse fwd + dense grad every 100", || {
+        let w = BsrMatrix::from_dense(&w_dense, &rigl.mask, block);
+        w.matmul_into(&x, &mut y);
+        if step % cfg.period == 0 {
+            // dense gradient pass + mask update + kernel rebuild
+            let mut g = Matrix::zeros(batch, n);
+            matmul_blocked_into(&x, &grads, &mut g);
+            rigl.update(&w_dense.data, &grads.data, n, n, step, &cfg);
+        }
+        step += 1;
+        std::hint::black_box(&y);
+    });
+    let t_rigl = suite.last_mean_ms();
+
+    // dense baseline
+    suite.bench("dense_step", "", || {
+        matmul_blocked_into(&x, &w_dense, &mut y);
+        std::hint::black_box(&y);
+    });
+    let t_dense = suite.last_mean_ms();
+    suite.report();
+
+    println!("\n=== Fig 6 (shape check) ===");
+    println!("pixelfly speedup vs dense: {:.2}x (paper: 2.1x)", t_dense / t_pix);
+    println!("rigl     speedup vs dense: {:.2}x (paper: 0.8x — no speedup)",
+             t_dense / t_rigl);
+
+    // cost-model view with UNSTRUCTURED RigL (element-level), the paper's
+    // actual baseline: its block cover is ~dense
+    let dev = Device::with_block(32);
+    let mut r2 = Rng::new(5);
+    let unstructured =
+        pixelfly::patterns::baselines::random_element_mask(n, density / 10.0, &mut r2);
+    let c_unstr = pixelfly::costmodel::masked_gemm_cost(&unstructured, batch, &dev);
+    let c_dense = pixelfly::costmodel::dense_gemm_cost(n, n, batch, &dev);
+    println!("unstructured RigL cost-model speedup: {:.2}x (cover density {:.0}%)",
+             c_dense.total / c_unstr.total,
+             100.0 * unstructured.actual_density(32));
+    assert!(t_dense / t_pix > t_dense / t_rigl,
+            "pixelfly must out-speed RigL at matched density");
+}

@@ -1,0 +1,55 @@
+//! Fig 8 / Table 5: GPT-2 language-model training-step throughput, dense
+//! vs Pixelfly vs BigBird, on the PJRT engine; plus params/FLOPs columns.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::coordinator::{TrainConfig, Trainer};
+use pixelfly::runtime::{artifacts_dir, Engine};
+use pixelfly::util::Rng;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.rtxt").exists() {
+        println!("fig8_lm: artifacts not built, skipping");
+        return;
+    }
+    let mut suite = BenchSuite::new("fig8_lm");
+    let presets = ["gpt2_s_dense", "gpt2_s_pixelfly", "gpt2_s_bigbird"];
+    let mut rows = Vec::new();
+    for preset in presets {
+        let mut engine = Engine::new(&dir).unwrap();
+        let cfg = TrainConfig {
+            preset: preset.into(),
+            steps: 1,
+            eval_batches: 0,
+            ..Default::default()
+        };
+        let mut trainer = match Trainer::new(&mut engine, cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("skip {preset}: {e}");
+                continue;
+            }
+        };
+        let mut rng = Rng::new(0);
+        trainer.step_once(&mut rng).unwrap();
+        suite.bench(preset, "train step", || {
+            trainer.step_once(&mut rng).unwrap();
+        });
+        let key = format!("{preset}.train_step");
+        let a = trainer.engine.manifest.artifact(&key).unwrap();
+        rows.push((preset, suite.last_mean_ms(), a.param_count, a.flops_fwd,
+                   a.batch * a.cfg::<usize>("seq_len").unwrap_or(1)));
+    }
+    suite.report();
+
+    println!("\n=== Table 5 (scaled): params/FLOPs/tokens-per-sec ===");
+    println!("{:<20} {:>10} {:>12} {:>10} {:>12} {:>9}",
+             "model", "params", "fwd FLOPs", "step(ms)", "tokens/s", "speedup");
+    let base = rows.first().map(|(_, ms, ..)| *ms);
+    for (p, ms, params, flops, toks) in &rows {
+        let sp = base.map(|b| b / ms).unwrap_or(f64::NAN);
+        println!("{p:<20} {params:>10} {flops:>12} {ms:>10.1} {:>12.0} {sp:>8.2}x",
+                 *toks as f64 / (ms / 1e3));
+    }
+    println!("(paper: Pixelfly-GPT2 68M vs 117M params, 18.5G vs 48.4G FLOPs, 2.1x)");
+}

@@ -1,0 +1,66 @@
+//! Fig 9: LRA-style long-sequence throughput — dense vs Pixelfly forward
+//! pass with the Pallas block-sparse attention kernel actually skipping
+//! blocks (the lra_* eval artifacts), plus Reformer-like bucketing on the
+//! Rust substrate.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::costmodel::{attention_cost, Device};
+use pixelfly::patterns::{baselines, BlockMask};
+use pixelfly::runtime::{artifacts_dir, engine, Engine};
+use pixelfly::util::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig9_lra");
+    let dir = artifacts_dir();
+    let mut measured: Vec<(String, f64)> = Vec::new();
+    if dir.join("manifest.rtxt").exists() {
+        for preset in ["lra_dense", "lra_pixelfly"] {
+            let key = format!("{preset}.forward_eval");
+            let mut eng = Engine::new(&dir).unwrap();
+            if eng.manifest.artifacts.get(&key).is_none() {
+                println!("skip {key} (needs --full artifacts)");
+                continue;
+            }
+            let spec = eng.manifest.artifact(&key).unwrap().clone();
+            let params = eng.load_initial_state(preset, &key).unwrap();
+            let xs = &spec.inputs[spec.n_param_leaves];
+            let ys = &spec.inputs[spec.n_param_leaves + 1];
+            let mut rng = Rng::new(0);
+            let x = engine::f32_literal(&xs.dims, &rng.normal_vec(xs.elements(), 1.0)).unwrap();
+            let yv: Vec<i32> = (0..ys.elements()).map(|_| rng.below(2) as i32).collect();
+            let y = engine::i32_literal(&ys.dims, &yv).unwrap();
+            let mut args: Vec<&xla::Literal> = params.iter().collect();
+            args.push(&x);
+            args.push(&y);
+            let art = eng.load(&key).unwrap();
+            art.exe.execute::<&xla::Literal>(&args).unwrap();
+            suite.bench(preset, "seq=512 pallas attention", || {
+                std::hint::black_box(art.exe.execute::<&xla::Literal>(&args).unwrap());
+            });
+            measured.push((preset.to_string(), suite.last_mean_ms()));
+        }
+        suite.report();
+        if let (Some(d), Some(p)) = (
+            measured.iter().find(|(n, _)| n == "lra_dense").map(|(_, m)| *m),
+            measured.iter().find(|(n, _)| n == "lra_pixelfly").map(|(_, m)| *m),
+        ) {
+            println!("\nmeasured forward speedup at seq=512: {:.2}x", d / p);
+        }
+    }
+
+    // cost model across the LRA sequence lengths (paper: 1024-4096)
+    println!("\ncost-model attention speedup by sequence length (b=32, d=64):");
+    let dev = Device::with_block(32);
+    println!("{:>8} {:>12} {:>14}", "seq", "pixelfly", "reformer-like");
+    for seq in [1024usize, 2048, 4096] {
+        let nb = seq / 32;
+        let dense = attention_cost(&BlockMask::ones(nb, nb), 32, 64, 8, &dev);
+        let pix = attention_cost(&baselines::pixelfly_attention_mask(nb, 4, 1), 32, 64, 8, &dev);
+        let mut rng = Rng::new(1);
+        let rf = attention_cost(&baselines::reformer_bucket_mask(nb, 8, &mut rng), 32, 64, 8, &dev);
+        // reformer pays hash + gather ~2x on its visible blocks
+        println!("{seq:>8} {:>11.1}x {:>13.2}x", dense.total / pix.total,
+                 dense.total / (2.0 * rf.total));
+    }
+    println!("(paper Fig 9: Pixelfly 5.2x end-to-end, Reformer 0.8x)");
+}

@@ -1,0 +1,88 @@
+//! Table 7: microbenchmark of sparsity patterns on a block device.
+//!
+//! For each pattern (random at group sizes 1..32, vanilla butterfly,
+//! pixelfly), build the element mask at its *expected* density, take its
+//! hardware block cover (32x32), and measure the BSR matmul latency on
+//! the Rust substrate.  The paper's phenomenon: expected density can be
+//! 1.25% while the cover ("actual density") is ~100%, so latency tracks
+//! the cover, not the nominal density — and only block-aligned patterns
+//! (pixelfly) stay fast.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::patterns::baselines::{random_grouped_mask, reformer_bucket_mask};
+use pixelfly::patterns::butterfly::butterfly_factor_mask;
+use pixelfly::patterns::flat_butterfly_mask;
+use pixelfly::sparse::{BsrMatrix, Matrix};
+use pixelfly::util::{Args, Rng};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 1024); // paper uses 4096; scaled default
+    let batch = args.usize_or("batch", 256);
+    let hw = 32;
+    let mut suite = BenchSuite::new("table7_microbench");
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(batch, n, 1.0, &mut rng);
+
+    let mut run = |suite: &mut BenchSuite, name: String,
+                   mask: &pixelfly::patterns::BlockMask| {
+        let cover = mask.block_cover(hw, hw);
+        let w = BsrMatrix::random(&cover, hw, 0.1, &mut Rng::new(1));
+        let mut y = Matrix::zeros(batch, w.cols_elems());
+        let note = format!("expected={:.2}% actual={:.2}%",
+                           100.0 * mask.density(),
+                           100.0 * mask.actual_density(hw));
+        suite.bench(&name, &note, || {
+            w.matmul_into(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+    };
+
+    // dense reference
+    {
+        let w = Matrix::randn(n, n, 0.1, &mut Rng::new(2));
+        let mut y = Matrix::zeros(batch, n);
+        suite.bench("dense", "expected=100% actual=100%", || {
+            pixelfly::sparse::dense::matmul_blocked_into(&x, &w, &mut y);
+            std::hint::black_box(&y);
+        });
+    }
+
+    // random masks at paper-style (group, expected-density) pairs
+    for (g, dens) in [(1usize, 0.0125), (2, 0.025), (4, 0.05), (8, 0.20),
+                      (16, 0.40), (32, 0.80)] {
+        let m = random_grouped_mask(n, g, dens, &mut Rng::new(3));
+        run(&mut suite, format!("random_{g}x{g}"), &m);
+    }
+
+    // vanilla (non-flat) butterfly: element-level factor masks, 1x1 blocks
+    {
+        let mut acc = pixelfly::patterns::BlockMask::zeros(n, n);
+        let mut s = 2;
+        while s <= n.min(64) {
+            acc = acc.union(&butterfly_factor_mask(n, s));
+            s *= 2;
+        }
+        run(&mut suite, "butterfly_1x1".into(), &acc);
+    }
+
+    // reformer-style bucketed mask (block-aligned but irregular)
+    {
+        let m = reformer_bucket_mask(n / hw, 4, &mut Rng::new(4)).expand(hw);
+        run(&mut suite, "reformer_bucketed".into(), &m);
+    }
+
+    // pixelfly at multiple strides (block-aligned by construction)
+    for ms in [2usize, 4, 8] {
+        let m = flat_butterfly_mask(n / hw, ms).expand(hw);
+        run(&mut suite, format!("pixelfly_stride{ms}"), &m);
+    }
+
+    let out = suite.report();
+    // Table-7 sanity: pixelfly must beat the same-expected-density random
+    let pix = suite.mean_ms_of("pixelfly_stride2").unwrap();
+    let rnd = suite.mean_ms_of("random_1x1").unwrap();
+    println!("\npixelfly_stride2 vs random_1x1 (same-order expected density): {:.1}x",
+             rnd / pix);
+    assert!(pix < rnd, "block-aligned pattern must be faster: {out}");
+}

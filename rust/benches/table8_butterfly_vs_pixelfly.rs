@@ -1,0 +1,62 @@
+//! Table 8: Pixelfly (flat) vs original Butterfly (product) as the sparse
+//! layer inside a model — step time on the PJRT engine (mixer presets) and
+//! the layer-level gap on the Rust substrate at matched parameter count.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::coordinator::{TrainConfig, Trainer};
+use pixelfly::runtime::{artifacts_dir, Engine};
+use pixelfly::sparse::butterfly_mm::ButterflyProduct;
+use pixelfly::sparse::Matrix;
+use pixelfly::util::{Args, Rng};
+
+fn main() {
+    let args = Args::from_env();
+    let mut suite = BenchSuite::new("table8_butterfly_vs_pixelfly");
+
+    // layer-level comparison (matched params: same factors, flat vs product)
+    let n = args.usize_or("n", 1024);
+    let batch = args.usize_or("batch", 256);
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(batch, n, 1.0, &mut rng);
+    let bp = ButterflyProduct::random(n, 32, 32, 0.1, &mut rng);
+    let flat = bp.flatten();
+    suite.bench("butterfly_product_layer", "log2(32)=5 sequential GEMMs", || {
+        std::hint::black_box(bp.matmul(&x));
+    });
+    let t_prod = suite.last_mean_ms();
+    let mut y = Matrix::zeros(batch, n);
+    suite.bench("pixelfly_flat_layer", "1 sparse GEMM", || {
+        flat.matmul_into(&x, &mut y);
+        std::hint::black_box(&y);
+    });
+    let t_flat = suite.last_mean_ms();
+
+    // model-level (PJRT artifacts): mixer with butterfly-product layers vs
+    // pixelfly layers (mixer_s_butterfly uses mlp_ratio=1 for square GEMMs)
+    let dir = artifacts_dir();
+    let mut model_rows = Vec::new();
+    if dir.join("manifest.rtxt").exists() {
+        for preset in ["mixer_s_butterfly", "mixer_s_pixelfly", "mixer_s_dense"] {
+            let mut engine = Engine::new(&dir).unwrap();
+            let cfg = TrainConfig { preset: preset.into(), steps: 1, eval_batches: 0,
+                                    ..Default::default() };
+            if let Ok(mut t) = Trainer::new(&mut engine, cfg) {
+                let mut r = Rng::new(0);
+                t.step_once(&mut r).unwrap();
+                suite.bench(preset, "train step", || {
+                    t.step_once(&mut r).unwrap();
+                });
+                model_rows.push((preset, suite.last_mean_ms()));
+            }
+        }
+    }
+    suite.report();
+
+    println!("\n=== Table 8 (shape check) ===");
+    println!("layer-level flat vs product: {:.2}x (paper: pixelfly 2.3x vs butterfly 0.8x\n\
+              relative to dense => ~2.9x between them)", t_prod / t_flat);
+    for (p, ms) in &model_rows {
+        println!("  {p:<22} {ms:.1} ms/step");
+    }
+    assert!(t_flat < t_prod, "flat layer must beat the sequential product");
+}

@@ -1,0 +1,111 @@
+//! In-crate micro-benchmark harness (offline substitute for criterion).
+//!
+//! Each `rust/benches/*.rs` binary (registered with `harness = false`)
+//! builds a `BenchSuite`, registers closures, and calls `run()`, which
+//! warms up, samples, and prints a fixed-width table plus TSV lines that
+//! EXPERIMENTS.md ingests.  `--quick` (or PIXELFLY_BENCH_QUICK=1) shrinks
+//! iteration counts so `cargo bench` stays tractable on CI.
+
+use crate::util::stats::{time_it, Summary};
+use crate::util::Args;
+
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// optional user metric (e.g. GFLOP/s or speedup baseline id)
+    pub note: String,
+}
+
+pub struct BenchSuite {
+    pub title: String,
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        let args = Args::from_env();
+        let quick = args.bool("quick")
+            || std::env::var("PIXELFLY_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        let (warmup, iters) = if quick { (1, 3) } else { (3, 10) };
+        BenchSuite {
+            title: title.to_string(),
+            warmup: args.usize_or("warmup", warmup),
+            iters: args.usize_or("iters", iters),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure; `note` is free-form context for the table.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, note: &str, f: F) -> &Summary {
+        let summary = time_it(self.warmup, self.iters, f);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary,
+            note: note.to_string(),
+        });
+        &self.results.last().unwrap().summary
+    }
+
+    pub fn last_mean_ms(&self) -> f64 {
+        self.results.last().map(|r| r.summary.mean_ms()).unwrap_or(f64::NAN)
+    }
+
+    /// Mean time of a named result (for speedup columns).
+    pub fn mean_ms_of(&self, name: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.summary.mean_ms())
+    }
+
+    /// Print the table; returns it as a string too (for tee-ing).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} (warmup={} iters={}) ===\n",
+                              self.title, self.warmup, self.iters));
+        out.push_str(&format!("{:<44} {:>12} {:>12} {:>12}  note\n",
+                              "benchmark", "mean", "p50", "p95"));
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms  {}\n",
+                r.name,
+                r.summary.mean_ms(),
+                r.summary.p50_ns / 1e6,
+                r.summary.p95_ns / 1e6,
+                r.note
+            ));
+        }
+        // machine-readable lines
+        for r in &self.results {
+            out.push_str(&format!("TSV\t{}\t{}\t{:.6}\t{:.6}\t{}\n",
+                                  self.title, r.name, r.summary.mean_ms(),
+                                  r.summary.p50_ns / 1e6, r.note));
+        }
+        print!("{out}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_collects_results() {
+        let mut s = BenchSuite { title: "t".into(), warmup: 0, iters: 3, results: vec![] };
+        s.bench("noop", "", || {});
+        s.bench("spin", "", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(s.results.len(), 2);
+        assert!(s.mean_ms_of("noop").is_some());
+        let rep = s.report();
+        assert!(rep.contains("TSV\tt\tnoop"));
+    }
+}

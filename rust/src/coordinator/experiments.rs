@@ -1,0 +1,204 @@
+//! Experiment-matrix launcher: drives the full paper reproduction in one
+//! command (`pixelfly experiments --out results/`), writing per-experiment
+//! TSVs that EXPERIMENTS.md quotes.
+//!
+//! Each experiment is declared as an `ExperimentSpec` (figure/table id,
+//! presets, steps) so the matrix is data, not code — extend by appending
+//! to `matrix()`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::data::lra::LraTask;
+use crate::runtime::Engine;
+use crate::util::Rng;
+
+use super::metrics::TrainReport;
+use super::trainer::{TrainConfig, Trainer};
+
+/// One experiment: a set of presets trained under identical settings.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    /// experiment id matching DESIGN.md's index, e.g. "fig5_mixer"
+    pub id: &'static str,
+    pub presets: &'static [&'static str],
+    pub steps: usize,
+    pub lr: f32,
+    pub eval_batches: usize,
+    pub lra_task: Option<LraTask>,
+}
+
+/// The default reproduction matrix (training-based experiments; the
+/// substrate microbenches live in `cargo bench`).
+pub fn matrix(steps_scale: f64) -> Vec<ExperimentSpec> {
+    let s = |n: usize| ((n as f64 * steps_scale) as usize).max(5);
+    vec![
+        ExperimentSpec {
+            id: "fig5_mixer",
+            presets: &["mixer_s_dense", "mixer_s_pixelfly", "mixer_s_random"],
+            steps: s(120), lr: 1e-3, eval_batches: 8, lra_task: None,
+        },
+        ExperimentSpec {
+            id: "fig5_vit",
+            presets: &["vit_s_dense", "vit_s_pixelfly", "vit_s_bigbird"],
+            steps: s(120), lr: 1e-3, eval_batches: 8, lra_task: None,
+        },
+        ExperimentSpec {
+            id: "fig8_gpt2",
+            presets: &["gpt2_s_dense", "gpt2_s_pixelfly", "gpt2_s_bigbird"],
+            steps: s(200), lr: 3e-3, eval_batches: 8, lra_task: None,
+        },
+        ExperimentSpec {
+            id: "table8_butterfly",
+            presets: &["mixer_s_dense", "mixer_s_butterfly", "mixer_s_pixelfly"],
+            steps: s(120), lr: 1e-3, eval_batches: 8, lra_task: None,
+        },
+        ExperimentSpec {
+            id: "fig9_lra_text",
+            presets: &["lra_dense_train", "lra_pixelfly_train"],
+            steps: s(40), lr: 1e-3, eval_batches: 4, lra_task: Some(LraTask::Text),
+        },
+    ]
+}
+
+/// Result row: one preset's report within an experiment.
+pub struct ExperimentRow {
+    pub experiment: String,
+    pub report: TrainReport,
+}
+
+/// Run one experiment spec; skips presets missing from the manifest.
+pub fn run_experiment(artifacts: &Path, spec: &ExperimentSpec, seed: u64)
+                      -> Result<Vec<ExperimentRow>> {
+    let mut rows = Vec::new();
+    for preset in spec.presets {
+        let mut engine = Engine::new(artifacts)?;
+        if engine.manifest.artifacts.get(&format!("{preset}.train_step")).is_none() {
+            eprintln!("[{}] skip {preset} (artifact missing)", spec.id);
+            continue;
+        }
+        let cfg = TrainConfig {
+            preset: preset.to_string(),
+            steps: spec.steps,
+            lr: spec.lr,
+            warmup: spec.steps / 10,
+            log_every: (spec.steps / 20).max(1),
+            eval_batches: spec.eval_batches,
+            seed,
+            lra_task: spec.lra_task,
+        };
+        let mut trainer = Trainer::new(&mut engine, cfg)?;
+        let report = trainer.train()?;
+        println!("[{}] {}", spec.id, report.summary_line());
+        rows.push(ExperimentRow { experiment: spec.id.to_string(), report });
+    }
+    Ok(rows)
+}
+
+/// Serialize experiment rows to `<out>/<experiment>.tsv`.
+pub fn write_results(out_dir: &Path, rows: &[ExperimentRow]) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut by_exp: Vec<(&str, Vec<&ExperimentRow>)> = Vec::new();
+    for r in rows {
+        if let Some(e) = by_exp.iter_mut().find(|(id, _)| *id == r.experiment) {
+            e.1.push(r);
+        } else {
+            by_exp.push((&r.experiment, vec![r]));
+        }
+    }
+    for (id, rs) in by_exp {
+        let mut tsv = String::from(
+            "preset\tsteps\tfinal_loss\teval_loss\taccuracy\tppl\tstep_ms\tthroughput\tparams\n");
+        for r in &rs {
+            let e = r.report.final_eval.unwrap_or_default();
+            tsv.push_str(&format!(
+                "{}\t{}\t{:.4}\t{:.4}\t{:.4}\t{:.2}\t{:.2}\t{:.1}\t{}\n",
+                r.report.preset, r.report.steps, r.report.final_loss(),
+                e.loss, e.accuracy, e.perplexity(),
+                r.report.step_time.as_ref().map(|s| s.mean_ms()).unwrap_or(f64::NAN),
+                r.report.throughput, r.report.param_count));
+        }
+        std::fs::write(out_dir.join(format!("{id}.tsv")), &tsv)?;
+        // also dump loss curves for EXPERIMENTS.md plots
+        for r in &rs {
+            std::fs::write(
+                out_dir.join(format!("{id}.{}.curve.tsv", r.report.preset)),
+                r.report.curve_tsv())?;
+        }
+    }
+    Ok(())
+}
+
+/// Run the whole matrix, writing into `out_dir`. `steps_scale` shrinks
+/// everything for smoke runs.
+pub fn run_all(artifacts: &Path, out_dir: &Path, steps_scale: f64, seed: u64)
+               -> Result<PathBuf> {
+    let mut rows = Vec::new();
+    for spec in matrix(steps_scale) {
+        rows.extend(run_experiment(artifacts, &spec, seed)?);
+        // checkpoint after every experiment so a late failure loses nothing
+        write_results(out_dir, &rows)?;
+    }
+    // seed sweep sanity: a couple of extra seeds on the headline run
+    Ok(out_dir.to_path_buf())
+}
+
+/// Multi-seed variant of one experiment for error bars.
+pub fn run_seeds(artifacts: &Path, spec: &ExperimentSpec, seeds: &[u64])
+                 -> Result<Vec<(u64, Vec<ExperimentRow>)>> {
+    let mut out = Vec::new();
+    for &seed in seeds {
+        out.push((seed, run_experiment(artifacts, spec, seed)?));
+    }
+    Ok(out)
+}
+
+/// Deterministic seeds for sweeps.
+pub fn sweep_seeds(n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(0xC0FFEE);
+    (0..n).map(|_| rng.next_u64() & 0xFFFF).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_is_well_formed() {
+        for spec in matrix(1.0) {
+            assert!(!spec.presets.is_empty());
+            assert!(spec.steps > 0);
+            assert!(spec.lr > 0.0);
+        }
+    }
+
+    #[test]
+    fn steps_scale_shrinks() {
+        let full = matrix(1.0);
+        let tiny = matrix(0.05);
+        for (f, t) in full.iter().zip(&tiny) {
+            assert!(t.steps <= f.steps);
+            assert!(t.steps >= 5);
+        }
+    }
+
+    #[test]
+    fn write_results_emits_tsv() {
+        let mut report = TrainReport::default();
+        report.preset = "p".into();
+        report.loss_curve = vec![(0, 1.0)];
+        let rows = vec![ExperimentRow { experiment: "unit".into(), report }];
+        let dir = std::env::temp_dir().join(format!("pixelfly_exp_{}", std::process::id()));
+        write_results(&dir, &rows).unwrap();
+        let tsv = std::fs::read_to_string(dir.join("unit.tsv")).unwrap();
+        assert!(tsv.starts_with("preset\t"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sweep_seeds_deterministic() {
+        assert_eq!(sweep_seeds(3), sweep_seeds(3));
+        assert_eq!(sweep_seeds(3).len(), 3);
+    }
+}

@@ -1,0 +1,105 @@
+//! Run reports: loss curves, step timing, throughput, eval metrics.
+
+use crate::util::Summary;
+
+/// Evaluation result over a set of batches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub n_examples: usize,
+}
+
+impl EvalResult {
+    /// LM perplexity (e^loss with loss in nats).
+    pub fn perplexity(&self) -> f64 {
+        self.loss.exp()
+    }
+}
+
+/// Full record of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub preset: String,
+    pub steps: usize,
+    /// (step, loss) samples
+    pub loss_curve: Vec<(usize, f64)>,
+    pub step_time: Option<Summary>,
+    /// tokens (LM) or examples (vision) per second, hot steps only
+    pub throughput: f64,
+    pub final_eval: Option<EvalResult>,
+    pub param_count: usize,
+    pub compile_ms: f64,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f64 {
+        self.loss_curve.last().map(|(_, l)| *l).unwrap_or(f64::NAN)
+    }
+
+    pub fn initial_loss(&self) -> f64 {
+        self.loss_curve.first().map(|(_, l)| *l).unwrap_or(f64::NAN)
+    }
+
+    /// Serialize the loss curve as TSV (step\tloss).
+    pub fn curve_tsv(&self) -> String {
+        let mut s = String::from("step\tloss\n");
+        for (step, loss) in &self.loss_curve {
+            s.push_str(&format!("{step}\t{loss:.6}\n"));
+        }
+        s
+    }
+
+    /// One-line summary for experiment tables.
+    pub fn summary_line(&self) -> String {
+        let eval = self
+            .final_eval
+            .map(|e| format!(" eval_loss={:.4} acc={:.3} ppl={:.2}", e.loss, e.accuracy,
+                             e.perplexity()))
+            .unwrap_or_default();
+        let st = self
+            .step_time
+            .as_ref()
+            .map(|s| format!(" step={:.1}ms", s.mean_ms()))
+            .unwrap_or_default();
+        format!(
+            "{}: steps={} loss {:.4} -> {:.4}{st} thru={:.1}/s params={}{eval}",
+            self.preset,
+            self.steps,
+            self.initial_loss(),
+            self.final_loss(),
+            self.throughput,
+            self.param_count,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perplexity_of_zero_loss_is_one() {
+        let e = EvalResult { loss: 0.0, accuracy: 1.0, n_examples: 10 };
+        assert!((e.perplexity() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_tsv_format() {
+        let mut r = TrainReport::default();
+        r.loss_curve = vec![(0, 2.5), (10, 1.25)];
+        let tsv = r.curve_tsv();
+        assert!(tsv.starts_with("step\tloss\n"));
+        assert!(tsv.contains("10\t1.250000"));
+        assert!((r.initial_loss() - 2.5).abs() < 1e-12);
+        assert!((r.final_loss() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_line_mentions_preset() {
+        let mut r = TrainReport::default();
+        r.preset = "gpt2_s_pixelfly".into();
+        r.loss_curve = vec![(0, 3.0)];
+        assert!(r.summary_line().contains("gpt2_s_pixelfly"));
+    }
+}

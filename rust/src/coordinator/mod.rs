@@ -1,0 +1,20 @@
+//! The Layer-3 coordinator: the paper's system contribution.
+//!
+//! - [`budget`]  compute-budget allocation across layer types (§3.3 step 1,
+//!   Appendix I closed form + rule of thumb)
+//! - [`planner`] sparsity-mask selection: rank + max-stride filling a
+//!   layer's budget (§3.3 step 2)
+//! - [`trainer`] the training loop over PJRT artifacts: batching, LR
+//!   schedule, metrics, eval, loss-curve logging
+//! - [`metrics`] run reports (loss curves, step timing, throughput) and
+//!   their CSV/TSV serialization for EXPERIMENTS.md
+
+pub mod budget;
+pub mod experiments;
+pub mod metrics;
+pub mod planner;
+pub mod trainer;
+
+pub use budget::{cost_optimal, projected_speedup, rule_of_thumb, Allocation};
+pub use planner::{plan_attention, plan_layer, plan_model, AttentionPlan, LayerPlan, ModelPlan};
+pub use trainer::{TrainConfig, Trainer};

@@ -1,0 +1,218 @@
+//! Sparsity-mask selection (paper §3.3 step 2).
+//!
+//! Given a layer's density budget, split it low-rank : butterfly
+//! (default 1/4 : 3/4), pick the rank as a block multiple, and pick the
+//! flat-butterfly max stride filling the rest — producing a `LayerPlan`
+//! that maps one-to-one onto the Python ModelConfig fields
+//! (`max_stride`, `rank`, `attn_max_stride`, `attn_global_blocks`).
+
+use crate::models::{LayerType, ModelSchema};
+use crate::patterns::butterfly::{flat_butterfly_nnz_blocks, max_stride_for_budget};
+use crate::patterns::{flat_butterfly_mask, BlockMask};
+
+use super::budget::Allocation;
+
+/// Concrete sparsity plan for one GEMM.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    pub layer: LayerType,
+    pub rows: usize,
+    pub cols: usize,
+    pub block: usize,
+    /// flat butterfly max stride (blocks); 1 = diagonal only
+    pub max_stride: usize,
+    /// low-rank term rank (elements; multiple of block, 0 = none)
+    pub rank: usize,
+    /// achieved density (butterfly + low-rank params over dense params)
+    pub achieved_density: f64,
+}
+
+impl LayerPlan {
+    /// The butterfly part's block mask (square patterns; rectangular
+    /// layers use the stretched mask at apply time).
+    pub fn butterfly_mask(&self) -> BlockMask {
+        let nb = (self.rows.min(self.cols)) / self.block;
+        flat_butterfly_mask(nb, self.max_stride.min(nb))
+    }
+
+    pub fn butterfly_params(&self) -> usize {
+        let nb = (self.rows.min(self.cols)) / self.block;
+        let scale = (self.rows / self.block).max(self.cols / self.block) / nb;
+        flat_butterfly_nnz_blocks(nb, self.max_stride.min(nb))
+            * self.block * self.block * scale
+    }
+
+    pub fn lowrank_params(&self) -> usize {
+        self.rank * (self.rows + self.cols)
+    }
+}
+
+/// Plan one layer: density -> (rank, max_stride), paper §3.3 step 2.
+pub fn plan_layer(layer: LayerType, rows: usize, cols: usize, block: usize,
+                  density: f64, lowrank_share: f64) -> LayerPlan {
+    assert!(rows % block == 0 && cols % block == 0,
+            "dims {rows}x{cols} must be multiples of block {block}");
+    let dense_params = rows * cols;
+    let budget = (density * dense_params as f64) as usize;
+
+    // low-rank share, rank as a block multiple (rounded to the nearest
+    // block so a 0.96-block budget still buys the paper's minimum rank)
+    let lr_budget = (lowrank_share * budget as f64) as usize;
+    let rank_blocks = ((lr_budget as f64 / ((rows + cols) * block) as f64) + 0.5) as usize;
+    let mut rank = rank_blocks * block;
+    // never let the low-rank term eat more than half the total budget
+    while rank > 0 && rank * (rows + cols) > budget / 2 {
+        rank -= block;
+    }
+    let lr_params = rank * (rows + cols);
+
+    // remaining budget fills the flat butterfly stride
+    let nb = rows.min(cols) / block;
+    let scale = ((rows / block).max(cols / block)) / nb.max(1);
+    let per_block = block * block * scale;
+    let bf_budget_blocks = (budget - lr_params) / per_block.max(1);
+    let max_stride = max_stride_for_budget(nb, bf_budget_blocks.max(nb));
+
+    let bf_params = flat_butterfly_nnz_blocks(nb, max_stride) * per_block;
+    LayerPlan {
+        layer,
+        rows,
+        cols,
+        block,
+        max_stride,
+        rank,
+        achieved_density: (bf_params + lr_params) as f64 / dense_params as f64,
+    }
+}
+
+/// Plan for the attention score mask: flat butterfly + global stripe with
+/// the global width playing the low-rank role (Appendix I.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttentionPlan {
+    pub seq_blocks: usize,
+    pub block: usize,
+    pub max_stride: usize,
+    pub global_blocks: usize,
+    pub achieved_density: f64,
+}
+
+pub fn plan_attention(seq_len: usize, block: usize, density: f64,
+                      lowrank_share: f64) -> AttentionPlan {
+    let nb = seq_len / block;
+    let budget_blocks = (density * (nb * nb) as f64) as usize;
+    let global_budget = (lowrank_share * budget_blocks as f64) as usize;
+    // width-w global stripe costs ~ 2*w*nb - w^2 blocks
+    let mut global_blocks = 0;
+    while global_blocks < nb / 2 {
+        let next = global_blocks + 1;
+        if 2 * next * nb - next * next > global_budget {
+            break;
+        }
+        global_blocks = next;
+    }
+    let stripe = 2 * global_blocks * nb - global_blocks * global_blocks;
+    let rest = budget_blocks.saturating_sub(stripe);
+    let max_stride = max_stride_for_budget(nb, rest.max(nb));
+    let mask = crate::patterns::baselines::pixelfly_attention_mask(nb, max_stride, global_blocks);
+    AttentionPlan {
+        seq_blocks: nb,
+        block,
+        max_stride,
+        global_blocks,
+        achieved_density: mask.density(),
+    }
+}
+
+/// Full-model plan: one LayerPlan per schema entry + an attention plan.
+#[derive(Clone, Debug)]
+pub struct ModelPlan {
+    pub layers: Vec<LayerPlan>,
+    pub attention: Option<AttentionPlan>,
+    pub total_density: f64,
+}
+
+pub fn plan_model(schema: &ModelSchema, alloc: &Allocation, block: usize) -> ModelPlan {
+    let mut layers = Vec::new();
+    let mut attention = None;
+    let mut kept = 0usize;
+    let mut dense = 0usize;
+    for e in &schema.entries {
+        if !e.layer.sparsifiable() {
+            continue;
+        }
+        let d = alloc.density_of(e.layer);
+        if e.layer == LayerType::AttnScore {
+            let plan = plan_attention(schema.seq_len, block, d, alloc.lowrank_share);
+            kept += (plan.achieved_density * (e.params() as f64)) as usize;
+            dense += e.params();
+            attention = Some(plan);
+        } else {
+            let plan = plan_layer(e.layer, e.rows, e.cols, block, d, alloc.lowrank_share);
+            kept += (plan.butterfly_params() + plan.lowrank_params()) * e.count;
+            dense += e.params();
+            layers.push(plan);
+        }
+    }
+    ModelPlan {
+        layers,
+        attention,
+        total_density: kept as f64 / dense.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Device;
+    use crate::coordinator::budget::rule_of_thumb;
+    use crate::models::preset;
+
+    #[test]
+    fn layer_plan_respects_density() {
+        for density in [0.05, 0.1, 0.25, 0.5] {
+            let p = plan_layer(LayerType::Mlp, 512, 512, 32, density, 0.25);
+            assert!(p.achieved_density <= density * 1.30 + 0.02,
+                    "density {density}: achieved {}", p.achieved_density);
+        }
+    }
+
+    #[test]
+    fn rank_is_block_multiple() {
+        let p = plan_layer(LayerType::Mlp, 1024, 1024, 32, 0.2, 0.3);
+        assert_eq!(p.rank % 32, 0);
+        assert!(p.rank > 0, "enough budget for a low-rank term");
+    }
+
+    #[test]
+    fn lowrank_share_quarter_to_third() {
+        let p = plan_layer(LayerType::Mlp, 1024, 1024, 32, 0.2, 0.25);
+        let lr = p.lowrank_params() as f64;
+        let total = lr + p.butterfly_params() as f64;
+        assert!(lr / total > 0.10 && lr / total < 0.40, "share {}", lr / total);
+    }
+
+    #[test]
+    fn attention_plan_has_diag() {
+        let p = plan_attention(1024, 32, 0.15, 0.25);
+        assert!(p.max_stride >= 1);
+        assert!(p.achieved_density <= 0.30);
+    }
+
+    #[test]
+    fn model_plan_end_to_end() {
+        let dev = Device::default();
+        let s = preset("vit-s", 32).unwrap();
+        let alloc = rule_of_thumb(&s, 0.2, &dev);
+        let plan = plan_model(&s, &alloc, 8);
+        assert!(!plan.layers.is_empty());
+        assert!(plan.attention.is_some());
+        assert!(plan.total_density < 0.6, "density {}", plan.total_density);
+    }
+
+    #[test]
+    fn rectangular_layer_plans() {
+        let p = plan_layer(LayerType::Mlp, 256, 512, 32, 0.2, 0.25);
+        assert!(p.max_stride >= 1);
+        assert!(p.achieved_density > 0.0);
+    }
+}

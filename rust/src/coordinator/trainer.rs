@@ -1,0 +1,303 @@
+//! The training loop: Rust-driven, Python-free.
+//!
+//! State layout contract with `python/compile/train.py` (pytree flatten
+//! order, recorded in the manifest):
+//!
+//!   train_step inputs : [P params][P m][P v][step s32][lr f32][x][y]
+//!   train_step outputs: (loss, [P params], [P m], [P v], step)
+//!   forward_eval inputs : [P params][x][y]   outputs: (loss, n_correct)
+//!
+//! Each step samples a synthetic batch (family-specific substrate),
+//! executes the train-step artifact, and swaps the returned state literals
+//! in.  Loss is read from the scalar output; everything heavier stays in
+//! literal form.  The LR schedule (linear warmup + cosine decay, the
+//! paper's recipe) is computed host-side and passed as a scalar so no
+//! recompilation is ever needed.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::data::{corpus::MarkovCorpus, lra::LraDataset, lra::LraTask, vision::VisionDataset};
+use crate::runtime::engine::{self, Engine};
+use crate::util::{Rng, Summary};
+
+use super::metrics::{EvalResult, TrainReport};
+
+/// What to train and how long.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// manifest preset, e.g. "gpt2_s_pixelfly"
+    pub preset: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_batches: usize,
+    /// LRA task override (preset "lra_*" only)
+    pub lra_task: Option<LraTask>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "mixer_s_pixelfly".into(),
+            steps: 50,
+            lr: 1e-3,
+            warmup: 10,
+            seed: 0,
+            log_every: 10,
+            eval_batches: 4,
+            lra_task: None,
+        }
+    }
+}
+
+/// Batch sampler dispatching on the artifact's model family.
+enum Sampler {
+    Vision(VisionDataset),
+    Corpus(MarkovCorpus, usize /* seq */),
+    Lra(LraDataset),
+}
+
+impl Sampler {
+    fn sample(&self, batch: usize, rng: &mut Rng) -> Result<(Literal, Literal, usize)> {
+        match self {
+            Sampler::Vision(ds) => {
+                let b = ds.sample(batch, rng);
+                Ok((
+                    engine::f32_literal(&[b.batch, b.seq, b.dim], &b.x)?,
+                    engine::i32_literal(&[b.batch], &b.y)?,
+                    b.batch,
+                ))
+            }
+            Sampler::Corpus(c, seq) => {
+                let b = c.sample(batch, *seq, rng);
+                Ok((
+                    engine::i32_literal(&[b.batch, b.seq], &b.x)?,
+                    engine::i32_literal(&[b.batch, b.seq], &b.y)?,
+                    b.batch * b.seq,
+                ))
+            }
+            Sampler::Lra(ds) => {
+                let b = ds.sample(batch, rng);
+                Ok((
+                    engine::f32_literal(&[b.batch, b.seq, b.dim], &b.x)?,
+                    engine::i32_literal(&[b.batch], &b.y)?,
+                    b.batch,
+                ))
+            }
+        }
+    }
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e mut Engine,
+    pub cfg: TrainConfig,
+    sampler: Sampler,
+    family: String,
+    batch: usize,
+    n_leaves: usize,
+    /// params ++ m ++ v, in manifest order
+    state: Vec<Literal>,
+    step_lit: Literal,
+    step: usize,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e mut Engine, cfg: TrainConfig) -> Result<Self> {
+        let key = format!("{}.train_step", cfg.preset);
+        engine.load(&key)?;
+        let spec = engine.manifest.artifact(&key)?.clone();
+        let family = spec.config.get("family").cloned().unwrap_or_default();
+        let seq: usize = spec.cfg("seq_len").unwrap_or(64);
+        let in_dim: usize = spec.cfg("in_dim").unwrap_or(16);
+        let n_classes: usize = spec.cfg("n_classes").unwrap_or(10);
+
+        let sampler = if let Some(task) = cfg.lra_task {
+            Sampler::Lra(LraDataset::new(task, seq, in_dim))
+        } else {
+            match family.as_str() {
+                "gpt2" => Sampler::Corpus(MarkovCorpus::new(n_classes, cfg.seed), seq),
+                "mixer" | "vit" => Sampler::Vision(VisionDataset::new(
+                    n_classes, seq, in_dim, 0.5, cfg.seed,
+                )),
+                f => bail!("unknown model family {f:?}"),
+            }
+        };
+
+        // initial state: params from the AOT dump, zeros for m/v
+        let params = engine.load_initial_state(&cfg.preset, &key)?;
+        let n_leaves = spec.n_param_leaves;
+        let mut state = params;
+        for i in 0..2 * n_leaves {
+            let t = &spec.inputs[n_leaves + i]; // m then v specs
+            state.push(engine::zero_literal(t)?);
+        }
+        Ok(Trainer {
+            engine,
+            batch: spec.batch,
+            n_leaves,
+            state,
+            step_lit: engine::i32_scalar(0)?,
+            step: 0,
+            sampler,
+            family,
+            cfg,
+        })
+    }
+
+    /// Linear warmup then cosine decay to 10% (the paper's schedule shape).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let base = self.cfg.lr;
+        if step < self.cfg.warmup {
+            return base * (step + 1) as f32 / self.cfg.warmup as f32;
+        }
+        let t = (step - self.cfg.warmup) as f32
+            / (self.cfg.steps.saturating_sub(self.cfg.warmup)).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos());
+        base * (0.1 + 0.9 * cos)
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step_once(&mut self, rng: &mut Rng) -> Result<f64> {
+        let key = format!("{}.train_step", self.cfg.preset);
+        let (x, y, _) = self.sampler.sample(self.batch, rng)?;
+        let lr = engine::f32_scalar(self.lr_at(self.step))?;
+        let mut args: Vec<&Literal> = self.state.iter().collect();
+        args.push(&self.step_lit);
+        args.push(&lr);
+        args.push(&x);
+        args.push(&y);
+        let art = self.engine.load(&key)?;
+        let outs = art
+            .exe
+            .execute::<&Literal>(&args)
+            .context("train_step execute")?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        let p = self.n_leaves;
+        if outs.len() != 3 * p + 2 {
+            bail!("train_step returned {} outputs, expected {}", outs.len(), 3 * p + 2);
+        }
+        let mut iter = outs.into_iter();
+        let loss = iter.next().unwrap().get_first_element::<f32>()? as f64;
+        let mut new_state: Vec<Literal> = Vec::with_capacity(3 * p);
+        for _ in 0..3 * p {
+            new_state.push(iter.next().unwrap());
+        }
+        self.step_lit = iter.next().unwrap();
+        self.state = new_state;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Run the configured number of steps; returns the full report.
+    pub fn train(&mut self) -> Result<TrainReport> {
+        let key = format!("{}.train_step", self.cfg.preset);
+        let (param_count, compile_ms) = {
+            let art = self.engine.load(&key)?;
+            (art.spec.param_count, art.compile_ms)
+        };
+        let mut rng = Rng::new(self.cfg.seed ^ 0xDA7A);
+        let mut report = TrainReport {
+            preset: self.cfg.preset.clone(),
+            steps: self.cfg.steps,
+            param_count,
+            compile_ms,
+            ..Default::default()
+        };
+        let mut times = Vec::new();
+        let mut units_per_step = 0usize;
+        for s in 0..self.cfg.steps {
+            let t0 = Instant::now();
+            let loss = self.step_once(&mut rng)?;
+            times.push(t0.elapsed());
+            if units_per_step == 0 {
+                units_per_step = match &self.sampler {
+                    Sampler::Corpus(_, seq) => self.batch * seq,
+                    _ => self.batch,
+                };
+            }
+            if s % self.cfg.log_every == 0 || s + 1 == self.cfg.steps {
+                report.loss_curve.push((s, loss));
+            }
+        }
+        // skip the first (compile/warmup-heavy) samples for throughput
+        let hot = if times.len() > 3 { &times[2..] } else { &times[..] };
+        let summary = Summary::from_durations(hot);
+        report.throughput = units_per_step as f64 / (summary.mean_ns / 1e9);
+        report.step_time = Some(summary);
+        if self.cfg.eval_batches > 0 {
+            let eval_key = format!("{}.forward_eval", self.cfg.preset);
+            if self.engine.manifest.artifacts.contains_key(&eval_key) {
+                report.final_eval = Some(self.evaluate(self.cfg.eval_batches)?);
+            }
+            // presets lowered train-only (e.g. lra_*_train) simply skip eval
+        }
+        Ok(report)
+    }
+
+    /// Evaluate on fresh batches with the forward_eval artifact.
+    pub fn evaluate(&mut self, n_batches: usize) -> Result<EvalResult> {
+        let key = format!("{}.forward_eval", self.cfg.preset);
+        self.engine.load(&key)?;
+        let units_per_batch = match self.family.as_str() {
+            "gpt2" => {
+                let spec = self.engine.manifest.artifact(&key)?;
+                let seq: usize = spec.cfg("seq_len").unwrap_or(1);
+                self.batch * seq
+            }
+            _ => self.batch,
+        };
+        let mut rng = Rng::new(self.cfg.seed ^ 0xE7A1_5EED);
+        let mut total_loss = 0.0;
+        let mut total_correct = 0usize;
+        let mut total_n = 0usize;
+        for _ in 0..n_batches {
+            let (x, y, _) = self.sampler.sample(self.batch, &mut rng)?;
+            let mut args: Vec<&Literal> = self.state[..self.n_leaves].iter().collect();
+            args.push(&x);
+            args.push(&y);
+            let art = self.engine.load(&key)?;
+            let outs = art.exe.execute::<&Literal>(&args)?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            total_loss += outs[0].get_first_element::<f32>()? as f64;
+            total_correct += outs[1].get_first_element::<i32>()? as usize;
+            total_n += units_per_batch;
+        }
+        Ok(EvalResult {
+            loss: total_loss / n_batches as f64,
+            accuracy: total_correct as f64 / total_n as f64,
+            n_examples: total_n,
+        })
+    }
+
+    pub fn current_step(&self) -> usize {
+        self.step
+    }
+
+    /// Borrow the current parameter literals (e.g. for checkpointing).
+    pub fn params(&self) -> &[Literal] {
+        &self.state[..self.n_leaves]
+    }
+
+    /// Serialize current params to a directory (one .bin per leaf).
+    pub fn checkpoint(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (i, lit) in self.params().iter().enumerate() {
+            let data = lit.to_vec::<f32>().or_else(|_| -> xla::Result<Vec<f32>> {
+                // int leaves don't occur in params, but be safe
+                Ok(lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect())
+            })?;
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            std::fs::write(dir.join(format!("param_{i:04}.bin")), bytes)?;
+        }
+        Ok(())
+    }
+}

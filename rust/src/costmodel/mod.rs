@@ -1,0 +1,189 @@
+//! Hardware cost model (paper Appendix A).
+//!
+//! ```text
+//! Totalcost = Cost_mem * N_blockmem + Cost_flop * N_flop
+//! ```
+//!
+//! The single modelling decision that drives the whole paper: memory is
+//! accessed in blocks of `b` contiguous elements, so a sparse matrix's
+//! memory cost is the number of nonzero blocks in its `(1, b)` (for the
+//! forward pass) — in practice `(b, b)` since both W and Wᵀ are touched —
+//! block cover, NOT its nnz.  This module projects latencies for the
+//! microbenchmarks (Table 7), the budget allocator (Appendix I), and the
+//! end-to-end speedup estimates.
+
+use crate::patterns::BlockMask;
+
+/// Device description. Defaults model a V100-class block device as in the
+/// paper (32-wide coalescing, memory-bound sparse GEMMs).
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    /// hardware block size b (elements per coalesced access)
+    pub block: usize,
+    /// cost of one block memory access (arbitrary time units)
+    pub cost_mem: f64,
+    /// cost of one floating point op (same units)
+    pub cost_flop: f64,
+}
+
+impl Default for Device {
+    fn default() -> Self {
+        // mem:flop ratio ~100:1 per element-block — memory-dominated, as
+        // Appendix A argues for block-sparse GEMM on GPUs.
+        Device { block: 32, cost_mem: 100.0, cost_flop: 1.0 }
+    }
+}
+
+impl Device {
+    pub fn with_block(block: usize) -> Self {
+        Device { block, ..Default::default() }
+    }
+}
+
+/// Cost of one sparse GEMM  y[m, nc] = x[m, nr] * W  where W has the given
+/// element-level mask.  Memory: blocks of W touched (via the (b,b) cover,
+/// fwd+bwd symmetric) + streaming x and y; FLOPs: 2 * m * touched
+/// elements (the hardware computes whole blocks).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cost {
+    pub n_blockmem: u64,
+    pub n_flop: u64,
+    pub total: f64,
+}
+
+pub fn masked_gemm_cost(mask: &BlockMask, m: usize, dev: &Device) -> Cost {
+    let b = dev.block;
+    let cover = mask.block_cover(b, b);
+    let touched_blocks = cover.nnz() as u64;
+    let touched_elems = touched_blocks * (b * b) as u64;
+    // weight blocks + x stream + y stream (in b-element lines)
+    let x_blocks = (m as u64) * (mask.rows.div_ceil(b) as u64);
+    let y_blocks = (m as u64) * (mask.cols.div_ceil(b) as u64);
+    let n_blockmem = touched_blocks + x_blocks + y_blocks;
+    let n_flop = 2 * (m as u64) * touched_elems;
+    Cost {
+        n_blockmem,
+        n_flop,
+        total: dev.cost_mem * n_blockmem as f64 + dev.cost_flop * n_flop as f64,
+    }
+}
+
+pub fn dense_gemm_cost(rows: usize, cols: usize, m: usize, dev: &Device) -> Cost {
+    masked_gemm_cost(&BlockMask::ones(rows, cols), m, dev)
+}
+
+/// Projected latency ratio dense/sparse for a masked GEMM (the "Speedup"
+/// columns of Figs 5–9 at the cost-model level).
+pub fn projected_speedup(mask: &BlockMask, m: usize, dev: &Device) -> f64 {
+    let dense = dense_gemm_cost(mask.rows, mask.cols, m, dev);
+    let sparse = masked_gemm_cost(mask, m, dev);
+    dense.total / sparse.total
+}
+
+/// Sequential butterfly *product* cost: log2(k) factor GEMMs, each
+/// streaming activations fully (Fig 11 baseline).
+pub fn butterfly_product_cost(n: usize, max_stride_blocks: usize, m: usize,
+                              dev: &Device) -> Cost {
+    let b = dev.block;
+    let nb = n / b;
+    let logk = max_stride_blocks.trailing_zeros() as u64;
+    let factor_blocks = (2 * nb) as u64; // 2 nonzero blocks per block row
+    let act_blocks = (m as u64) * (nb as u64);
+    let n_blockmem = logk * (factor_blocks + 2 * act_blocks);
+    let n_flop = logk * 2 * (m as u64) * factor_blocks * (b * b) as u64;
+    Cost {
+        n_blockmem,
+        n_flop,
+        total: dev.cost_mem * n_blockmem as f64 + dev.cost_flop * n_flop as f64,
+    }
+}
+
+/// Flat butterfly cost: ONE sparse GEMM with (log2 k + 1) blocks per row.
+pub fn flat_butterfly_cost(n: usize, max_stride_blocks: usize, m: usize,
+                           dev: &Device) -> Cost {
+    let b = dev.block;
+    let nb = n / b;
+    let mask = crate::patterns::flat_butterfly_mask(nb, max_stride_blocks.min(nb))
+        .expand(b);
+    masked_gemm_cost(&mask, m, dev)
+}
+
+/// Attention cost for a block mask over sq/b x sk/b blocks, head dim d.
+pub fn attention_cost(mask: &BlockMask, b: usize, d: usize, heads: usize,
+                      dev: &Device) -> Cost {
+    let visible = mask.nnz() as u64;
+    // per visible block: QK^T (b*b*d mults), PV (b*b*d)
+    let n_flop = (heads as u64) * visible * 4 * (b * b * d) as u64;
+    // per visible block: one K tile + one V tile (b*d/b lines each) + Q resident
+    let lines_per_tile = (b * d).div_ceil(dev.block) as u64;
+    let n_blockmem = (heads as u64) * visible * 2 * lines_per_tile;
+    Cost {
+        n_blockmem,
+        n_flop,
+        total: dev.cost_mem * n_blockmem as f64 + dev.cost_flop * n_flop as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::baselines;
+    use crate::patterns::flat_butterfly_mask;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_cost_scales_with_size() {
+        let dev = Device::default();
+        let a = dense_gemm_cost(256, 256, 64, &dev);
+        let b = dense_gemm_cost(512, 512, 64, &dev);
+        assert!(b.total > 3.0 * a.total);
+    }
+
+    #[test]
+    fn aligned_sparse_beats_dense() {
+        let dev = Device::with_block(32);
+        let mask = flat_butterfly_mask(32, 4).expand(32); // 1024x1024
+        let sp = projected_speedup(&mask, 1024, &dev);
+        assert!(sp > 2.0, "speedup {sp}");
+    }
+
+    #[test]
+    fn unaligned_random_is_no_faster_than_dense() {
+        // Appendix A: random elementwise sparsity at 1-2% density touches
+        // ~all blocks -> cost ~ dense (Hooker's hardware lottery).
+        let dev = Device::with_block(32);
+        let mut rng = Rng::new(5);
+        let mask = baselines::random_element_mask(512, 0.02, &mut rng);
+        let sp = projected_speedup(&mask, 512, &dev);
+        assert!(sp < 1.2, "speedup {sp} should be ~1");
+    }
+
+    #[test]
+    fn flat_beats_product_in_cost_model() {
+        // Fig 11 at the cost-model level
+        let dev = Device::with_block(32);
+        let flat = flat_butterfly_cost(1024, 32, 2048, &dev);
+        let prod = butterfly_product_cost(1024, 32, 2048, &dev);
+        let ratio = prod.total / flat.total;
+        assert!(ratio > 1.5, "flat should win clearly, ratio {ratio}");
+        assert!(ratio < 10.0, "but not absurdly, ratio {ratio}");
+    }
+
+    #[test]
+    fn attention_cost_tracks_visible_fraction() {
+        let dev = Device::default();
+        let full = attention_cost(&BlockMask::ones(16, 16), 32, 64, 4, &dev);
+        let sparse_mask = baselines::pixelfly_attention_mask(16, 2, 1);
+        let sparse = attention_cost(&sparse_mask, 32, 64, 4, &dev);
+        let expect = sparse_mask.density();
+        let got = sparse.total / full.total;
+        assert!((got - expect).abs() < 0.02, "got {got} expect {expect}");
+    }
+
+    #[test]
+    fn cost_components_nonzero() {
+        let dev = Device::default();
+        let c = dense_gemm_cost(64, 64, 8, &dev);
+        assert!(c.n_blockmem > 0 && c.n_flop > 0 && c.total > 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Synthetic token corpus for the language-modeling experiments (Fig 8).
+//!
+//! A first-order Markov chain with Zipf-distributed stationary unigrams
+//! over a configurable vocabulary: the stream has learnable bigram
+//! structure (so training ppl drops well below the unigram entropy) and a
+//! heavy-tailed token distribution like natural text.
+
+use super::TokenBatch;
+use crate::util::{rng::zipf_cdf, Rng};
+
+#[derive(Clone, Debug)]
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    /// transition CDFs: next-token distribution conditioned on a bucket of
+    /// the previous token (buckets keep the table small for big vocabs)
+    trans: Vec<Vec<f64>>,
+    buckets: usize,
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let buckets = 16.min(vocab);
+        // each bucket gets its own Zipf permutation => strong bigram signal
+        let trans = (0..buckets)
+            .map(|_| {
+                let a = 1.0 + rng.f64(); // exponent 1..2
+                zipf_cdf(vocab, a)
+            })
+            .collect();
+        MarkovCorpus { vocab, trans, buckets }
+    }
+
+    fn bucket(&self, tok: usize) -> usize {
+        tok % self.buckets
+    }
+
+    pub fn sample(&self, batch: usize, seq: usize, rng: &mut Rng) -> TokenBatch {
+        let mut x = Vec::with_capacity(batch * seq);
+        let mut y = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let mut prev = rng.below(self.vocab);
+            let mut toks = Vec::with_capacity(seq + 1);
+            toks.push(prev);
+            for _ in 0..seq {
+                // token ranks permuted per bucket so the mapping differs
+                let r = rng.zipf(&self.trans[self.bucket(prev)]);
+                let tok = (r * 31 + self.bucket(prev) * 7) % self.vocab;
+                toks.push(tok);
+                prev = tok;
+            }
+            for t in 0..seq {
+                x.push(toks[t] as i32);
+                y.push(toks[t + 1] as i32);
+            }
+        }
+        TokenBatch { x, y, batch, seq }
+    }
+
+    /// Unigram entropy estimate (nats) from a sample — the ppl ceiling a
+    /// context-free model would hit; tests assert trained models beat it.
+    pub fn unigram_entropy(&self, rng: &mut Rng) -> f64 {
+        let b = self.sample(8, 256, rng);
+        let mut counts = vec![0usize; self.vocab];
+        for &t in &b.x {
+            counts[t as usize] += 1;
+        }
+        let total: usize = counts.iter().sum();
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total as f64;
+                -p * p.ln()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = MarkovCorpus::new(512, 0);
+        let mut rng = Rng::new(1);
+        let b = c.sample(2, 64, &mut rng);
+        assert!(b.x.iter().all(|&t| (t as usize) < 512));
+        assert_eq!(b.x.len(), 2 * 64);
+        assert_eq!(b.y.len(), 2 * 64);
+    }
+
+    #[test]
+    fn targets_are_shifted_inputs() {
+        let c = MarkovCorpus::new(64, 2);
+        let mut rng = Rng::new(3);
+        let b = c.sample(1, 32, &mut rng);
+        // y[t] must equal x[t+1]
+        for t in 0..31 {
+            assert_eq!(b.y[t], b.x[t + 1]);
+        }
+    }
+
+    #[test]
+    fn bigram_structure_exists() {
+        // conditional distribution must differ across previous-token buckets
+        let c = MarkovCorpus::new(128, 4);
+        let mut rng = Rng::new(5);
+        let b = c.sample(16, 256, &mut rng);
+        let mut next_given: Vec<Vec<usize>> = vec![vec![0; 128]; 2];
+        for i in 0..b.x.len() - 1 {
+            let bucket = (b.x[i] as usize % 16) % 2;
+            next_given[bucket][b.y[i] as usize] += 1;
+        }
+        let tv: f64 = (0..128)
+            .map(|t| {
+                let a = next_given[0][t] as f64 / next_given[0].iter().sum::<usize>() as f64;
+                let b = next_given[1][t] as f64 / next_given[1].iter().sum::<usize>() as f64;
+                (a - b).abs()
+            })
+            .sum::<f64>()
+            / 2.0;
+        assert!(tv > 0.1, "total variation {tv} too small — no bigram signal");
+    }
+
+    #[test]
+    fn entropy_below_uniform() {
+        let c = MarkovCorpus::new(256, 6);
+        let h = c.unigram_entropy(&mut Rng::new(7));
+        assert!(h < (256f64).ln(), "zipf should be below uniform entropy");
+        assert!(h > 1.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Synthetic Long-Range-Arena-style task suite (Fig 9 workload).
+//!
+//! Five tasks shaped after LRA's: each produces sequences of the
+//! configured length whose label depends on *long-range* structure, so
+//! attention sparsity patterns that cannot route distant information lose
+//! accuracy while block-local patterns stay fast — the Fig 9 tradeoff.
+//!
+//! Features come out as [seq, dim] f32 so they feed the same vit-style
+//! encoder artifacts as the vision data.
+
+use super::Batch;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LraTask {
+    /// nested max/mean reductions over digit tokens (ListOps-like)
+    ListOps,
+    /// byte-level "sentiment": label = majority of signed token groups
+    Text,
+    /// two concatenated halves; label = whether they share a key token
+    Retrieval,
+    /// flattened image: label = parity of bright quadrant count
+    Image,
+    /// pathfinder: label = whether a marked chain connects ends
+    Pathfinder,
+}
+
+impl LraTask {
+    pub fn all() -> [LraTask; 5] {
+        [LraTask::ListOps, LraTask::Text, LraTask::Retrieval, LraTask::Image,
+         LraTask::Pathfinder]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LraTask::ListOps => "listops",
+            LraTask::Text => "text",
+            LraTask::Retrieval => "retrieval",
+            LraTask::Image => "image",
+            LraTask::Pathfinder => "pathfinder",
+        }
+    }
+
+    /// Paper sequence lengths vary 1024–4096; ours are configurable.
+    pub fn n_classes(&self) -> usize {
+        match self {
+            LraTask::ListOps => 8,
+            _ => 2,
+        }
+    }
+}
+
+pub struct LraDataset {
+    pub task: LraTask,
+    pub seq: usize,
+    pub dim: usize,
+}
+
+impl LraDataset {
+    pub fn new(task: LraTask, seq: usize, dim: usize) -> Self {
+        LraDataset { task, seq, dim }
+    }
+
+    fn embed(&self, tokens: &[usize], rng_tbl: &[Vec<f32>]) -> Vec<f32> {
+        let mut x = Vec::with_capacity(tokens.len() * self.dim);
+        for &t in tokens {
+            x.extend_from_slice(&rng_tbl[t % rng_tbl.len()]);
+        }
+        x
+    }
+
+    /// Deterministic token-embedding table per task.
+    fn table(&self, vocab: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(0xE_B_E_D ^ self.task.name().len() as u64);
+        (0..vocab)
+            .map(|_| rng.normal_vec(self.dim, 1.0 / (self.dim as f32).sqrt()))
+            .collect()
+    }
+
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> Batch {
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        let tbl = self.table(64);
+        for _ in 0..batch {
+            let (tokens, label) = match self.task {
+                LraTask::ListOps => self.gen_listops(rng),
+                LraTask::Text => self.gen_text(rng),
+                LraTask::Retrieval => self.gen_retrieval(rng),
+                LraTask::Image => self.gen_image(rng),
+                LraTask::Pathfinder => self.gen_pathfinder(rng),
+            };
+            xs.extend(self.embed(&tokens, &tbl));
+            ys.push(label as i32);
+        }
+        Batch { x: xs, y: ys, batch, seq: self.seq, dim: self.dim }
+    }
+
+    fn gen_listops(&self, rng: &mut Rng) -> (Vec<usize>, usize) {
+        // groups of digits reduced by alternating max/min; the answer digit
+        // appears early AND late, so long-range pooling is required.
+        let mut toks = vec![0usize; self.seq];
+        let mut acc = 0usize;
+        let groups = 8;
+        let glen = self.seq / groups;
+        for g in 0..groups {
+            let op_max = g % 2 == 0;
+            let mut red = if op_max { 0 } else { 7 };
+            for i in 0..glen {
+                let d = rng.below(8);
+                toks[g * glen + i] = 10 + d;
+                red = if op_max { red.max(d) } else { red.min(d) };
+            }
+            acc = (acc + red) % 8;
+        }
+        (toks, acc)
+    }
+
+    fn gen_text(&self, rng: &mut Rng) -> (Vec<usize>, usize) {
+        let mut score = 0i64;
+        let toks: Vec<usize> = (0..self.seq)
+            .map(|_| {
+                let t = rng.below(40);
+                if t < 8 {
+                    score += 1;
+                } else if t < 16 {
+                    score -= 1;
+                }
+                t
+            })
+            .collect();
+        (toks, (score > 0) as usize)
+    }
+
+    fn gen_retrieval(&self, rng: &mut Rng) -> (Vec<usize>, usize) {
+        let half = self.seq / 2;
+        let mut toks = vec![0usize; self.seq];
+        for t in toks.iter_mut() {
+            *t = 1 + rng.below(30);
+        }
+        let matched = rng.bool(0.5);
+        let key = 40 + rng.below(8);
+        toks[rng.below(half)] = key;
+        if matched {
+            toks[half + rng.below(half)] = key;
+        } else {
+            toks[half + rng.below(half)] = 40 + ((key - 40) + 1 + rng.below(6)) % 8 + 40 - 40;
+        }
+        (toks, matched as usize)
+    }
+
+    fn gen_image(&self, rng: &mut Rng) -> (Vec<usize>, usize) {
+        // 4 quadrants of the flattened sequence; "bright" quadrant = mostly
+        // high tokens; label = parity of bright count
+        let q = self.seq / 4;
+        let mut toks = vec![0usize; self.seq];
+        let mut bright_count = 0;
+        for qi in 0..4 {
+            let bright = rng.bool(0.5);
+            bright_count += bright as usize;
+            for i in 0..q {
+                toks[qi * q + i] = if bright { 32 + rng.below(8) } else { rng.below(8) };
+            }
+        }
+        (toks, bright_count % 2)
+    }
+
+    fn gen_pathfinder(&self, rng: &mut Rng) -> (Vec<usize>, usize) {
+        // a "path" is a chain of marker tokens at stride positions; with
+        // probability 1/2 the chain is broken at a random midpoint.
+        let mut toks: Vec<usize> = (0..self.seq).map(|_| rng.below(16)).collect();
+        let stride = (self.seq / 16).max(1);
+        let connected = rng.bool(0.5);
+        let break_at = 4 + rng.below(8);
+        for (hop, pos) in (0..self.seq).step_by(stride).enumerate() {
+            if !connected && hop == break_at {
+                continue;
+            }
+            toks[pos] = 50;
+        }
+        (toks, connected as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_batches() {
+        for task in LraTask::all() {
+            let ds = LraDataset::new(task, 128, 16);
+            let mut rng = Rng::new(1);
+            let b = ds.sample(4, &mut rng);
+            assert_eq!(b.x.len(), 4 * 128 * 16, "{}", task.name());
+            assert!(b
+                .y
+                .iter()
+                .all(|&y| (y as usize) < task.n_classes()), "{}", task.name());
+        }
+    }
+
+    #[test]
+    fn labels_are_balanced_enough() {
+        for task in [LraTask::Text, LraTask::Retrieval, LraTask::Pathfinder] {
+            let ds = LraDataset::new(task, 256, 8);
+            let mut rng = Rng::new(2);
+            let b = ds.sample(200, &mut rng);
+            let ones = b.y.iter().filter(|&&y| y == 1).count();
+            assert!(ones > 40 && ones < 160, "{}: {ones}/200", task.name());
+        }
+    }
+
+    #[test]
+    fn listops_label_depends_on_far_tokens() {
+        // flipping tokens in the LAST group must be able to change the label
+        let ds = LraDataset::new(LraTask::ListOps, 64, 4);
+        let mut any_diff = false;
+        for seed in 0..20 {
+            let mut r1 = Rng::new(seed);
+            let (_, l1) = ds.gen_listops(&mut r1);
+            let mut r2 = Rng::new(seed + 1000);
+            let (_, l2) = ds.gen_listops(&mut r2);
+            if l1 != l2 {
+                any_diff = true;
+            }
+        }
+        assert!(any_diff);
+    }
+}

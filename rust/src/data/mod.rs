@@ -1,0 +1,36 @@
+//! Synthetic data substrates (DESIGN.md §Substitutions).
+//!
+//! The paper trains on CIFAR/ImageNet/WikiText-103/LRA; none is shippable
+//! here, so each module generates a structured synthetic stand-in that
+//! preserves the property the corresponding experiment measures:
+//!
+//! - [`vision`]: class-clustered patch sequences (the Theorem-B.1
+//!   generative process): learnable by all models, with locality +
+//!   global structure so pattern choice matters.
+//! - [`corpus`]: Zipf unigram + Markov bigram token streams for the LM
+//!   perplexity comparisons.
+//! - [`lra`]: five long-sequence tasks shaped after the LRA suite.
+
+pub mod corpus;
+pub mod lra;
+pub mod prefetch;
+pub mod vision;
+
+/// A batch of f32 features [batch, seq, dim] + integer labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub dim: usize,
+}
+
+/// A batch of token ids [batch, seq] with next-token targets [batch, seq].
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}

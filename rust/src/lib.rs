@@ -1,0 +1,38 @@
+//! Pixelated Butterfly (ICLR 2022) — Layer-3 Rust coordinator.
+//!
+//! This crate is the runtime half of the three-layer reproduction (see
+//! DESIGN.md): JAX/Pallas author the compute at build time and lower it to
+//! HLO text; this crate loads those artifacts over the PJRT C API (`xla`
+//! crate), owns the training loop, the paper's budget-allocation and
+//! mask-selection logic, the hardware cost model, the NTK-guided pattern
+//! search, the baselines (RigL, butterfly product), the synthetic data
+//! substrates, and the pure-Rust block-sparse compute substrate used for
+//! the microbenchmarks.
+//!
+//! Python never runs on the hot path: after `make artifacts` the binary is
+//! self-contained.
+//!
+//! Module map (one subsystem per module; DESIGN.md "System inventory"):
+//! - [`patterns`]   block masks: butterfly, flat butterfly, baselines, covers
+//! - [`costmodel`]  Appendix-A hardware cost model (block memory access)
+//! - [`sparse`]     pure-Rust BSR GEMM substrate (Table 7 / Fig 11 testbed)
+//! - [`models`]     model schemas, presets, parameter/FLOP accounting
+//! - [`data`]       synthetic vision / corpus / LRA workloads
+//! - [`runtime`]    PJRT engine: manifest, executables, device buffers
+//! - [`coordinator`] budget allocation, mask planning, the training loop
+//! - [`ntk`]        empirical-NTK distance + Algorithm-2 pattern search
+//! - [`rigl`]       RigL dynamic-sparsity baseline (Fig 6)
+//! - [`util`]       PRNG, timers, stats, CLI & property-test helpers
+//! - [`bench`]      in-crate micro-benchmark harness (criterion substitute)
+
+pub mod bench;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod models;
+pub mod ntk;
+pub mod patterns;
+pub mod rigl;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,351 @@
+//! `pixelfly` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands (see README for a tour):
+//!   train        train one preset end-to-end on the PJRT engine
+//!   compare      train dense + pixelfly (+ more) presets and tabulate
+//!   ntk-compare  Fig 4: NTK distance of each pattern vs dense (artifacts)
+//!   ntk-search   Appendix K / Algorithm 2 over the analytic NTK
+//!   plan         budget allocation + mask plan for a model schema
+//!   microbench   Table 7: expected vs actual density & latency
+//!   flatbench    Fig 11: flat vs product butterfly multiply
+//!   list         list artifacts in the manifest
+
+use anyhow::Result;
+
+use pixelfly::coordinator::{budget, planner, TrainConfig, Trainer};
+use pixelfly::costmodel::Device;
+use pixelfly::data::lra::LraTask;
+use pixelfly::models;
+use pixelfly::ntk;
+use pixelfly::patterns::{baselines, flat_butterfly_mask, BlockMask};
+use pixelfly::runtime::{artifacts_dir, Engine};
+use pixelfly::sparse::{butterfly_mm::ButterflyProduct, BsrMatrix, Matrix};
+use pixelfly::util::{stats::time_it, Args, Rng};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "ntk-compare" => cmd_ntk_compare(&args),
+        "ntk-search" => cmd_ntk_search(&args),
+        "plan" => cmd_plan(&args),
+        "microbench" => cmd_microbench(&args),
+        "flatbench" => cmd_flatbench(&args),
+        "experiments" => cmd_experiments(&args),
+        "list" => cmd_list(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "pixelfly — Pixelated Butterfly (ICLR 2022) coordinator\n\n\
+         USAGE: pixelfly <cmd> [--flags]\n\n\
+         train        --preset gpt2_s_pixelfly --steps 100 --lr 1e-3 [--lra-task text]\n\
+         compare      --presets mixer_s_dense,mixer_s_pixelfly --steps 50\n\
+         ntk-compare  [--batches 2]           (Fig 4, uses ntk_* artifacts)\n\
+         ntk-search   [--nb 16 --budget 96]   (Appendix K, analytic NTK)\n\
+         plan         --model vit-s16 --budget 0.1 [--block 32]\n\
+         experiments  [--out results --scale 1.0]  (run the whole matrix)\n\
+         microbench   [--n 1024 --batch 256]  (Table 7)\n\
+         flatbench    [--n 1024 --batch 512]  (Fig 11)\n\
+         list"
+    );
+}
+
+fn cmd_experiments(args: &Args) -> Result<()> {
+    let out = std::path::PathBuf::from(args.str_or("out", "results"));
+    let scale = args.f64_or("scale", 1.0);
+    let seed = args.u64_or("seed", 0);
+    pixelfly::coordinator::experiments::run_all(&artifacts_dir(), &out, scale, seed)?;
+    println!("results -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let engine = Engine::new(&artifacts_dir())?;
+    let mut keys: Vec<_> = engine.manifest.artifacts.keys().cloned().collect();
+    keys.sort();
+    for k in keys {
+        let a = &engine.manifest.artifacts[&k];
+        println!("{k:<36} batch={:<4} params={:<9} file={}", a.batch, a.param_count, a.file);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut engine = Engine::new(&artifacts_dir())?;
+    let cfg = TrainConfig {
+        preset: args.str_or("preset", "mixer_s_pixelfly"),
+        steps: args.usize_or("steps", 50),
+        lr: args.f32_or("lr", 1e-3),
+        warmup: args.usize_or("warmup", 10),
+        seed: args.u64_or("seed", 0),
+        log_every: args.usize_or("log-every", 10),
+        eval_batches: args.usize_or("eval-batches", 4),
+        lra_task: args.get("lra-task").map(parse_lra_task).transpose()?,
+    };
+    let mut trainer = Trainer::new(&mut engine, cfg)?;
+    let report = trainer.train()?;
+    println!("{}", report.summary_line());
+    if args.bool("curve") {
+        println!("{}", report.curve_tsv());
+    }
+    if let Some(dir) = args.get("checkpoint") {
+        trainer.checkpoint(std::path::Path::new(dir))?;
+        println!("checkpoint -> {dir}");
+    }
+    Ok(())
+}
+
+fn parse_lra_task(s: &str) -> Result<LraTask> {
+    LraTask::all()
+        .into_iter()
+        .find(|t| t.name() == s)
+        .ok_or_else(|| anyhow::anyhow!("unknown LRA task {s:?}"))
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let presets = args.str_or("presets", "mixer_s_dense,mixer_s_pixelfly");
+    let steps = args.usize_or("steps", 50);
+    let mut rows = Vec::new();
+    for preset in presets.split(',') {
+        let mut engine = Engine::new(&artifacts_dir())?;
+        let cfg = TrainConfig {
+            preset: preset.trim().to_string(),
+            steps,
+            lr: args.f32_or("lr", 1e-3),
+            eval_batches: args.usize_or("eval-batches", 4),
+            seed: args.u64_or("seed", 0),
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&mut engine, cfg)?;
+        let r = trainer.train()?;
+        println!("{}", r.summary_line());
+        rows.push(r);
+    }
+    // speedup column vs the first (baseline) preset
+    if let Some(base) = rows.first().and_then(|r| r.step_time.as_ref()).map(|s| s.mean_ns) {
+        println!("\n{:<26} {:>10} {:>10} {:>9} {:>10} {:>9}",
+                 "preset", "final", "eval", "acc/ppl", "step(ms)", "speedup");
+        for r in &rows {
+            let st = r.step_time.as_ref().unwrap();
+            let (metric, eval_loss) = r
+                .final_eval
+                .map(|e| {
+                    if r.preset.contains("gpt2") {
+                        (format!("{:.2}", e.perplexity()), e.loss)
+                    } else {
+                        (format!("{:.3}", e.accuracy), e.loss)
+                    }
+                })
+                .unwrap_or(("-".into(), f64::NAN));
+            println!("{:<26} {:>10.4} {:>10.4} {:>9} {:>10.1} {:>8.2}x",
+                     r.preset, r.final_loss(), eval_loss, metric,
+                     st.mean_ms(), base / st.mean_ns);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ntk_compare(args: &Args) -> Result<()> {
+    // Fig 4: run each ntk_* artifact on the SAME input batch, compare grams
+    let mut engine = Engine::new(&artifacts_dir())?;
+    let patterns = ["dense", "pixelfly", "bigbird", "random", "lowrank", "local"];
+    let n_batches = args.usize_or("batches", 1);
+    let mut grams: Vec<(String, Vec<f32>)> = Vec::new();
+    for p in patterns {
+        let key = format!("ntk_{p}.ntk_gram");
+        if engine.manifest.artifacts.get(&key).is_none() {
+            continue;
+        }
+        let spec = engine.manifest.artifact(&key)?.clone();
+        let params = engine.load_initial_state(&format!("ntk_{p}"), &key)?;
+        // shared deterministic input batch across patterns — clustered
+        // (Process 1 / Theorem B.1): pairs of examples share a center, so
+        // the kernel has real structure for patterns to preserve or lose
+        let xspec = spec.inputs.last().unwrap().clone();
+        let mut acc: Vec<f32> = Vec::new();
+        for b in 0..n_batches {
+            let mut noise = Rng::new(1234 + b as u64);
+            let dims = &xspec.dims; // [N, seq, in_dim]
+            let (nex, per_ex) = (dims[0], dims[1] * dims[2]);
+            let mut data = Vec::with_capacity(nex * per_ex);
+            for i in 0..nex {
+                let mut center = Rng::new(9000 + (i / 2) as u64);
+                for _ in 0..per_ex {
+                    data.push(center.normal_f32() + 0.3 * noise.normal_f32());
+                }
+            }
+            let x = pixelfly::runtime::engine::f32_literal(&xspec.dims, &data)?;
+            let mut argv: Vec<&xla::Literal> = params.iter().collect();
+            argv.push(&x);
+            let art = engine.load(&key)?;
+            let outs = art.exe.execute::<&xla::Literal>(&argv)?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            let g = outs[0].to_vec::<f32>()?;
+            if acc.is_empty() {
+                acc = g;
+            } else {
+                for (a, v) in acc.iter_mut().zip(g) {
+                    *a += v;
+                }
+            }
+        }
+        grams.push((p.to_string(), acc));
+    }
+    let dense = grams
+        .iter()
+        .find(|(p, _)| p == "dense")
+        .map(|(_, g)| g.clone())
+        .ok_or_else(|| anyhow::anyhow!("ntk_dense artifact missing"))?;
+    // scale-normalise each gram (unit Frobenius norm) so the comparison
+    // measures kernel *shape* (training-dynamics direction), not the raw
+    // parameter-count scale — models at different densities have kernels
+    // of different magnitude by construction.
+    let normalise = |g: &[f32]| -> Vec<f32> {
+        let norm = (g.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()).sqrt() as f32;
+        g.iter().map(|v| v / norm.max(1e-30)).collect()
+    };
+    let dn = normalise(&dense);
+    println!("{:<14} {:>14} {:>16}", "pattern", "raw dist", "normalized dist");
+    let mut rows: Vec<(String, f64, f64)> = grams
+        .iter()
+        .filter(|(p, _)| p != "dense")
+        .map(|(p, g)| {
+            (p.clone(),
+             ntk::relative_distance(&dense, g),
+             ntk::relative_distance(&dn, &normalise(g)))
+        })
+        .collect();
+    rows.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    for (p, raw, norm) in &rows {
+        println!("{p:<14} {raw:>14.4} {norm:>16.4}");
+    }
+    println!("\n(paper Fig 4: flat block butterfly + low-rank closest to dense)");
+    Ok(())
+}
+
+fn cmd_ntk_search(args: &Args) -> Result<()> {
+    let nb = args.usize_or("nb", 16);
+    let block = args.usize_or("block", 4);
+    let budget = args.usize_or("budget", nb * nb / 4);
+    let n = args.usize_or("examples", 24);
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    // clustered data (Process 1)
+    let dim = nb * block;
+    let data: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut c = Rng::new(500 + (i / 2) as u64);
+            (0..dim).map(|_| c.normal_f32() + 0.3 * rng.normal_f32()).collect()
+        })
+        .collect();
+    let ranked = ntk::search(&data, nb, block, budget, args.u64_or("seed", 0));
+    println!("Algorithm 2 ranking (budget {budget} blocks, nb={nb}):");
+    println!("{:<20} {:>12} {:>10}", "pattern", "NTK dist", "density");
+    for (kind, dist, dens) in ranked {
+        println!("{:<20} {:>12.4} {:>10.3}", kind.name(), dist, dens);
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "vit-s16");
+    let budget_frac = args.f64_or("budget", 0.1);
+    let block = args.usize_or("block", 32);
+    let batch = args.usize_or("batch", 32);
+    let dev = Device::with_block(block);
+    let schema = models::preset(&model, batch)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+    println!("schema {model}: params={} flops/step={:.2}G",
+             schema.total_params(), schema.total_flops() as f64 / 1e9);
+    println!("\ncompute fractions (dense):");
+    for (lt, f) in schema.compute_fractions(&dev) {
+        println!("  {:<12} {:>6.1}%", lt.name(), f * 100.0);
+    }
+    let thumb = budget::rule_of_thumb(&schema, budget_frac, &dev);
+    let opt = budget::cost_optimal(&schema, budget_frac, &dev);
+    println!("\ndensity allocation (budget {:.0}%):", budget_frac * 100.0);
+    println!("  {:<12} {:>14} {:>14}", "layer", "rule-of-thumb", "closed-form");
+    for (lt, d) in &thumb.densities {
+        println!("  {:<12} {:>14.3} {:>14.3}", lt.name(), d, opt.density_of(*lt));
+    }
+    println!("\nprojected speedup: thumb {:.2}x, closed-form {:.2}x",
+             budget::projected_speedup(&schema, &thumb, &dev),
+             budget::projected_speedup(&schema, &opt, &dev));
+    let plan = planner::plan_model(&schema, &thumb, block);
+    println!("\nlayer plans:");
+    for p in &plan.layers {
+        println!("  {:<12} {}x{} b={} max_stride={} rank={} density={:.3}",
+                 p.layer.name(), p.rows, p.cols, p.block, p.max_stride, p.rank,
+                 p.achieved_density);
+    }
+    if let Some(a) = &plan.attention {
+        println!("  attention    nb={} max_stride={} global={} density={:.3}",
+                 a.seq_blocks, a.max_stride, a.global_blocks, a.achieved_density);
+    }
+    println!("\ntotal plan density: {:.3}", plan.total_density);
+    Ok(())
+}
+
+fn cmd_microbench(args: &Args) -> Result<()> {
+    // Table 7 (see also rust/benches/table7_microbench.rs)
+    let n = args.usize_or("n", 1024);
+    let batch = args.usize_or("batch", 256);
+    let hw_block = 32;
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(batch, n, 1.0, &mut rng);
+    println!("{:<12} {:>10} {:>16} {:>14} {:>12}", "pattern", "block", "expected dens",
+             "actual dens", "latency(ms)");
+    let mut run = |name: &str, mask: &BlockMask, gblock: usize| {
+        let cover = mask.block_cover(hw_block, hw_block);
+        let w = BsrMatrix::random(&cover, hw_block, 0.1, &mut Rng::new(1));
+        let mut y = Matrix::zeros(batch, w.cols_elems());
+        let s = time_it(1, 5, || w.matmul_into(&x, &mut y));
+        println!("{:<12} {:>7}x{:<3} {:>15.2}% {:>13.2}% {:>12.2}",
+                 name, gblock, gblock,
+                 100.0 * mask.density(),
+                 100.0 * mask.actual_density(hw_block),
+                 s.mean_ms());
+    };
+    for g in [1usize, 2, 4, 8, 16, 32] {
+        let density = 0.0125;
+        let m = baselines::random_grouped_mask(n, g, density, &mut Rng::new(2));
+        run("random", &m, g);
+    }
+    let nb = n / hw_block;
+    let bf = flat_butterfly_mask(nb, nb.min(8)).expand(hw_block);
+    run("pixelfly", &bf, hw_block);
+    Ok(())
+}
+
+fn cmd_flatbench(args: &Args) -> Result<()> {
+    // Fig 11 (see also rust/benches/fig11_flat_vs_product.rs)
+    let n = args.usize_or("n", 1024);
+    let batch = args.usize_or("batch", 512);
+    let block = args.usize_or("block", 32);
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(batch, n, 1.0, &mut rng);
+    println!("{:<10} {:>14} {:>14} {:>10}", "stride", "product(ms)", "flat(ms)", "speedup");
+    let nb = n / block;
+    let mut k = 2;
+    while k <= nb {
+        let bp = ButterflyProduct::random(n, block, k, 0.1, &mut rng);
+        let flat = bp.flatten();
+        let sp = time_it(1, 5, || {
+            std::hint::black_box(bp.matmul(&x));
+        });
+        let mut y = Matrix::zeros(batch, n);
+        let sf = time_it(1, 5, || flat.matmul_into(&x, &mut y));
+        println!("{:<10} {:>14.2} {:>14.2} {:>9.2}x", k, sp.mean_ms(), sf.mean_ms(),
+                 sp.mean_ns / sf.mean_ns);
+        k *= 2;
+    }
+    Ok(())
+}

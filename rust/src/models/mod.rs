@@ -1,0 +1,233 @@
+//! Model schemas (paper Appendix K.2): layer types, repeat counts, GEMM
+//! dimensions — the input to the budget allocator and the planner, plus
+//! parameter/FLOP accounting mirroring Tables 4–6.
+
+use crate::costmodel::{dense_gemm_cost, Device};
+
+/// Layer types with distinct sparsification behaviour (paper §3.3 step 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerType {
+    /// attention projection GEMMs (q/k/v/o)
+    AttnProj,
+    /// the attention score/value matmuls (seq x seq)
+    AttnScore,
+    /// MLP / mixer channel GEMMs
+    Mlp,
+    /// token-mixing GEMMs (mixer only)
+    TokenMix,
+    /// embeddings / classifier head (kept dense by the paper)
+    Dense,
+}
+
+impl LayerType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerType::AttnProj => "attn_proj",
+            LayerType::AttnScore => "attn_score",
+            LayerType::Mlp => "mlp",
+            LayerType::TokenMix => "token_mix",
+            LayerType::Dense => "dense",
+        }
+    }
+
+    /// Layers the paper sparsifies (embeddings/heads stay dense).
+    pub fn sparsifiable(&self) -> bool {
+        !matches!(self, LayerType::Dense)
+    }
+}
+
+/// One entry of the model schema: `count` GEMMs of shape [m x n] applied
+/// to `tokens_per_batch` rows.
+#[derive(Clone, Copy, Debug)]
+pub struct SchemaEntry {
+    pub layer: LayerType,
+    pub count: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub tokens: usize,
+}
+
+impl SchemaEntry {
+    /// Dense matrix elements of this entry (budget-accounting proxy; for
+    /// AttnScore this is the score-matrix size, not trainable weights).
+    pub fn params(&self) -> usize {
+        self.count * self.rows * self.cols
+    }
+
+    /// Trainable weight parameters (0 for attention score matrices).
+    pub fn weight_params(&self) -> usize {
+        if self.layer == LayerType::AttnScore {
+            0
+        } else {
+            self.params()
+        }
+    }
+
+    pub fn flops(&self) -> u64 {
+        2 * (self.count as u64) * (self.rows as u64) * (self.cols as u64)
+            * (self.tokens as u64)
+    }
+
+    /// Dense cost under the hardware model.
+    pub fn dense_cost(&self, dev: &Device) -> f64 {
+        self.count as f64 * dense_gemm_cost(self.rows, self.cols, self.tokens, dev).total
+    }
+}
+
+/// A full model schema.
+#[derive(Clone, Debug)]
+pub struct ModelSchema {
+    pub name: String,
+    pub entries: Vec<SchemaEntry>,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+}
+
+impl ModelSchema {
+    pub fn total_params(&self) -> usize {
+        self.entries.iter().map(|e| e.weight_params()).sum()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.entries.iter().map(|e| e.flops()).sum()
+    }
+
+    pub fn sparsifiable_params(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.layer.sparsifiable())
+            .map(|e| e.params())
+            .sum()
+    }
+
+    /// Compute-fraction per layer type (the §3.3 rule-of-thumb input).
+    pub fn compute_fractions(&self, dev: &Device) -> Vec<(LayerType, f64)> {
+        let mut per: Vec<(LayerType, f64)> = Vec::new();
+        let total: f64 = self.entries.iter().map(|e| e.dense_cost(dev)).sum();
+        for e in &self.entries {
+            let cost = e.dense_cost(dev) / total;
+            if let Some(p) = per.iter_mut().find(|(l, _)| *l == e.layer) {
+                p.1 += cost;
+            } else {
+                per.push((e.layer, cost));
+            }
+        }
+        per
+    }
+}
+
+/// Transformer encoder/decoder schema (ViT / GPT-2 shape).
+pub fn transformer_schema(name: &str, d: usize, layers: usize, seq: usize,
+                          mlp_ratio: usize, batch: usize) -> ModelSchema {
+    let tokens = batch * seq;
+    ModelSchema {
+        name: name.to_string(),
+        seq_len: seq,
+        d_model: d,
+        n_layers: layers,
+        entries: vec![
+            SchemaEntry { layer: LayerType::AttnProj, count: 4 * layers, rows: d, cols: d, tokens },
+            SchemaEntry { layer: LayerType::AttnScore, count: 2 * layers, rows: seq, cols: seq, tokens: batch * d },
+            SchemaEntry { layer: LayerType::Mlp, count: layers, rows: d, cols: mlp_ratio * d, tokens },
+            SchemaEntry { layer: LayerType::Mlp, count: layers, rows: mlp_ratio * d, cols: d, tokens },
+        ],
+    }
+}
+
+/// MLP-Mixer schema.
+pub fn mixer_schema(name: &str, d: usize, layers: usize, seq: usize,
+                    mlp_ratio: usize, batch: usize) -> ModelSchema {
+    ModelSchema {
+        name: name.to_string(),
+        seq_len: seq,
+        d_model: d,
+        n_layers: layers,
+        entries: vec![
+            SchemaEntry { layer: LayerType::TokenMix, count: layers, rows: seq, cols: 2 * seq, tokens: batch * d },
+            SchemaEntry { layer: LayerType::TokenMix, count: layers, rows: 2 * seq, cols: seq, tokens: batch * d },
+            SchemaEntry { layer: LayerType::Mlp, count: layers, rows: d, cols: mlp_ratio * d, tokens: batch * seq },
+            SchemaEntry { layer: LayerType::Mlp, count: layers, rows: mlp_ratio * d, cols: d, tokens: batch * seq },
+        ],
+    }
+}
+
+/// Named presets mirroring the paper's model zoo (scaled; Tables 4–6).
+pub fn preset(name: &str, batch: usize) -> Option<ModelSchema> {
+    Some(match name {
+        // paper-scale schemas (for budget/cost projections; not trained here)
+        "mixer-s16" => mixer_schema(name, 512, 8, 196, 4, batch),
+        "mixer-b16" => mixer_schema(name, 768, 12, 196, 4, batch),
+        "vit-s16" => transformer_schema(name, 384, 12, 196, 4, batch),
+        "vit-b16" => transformer_schema(name, 768, 12, 196, 4, batch),
+        "gpt2-small" => transformer_schema(name, 768, 12, 512, 4, batch),
+        "gpt2-medium" => transformer_schema(name, 1024, 24, 512, 4, batch),
+        // scaled-down testbed schemas matching the AOT presets
+        "mixer-s" => mixer_schema(name, 128, 2, 64, 2, batch),
+        "vit-s" => transformer_schema(name, 128, 2, 64, 2, batch),
+        "gpt2-s" => transformer_schema(name, 128, 2, 128, 2, batch),
+        "lra" => transformer_schema(name, 64, 1, 512, 2, batch),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_match_hand_count() {
+        let s = transformer_schema("t", 128, 2, 64, 2, 1);
+        // 4*2 projections of 128x128 + 2 layers * (128*256 + 256*128)
+        let expect = 8 * 128 * 128 + 2 * 2 * 128 * 256;
+        assert_eq!(s.total_params(), expect);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let dev = Device::default();
+        for name in ["mixer-s", "vit-s", "gpt2-s", "gpt2-medium"] {
+            let s = preset(name, 8).unwrap();
+            let total: f64 = s.compute_fractions(&dev).iter().map(|(_, f)| f).sum();
+            assert!((total - 1.0).abs() < 1e-9, "{name}: {total}");
+        }
+    }
+
+    #[test]
+    fn attention_dominates_long_sequences() {
+        let dev = Device::default();
+        let short = transformer_schema("s", 256, 4, 128, 4, 8);
+        let long = transformer_schema("l", 256, 4, 2048, 4, 8);
+        let frac = |s: &ModelSchema| {
+            s.compute_fractions(&dev)
+                .iter()
+                .find(|(l, _)| *l == LayerType::AttnScore)
+                .map(|(_, f)| *f)
+                .unwrap_or(0.0)
+        };
+        assert!(frac(&long) > frac(&short));
+        assert!(frac(&long) > 0.5, "LRA regime: attention is the bottleneck");
+    }
+
+    #[test]
+    fn vit_mlp_vs_attn_ratio_about_two() {
+        // paper §5.3: ViT-small MLP:attention compute ~ 2:1 at seq 196
+        let dev = Device::default();
+        let s = preset("vit-s16", 64).unwrap();
+        let fr = s.compute_fractions(&dev);
+        let get = |lt: LayerType| fr.iter().find(|(l, _)| *l == lt).map(|(_, f)| *f).unwrap();
+        let mlp = get(LayerType::Mlp);
+        let attn = get(LayerType::AttnProj) + get(LayerType::AttnScore);
+        let ratio = mlp / attn;
+        assert!(ratio > 0.8 && ratio < 3.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn presets_exist() {
+        for n in ["mixer-s16", "mixer-b16", "vit-s16", "vit-b16", "gpt2-small",
+                  "gpt2-medium", "mixer-s", "vit-s", "gpt2-s", "lra"] {
+            assert!(preset(n, 4).is_some(), "{n}");
+        }
+        assert!(preset("nope", 4).is_none());
+    }
+}

@@ -1,0 +1,241 @@
+//! Empirical NTK comparison + the Appendix-K / Algorithm-2 pattern search.
+//!
+//! The NTK *grams* are computed by AOT artifacts (`ntk_*.ntk_gram`) on the
+//! PJRT engine; this module owns the distance metric (relative Frobenius
+//! difference, as in Fig 4), the candidate enumeration of Algorithm 2, and
+//! a closed-form NTK for two-layer ReLU nets (Definition G.2) used as a
+//! fast self-contained check (and in unit tests, where no artifacts are
+//! required).
+
+use crate::patterns::{baselines, flat_butterfly_mask, BlockMask, PatternKind};
+use crate::util::Rng;
+
+/// Relative Frobenius distance ||A - B||_F / ||A||_F (Fig 4's metric).
+pub fn relative_distance(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (*x as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+/// Analytic infinite-width NTK entry for a 2-layer ReLU net with masked
+/// first-layer weights (Definition G.2 adapted to a row mask): the kernel
+/// of example pair (x, y) restricted to the coordinates each hidden unit
+/// sees.  For unit r with support S_r:
+///     K(x,y) = E_r [ <x_S, y_S> * P(w·x_S >= 0, w·y_S >= 0) ]
+/// where the arc-cosine formula gives the probability.
+pub fn two_layer_relu_ntk(x: &[f32], y: &[f32], supports: &[Vec<usize>]) -> f64 {
+    let mut acc = 0.0f64;
+    for s in supports {
+        let (mut xx, mut yy, mut xy) = (0.0f64, 0.0f64, 0.0f64);
+        for &i in s {
+            xx += (x[i] as f64).powi(2);
+            yy += (y[i] as f64).powi(2);
+            xy += x[i] as f64 * y[i] as f64;
+        }
+        if xx <= 0.0 || yy <= 0.0 {
+            continue;
+        }
+        let cos = (xy / (xx.sqrt() * yy.sqrt())).clamp(-1.0, 1.0);
+        let theta = cos.acos();
+        // arc-cosine kernel of order 1 (ReLU): contribution
+        acc += xy * (std::f64::consts::PI - theta) / std::f64::consts::PI;
+    }
+    acc / supports.len() as f64
+}
+
+/// Build hidden-unit supports from a weight block mask: unit group j sees
+/// input blocks with mask[i][j] set.
+pub fn supports_from_mask(mask: &BlockMask, block: usize) -> Vec<Vec<usize>> {
+    let t = mask.transpose();
+    (0..t.rows)
+        .map(|j| {
+            let mut s = Vec::new();
+            for i in t.row_cols(j) {
+                for e in 0..block {
+                    s.push(i * block + e);
+                }
+            }
+            s
+        })
+        .collect()
+}
+
+/// Gram matrix of the analytic sparse NTK over a dataset.
+pub fn ntk_gram(data: &[Vec<f32>], supports: &[Vec<usize>]) -> Vec<f32> {
+    let n = data.len();
+    let mut g = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in i..n {
+            let v = two_layer_relu_ntk(&data[i], &data[j], supports) as f32;
+            g[i * n + j] = v;
+            g[j * n + i] = v;
+        }
+    }
+    g
+}
+
+/// One Algorithm-2 candidate: a named mask generator at a given budget.
+pub struct Candidate {
+    pub kind: PatternKind,
+    pub mask: BlockMask,
+}
+
+/// Enumerate the candidate set of Appendix K (Fig 12 components and the
+/// pixelfly combination) at roughly equal block budget.
+pub fn candidate_set(nb: usize, budget_blocks: usize, rng: &mut Rng) -> Vec<Candidate> {
+    let density = budget_blocks as f64 / (nb * nb) as f64;
+    let mut out = Vec::new();
+    out.push(Candidate { kind: PatternKind::Dense, mask: BlockMask::ones(nb, nb) });
+    // every sparse candidate is built AT (as close as its family allows to)
+    // the same block budget, so distances are comparable (Algorithm 2
+    // compares under the TotalCompute(s) <= B constraint)
+    let ms = crate::patterns::butterfly::max_stride_for_budget(
+        nb, budget_blocks.saturating_sub(2 * nb).max(nb));
+    out.push(Candidate {
+        kind: PatternKind::Pixelfly,
+        mask: baselines::pixelfly_attention_mask(nb, ms, 1),
+    });
+    out.push(Candidate {
+        kind: PatternKind::FlatButterfly,
+        mask: flat_butterfly_mask(nb, crate::patterns::butterfly::max_stride_for_budget(nb, budget_blocks)),
+    });
+    out.push(Candidate {
+        kind: PatternKind::Local,
+        mask: baselines::local_mask(nb, (budget_blocks / (2 * nb)).max(1)),
+    });
+    out.push(Candidate {
+        kind: PatternKind::Global,
+        mask: baselines::global_mask(nb, (budget_blocks.div_ceil(2 * nb)).max(1)),
+    });
+    out.push(Candidate {
+        kind: PatternKind::Random,
+        mask: baselines::random_mask(nb, nb, density, rng),
+    });
+    // bigbird: window 1 + global 1 costs ~5*nb blocks; spend the rest on
+    // random links
+    let base_cost = 5 * nb;
+    let n_random = budget_blocks.saturating_sub(base_cost) / nb;
+    out.push(Candidate {
+        kind: PatternKind::BigBird,
+        mask: baselines::bigbird_mask(nb, 1, 1, n_random, rng),
+    });
+    out
+}
+
+/// Algorithm 2 over the analytic NTK: rank candidates by distance to the
+/// dense NTK at (approximately) the same budget; returns
+/// (kind, distance, density) sorted best-first.
+pub fn search(data: &[Vec<f32>], nb: usize, block: usize, budget_blocks: usize,
+              seed: u64) -> Vec<(PatternKind, f64, f64)> {
+    let mut rng = Rng::new(seed);
+    let dense_supports = supports_from_mask(&BlockMask::ones(nb, nb), block);
+    let dense_gram = ntk_gram(data, &dense_supports);
+    let mut out = Vec::new();
+    for cand in candidate_set(nb, budget_blocks, &mut rng) {
+        if cand.kind == PatternKind::Dense {
+            continue;
+        }
+        let supports = supports_from_mask(&cand.mask, block);
+        let gram = ntk_gram(data, &supports);
+        out.push((cand.kind, relative_distance(&dense_gram, &gram), cand.mask.density()));
+    }
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_data(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        // clustered inputs (Process 1 flavour): pairs share a center
+        (0..n)
+            .map(|i| {
+                let mut c = Rng::new(100 + (i / 2) as u64);
+                (0..dim)
+                    .map(|_| c.normal_f32() + 0.2 * rng.normal_f32())
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn relative_distance_zero_on_equal() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert!(relative_distance(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn ntk_gram_is_psd_diagonal_dominantish() {
+        let data = toy_data(8, 32, 1);
+        let supports = supports_from_mask(&BlockMask::ones(8, 8), 4);
+        let g = ntk_gram(&data, &supports);
+        for i in 0..8 {
+            assert!(g[i * 8 + i] > 0.0);
+        }
+        // symmetry
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((g[i * 8 + j] - g[j * 8 + i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn denser_masks_are_closer_to_dense_ntk() {
+        let data = toy_data(12, 64, 2);
+        let block = 4;
+        let nb = 16;
+        let dense = ntk_gram(&data, &supports_from_mask(&BlockMask::ones(nb, nb), block));
+        let near = flat_butterfly_mask(nb, 16);
+        let far = flat_butterfly_mask(nb, 1);
+        let d_near = relative_distance(
+            &dense, &ntk_gram(&data, &supports_from_mask(&near, block)));
+        let d_far = relative_distance(
+            &dense, &ntk_gram(&data, &supports_from_mask(&far, block)));
+        assert!(d_near < d_far, "near {d_near} far {d_far}");
+    }
+
+    #[test]
+    fn search_distance_tracks_budget_monotonically() {
+        // The analytic proxy's robust invariant: at matched structure,
+        // more budget => closer to the dense NTK.  (The paper's empirical
+        // pattern *ranking* — Fig 4 — is reproduced with the artifact-based
+        // grams via `pixelfly ntk-compare`, where the patterns change the
+        // actual model; the closed-form proxy here is density-monotone.)
+        let data = toy_data(16, 64, 3);
+        let small = search(&data, 16, 4, 48, 7);
+        let large = search(&data, 16, 4, 160, 7);
+        let dist = |r: &Vec<(PatternKind, f64, f64)>, k: PatternKind| {
+            r.iter().find(|(kk, _, _)| *kk == k).unwrap().1
+        };
+        for k in [PatternKind::Pixelfly, PatternKind::FlatButterfly, PatternKind::Random] {
+            assert!(dist(&large, k) < dist(&small, k),
+                    "{k:?}: {} !< {}", dist(&large, k), dist(&small, k));
+        }
+        // every candidate's distance is in (0, 1]-ish range and ranking is
+        // produced sorted
+        for w in small.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn candidate_budgets_comparable() {
+        let mut rng = Rng::new(4);
+        let budget = 96;
+        for c in candidate_set(16, budget, &mut rng) {
+            if matches!(c.kind, PatternKind::Dense) {
+                continue;
+            }
+            assert!(c.mask.nnz() <= 3 * budget,
+                    "{:?} wildly over budget: {}", c.kind, c.mask.nnz());
+        }
+    }
+}

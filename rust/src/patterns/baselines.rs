@@ -1,0 +1,224 @@
+//! Baseline sparsity patterns the paper compares against (Fig 4/7/9,
+//! Table 7, Appendix K's candidate components).
+
+use super::butterfly::flat_butterfly_mask;
+use super::mask::BlockMask;
+use crate::util::Rng;
+
+/// Local banded window: |i - j| <= window (Fig 12 "Local").
+pub fn local_mask(nb: usize, window: usize) -> BlockMask {
+    let mut m = BlockMask::zeros(nb, nb);
+    for i in 0..nb {
+        let lo = i.saturating_sub(window);
+        let hi = (i + window).min(nb - 1);
+        for j in lo..=hi {
+            m.set(i, j, true);
+        }
+    }
+    m
+}
+
+/// Global stripe of `width` leading rows + columns (Fig 12 "Global";
+/// rank <= 2 * width * b — the block-aligned low-rank form, Appendix I.2).
+pub fn global_mask(nb: usize, width: usize) -> BlockMask {
+    let mut m = BlockMask::zeros(nb, nb);
+    for i in 0..nb {
+        for j in 0..nb {
+            if i < width || j < width {
+                m.set(i, j, true);
+            }
+        }
+    }
+    m
+}
+
+/// Random block mask at the given density, rows/cols kept nonempty
+/// (pruning-at-init baseline; Fig 12 "Random").
+pub fn random_mask(nbr: usize, nbc: usize, density: f64, rng: &mut Rng) -> BlockMask {
+    let mut m = BlockMask::zeros(nbr, nbc);
+    for i in 0..nbr {
+        for j in 0..nbc {
+            if rng.bool(density) {
+                m.set(i, j, true);
+            }
+        }
+    }
+    for i in 0..nbr {
+        m.set(i, rng.below(nbc), true);
+    }
+    for j in 0..nbc {
+        m.set(rng.below(nbr), j, true);
+    }
+    m
+}
+
+/// Random *element* mask (non-block-aligned; Table 7 "Random, 1x1"): the
+/// unstructured-sparsity baseline whose block cover blows up.
+pub fn random_element_mask(n: usize, density: f64, rng: &mut Rng) -> BlockMask {
+    let mut m = BlockMask::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            if rng.bool(density) {
+                m.set(i, j, true);
+            }
+        }
+    }
+    m
+}
+
+/// Random mask grouped into `g x g` pattern blocks (Table 7 sweeps g from
+/// 1..32): nonzeros come in g-blocks but need not align to the hardware
+/// block grid.
+pub fn random_grouped_mask(n: usize, g: usize, density: f64, rng: &mut Rng) -> BlockMask {
+    let mut m = BlockMask::zeros(n, n);
+    let ng = n / g;
+    for bi in 0..ng {
+        for bj in 0..ng {
+            if rng.bool(density) {
+                // place the g x g group at a random (unaligned) offset
+                let oi = (bi * g + rng.below(g.max(1))).min(n - g);
+                let oj = (bj * g + rng.below(g.max(1))).min(n - g);
+                for di in 0..g {
+                    for dj in 0..g {
+                        m.set(oi + di, oj + dj, true);
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+/// BigBird (Zaheer et al. 2020): window + global + random blocks.
+pub fn bigbird_mask(nb: usize, window: usize, n_global: usize, n_random: usize,
+                    rng: &mut Rng) -> BlockMask {
+    let mut m = local_mask(nb, window).union(&global_mask(nb, n_global));
+    for i in 0..nb {
+        for _ in 0..n_random {
+            m.set(i, rng.below(nb), true);
+        }
+    }
+    m
+}
+
+/// Sparse Transformer (Child et al. 2019) strided pattern at block level.
+pub fn sparse_transformer_mask(nb: usize, stride: Option<usize>) -> BlockMask {
+    let s = stride.unwrap_or_else(|| (nb as f64).sqrt().max(1.0) as usize);
+    let mut m = local_mask(nb, 1);
+    for i in 0..nb {
+        let mut j = 0;
+        while j < nb {
+            m.set(i, j, true);
+            j += s;
+        }
+    }
+    m
+}
+
+/// Longformer: window + global, no random.
+pub fn longformer_mask(nb: usize, window: usize, n_global: usize) -> BlockMask {
+    local_mask(nb, window).union(&global_mask(nb, n_global))
+}
+
+/// Reformer-style LSH bucketing approximation: queries attend within their
+/// hash bucket.  We model it as a random balanced block permutation mask —
+/// crucially NOT aligned to any fixed pattern across steps, which is why
+/// the paper measures it as slow (Fig 9, 0.8x).
+pub fn reformer_bucket_mask(nb: usize, bucket_blocks: usize, rng: &mut Rng) -> BlockMask {
+    let mut order: Vec<usize> = (0..nb).collect();
+    rng.shuffle(&mut order);
+    let mut m = BlockMask::zeros(nb, nb);
+    for chunk in order.chunks(bucket_blocks.max(1)) {
+        for &i in chunk {
+            for &j in chunk {
+                m.set(i, j, true);
+            }
+        }
+    }
+    m
+}
+
+/// Pixelfly attention mask: flat butterfly ∪ global stripe.
+pub fn pixelfly_attention_mask(nb: usize, max_stride: usize, global_width: usize) -> BlockMask {
+    flat_butterfly_mask(nb, max_stride.min(nb)).union(&global_mask(nb, global_width))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_mask_band() {
+        let m = local_mask(8, 1);
+        assert!(m.get(3, 2) && m.get(3, 3) && m.get(3, 4));
+        assert!(!m.get(3, 5));
+        assert_eq!(m, m.transpose());
+    }
+
+    #[test]
+    fn global_mask_rank_structure() {
+        let m = global_mask(8, 2);
+        assert_eq!(m.nnz(), 8 * 2 + 2 * 8 - 4);
+    }
+
+    #[test]
+    fn random_mask_nonempty_rows() {
+        let mut rng = Rng::new(7);
+        let m = random_mask(16, 8, 0.05, &mut rng);
+        assert!(m.rows_nonempty());
+        assert!(m.transpose().rows_nonempty());
+    }
+
+    #[test]
+    fn bigbird_contains_window_and_global() {
+        let mut rng = Rng::new(1);
+        let m = bigbird_mask(16, 1, 1, 2, &mut rng);
+        assert!(local_mask(16, 1).contained_in(&m));
+        assert!(global_mask(16, 1).contained_in(&m));
+    }
+
+    #[test]
+    fn sparse_transformer_has_strided_cols() {
+        let m = sparse_transformer_mask(16, Some(4));
+        for i in 0..16 {
+            for j in (0..16).step_by(4) {
+                assert!(m.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn reformer_buckets_are_blocks() {
+        let mut rng = Rng::new(3);
+        let m = reformer_bucket_mask(16, 4, &mut rng);
+        // every row attends to exactly its bucket (4 blocks)
+        for i in 0..16 {
+            assert_eq!(m.row_cols(i).len(), 4);
+            assert!(m.get(i, i));
+        }
+        assert_eq!(m, m.transpose());
+    }
+
+    #[test]
+    fn pixelfly_attention_mask_contains_diag_and_global() {
+        let m = pixelfly_attention_mask(16, 4, 1);
+        for i in 0..16 {
+            assert!(m.get(i, i));
+            assert!(m.get(i, 0) && m.get(0, i));
+        }
+    }
+
+    #[test]
+    fn grouped_random_small_groups_inflate_cover() {
+        // Table 7: same expected density, smaller group => bigger cover
+        let mut rng = Rng::new(9);
+        let n = 128;
+        let small = random_grouped_mask(n, 2, 0.02, &mut rng);
+        let mut rng2 = Rng::new(9);
+        let large = random_grouped_mask(n, 32, 0.02, &mut rng2);
+        let infl_small = small.actual_density(32) / small.density().max(1e-9);
+        let infl_large = large.actual_density(32) / large.density().max(1e-9);
+        assert!(infl_small > infl_large,
+                "small-group inflation {infl_small} should exceed {infl_large}");
+    }
+}

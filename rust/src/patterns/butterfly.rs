@@ -1,0 +1,203 @@
+//! Block butterfly structure (paper Definitions 3.1–3.4).
+//!
+//! All masks here are at block granularity over `nb` blocks per side.
+//! The XOR characterisation: a butterfly factor matrix of stride `s`
+//! (in blocks) pairs block index `i` with `i ^ (s/2)`; the flat butterfly
+//! of max stride `k` is the union of the diagonal with the XOR partners
+//! for every power of two below `k` — exactly the first-order expansion
+//! I + λ(B_2 + B_4 + ... + B_k) of Eq. (1).
+
+use super::mask::BlockMask;
+
+/// Mask of one block butterfly factor matrix `B_s^{(nb, b)}` (Def 3.2):
+/// entries (i, i) and (i, i ^ s/2). `stride` is in blocks, a power of two,
+/// 2 <= stride <= nb.
+pub fn butterfly_factor_mask(nb: usize, stride: usize) -> BlockMask {
+    assert!(stride >= 2 && stride.is_power_of_two() && stride <= nb);
+    assert!(nb.is_power_of_two());
+    let mut m = BlockMask::zeros(nb, nb);
+    for i in 0..nb {
+        m.set(i, i, true);
+        m.set(i, i ^ (stride / 2), true);
+    }
+    m
+}
+
+/// Flat butterfly mask of max stride `k` (Def 3.4): diagonal ∪ XOR
+/// partners 2^0 .. 2^(log2 k - 1).  `k = 1` gives the diagonal only.
+pub fn flat_butterfly_mask(nb: usize, max_stride: usize) -> BlockMask {
+    assert!(max_stride >= 1 && max_stride.is_power_of_two() && max_stride <= nb);
+    assert!(nb.is_power_of_two());
+    let mut m = BlockMask::identity(nb);
+    let mut s = 1;
+    while s < max_stride {
+        for i in 0..nb {
+            m.set(i, i ^ s, true);
+        }
+        s *= 2;
+    }
+    m
+}
+
+/// Rectangular "stretch" of the flat butterfly (paper Appendix I.4): tile
+/// the square pattern over min-side blocks along the longer dimension.
+pub fn stretched_flat_butterfly(nbr: usize, nbc: usize, max_stride: usize) -> BlockMask {
+    let nsq = nbr.min(nbc);
+    let p2 = if nsq.is_power_of_two() { nsq } else { nsq.next_power_of_two() / 2 }.max(1);
+    let ms = max_stride.min(p2);
+    let base = flat_butterfly_mask(p2, ms);
+    let mut m = BlockMask::zeros(nbr, nbc);
+    for i in 0..nbr {
+        for j in 0..nbc {
+            if base.get(i % p2, j % p2) {
+                m.set(i, j, true);
+            }
+        }
+    }
+    m
+}
+
+/// Number of nonzero blocks of the flat butterfly with max stride `k`.
+pub fn flat_butterfly_nnz_blocks(nb: usize, max_stride: usize) -> usize {
+    if max_stride <= 1 {
+        nb
+    } else {
+        nb * ((max_stride.trailing_zeros() as usize) + 1)
+    }
+}
+
+/// Largest power-of-two max stride whose flat pattern stays within
+/// `budget` nonzero blocks (paper §3.3 step 2: fill the budget).
+pub fn max_stride_for_budget(nb: usize, budget_blocks: usize) -> usize {
+    let mut k = 1;
+    while k < nb {
+        let next = k * 2;
+        if flat_butterfly_nnz_blocks(nb, next) > budget_blocks {
+            break;
+        }
+        k = next;
+    }
+    k
+}
+
+/// Support mask of the *product* of butterfly factor masks with strides
+/// 2..=k (the reachability of the sequential form; used to verify that the
+/// product connects all pairs at k = nb, i.e. the FFT mixing property).
+pub fn butterfly_product_support(nb: usize, max_stride: usize) -> BlockMask {
+    let mut acc = BlockMask::identity(nb);
+    let mut s = 2;
+    while s <= max_stride {
+        let f = butterfly_factor_mask(nb, s);
+        acc = bool_matmul(&acc, &f);
+        s *= 2;
+    }
+    acc
+}
+
+/// Boolean matrix product (support of the product of two masks).
+pub fn bool_matmul(a: &BlockMask, b: &BlockMask) -> BlockMask {
+    assert_eq!(a.cols, b.rows);
+    let mut out = BlockMask::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            if a.get(i, k) {
+                for j in 0..b.cols {
+                    if b.get(k, j) {
+                        out.set(i, j, true);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_mask_has_two_per_row() {
+        for nb in [4usize, 8, 16] {
+            let mut s = 2;
+            while s <= nb {
+                let m = butterfly_factor_mask(nb, s);
+                for i in 0..nb {
+                    assert_eq!(m.row_cols(i).len(), 2, "nb={nb} s={s} row {i}");
+                }
+                s *= 2;
+            }
+        }
+    }
+
+    #[test]
+    fn flat_mask_nnz_formula() {
+        for nb in [4usize, 8, 16, 32] {
+            let mut k = 1;
+            while k <= nb {
+                let m = flat_butterfly_mask(nb, k);
+                assert_eq!(m.nnz(), flat_butterfly_nnz_blocks(nb, k), "nb={nb} k={k}");
+                k *= 2;
+            }
+        }
+    }
+
+    #[test]
+    fn flat_mask_is_symmetric() {
+        let m = flat_butterfly_mask(16, 8);
+        assert_eq!(m, m.transpose());
+    }
+
+    #[test]
+    fn flat_equals_union_of_factors() {
+        // Def 3.4: support(I + ΣB_s) = diag ∪ ∪_s support(B_s)
+        let nb = 16;
+        let mut acc = BlockMask::identity(nb);
+        let mut s = 2;
+        while s <= nb {
+            acc = acc.union(&butterfly_factor_mask(nb, s));
+            s *= 2;
+        }
+        assert_eq!(acc, flat_butterfly_mask(nb, nb));
+    }
+
+    #[test]
+    fn product_at_full_stride_is_all_to_all() {
+        // the defining property of butterfly networks: with log2(nb)
+        // factors every input block reaches every output block
+        let nb = 16;
+        let support = butterfly_product_support(nb, nb);
+        assert_eq!(support.nnz(), nb * nb);
+    }
+
+    #[test]
+    fn product_at_partial_stride_is_local_groups() {
+        let nb = 16;
+        let support = butterfly_product_support(nb, 4);
+        // reachability limited to 4-block groups
+        for i in 0..nb {
+            for j in 0..nb {
+                assert_eq!(support.get(i, j), i / 4 == j / 4, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn budget_fill_is_tight() {
+        let nb = 64;
+        for budget in [64usize, 128, 192, 256, 448] {
+            let k = max_stride_for_budget(nb, budget);
+            assert!(flat_butterfly_nnz_blocks(nb, k) <= budget);
+            if k < nb {
+                assert!(flat_butterfly_nnz_blocks(nb, k * 2) > budget);
+            }
+        }
+    }
+
+    #[test]
+    fn stretch_covers_all_rows_cols() {
+        let m = stretched_flat_butterfly(16, 4, 4);
+        assert!(m.rows_nonempty());
+        assert!(m.transpose().rows_nonempty());
+    }
+}

@@ -1,0 +1,248 @@
+//! Block masks and `(b1, b2)`-block covers (paper Definition A.1).
+//!
+//! A `BlockMask` is a boolean matrix at *block* granularity.  The same type
+//! also represents element-level masks (block size 1), which is how the
+//! cost-model experiments express non-aligned patterns and compute their
+//! covers — the "expected vs actual density" mechanics behind Table 7.
+
+/// Dense-stored boolean mask over an `rows x cols` grid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockMask {
+    pub rows: usize,
+    pub cols: usize,
+    bits: Vec<bool>,
+}
+
+impl BlockMask {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        BlockMask { rows, cols, bits: vec![false; rows * cols] }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        BlockMask { rows, cols, bits: vec![true; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, true);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.bits[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        self.bits[r * self.cols + c] = v;
+    }
+
+    /// Number of true entries.
+    pub fn nnz(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction of true entries.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Element-wise OR.
+    pub fn union(&self, other: &BlockMask) -> BlockMask {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let bits = self
+            .bits
+            .iter()
+            .zip(&other.bits)
+            .map(|(a, b)| *a || *b)
+            .collect();
+        BlockMask { rows: self.rows, cols: self.cols, bits }
+    }
+
+    /// Element-wise AND.
+    pub fn intersect(&self, other: &BlockMask) -> BlockMask {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let bits = self
+            .bits
+            .iter()
+            .zip(&other.bits)
+            .map(|(a, b)| *a && *b)
+            .collect();
+        BlockMask { rows: self.rows, cols: self.cols, bits }
+    }
+
+    /// True if `self <= other` entrywise (support containment).
+    pub fn contained_in(&self, other: &BlockMask) -> bool {
+        self.bits.iter().zip(&other.bits).all(|(a, b)| !*a || *b)
+    }
+
+    pub fn transpose(&self) -> BlockMask {
+        let mut t = BlockMask::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.get(r, c) {
+                    t.set(c, r, true);
+                }
+            }
+        }
+        t
+    }
+
+    /// Keep only entries on/below the diagonal (causal attention).
+    pub fn lower_triangular(&self) -> BlockMask {
+        let mut m = self.clone();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if c > r {
+                    m.set(r, c, false);
+                }
+            }
+        }
+        m
+    }
+
+    /// Expand each entry into a `b x b` all-true/all-false element block.
+    pub fn expand(&self, b: usize) -> BlockMask {
+        let mut m = BlockMask::zeros(self.rows * b, self.cols * b);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.get(r, c) {
+                    for dr in 0..b {
+                        for dc in 0..b {
+                            m.set(r * b + dr, c * b + dc, true);
+                        }
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// The `(b1, b2)`-block cover (Definition A.1): the smallest
+    /// block-aligned mask containing `self`.  Result is at *block*
+    /// granularity: shape (ceil(rows/b1), ceil(cols/b2)).
+    pub fn block_cover(&self, b1: usize, b2: usize) -> BlockMask {
+        let br = self.rows.div_ceil(b1);
+        let bc = self.cols.div_ceil(b2);
+        let mut cover = BlockMask::zeros(br, bc);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.get(r, c) {
+                    cover.set(r / b1, c / b2, true);
+                }
+            }
+        }
+        cover
+    }
+
+    /// Is this element mask `(b1, b2)`-block-aligned (Definition A.1)?
+    pub fn is_block_aligned(&self, b1: usize, b2: usize) -> bool {
+        if self.rows % b1 != 0 || self.cols % b2 != 0 {
+            return false;
+        }
+        let cover = self.block_cover(b1, b2);
+        cover.expand_rect(b1, b2) == *self
+    }
+
+    /// Expand with rectangular blocks (b1 rows x b2 cols).
+    pub fn expand_rect(&self, b1: usize, b2: usize) -> BlockMask {
+        let mut m = BlockMask::zeros(self.rows * b1, self.cols * b2);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if self.get(r, c) {
+                    for dr in 0..b1 {
+                        for dc in 0..b2 {
+                            m.set(r * b1 + dr, c * b2 + dc, true);
+                        }
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// "Actual density" under hardware block size b (Table 7): the fraction
+    /// of *elements* touched once every touched b x b block is fully
+    /// accessed.
+    pub fn actual_density(&self, b: usize) -> f64 {
+        let cover = self.block_cover(b, b);
+        let touched = cover.nnz() * b * b;
+        touched as f64 / ((self.rows.div_ceil(b) * b) * (self.cols.div_ceil(b) * b)) as f64
+    }
+
+    /// Column indices of true entries in row `r`.
+    pub fn row_cols(&self, r: usize) -> Vec<usize> {
+        (0..self.cols).filter(|&c| self.get(r, c)).collect()
+    }
+
+    /// Every row has at least one true entry.
+    pub fn rows_nonempty(&self) -> bool {
+        (0..self.rows).all(|r| (0..self.cols).any(|c| self.get(r, c)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cover_of_single_element_is_one_block() {
+        let mut m = BlockMask::zeros(8, 8);
+        m.set(5, 2, true);
+        let cover = m.block_cover(4, 4);
+        assert_eq!(cover.nnz(), 1);
+        assert!(cover.get(1, 0));
+    }
+
+    #[test]
+    fn aligned_mask_roundtrips_through_cover() {
+        let blocks = BlockMask::identity(4);
+        let elems = blocks.expand(4);
+        assert!(elems.is_block_aligned(4, 4));
+        assert_eq!(elems.block_cover(4, 4), blocks);
+    }
+
+    #[test]
+    fn random_scatter_cover_inflates_density() {
+        // Table 7 mechanism: scattered nonzeros touch nearly all blocks.
+        let mut m = BlockMask::zeros(64, 64);
+        // one nonzero per 8x8 block
+        for i in 0..8 {
+            for j in 0..8 {
+                m.set(i * 8 + 3, j * 8 + 5, true);
+            }
+        }
+        assert!((m.density() - 64.0 / 4096.0).abs() < 1e-12);
+        assert!((m.actual_density(8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn containment_and_union() {
+        let a = BlockMask::identity(4);
+        let b = BlockMask::ones(4, 4);
+        assert!(a.contained_in(&b));
+        assert!(!b.contained_in(&a));
+        assert_eq!(a.union(&b), b);
+        assert_eq!(a.intersect(&b), a);
+    }
+
+    #[test]
+    fn lower_triangular_removes_upper() {
+        let m = BlockMask::ones(4, 4).lower_triangular();
+        assert_eq!(m.nnz(), 10);
+        assert!(!m.get(0, 3));
+        assert!(m.get(3, 0));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut m = BlockMask::zeros(3, 5);
+        m.set(0, 4, true);
+        m.set(2, 1, true);
+        assert_eq!(m.transpose().transpose(), m);
+        assert!(m.transpose().get(4, 0));
+    }
+}

@@ -1,0 +1,66 @@
+//! Sparsity patterns: block masks, butterfly structure, block covers.
+//!
+//! Everything the paper defines over sparsity structure lives here:
+//! - [`mask`]      `BlockMask` + `(b1,b2)`-block covers (Definition A.1)
+//! - [`butterfly`] block butterfly factors/products (Defs 3.1–3.3) and the
+//!                 flat butterfly pattern (Def 3.4)
+//! - [`baselines`] the comparison patterns: random, local, global,
+//!                 BigBird, Sparse-Transformer, Longformer, Reformer-like
+
+pub mod baselines;
+pub mod butterfly;
+pub mod mask;
+
+pub use butterfly::{butterfly_factor_mask, flat_butterfly_mask};
+pub use mask::BlockMask;
+
+/// Named pattern kinds used by the planner / NTK search / benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PatternKind {
+    Dense,
+    Pixelfly,
+    FlatButterfly,
+    ButterflyProduct,
+    LowRank,
+    Random,
+    Local,
+    Global,
+    BigBird,
+    SparseTransformer,
+    Longformer,
+}
+
+impl PatternKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PatternKind::Dense => "dense",
+            PatternKind::Pixelfly => "pixelfly",
+            PatternKind::FlatButterfly => "flat_butterfly",
+            PatternKind::ButterflyProduct => "butterfly_product",
+            PatternKind::LowRank => "lowrank",
+            PatternKind::Random => "random",
+            PatternKind::Local => "local",
+            PatternKind::Global => "global",
+            PatternKind::BigBird => "bigbird",
+            PatternKind::SparseTransformer => "sparse_transformer",
+            PatternKind::Longformer => "longformer",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "dense" => PatternKind::Dense,
+            "pixelfly" => PatternKind::Pixelfly,
+            "flat_butterfly" => PatternKind::FlatButterfly,
+            "butterfly_product" | "butterfly" => PatternKind::ButterflyProduct,
+            "lowrank" => PatternKind::LowRank,
+            "random" => PatternKind::Random,
+            "local" => PatternKind::Local,
+            "global" => PatternKind::Global,
+            "bigbird" => PatternKind::BigBird,
+            "sparse_transformer" => PatternKind::SparseTransformer,
+            "longformer" => PatternKind::Longformer,
+            _ => return None,
+        })
+    }
+}

@@ -1,0 +1,188 @@
+//! RigL baseline (Evci et al. 2020) — the dynamic-sparsity comparator of
+//! Fig 6.
+//!
+//! RigL keeps a fixed per-layer nonzero budget but periodically *drops*
+//! the smallest-magnitude weights and *grows* connections where the dense
+//! gradient is largest.  We implement it at block granularity over the
+//! Rust BSR substrate (so it can also run block-aligned — the paper's
+//! point is that the original unstructured RigL gets no wall-clock
+//! speedup; our block cover accounting shows exactly why).
+//!
+//! The trainer uses this to drive the Fig-6 comparison: the RigL variant's
+//! mask changes during training (costing a mask-rebuild each update),
+//! while Pixelfly's is static.
+
+use crate::patterns::BlockMask;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RigLConfig {
+    /// update every N steps
+    pub period: usize,
+    /// fraction of connections dropped+regrown per update (cosine-decayed)
+    pub alpha: f64,
+    /// total steps (for the cosine decay)
+    pub total_steps: usize,
+}
+
+impl Default for RigLConfig {
+    fn default() -> Self {
+        RigLConfig { period: 100, alpha: 0.3, total_steps: 10_000 }
+    }
+}
+
+/// State of one RigL-managed layer: current block mask + fixed budget.
+#[derive(Clone, Debug)]
+pub struct RigLLayer {
+    pub mask: BlockMask,
+    pub budget_blocks: usize,
+}
+
+impl RigLLayer {
+    pub fn new(mask: BlockMask) -> Self {
+        let budget_blocks = mask.nnz();
+        RigLLayer { mask, budget_blocks }
+    }
+
+    /// Per-block L1 magnitude from element weights laid out dense.
+    fn block_scores(values: &[f32], rows: usize, cols: usize, b: usize) -> Vec<Vec<f64>> {
+        let (nbr, nbc) = (rows / b, cols / b);
+        let mut s = vec![vec![0.0f64; nbc]; nbr];
+        for r in 0..rows {
+            for c in 0..cols {
+                s[r / b][c / b] += values[r * cols + c].abs() as f64;
+            }
+        }
+        s
+    }
+
+    /// One RigL update: drop the k lowest-|w| active blocks, grow the k
+    /// highest-|g| inactive blocks. Returns (dropped, grown).
+    pub fn update(&mut self, weights: &[f32], grads: &[f32], rows: usize,
+                  cols: usize, step: usize, cfg: &RigLConfig) -> (usize, usize) {
+        let b = rows / self.mask.rows;
+        let wsc = Self::block_scores(weights, rows, cols, b);
+        let gsc = Self::block_scores(grads, rows, cols, b);
+        // cosine-decayed update fraction (Evci et al. eq. 1)
+        let t = (step as f64 / cfg.total_steps as f64).min(1.0);
+        let frac = cfg.alpha / 2.0 * (1.0 + (std::f64::consts::PI * t).cos());
+        let k = ((self.budget_blocks as f64) * frac) as usize;
+        if k == 0 {
+            return (0, 0);
+        }
+        // candidates
+        let mut active: Vec<(f64, usize, usize)> = Vec::new();
+        let mut inactive: Vec<(f64, usize, usize)> = Vec::new();
+        for i in 0..self.mask.rows {
+            for j in 0..self.mask.cols {
+                if self.mask.get(i, j) {
+                    active.push((wsc[i][j], i, j));
+                } else {
+                    inactive.push((gsc[i][j], i, j));
+                }
+            }
+        }
+        active.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        inactive.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let k = k.min(active.len()).min(inactive.len());
+        for (_, i, j) in active.iter().take(k) {
+            self.mask.set(*i, *j, false);
+        }
+        for (_, i, j) in inactive.iter().take(k) {
+            self.mask.set(*i, *j, true);
+        }
+        (k, k)
+    }
+}
+
+/// Simulated RigL training-run accounting: per-step compute equals the
+/// masked GEMM cost, plus a full *dense* gradient pass on update steps
+/// (RigL needs dense grads to grow) — this is the mechanism behind Fig 6's
+/// "no wall-clock speedup".
+pub fn rigl_step_cost(mask: &BlockMask, m: usize, dev: &crate::costmodel::Device,
+                      is_update_step: bool) -> f64 {
+    // `mask` is at RigL's block granularity; expand to elements so the
+    // cost model sees the true matrix dimensions.
+    let emask = mask.expand(dev.block);
+    let sparse = crate::costmodel::masked_gemm_cost(&emask, m, dev).total;
+    if is_update_step {
+        sparse + crate::costmodel::dense_gemm_cost(emask.rows, emask.cols, m, dev).total
+    } else {
+        sparse
+    }
+}
+
+/// Initialise a RigL layer with a random mask at the given density (ERK
+/// initialisation simplified to uniform-random at block level).
+pub fn init_random(nbr: usize, nbc: usize, density: f64, seed: u64) -> RigLLayer {
+    let mut rng = Rng::new(seed);
+    RigLLayer::new(crate::patterns::baselines::random_mask(nbr, nbc, density, &mut rng))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Device;
+
+    fn fake_weights(rows: usize, cols: usize, hot: (usize, usize), b: usize) -> Vec<f32> {
+        let mut w = vec![0.01f32; rows * cols];
+        for r in 0..b {
+            for c in 0..b {
+                w[(hot.0 * b + r) * cols + hot.1 * b + c] = 5.0;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn budget_is_conserved() {
+        let mut layer = init_random(8, 8, 0.3, 1);
+        let before = layer.mask.nnz();
+        let w = vec![0.1f32; 64 * 64];
+        let g = vec![0.2f32; 64 * 64];
+        layer.update(&w, &g, 64, 64, 0, &RigLConfig::default());
+        assert_eq!(layer.mask.nnz(), before);
+    }
+
+    #[test]
+    fn grows_where_gradient_is_large() {
+        let mut layer = RigLLayer::new(BlockMask::identity(8));
+        let b = 8;
+        let w = vec![0.01f32; 64 * 64];
+        // gradient hot spot at inactive block (2, 5)
+        let g = fake_weights(64, 64, (2, 5), b);
+        layer.update(&w, &g, 64, 64, 0, &RigLConfig { alpha: 0.3, ..Default::default() });
+        assert!(layer.mask.get(2, 5), "should grow the high-grad block");
+    }
+
+    #[test]
+    fn drops_smallest_magnitude() {
+        // all blocks tiny except (0,0): RigL must keep (0,0)
+        let mut layer = RigLLayer::new(BlockMask::identity(8));
+        let w = fake_weights(64, 64, (0, 0), 8);
+        let g = vec![0.0f32; 64 * 64];
+        layer.update(&w, &g, 64, 64, 0, &RigLConfig { alpha: 0.9, ..Default::default() });
+        assert!(layer.mask.get(0, 0));
+    }
+
+    #[test]
+    fn update_fraction_decays() {
+        let cfg = RigLConfig { period: 1, alpha: 0.4, total_steps: 100 };
+        let mut early = init_random(16, 16, 0.2, 3);
+        let mut late = early.clone();
+        let w = vec![0.1f32; 128 * 128];
+        let g = vec![0.2f32; 128 * 128];
+        let (d_early, _) = early.update(&w, &g, 128, 128, 0, &cfg);
+        let (d_late, _) = late.update(&w, &g, 128, 128, 95, &cfg);
+        assert!(d_early > d_late, "early {d_early} late {d_late}");
+    }
+
+    #[test]
+    fn rigl_update_steps_cost_dense() {
+        let dev = Device::default();
+        let layer = init_random(16, 16, 0.1, 4);
+        let normal = rigl_step_cost(&layer.mask, 64, &dev, false);
+        let update = rigl_step_cost(&layer.mask, 64, &dev, true);
+        assert!(update > 2.0 * normal, "dense grad pass dominates update steps");
+    }
+}

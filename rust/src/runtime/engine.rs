@@ -1,0 +1,192 @@
+//! The PJRT engine: compiled-executable cache + typed host<->device I/O.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+/// A compiled artifact plus its boundary signature.
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    pub exe: PjRtLoadedExecutable,
+    pub compile_ms: f64,
+}
+
+impl LoadedArtifact {
+    /// Execute with host literals; returns the flattened output literals
+    /// (the XLA root tuple is decomposed).
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        self.check_args(args.len())?;
+        let out = self.exe.execute::<Literal>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device buffers (hot path). Output is the root tuple
+    /// buffer; call `decompose` on the synced literal to read it, or feed
+    /// it back via [`Engine::retuple`]-style splitting.
+    pub fn run_buffers(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        self.check_args(args.len())?;
+        Ok(self.exe.execute_b(args)?)
+    }
+
+    fn check_args(&self, n: usize) -> Result<()> {
+        if n != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: got {} args, expected {} ({:?} ...)",
+                self.spec.key,
+                n,
+                self.spec.inputs.len(),
+                self.spec.inputs.first().map(|t| &t.name)
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Engine: one PJRT client + manifest + executable cache.
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, LoadedArtifact>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest key.
+    pub fn load(&mut self, key: &str) -> Result<&LoadedArtifact> {
+        if !self.cache.contains_key(key) {
+            let spec = self.manifest.artifact(key)?.clone();
+            let path = self.manifest.hlo_path(&spec);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.cache.insert(key.to_string(), LoadedArtifact { spec, exe, compile_ms });
+        }
+        Ok(&self.cache[key])
+    }
+
+    /// Read the initial param leaves serialized by aot.py for `preset`.
+    /// Shapes/dtypes come from the first `n_leaves` inputs of `art_key`.
+    pub fn load_initial_state(&self, preset: &str, art_key: &str) -> Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(art_key)?;
+        let dir = self.manifest.state_dir(preset)?;
+        let n = spec.n_param_leaves;
+        let mut out = Vec::with_capacity(n);
+        for (i, t) in spec.inputs.iter().take(n).enumerate() {
+            let path = dir.join(format!("param_{i:04}.bin"));
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {path:?}"))?;
+            if bytes.len() != t.bytes() {
+                bail!("{path:?}: {} bytes, expected {} for {:?}", bytes.len(), t.bytes(), t);
+            }
+            out.push(literal_from_bytes(t, &bytes)?);
+        }
+        Ok(out)
+    }
+
+    /// Copy a host literal to the device.
+    pub fn to_device(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+/// Build a Literal from raw little-endian bytes per the tensor spec.
+pub fn literal_from_bytes(t: &TensorSpec, bytes: &[u8]) -> Result<Literal> {
+    Ok(Literal::create_from_shape_and_untyped_data(
+        t.dtype.element_type(),
+        &t.dims,
+        bytes,
+    )?)
+}
+
+/// Build a zero literal for a tensor spec.
+pub fn zero_literal(t: &TensorSpec) -> Result<Literal> {
+    literal_from_bytes(t, &vec![0u8; t.bytes()])
+}
+
+/// f32 tensor literal from a slice (dims must multiply to len).
+pub fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
+}
+
+/// i32 tensor literal from a slice.
+pub fn i32_literal(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)?)
+}
+
+/// Scalar literals.
+pub fn f32_scalar(v: f32) -> Result<Literal> {
+    f32_literal(&[], &[v])
+}
+
+pub fn i32_scalar(v: i32) -> Result<Literal> {
+    i32_literal(&[], &[v])
+}
+
+/// Pull an f32 scalar/tensor out of an output literal.
+pub fn literal_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn literal_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+#[allow(unused)]
+fn dtype_check(t: &TensorSpec, d: Dtype) -> bool {
+    t.dtype == d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0];
+        let lit = f32_literal(&[2, 2], &data).unwrap();
+        assert_eq!(literal_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![5i32, -7, 0];
+        let lit = i32_literal(&[3], &data).unwrap();
+        assert_eq!(literal_i32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn zero_literal_is_zero() {
+        let t = TensorSpec { name: "z".into(), dtype: Dtype::F32, dims: vec![4] };
+        let lit = zero_literal(&t).unwrap();
+        assert_eq!(literal_f32_vec(&lit).unwrap(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(literal_f32_vec(&f32_scalar(2.5).unwrap()).unwrap(), vec![2.5]);
+        assert_eq!(literal_i32_vec(&i32_scalar(-3).unwrap()).unwrap(), vec![-3]);
+    }
+}

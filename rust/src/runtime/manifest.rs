@@ -1,0 +1,260 @@
+//! Artifact manifest parsing (`artifacts/manifest.rtxt`).
+//!
+//! The AOT driver emits a line-based, tab-separated manifest alongside the
+//! human-readable JSON (DESIGN.md: no JSON dependency offline).  Format:
+//!
+//! ```text
+//! artifact <key> <file> <entry> <preset> <batch> <n_param_leaves> <param_count> <flops_fwd>
+//! in  <name> <dtype> <dims...>
+//! out <dtype> <dims...>
+//! cfg <field> <value>
+//! state <preset> <dir> <n_leaves>
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Element dtype of a tensor crossing the PJRT boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "s32" => Dtype::S32,
+            _ => bail!("unknown dtype {s:?}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::S32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// Shape + dtype (+ name for inputs) of one boundary tensor.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size()
+    }
+}
+
+/// One lowered entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub file: String,
+    pub entry: String,
+    pub preset: String,
+    pub batch: usize,
+    pub n_param_leaves: usize,
+    pub param_count: usize,
+    pub flops_fwd: u64,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub config: HashMap<String, String>,
+}
+
+impl ArtifactSpec {
+    /// Config field accessor with parse.
+    pub fn cfg<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.config.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// Initial-state record (params serialized at AOT time).
+#[derive(Clone, Debug)]
+pub struct StateSpec {
+    pub preset: String,
+    pub dir: String,
+    pub n_leaves: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub states: HashMap<String, StateSpec>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.rtxt");
+        let txt = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&txt, dir)
+    }
+
+    pub fn parse(txt: &str, root: &Path) -> Result<Self> {
+        let mut m = Manifest { root: root.to_path_buf(), ..Default::default() };
+        let mut current: Option<String> = None;
+        for (lineno, line) in txt.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            let ctx = || format!("manifest line {}: {line:?}", lineno + 1);
+            match f[0] {
+                "artifact" => {
+                    if f.len() != 9 {
+                        bail!("{}: expected 9 fields", ctx());
+                    }
+                    let spec = ArtifactSpec {
+                        key: f[1].to_string(),
+                        file: f[2].to_string(),
+                        entry: f[3].to_string(),
+                        preset: f[4].to_string(),
+                        batch: f[5].parse().with_context(ctx)?,
+                        n_param_leaves: f[6].parse().with_context(ctx)?,
+                        param_count: f[7].parse().with_context(ctx)?,
+                        flops_fwd: f[8].parse().with_context(ctx)?,
+                        inputs: vec![],
+                        outputs: vec![],
+                        config: HashMap::new(),
+                    };
+                    current = Some(spec.key.clone());
+                    m.artifacts.insert(spec.key.clone(), spec);
+                }
+                "in" | "out" => {
+                    let key = current.as_ref().with_context(ctx)?;
+                    let spec = m.artifacts.get_mut(key).unwrap();
+                    let (name, dt_idx, dim_idx) = if f[0] == "in" {
+                        (f[1].to_string(), 2, 3)
+                    } else {
+                        (String::new(), 1, 2)
+                    };
+                    let dims = if f.len() > dim_idx && !f[dim_idx].is_empty() {
+                        f[dim_idx]
+                            .split_whitespace()
+                            .map(|d| d.parse().map_err(|_| anyhow::anyhow!(ctx())))
+                            .collect::<Result<Vec<usize>>>()?
+                    } else {
+                        vec![]
+                    };
+                    let t = TensorSpec { name, dtype: Dtype::parse(f[dt_idx])?, dims };
+                    if f[0] == "in" {
+                        spec.inputs.push(t);
+                    } else {
+                        spec.outputs.push(t);
+                    }
+                }
+                "cfg" => {
+                    let key = current.as_ref().with_context(ctx)?;
+                    let spec = m.artifacts.get_mut(key).unwrap();
+                    spec.config.insert(f[1].to_string(), f.get(2).unwrap_or(&"").to_string());
+                }
+                "state" => {
+                    m.states.insert(
+                        f[1].to_string(),
+                        StateSpec {
+                            preset: f[1].to_string(),
+                            dir: f[2].to_string(),
+                            n_leaves: f[3].parse().with_context(ctx)?,
+                        },
+                    );
+                }
+                other => bail!("{}: unknown record {other:?}", ctx()),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(key).with_context(|| {
+            let mut keys: Vec<_> = self.artifacts.keys().cloned().collect();
+            keys.sort();
+            format!("artifact {key:?} not in manifest; available: {keys:?}")
+        })
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.root.join(&spec.file)
+    }
+
+    pub fn state_dir(&self, preset: &str) -> Result<PathBuf> {
+        let s = self
+            .states
+            .get(preset)
+            .with_context(|| format!("no state for preset {preset:?}"))?;
+        Ok(self.root.join(&s.dir))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "artifact\tm.train_step\tm.train_step.hlo.txt\ttrain_step\tm\t8\t2\t100\t999\n\
+in\tp/w\tf32\t4 4\n\
+in\tp/b\tf32\t4\n\
+in\tstep\ts32\t\n\
+out\tf32\t\n\
+out\tf32\t4 4\n\
+cfg\tfamily\tmixer\n\
+cfg\tblock\t8\n\
+state\tm\tstate/m\t2\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        let a = m.artifact("m.train_step").unwrap();
+        assert_eq!(a.batch, 8);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].dims, vec![4, 4]);
+        assert_eq!(a.inputs[2].dims, Vec::<usize>::new());
+        assert_eq!(a.inputs[2].dtype, Dtype::S32);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.cfg::<usize>("block"), Some(8));
+        assert_eq!(a.config["family"], "mixer");
+        assert_eq!(m.states["m"].n_leaves, 2);
+    }
+
+    #[test]
+    fn scalar_tensor_bytes() {
+        let t = TensorSpec { name: "s".into(), dtype: Dtype::F32, dims: vec![] };
+        assert_eq!(t.elements(), 1);
+        assert_eq!(t.bytes(), 4);
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.rtxt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in m.artifacts.values() {
+                assert!(!a.inputs.is_empty(), "{} has no inputs", a.key);
+                assert!(!a.outputs.is_empty(), "{} has no outputs", a.key);
+            }
+        }
+    }
+}

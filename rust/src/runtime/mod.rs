@@ -1,0 +1,26 @@
+//! PJRT runtime: load AOT artifacts, manage device state, execute.
+//!
+//! The pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  One compiled executable per artifact,
+//! cached for the process lifetime.
+//!
+//! Hot-path discipline: the trainer keeps all state (params, optimizer
+//! moments, step counter) as device-resident `PjRtBuffer`s and runs
+//! `execute_b`, so the per-step host traffic is just the input batch and
+//! the scalar loss (see `coordinator::trainer`).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedArtifact};
+pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: $PIXELFLY_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("PIXELFLY_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

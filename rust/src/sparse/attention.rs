@@ -1,0 +1,230 @@
+//! Block-sparse attention on the Rust substrate (measured counterpart of
+//! the Pallas kernel; used by the Fig 7 / Fig 9 microbenches and the
+//! Reformer-style baseline, whose per-batch mask makes AOT impossible —
+//! exactly the paper's point about dynamic sparsity).
+//!
+//! Layout: q, k, v are [seq, d] row-major (single head; callers loop
+//! heads).  The kernel walks only the visible key blocks of each query
+//! block row with a streaming (online-softmax) accumulator — the same
+//! algorithm as `kernels/attention.py`, so the two can be cross-checked.
+
+use crate::patterns::BlockMask;
+use crate::sparse::dense::Matrix;
+
+/// Streaming block-sparse attention for one head.
+/// `mask` is [seq/b, seq/b]; rows must be non-empty.
+pub fn block_sparse_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                              mask: &BlockMask, causal: bool) -> Matrix {
+    let (seq, d) = (q.rows, q.cols);
+    let nb = mask.rows;
+    let b = seq / nb;
+    assert_eq!(nb * b, seq);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Matrix::zeros(seq, d);
+    let mut scores = vec![0.0f32; b];
+
+    for qb in 0..nb {
+        // per-query-row streaming state
+        let mut m = vec![f32::NEG_INFINITY; b];
+        let mut l = vec![0.0f32; b];
+        let mut acc = vec![0.0f32; b * d];
+        for kb in mask.row_cols(qb) {
+            if causal && kb > qb {
+                continue;
+            }
+            for qi in 0..b {
+                let qrow = q.row(qb * b + qi);
+                let qpos = qb * b + qi;
+                // scores for this key block
+                let mut row_max = f32::NEG_INFINITY;
+                for ki in 0..b {
+                    let kpos = kb * b + ki;
+                    let s = if causal && kpos > qpos {
+                        f32::NEG_INFINITY
+                    } else {
+                        let krow = k.row(kpos);
+                        let mut dot = 0.0f32;
+                        for t in 0..d {
+                            dot += qrow[t] * krow[t];
+                        }
+                        dot * scale
+                    };
+                    scores[ki] = s;
+                    row_max = row_max.max(s);
+                }
+                if row_max == f32::NEG_INFINITY {
+                    continue;
+                }
+                let m_new = m[qi].max(row_max);
+                let alpha = if m[qi].is_finite() { (m[qi] - m_new).exp() } else { 0.0 };
+                l[qi] *= alpha;
+                let arow = &mut acc[qi * d..(qi + 1) * d];
+                if alpha != 1.0 {
+                    for t in 0..d {
+                        arow[t] *= alpha;
+                    }
+                }
+                for ki in 0..b {
+                    if scores[ki] == f32::NEG_INFINITY {
+                        continue;
+                    }
+                    let p = (scores[ki] - m_new).exp();
+                    l[qi] += p;
+                    let vrow = v.row(kb * b + ki);
+                    for t in 0..d {
+                        arow[t] += p * vrow[t];
+                    }
+                }
+                m[qi] = m_new;
+            }
+        }
+        for qi in 0..b {
+            let orow = out.row_mut(qb * b + qi);
+            let denom = l[qi].max(1e-30);
+            let arow = &acc[qi * d..(qi + 1) * d];
+            for t in 0..d {
+                orow[t] = arow[t] / denom;
+            }
+        }
+    }
+    out
+}
+
+/// Dense attention reference (oracle).
+pub fn dense_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    let (seq, d) = (q.rows, q.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Matrix::zeros(seq, d);
+    let mut row = vec![0.0f32; seq];
+    for i in 0..seq {
+        let qi = q.row(i);
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..seq {
+            row[j] = if causal && j > i {
+                f32::NEG_INFINITY
+            } else {
+                let kj = k.row(j);
+                let mut dot = 0.0;
+                for t in 0..d {
+                    dot += qi[t] * kj[t];
+                }
+                dot * scale
+            };
+            mx = mx.max(row[j]);
+        }
+        let mut z = 0.0f32;
+        for j in 0..seq {
+            if row[j].is_finite() {
+                row[j] = (row[j] - mx).exp();
+                z += row[j];
+            } else {
+                row[j] = 0.0;
+            }
+        }
+        let orow = out.row_mut(i);
+        for j in 0..seq {
+            if row[j] == 0.0 {
+                continue;
+            }
+            let p = row[j] / z;
+            let vj = v.row(j);
+            for t in 0..d {
+                orow[t] += p * vj[t];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::baselines;
+    use crate::util::Rng;
+
+    fn qkv(seq: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (Matrix::randn(seq, d, 1.0, &mut rng),
+         Matrix::randn(seq, d, 1.0, &mut rng),
+         Matrix::randn(seq, d, 1.0, &mut rng))
+    }
+
+    #[test]
+    fn full_mask_matches_dense() {
+        let (q, k, v) = qkv(32, 8, 1);
+        let mask = crate::patterns::BlockMask::ones(4, 4);
+        let a = block_sparse_attention(&q, &k, &v, &mask, false);
+        let b = dense_attention(&q, &k, &v, false);
+        assert!(a.max_abs_diff(&b) < 1e-4, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn causal_full_mask_matches_dense_causal() {
+        let (q, k, v) = qkv(32, 8, 2);
+        let mask = crate::patterns::BlockMask::ones(4, 4);
+        let a = block_sparse_attention(&q, &k, &v, &mask, true);
+        let b = dense_attention(&q, &k, &v, true);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn sparse_mask_matches_masked_dense() {
+        let (q, k, v) = qkv(32, 8, 3);
+        let mask = baselines::pixelfly_attention_mask(4, 2, 1);
+        let a = block_sparse_attention(&q, &k, &v, &mask, false);
+        // masked-dense oracle: -inf outside visible blocks
+        let seq = 32;
+        let b = 8;
+        let mut kk = k.clone();
+        // build by zeroing via huge negative scores: emulate by computing
+        // dense attention over a k whose invisible rows can't be seen from
+        // each q row — do it directly instead:
+        let scale = 1.0 / (8f32).sqrt();
+        let mut want = Matrix::zeros(seq, 8);
+        for i in 0..seq {
+            let qb = i / b;
+            let mut row = vec![f32::NEG_INFINITY; seq];
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..seq {
+                if mask.get(qb, j / b) {
+                    let mut dot = 0.0;
+                    for t in 0..8 {
+                        dot += q.get(i, t) * kk.get(j, t);
+                    }
+                    row[j] = dot * scale;
+                    mx = mx.max(row[j]);
+                }
+            }
+            let mut z = 0.0;
+            for j in 0..seq {
+                if row[j].is_finite() {
+                    row[j] = (row[j] - mx).exp();
+                    z += row[j];
+                } else {
+                    row[j] = 0.0;
+                }
+            }
+            for j in 0..seq {
+                if row[j] > 0.0 {
+                    for t in 0..8 {
+                        let w = want.get(i, t) + row[j] / z * v.get(j, t);
+                        want.set(i, t, w);
+                    }
+                }
+            }
+        }
+        kk.data.clear(); // silence unused-mut lint paths
+        assert!(a.max_abs_diff(&want) < 1e-4, "{}", a.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn output_rows_are_convex_combinations() {
+        let (q, k, _) = qkv(16, 4, 4);
+        let v = Matrix::from_vec(16, 4, vec![1.0; 64]);
+        let mask = baselines::pixelfly_attention_mask(4, 2, 0);
+        let o = block_sparse_attention(&q, &k, &v, &mask, false);
+        for x in &o.data {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+}

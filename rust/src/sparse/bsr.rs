@@ -1,0 +1,232 @@
+//! BSR (block-sparse-row) matrix + GEMM on the Rust substrate.
+//!
+//! Storage mirrors the Pallas kernel's convention (block_sparse.py):
+//! nonzero b x b blocks stored contiguously per block row, with a column
+//! index per block.  `matmul` computes y = x * W touching only stored
+//! blocks — the Table 7 measurement target: latency tracks the number of
+//! blocks touched (the block cover), not the nominal density.
+
+use crate::patterns::BlockMask;
+use crate::sparse::dense::Matrix;
+use crate::util::Rng;
+
+/// Block-sparse-row matrix of logical shape [nbr*b, nbc*b].
+#[derive(Clone, Debug)]
+pub struct BsrMatrix {
+    pub nbr: usize,
+    pub nbc: usize,
+    pub block: usize,
+    /// row_ptr[i]..row_ptr[i+1] indexes cols/blocks of block row i
+    pub row_ptr: Vec<usize>,
+    /// block column index per stored block
+    pub cols: Vec<usize>,
+    /// stored blocks, each b*b row-major, concatenated
+    pub blocks: Vec<f32>,
+}
+
+impl BsrMatrix {
+    pub fn rows(&self) -> usize {
+        self.nbr * self.block
+    }
+
+    pub fn cols_elems(&self) -> usize {
+        self.nbc * self.block
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz_blocks() as f64 / (self.nbr * self.nbc) as f64
+    }
+
+    /// Build from a block mask with values drawn N(0, scale^2).
+    pub fn random(mask: &BlockMask, block: usize, scale: f32, rng: &mut Rng) -> Self {
+        let (nbr, nbc) = (mask.rows, mask.cols);
+        let mut row_ptr = Vec::with_capacity(nbr + 1);
+        let mut cols = Vec::new();
+        row_ptr.push(0);
+        for i in 0..nbr {
+            for j in 0..nbc {
+                if mask.get(i, j) {
+                    cols.push(j);
+                }
+            }
+            row_ptr.push(cols.len());
+        }
+        let blocks = rng.normal_vec(cols.len() * block * block, scale);
+        BsrMatrix { nbr, nbc, block, row_ptr, cols, blocks }
+    }
+
+    /// Build from a dense matrix, keeping only blocks in the mask.
+    pub fn from_dense(w: &Matrix, mask: &BlockMask, block: usize) -> Self {
+        assert_eq!(w.rows, mask.rows * block);
+        assert_eq!(w.cols, mask.cols * block);
+        let mut out = Self::random(mask, block, 0.0, &mut Rng::new(0));
+        for i in 0..out.nbr {
+            for s in out.row_ptr[i]..out.row_ptr[i + 1] {
+                let j = out.cols[s];
+                let base = s * block * block;
+                for r in 0..block {
+                    for c in 0..block {
+                        out.blocks[base + r * block + c] =
+                            w.get(i * block + r, j * block + c);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialise dense (tests / inspection).
+    pub fn to_dense(&self) -> Matrix {
+        let b = self.block;
+        let mut w = Matrix::zeros(self.rows(), self.cols_elems());
+        for i in 0..self.nbr {
+            for s in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.cols[s];
+                let base = s * b * b;
+                for r in 0..b {
+                    for c in 0..b {
+                        w.set(i * b + r, j * b + c, self.blocks[base + r * b + c]);
+                    }
+                }
+            }
+        }
+        w
+    }
+
+    /// y = x * W (x: [m, nbr*b]) touching only stored blocks.
+    ///
+    /// Hot path: for each block row i and stored block (i -> j), do an
+    /// [m, b] x [b, b] panel multiply into y columns j*b..j*b+b.  The
+    /// per-block inner kernel is written for vectorisation (contiguous
+    /// rows of x, W-block, and y).
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, self.cols_elems());
+        self.matmul_into(x, &mut y);
+        y
+    }
+
+    pub fn matmul_into(&self, x: &Matrix, y: &mut Matrix) {
+        let b = self.block;
+        assert_eq!(x.cols, self.rows());
+        assert_eq!((y.rows, y.cols), (x.rows, self.cols_elems()));
+        y.data.fill(0.0);
+        let m = x.rows;
+        // Loop order (perf pass, EXPERIMENTS.md §Perf L3 iter-1): stored
+        // block OUTER, batch row inner — each b x b weight block stays hot
+        // in L1 across the whole batch panel instead of being re-streamed
+        // per row; the innermost c-loop over a contiguous y segment
+        // vectorises.
+        for i in 0..self.nbr {
+            let (s0, s1) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            for s in s0..s1 {
+                let j = self.cols[s];
+                let blk = &self.blocks[s * b * b..(s + 1) * b * b];
+                for r in 0..m {
+                    let xrow = &x.row(r)[i * b..(i + 1) * b];
+                    let ycols = &mut y.row_mut(r)[j * b..(j + 1) * b];
+                    // no zero-skip branch: activations are dense, and the
+                    // branch costs more than the multiply (perf iter-2);
+                    // zipped chunk iteration elides bounds checks (iter-3)
+                    for (&xv, wrow) in xrow.iter().zip(blk.chunks_exact(b)) {
+                        for (yc, &wc) in ycols.iter_mut().zip(wrow) {
+                            *yc += xv * wc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Transpose (pattern and blocks).
+    pub fn transpose(&self) -> BsrMatrix {
+        let b = self.block;
+        // count per new block row (old col)
+        let mut counts = vec![0usize; self.nbc];
+        for &j in &self.cols {
+            counts[j] += 1;
+        }
+        let mut row_ptr = vec![0usize; self.nbc + 1];
+        for j in 0..self.nbc {
+            row_ptr[j + 1] = row_ptr[j] + counts[j];
+        }
+        let mut cols = vec![0usize; self.cols.len()];
+        let mut blocks = vec![0.0f32; self.blocks.len()];
+        let mut cursor = row_ptr.clone();
+        for i in 0..self.nbr {
+            for s in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.cols[s];
+                let d = cursor[j];
+                cursor[j] += 1;
+                cols[d] = i;
+                let src = &self.blocks[s * b * b..(s + 1) * b * b];
+                let dst = &mut blocks[d * b * b..(d + 1) * b * b];
+                for r in 0..b {
+                    for c in 0..b {
+                        dst[c * b + r] = src[r * b + c];
+                    }
+                }
+            }
+        }
+        BsrMatrix { nbr: self.nbc, nbc: self.nbr, block: b, row_ptr, cols, blocks }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::{baselines, flat_butterfly_mask};
+    use crate::sparse::dense::matmul_blocked;
+
+    #[test]
+    fn bsr_matmul_matches_dense() {
+        let mut rng = Rng::new(21);
+        let mask = flat_butterfly_mask(8, 4);
+        let w = BsrMatrix::random(&mask, 4, 0.5, &mut rng);
+        let x = Matrix::randn(10, 32, 1.0, &mut rng);
+        let y = w.matmul(&x);
+        let yref = matmul_blocked(&x, &w.to_dense());
+        assert!(y.max_abs_diff(&yref) < 1e-4);
+    }
+
+    #[test]
+    fn rectangular_bsr() {
+        let mut rng = Rng::new(22);
+        let mask = baselines::random_mask(4, 8, 0.3, &mut rng);
+        let w = BsrMatrix::random(&mask, 4, 0.5, &mut rng);
+        let x = Matrix::randn(6, 16, 1.0, &mut rng);
+        let y = w.matmul(&x);
+        assert_eq!((y.rows, y.cols), (6, 32));
+        let yref = matmul_blocked(&x, &w.to_dense());
+        assert!(y.max_abs_diff(&yref) < 1e-4);
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let mut rng = Rng::new(23);
+        let mask = flat_butterfly_mask(4, 2);
+        let a = BsrMatrix::random(&mask, 4, 1.0, &mut rng);
+        let b = BsrMatrix::from_dense(&a.to_dense(), &mask, 4);
+        assert!(a.to_dense().max_abs_diff(&b.to_dense()) < 1e-7);
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let mut rng = Rng::new(24);
+        let mask = baselines::bigbird_mask(8, 1, 1, 2, &mut rng);
+        let w = BsrMatrix::random(&mask, 4, 1.0, &mut rng);
+        let t = w.transpose();
+        assert!(t.to_dense().max_abs_diff(&w.to_dense().transpose()) < 1e-7);
+    }
+
+    #[test]
+    fn density_counts_blocks() {
+        let mask = flat_butterfly_mask(16, 4);
+        let w = BsrMatrix::random(&mask, 8, 1.0, &mut Rng::new(0));
+        assert_eq!(w.nnz_blocks(), mask.nnz());
+        assert!((w.density() - mask.density()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,126 @@
+//! Sequential butterfly product vs flat butterfly multiply (Fig 11 / App J)
+//! on the Rust substrate.
+//!
+//! The product form applies log2(k) residual factor multiplies
+//! y <- y + λ (y · B_s), each a full pass over the activations; the flat
+//! form is ONE BSR multiply with the union pattern.  Same O(n log k)
+//! FLOPs — the measured gap is pure scheduling/memory-traffic, which is
+//! the paper's point.
+
+use crate::patterns::butterfly::{butterfly_factor_mask, flat_butterfly_mask};
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::dense::Matrix;
+use crate::util::Rng;
+
+/// The residual-product operator (I + λB_2)…(I + λB_k) stored as factors.
+pub struct ButterflyProduct {
+    pub factors: Vec<BsrMatrix>, // lowest stride first
+    pub lam: f32,
+    pub block: usize,
+}
+
+impl ButterflyProduct {
+    pub fn random(n: usize, block: usize, max_stride: usize, lam: f32,
+                  rng: &mut Rng) -> Self {
+        assert_eq!(n % block, 0);
+        let nb = n / block;
+        let mut factors = Vec::new();
+        let mut s = 2;
+        while s <= max_stride {
+            let mask = butterfly_factor_mask(nb, s);
+            factors.push(BsrMatrix::random(&mask, block, 1.0 / (2.0 * block as f32).sqrt(), rng));
+            s *= 2;
+        }
+        ButterflyProduct { factors, lam, block }
+    }
+
+    /// y = x (I + λB_k) … (I + λB_2): apply highest stride first
+    /// (row-vector convention matching kernels/ref.py).
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        let mut y = x.clone();
+        let mut scratch = Matrix::zeros(x.rows, x.cols);
+        for f in self.factors.iter().rev() {
+            f.matmul_into(&y, &mut scratch);
+            for (yv, sv) in y.data.iter_mut().zip(&scratch.data) {
+                *yv += self.lam * sv;
+            }
+        }
+        y
+    }
+
+    /// The flat first-order approximation: I + λ Σ B_s as one BSR matrix.
+    pub fn flatten(&self) -> BsrMatrix {
+        let nb = self.factors[0].nbr;
+        let b = self.block;
+        let max_stride = 1usize << self.factors.len();
+        let mask = flat_butterfly_mask(nb, max_stride);
+        let mut dense = Matrix::zeros(nb * b, nb * b);
+        for i in 0..nb * b {
+            dense.set(i, i, 1.0);
+        }
+        for f in &self.factors {
+            let fd = f.to_dense();
+            for (d, s) in dense.data.iter_mut().zip(&fd.data) {
+                *d += self.lam * s;
+            }
+        }
+        BsrMatrix::from_dense(&dense, &mask, b)
+    }
+}
+
+/// Frobenius distance between the product operator and its flat
+/// approximation applied to x (Theorem 4.3 empirically, on the substrate).
+pub fn flat_approximation_error(bp: &ButterflyProduct, x: &Matrix) -> f64 {
+    let exact = bp.matmul(x);
+    let flat = bp.flatten().matmul(x);
+    let mut err = 0.0f64;
+    let mut base = 0.0f64;
+    for (a, b) in exact.data.iter().zip(&flat.data) {
+        err += ((a - b) as f64).powi(2);
+        base += (*a as f64).powi(2);
+    }
+    (err / base.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_support_is_flat_mask() {
+        let mut rng = Rng::new(31);
+        let bp = ButterflyProduct::random(64, 8, 8, 0.1, &mut rng);
+        let flat = bp.flatten();
+        let mask = flat_butterfly_mask(8, 8);
+        assert_eq!(flat.nnz_blocks(), mask.nnz());
+    }
+
+    #[test]
+    fn small_lambda_flat_approximates_product() {
+        let mut rng = Rng::new(32);
+        let bp = ButterflyProduct::random(64, 8, 8, 0.01, &mut rng);
+        let x = Matrix::randn(16, 64, 1.0, &mut rng);
+        let rel = flat_approximation_error(&bp, &x);
+        assert!(rel < 0.01, "relative error {rel}");
+    }
+
+    #[test]
+    fn error_quadratic_in_lambda() {
+        let mut rng = Rng::new(33);
+        let mut bp = ButterflyProduct::random(64, 8, 8, 0.01, &mut rng);
+        let x = Matrix::randn(16, 64, 1.0, &mut Rng::new(34));
+        let e1 = flat_approximation_error(&bp, &x);
+        bp.lam = 0.02;
+        let e2 = flat_approximation_error(&bp, &x);
+        let ratio = e2 / e1.max(1e-30);
+        assert!(ratio > 2.5 && ratio < 6.0, "expected ~4x, got {ratio}");
+    }
+
+    #[test]
+    fn product_with_zero_lambda_is_identity() {
+        let mut rng = Rng::new(35);
+        let bp = ButterflyProduct::random(32, 4, 4, 0.0, &mut rng);
+        let x = Matrix::randn(8, 32, 1.0, &mut rng);
+        assert!(bp.matmul(&x).max_abs_diff(&x) < 1e-7);
+    }
+}

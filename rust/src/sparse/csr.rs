@@ -1,0 +1,133 @@
+//! Element-level CSR matrix + GEMM: the *unstructured* sparsity baseline
+//! (original RigL / magnitude pruning).  Table 7's "random 1x1" measured
+//! for real: same nominal FLOPs as a block pattern at equal density, but
+//! the scattered access pattern defeats vectorisation and cache lines —
+//! the CPU analogue of the paper's GPU memory-coalescing argument.
+
+use crate::patterns::BlockMask;
+use crate::sparse::dense::Matrix;
+use crate::util::Rng;
+
+/// CSR matrix (f32).
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Random CSR at the given element density.
+    pub fn random(rows: usize, cols: usize, density: f64, scale: f32,
+                  rng: &mut Rng) -> Self {
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0);
+        for _ in 0..rows {
+            for c in 0..cols {
+                if rng.bool(density) {
+                    col_idx.push(c);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let values = rng.normal_vec(col_idx.len(), scale);
+        CsrMatrix { rows, cols, row_ptr, col_idx, values }
+    }
+
+    /// From an element mask.
+    pub fn from_mask(mask: &BlockMask, scale: f32, rng: &mut Rng) -> Self {
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::new();
+        for r in 0..mask.rows {
+            for c in mask.row_cols(r) {
+                col_idx.push(c);
+            }
+            row_ptr.push(col_idx.len());
+        }
+        let values = rng.normal_vec(col_idx.len(), scale);
+        CsrMatrix { rows: mask.rows, cols: mask.cols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for s in self.row_ptr[r]..self.row_ptr[r + 1] {
+                m.set(r, self.col_idx[s], self.values[s]);
+            }
+        }
+        m
+    }
+
+    /// y = x * W with W in CSR: scattered writes into y per nonzero — the
+    /// unstructured access pattern under test.
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, self.cols);
+        self.matmul_into(x, &mut y);
+        y
+    }
+
+    pub fn matmul_into(&self, x: &Matrix, y: &mut Matrix) {
+        assert_eq!(x.cols, self.rows);
+        y.data.fill(0.0);
+        for m in 0..x.rows {
+            let xrow = x.row(m);
+            let yrow = y.row_mut(m);
+            for r in 0..self.rows {
+                let xv = xrow[r];
+                if xv == 0.0 {
+                    continue;
+                }
+                for s in self.row_ptr[r]..self.row_ptr[r + 1] {
+                    yrow[self.col_idx[s]] += xv * self.values[s];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense::matmul_blocked;
+
+    #[test]
+    fn csr_matmul_matches_dense() {
+        let mut rng = Rng::new(41);
+        let w = CsrMatrix::random(24, 16, 0.3, 1.0, &mut rng);
+        let x = Matrix::randn(7, 24, 1.0, &mut rng);
+        let y = w.matmul(&x);
+        let yref = matmul_blocked(&x, &w.to_dense());
+        assert!(y.max_abs_diff(&yref) < 1e-4);
+    }
+
+    #[test]
+    fn from_mask_respects_support() {
+        let mut rng = Rng::new(42);
+        let mut mask = BlockMask::zeros(6, 6);
+        mask.set(0, 3, true);
+        mask.set(5, 5, true);
+        let w = CsrMatrix::from_mask(&mask, 1.0, &mut rng);
+        assert_eq!(w.nnz(), 2);
+        let d = w.to_dense();
+        assert_eq!(d.get(1, 1), 0.0);
+        assert!(d.get(0, 3) != 0.0);
+    }
+
+    #[test]
+    fn density_accounting() {
+        let mut rng = Rng::new(43);
+        let w = CsrMatrix::random(64, 64, 0.1, 1.0, &mut rng);
+        assert!((w.density() - 0.1).abs() < 0.05);
+    }
+}

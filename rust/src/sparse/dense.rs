@@ -1,0 +1,156 @@
+//! Row-major f32 matrix + cache-blocked dense GEMM (substrate baseline).
+
+use crate::util::Rng;
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, scale: f32, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols, scale) }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.set(c, r, self.get(r, c));
+            }
+        }
+        t
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Naive triple-loop GEMM (oracle for tests; do not benchmark this).
+pub fn matmul_naive(x: &Matrix, w: &Matrix) -> Matrix {
+    assert_eq!(x.cols, w.rows);
+    let mut y = Matrix::zeros(x.rows, w.cols);
+    for i in 0..x.rows {
+        for k in 0..x.cols {
+            let xv = x.get(i, k);
+            if xv != 0.0 {
+                let wrow = w.row(k);
+                let yrow = y.row_mut(i);
+                for j in 0..w.cols {
+                    yrow[j] += xv * wrow[j];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Cache-blocked GEMM: i-k-j loop order with k-panel blocking; the dense
+/// baseline for the Table 7 / Fig 11 latency comparisons.
+pub fn matmul_blocked(x: &Matrix, w: &Matrix) -> Matrix {
+    let mut y = Matrix::zeros(x.rows, w.cols);
+    matmul_blocked_into(x, w, &mut y);
+    y
+}
+
+pub fn matmul_blocked_into(x: &Matrix, w: &Matrix, y: &mut Matrix) {
+    assert_eq!(x.cols, w.rows);
+    assert_eq!((y.rows, y.cols), (x.rows, w.cols));
+    y.data.fill(0.0);
+    const KB: usize = 64;
+    let (m, k, n) = (x.rows, x.cols, w.cols);
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for i in 0..m {
+            let xrow = x.row(i);
+            let yrow = y.row_mut(i);
+            for kk in k0..k1 {
+                let xv = xrow[kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = w.row(kk);
+                // inner j loop vectorises
+                for j in 0..n {
+                    yrow[j] += xv * wrow[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(11);
+        let x = Matrix::randn(17, 33, 1.0, &mut rng);
+        let w = Matrix::randn(33, 29, 1.0, &mut rng);
+        let a = matmul_naive(&x, &w);
+        let b = matmul_blocked(&x, &w);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Rng::new(12);
+        let x = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut eye = Matrix::zeros(8, 8);
+        for i in 0..8 {
+            eye.set(i, i, 1.0);
+        }
+        let y = matmul_blocked(&x, &eye);
+        assert!(x.max_abs_diff(&y) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(13);
+        let x = Matrix::randn(5, 9, 1.0, &mut rng);
+        assert_eq!(x.transpose().transpose(), x);
+    }
+}

@@ -1,0 +1,22 @@
+//! Pure-Rust block-sparse compute substrate.
+//!
+//! The paper's Table 7 / Fig 11 microbenchmarks ran on Triton/V100; here
+//! the measured testbed is this substrate — a cache-blocked dense GEMM and
+//! a BSR (block-sparse-row) GEMM whose inner loops are written so that the
+//! latency is governed by the number of *blocks* touched, mirroring the
+//! Appendix-A cost model on a CPU (cache lines play the role of
+//! coalesced GPU blocks).
+//!
+//! - [`dense`]        row-major matrix + cache-blocked GEMM reference
+//! - [`bsr`]          BSR matrix + GEMM, pattern-agnostic
+//! - [`butterfly_mm`] sequential butterfly product vs flat multiply
+
+pub mod attention;
+pub mod bsr;
+pub mod butterfly_mm;
+pub mod csr;
+pub mod dense;
+
+pub use bsr::BsrMatrix;
+pub use csr::CsrMatrix;
+pub use dense::Matrix;

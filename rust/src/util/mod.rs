@@ -1,0 +1,12 @@
+//! std-only utilities: deterministic PRNG, timing/stats, CLI parsing, and
+//! property-test helpers (the offline substitutes for `rand`, `clap` and
+//! `proptest` — see DESIGN.md §Substitutions).
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use cli::Args;
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,54 @@
+//! Tiny property-testing harness (offline substitute for proptest).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded RNGs
+//! and panics with the failing seed on the first violated property, so
+//! failures are reproducible by seed.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases. `f` returns Err(msg) on violation.
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000_u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Assert helper producing Result for use inside `check` closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("trivial", 10, |rng| {
+            let x = rng.below(10);
+            if x < 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failures() {
+        check("always-fails", 3, |_rng| Err("boom".into()));
+    }
+}

@@ -1,0 +1,153 @@
+//! Timing summaries for the in-crate bench harness and trainer metrics.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of duration samples (nanoseconds).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Summary {
+    pub fn from_durations(samples: &[Duration]) -> Self {
+        let mut ns: Vec<f64> = samples.iter().map(|d| d.as_nanos() as f64).collect();
+        Self::from_ns(&mut ns)
+    }
+
+    pub fn from_ns(ns: &mut [f64]) -> Self {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| ns[(((n - 1) as f64) * p) as usize];
+        Summary {
+            n,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: ns[0],
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            max_ns: ns[n - 1],
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.p50_ns / 1e6
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms min={:.3}ms",
+            self.n,
+            self.mean_ns / 1e6,
+            self.p50_ns / 1e6,
+            self.p95_ns / 1e6,
+            self.min_ns / 1e6
+        )
+    }
+}
+
+/// Time a closure `iters` times after `warmup` runs, returning a Summary.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    Summary::from_durations(&samples)
+}
+
+/// Simple stopwatch accumulating named segments (trainer profiling).
+#[derive(Default)]
+pub struct Stopwatch {
+    segments: Vec<(String, Duration)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.segments.iter_mut().find(|(n, _)| n == name) {
+            e.1 += d;
+        } else {
+            self.segments.push((name.to_string(), d));
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let total: Duration = self.segments.iter().map(|(_, d)| *d).sum();
+        let mut s = String::new();
+        for (name, d) in &self.segments {
+            let pct = if total.as_nanos() > 0 {
+                100.0 * d.as_nanos() as f64 / total.as_nanos() as f64
+            } else {
+                0.0
+            };
+            s.push_str(&format!("{name}: {:.1}ms ({pct:.0}%)  ", d.as_secs_f64() * 1e3));
+        }
+        s
+    }
+
+    pub fn total(&self) -> Duration {
+        self.segments.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let mut ns: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from_ns(&mut ns);
+        assert!(s.min_ns <= s.p50_ns && s.p50_ns <= s.p95_ns && s.p95_ns <= s.max_ns);
+        assert_eq!(s.n, 100);
+        assert!((s.mean_ns - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_it_counts() {
+        let mut c = 0;
+        let s = time_it(2, 5, || c += 1);
+        assert_eq!(c, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.add("a", Duration::from_millis(2));
+        sw.add("a", Duration::from_millis(3));
+        sw.add("b", Duration::from_millis(5));
+        assert_eq!(sw.total(), Duration::from_millis(10));
+        assert!(sw.report().contains("a:"));
+    }
+}

@@ -1,0 +1,235 @@
+//! Property-based tests over the coordinator's core invariants
+//! (hand-rolled harness in `pixelfly::util::prop`; seeds reproduce
+//! failures deterministically).
+
+use pixelfly::coordinator::{budget, planner};
+use pixelfly::costmodel::{masked_gemm_cost, projected_speedup, Device};
+use pixelfly::models::{transformer_schema, LayerType};
+use pixelfly::patterns::butterfly::{
+    butterfly_factor_mask, flat_butterfly_mask, flat_butterfly_nnz_blocks,
+    max_stride_for_budget,
+};
+use pixelfly::patterns::{baselines, BlockMask};
+use pixelfly::prop_assert;
+use pixelfly::sparse::{dense::matmul_blocked, BsrMatrix, Matrix};
+use pixelfly::util::prop::check;
+use pixelfly::util::Rng;
+
+fn rand_pow2(rng: &mut Rng, lo_log: u32, hi_log: u32) -> usize {
+    1usize << rng.range(lo_log as usize, hi_log as usize + 1)
+}
+
+#[test]
+fn prop_block_cover_contains_and_is_minimal() {
+    check("block-cover-contains", 40, |rng| {
+        let n = rand_pow2(rng, 3, 6);
+        let b = rand_pow2(rng, 1, 3);
+        let mask = baselines::random_element_mask(n, rng.f64() * 0.2, rng);
+        let cover = mask.block_cover(b, b).expand(b);
+        prop_assert!(mask.contained_in(&cover), "cover must contain the mask");
+        // minimality: every cover block contains at least one mask nonzero
+        let cov_blocks = mask.block_cover(b, b);
+        for i in 0..cov_blocks.rows {
+            for j in 0..cov_blocks.cols {
+                if cov_blocks.get(i, j) {
+                    let mut any = false;
+                    for r in 0..b {
+                        for c in 0..b {
+                            if mask.get(i * b + r, j * b + c) {
+                                any = true;
+                            }
+                        }
+                    }
+                    prop_assert!(any, "cover block ({i},{j}) is spurious");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_actual_density_at_least_expected() {
+    check("actual>=expected", 40, |rng| {
+        let n = rand_pow2(rng, 4, 7);
+        let mask = baselines::random_element_mask(n, rng.f64() * 0.3, rng);
+        for b in [2usize, 4, 8, 32] {
+            if n % b == 0 {
+                prop_assert!(
+                    mask.actual_density(b) + 1e-12 >= mask.density(),
+                    "b={b}: actual {} < expected {}",
+                    mask.actual_density(b),
+                    mask.density()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flat_butterfly_structure() {
+    check("flat-butterfly", 30, |rng| {
+        let nb = rand_pow2(rng, 2, 6);
+        let ms = 1usize << rng.range(0, (nb.trailing_zeros() as usize) + 1);
+        let m = flat_butterfly_mask(nb, ms);
+        // symmetric, diagonal present, nnz formula, rows balanced
+        prop_assert!(m == m.transpose(), "must be symmetric");
+        for i in 0..nb {
+            prop_assert!(m.get(i, i), "diagonal missing at {i}");
+            let want = if ms <= 1 { 1 } else { ms.trailing_zeros() as usize + 1 };
+            prop_assert!(m.row_cols(i).len() == want, "row {i} has wrong nnz");
+        }
+        prop_assert!(m.nnz() == flat_butterfly_nnz_blocks(nb, ms), "nnz formula");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_max_stride_budget_tight_and_monotone() {
+    check("stride-budget", 40, |rng| {
+        let nb = rand_pow2(rng, 2, 7);
+        let budget = rng.range(nb, 8 * nb * nb.max(2));
+        let k = max_stride_for_budget(nb, budget);
+        prop_assert!(flat_butterfly_nnz_blocks(nb, k) <= budget || k == 1,
+                     "over budget");
+        let k2 = max_stride_for_budget(nb, budget * 2);
+        prop_assert!(k2 >= k, "monotone in budget");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bsr_matmul_matches_dense() {
+    check("bsr-vs-dense", 25, |rng| {
+        let nbr = rng.range(1, 6);
+        let nbc = rng.range(1, 6);
+        let b = rand_pow2(rng, 1, 3);
+        let m = rng.range(1, 12);
+        let mask = baselines::random_mask(nbr, nbc, rng.f64() * 0.6, rng);
+        let w = BsrMatrix::random(&mask, b, 0.7, rng);
+        let x = Matrix::randn(m, nbr * b, 1.0, rng);
+        let y = w.matmul(&x);
+        let yref = matmul_blocked(&x, &w.to_dense());
+        prop_assert!(y.max_abs_diff(&yref) < 1e-3, "mismatch {}", y.max_abs_diff(&yref));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bsr_transpose_involution() {
+    check("bsr-transpose", 25, |rng| {
+        let mask = baselines::random_mask(rng.range(1, 8), rng.range(1, 8),
+                                          rng.f64() * 0.5, rng);
+        let w = BsrMatrix::random(&mask, 4, 1.0, rng);
+        let tt = w.transpose().transpose();
+        prop_assert!(w.to_dense().max_abs_diff(&tt.to_dense()) < 1e-6, "t(t(w)) != w");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_butterfly_factor_is_permutation_like() {
+    check("factor-structure", 20, |rng| {
+        let nb = rand_pow2(rng, 2, 6);
+        let log = nb.trailing_zeros() as usize;
+        let s = 1usize << rng.range(1, log + 1);
+        let m = butterfly_factor_mask(nb, s);
+        // exactly 2 per row and column; symmetric XOR structure
+        for i in 0..nb {
+            prop_assert!(m.row_cols(i).len() == 2, "row {i}");
+            prop_assert!(m.get(i, i ^ (s / 2)), "partner missing");
+        }
+        prop_assert!(m == m.transpose(), "factor mask symmetric");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_budget_allocation_within_budget_and_positive() {
+    check("budget-alloc", 25, |rng| {
+        let d = 64 * rng.range(1, 9);
+        let layers = rng.range(1, 13);
+        let seq = 32 * rng.range(1, 17);
+        let schema = transformer_schema("t", d, layers, seq, 4, 8);
+        let budget = 0.02 + rng.f64() * 0.9;
+        let dev = Device::default();
+        for alloc in [budget::rule_of_thumb(&schema, budget, &dev),
+                      budget::cost_optimal(&schema, budget, &dev)] {
+            let spent: f64 = schema
+                .entries
+                .iter()
+                .filter(|e| e.layer.sparsifiable())
+                .map(|e| alloc.density_of(e.layer) * e.params() as f64)
+                .sum();
+            let total: f64 = schema
+                .entries
+                .iter()
+                .filter(|e| e.layer.sparsifiable())
+                .map(|e| e.params() as f64)
+                .sum();
+            prop_assert!(spent <= budget * total * 1.01,
+                         "spent {spent} > budget {}", budget * total);
+            for (_, dd) in &alloc.densities {
+                prop_assert!(*dd >= 0.0 && *dd <= 1.0, "density {dd}");
+            }
+            prop_assert!(budget::projected_speedup(&schema, &alloc, &dev) >= 0.99,
+                         "sparsifying must not slow the projection");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layer_plan_density_near_target() {
+    check("plan-density", 30, |rng| {
+        let block = 32;
+        let rows = block * (1usize << rng.range(2, 6));
+        let cols = block * (1usize << rng.range(2, 6));
+        let density = 0.05 + rng.f64() * 0.5;
+        let p = planner::plan_layer(LayerType::Mlp, rows, cols, block, density, 0.25);
+        // the flat butterfly cannot go below its diagonal: the achievable
+        // floor is 1/nb (plus rounding) for the smaller dimension
+        let nb_min = (rows.min(cols) / block) as f64;
+        let floor = 1.2 / nb_min + 0.01;
+        prop_assert!(p.achieved_density <= (density * 1.5 + 0.05).max(floor),
+                     "blew the budget: target {density} achieved {} (floor {floor})",
+                     p.achieved_density);
+        prop_assert!(p.achieved_density > 0.0, "empty plan");
+        prop_assert!(p.rank % block == 0, "rank not block-aligned");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_speedup_decreases_with_density() {
+    check("speedup-monotone", 20, |rng| {
+        let n = 32 * (1usize << rng.range(2, 5));
+        let dev = Device::with_block(32);
+        let nb = n / 32;
+        let mut last = f64::INFINITY;
+        let mut ms = 1;
+        while ms <= nb {
+            let mask = flat_butterfly_mask(nb, ms).expand(32);
+            let sp = projected_speedup(&mask, 128, &dev);
+            prop_assert!(sp <= last * 1.01, "speedup should fall as stride grows");
+            last = sp;
+            ms *= 2;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_masked_cost_bounded_by_dense() {
+    check("cost-bounds", 25, |rng| {
+        let n = 32 * rng.range(1, 9);
+        let dev = Device::default();
+        let mask = baselines::random_element_mask(n, rng.f64(), rng);
+        let c = masked_gemm_cost(&mask, 64, &dev);
+        let d = masked_gemm_cost(&BlockMask::ones(n, n), 64, &dev);
+        prop_assert!(c.total <= d.total * 1.0001, "masked cost exceeds dense");
+        prop_assert!(c.n_flop <= d.n_flop, "masked flops exceed dense");
+        Ok(())
+    });
+}

@@ -1,0 +1,193 @@
+//! Integration tests over the PJRT runtime + trainer (require
+//! `make artifacts`; each test skips cleanly when artifacts are absent so
+//! `cargo test` stays green on a fresh checkout).
+
+use std::path::PathBuf;
+
+use pixelfly::coordinator::{TrainConfig, Trainer};
+use pixelfly::data::lra::LraTask;
+use pixelfly::runtime::{engine, Engine};
+use pixelfly::util::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = pixelfly::runtime::artifacts_dir();
+    let dir = if dir.is_absolute() {
+        dir
+    } else {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir)
+    };
+    dir.join("manifest.rtxt").exists().then_some(dir)
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::new(&dir).unwrap();
+    for (key, a) in &engine.manifest.artifacts {
+        assert!(dir.join(&a.file).exists(), "{key}: missing {}", a.file);
+        assert!(a.inputs.len() >= a.n_param_leaves, "{key}");
+        match a.entry.as_str() {
+            // (loss, params, m, v, step)
+            "train_step" => assert_eq!(a.outputs.len(), 3 * a.n_param_leaves + 2, "{key}"),
+            "forward_eval" => assert_eq!(a.outputs.len(), 2, "{key}"),
+            "ntk_gram" => assert_eq!(a.outputs.len(), 1, "{key}"),
+            e => panic!("unknown entry {e}"),
+        }
+    }
+}
+
+#[test]
+fn train_step_executes_and_loss_is_finite() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut engine = Engine::new(&dir).unwrap();
+    let cfg = TrainConfig {
+        preset: "mixer_s_pixelfly".into(),
+        steps: 2,
+        eval_batches: 0,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(&mut engine, cfg).unwrap();
+    let mut rng = Rng::new(0);
+    let l1 = t.step_once(&mut rng).unwrap();
+    let l2 = t.step_once(&mut rng).unwrap();
+    assert!(l1.is_finite() && l2.is_finite(), "{l1} {l2}");
+    assert!(l1 > 0.0 && l1 < 20.0, "implausible initial loss {l1}");
+    assert_eq!(t.current_step(), 2);
+}
+
+#[test]
+fn training_reduces_loss_on_vision_task() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut engine = Engine::new(&dir).unwrap();
+    let cfg = TrainConfig {
+        preset: "mixer_s_pixelfly".into(),
+        steps: 30,
+        lr: 2e-3,
+        warmup: 5,
+        log_every: 5,
+        eval_batches: 2,
+        seed: 1,
+        lra_task: None,
+    };
+    let mut t = Trainer::new(&mut engine, cfg).unwrap();
+    let r = t.train().unwrap();
+    assert!(r.final_loss() < r.initial_loss(),
+            "loss should fall: {} -> {}", r.initial_loss(), r.final_loss());
+    let eval = r.final_eval.unwrap();
+    assert!(eval.accuracy > 0.0 && eval.accuracy <= 1.0);
+    assert!(r.throughput > 0.0);
+}
+
+#[test]
+fn dense_and_pixelfly_both_train_gpt2() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for preset in ["gpt2_s_dense", "gpt2_s_pixelfly"] {
+        let mut engine = Engine::new(&dir).unwrap();
+        let cfg = TrainConfig {
+            preset: preset.into(),
+            steps: 6,
+            eval_batches: 1,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(&mut engine, cfg).unwrap();
+        let r = t.train().unwrap();
+        let e = r.final_eval.unwrap();
+        // vocab 512 -> random-guess ppl ~512; after 6 steps it must at
+        // least be a valid finite perplexity below vocab-size bound * 2
+        assert!(e.perplexity().is_finite() && e.perplexity() < 1500.0,
+                "{preset}: ppl {}", e.perplexity());
+    }
+}
+
+#[test]
+fn lra_task_override_works() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut engine = Engine::new(&dir).unwrap();
+    if engine.manifest.artifacts.get("lra_pixelfly_train.train_step").is_none() {
+        eprintln!("skipping: lra artifacts not built (--full)");
+        return;
+    }
+    let cfg = TrainConfig {
+        preset: "lra_pixelfly_train".into(),
+        steps: 2,
+        eval_batches: 1,
+        lra_task: Some(LraTask::Text),
+        ..Default::default()
+    };
+    let mut t = Trainer::new(&mut engine, cfg).unwrap();
+    let loss = t.step_once(&mut Rng::new(0)).unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn ntk_artifacts_produce_symmetric_grams() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut eng = Engine::new(&dir).unwrap();
+    let key = "ntk_dense.ntk_gram";
+    if eng.manifest.artifacts.get(key).is_none() {
+        return;
+    }
+    let spec = eng.manifest.artifact(key).unwrap().clone();
+    let params = eng.load_initial_state("ntk_dense", key).unwrap();
+    let xspec = spec.inputs.last().unwrap().clone();
+    let mut rng = Rng::new(3);
+    let x = engine::f32_literal(&xspec.dims, &rng.normal_vec(xspec.elements(), 1.0)).unwrap();
+    let mut args: Vec<&xla::Literal> = params.iter().collect();
+    args.push(&x);
+    let art = eng.load(key).unwrap();
+    let outs = art.exe.execute::<&xla::Literal>(&args).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple()
+        .unwrap();
+    let g = outs[0].to_vec::<f32>().unwrap();
+    let n = spec.batch;
+    assert_eq!(g.len(), n * n);
+    for i in 0..n {
+        assert!(g[i * n + i] >= -1e-3, "diagonal should be >= 0");
+        for j in 0..n {
+            assert!((g[i * n + j] - g[j * n + i]).abs() < 1e-2 * g[i * n + i].abs().max(1.0),
+                    "gram not symmetric at ({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut engine = Engine::new(&dir).unwrap();
+    let cfg = TrainConfig {
+        preset: "mixer_s_dense".into(),
+        steps: 1,
+        eval_batches: 0,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(&mut engine, cfg).unwrap();
+    t.step_once(&mut Rng::new(0)).unwrap();
+    let tmp = std::env::temp_dir().join(format!("pixelfly_ckpt_{}", std::process::id()));
+    t.checkpoint(&tmp).unwrap();
+    let files: Vec<_> = std::fs::read_dir(&tmp).unwrap().collect();
+    assert!(!files.is_empty());
+    std::fs::remove_dir_all(&tmp).unwrap();
+}
