@@ -21,6 +21,14 @@ fn main() -> Result<()> {
     let steps = args.usize_or("steps", 60);
     let presets = ["lra_dense_train", "lra_pixelfly_train"];
 
+    if !artifacts_dir().join("manifest.rtxt").exists() {
+        println!(
+            "artifacts not built — run `make artifacts` and rebuild with \
+             `--features pjrt` to train (see DESIGN.md \"PJRT feature gate\")"
+        );
+        return Ok(());
+    }
+
     let mut table: Vec<(String, Vec<f64>, f64)> = presets
         .iter()
         .map(|p| (p.to_string(), Vec::new(), 0.0))

@@ -17,6 +17,14 @@ fn main() -> Result<()> {
     let steps = args.usize_or("steps", 300);
     let presets = args.str_or("presets", "gpt2_s_dense,gpt2_s_pixelfly,gpt2_s_bigbird");
 
+    if !artifacts_dir().join("manifest.rtxt").exists() {
+        println!(
+            "artifacts not built — run `make artifacts` and rebuild with \
+             `--features pjrt` to train (see DESIGN.md \"PJRT feature gate\")"
+        );
+        return Ok(());
+    }
+
     let mut results = Vec::new();
     for preset in presets.split(',') {
         let mut engine = Engine::new(&artifacts_dir())?;

@@ -18,6 +18,14 @@ fn main() -> Result<()> {
          vit_s_dense,vit_s_pixelfly,vit_s_bigbird",
     );
 
+    if !artifacts_dir().join("manifest.rtxt").exists() {
+        println!(
+            "artifacts not built — run `make artifacts` and rebuild with \
+             `--features pjrt` to train (see DESIGN.md \"PJRT feature gate\")"
+        );
+        return Ok(());
+    }
+
     let mut results = Vec::new();
     for preset in presets.split(',') {
         let mut engine = Engine::new(&artifacts_dir())?;

@@ -6,6 +6,7 @@
 use pixelfly::bench::BenchSuite;
 use pixelfly::costmodel::{attention_cost, Device};
 use pixelfly::patterns::{baselines, BlockMask};
+use pixelfly::runtime::engine::Literal;
 use pixelfly::runtime::{artifacts_dir, engine, Engine};
 use pixelfly::util::Rng;
 
@@ -15,7 +16,10 @@ fn main() {
     let presets = ["t2t_dense", "t2t_pixelfly", "t2t_bigbird", "t2t_sparsetrans"];
     let mut measured: Vec<(String, f64)> = Vec::new();
 
-    if dir.join("manifest.rtxt").exists() {
+    if cfg!(not(feature = "pjrt")) {
+        println!("built without the pjrt feature; cost-model section only \
+                  (rebuild with --features pjrt to measure artifacts)");
+    } else if dir.join("manifest.rtxt").exists() {
         for preset in presets {
             let key = format!("{preset}.forward_eval");
             let mut eng = Engine::new(&dir).unwrap();
@@ -32,14 +36,14 @@ fn main() {
             let x = engine::f32_literal(&xs.dims, &rng.normal_vec(xs.elements(), 1.0)).unwrap();
             let yv: Vec<i32> = (0..ys.elements()).map(|_| rng.below(10) as i32).collect();
             let y = engine::i32_literal(&ys.dims, &yv).unwrap();
-            let mut args: Vec<&xla::Literal> = params.iter().collect();
+            let mut args: Vec<&Literal> = params.iter().collect();
             args.push(&x);
             args.push(&y);
             let art = eng.load(&key).unwrap();
             // warm
-            art.exe.execute::<&xla::Literal>(&args).unwrap();
+            art.exe.execute::<&Literal>(&args).unwrap();
             suite.bench(preset, "forward_eval (pallas attention)", || {
-                std::hint::black_box(art.exe.execute::<&xla::Literal>(&args).unwrap());
+                std::hint::black_box(art.exe.execute::<&Literal>(&args).unwrap());
             });
             measured.push((preset.to_string(), suite.last_mean_ms()));
         }

@@ -6,6 +6,7 @@
 use pixelfly::bench::BenchSuite;
 use pixelfly::costmodel::{attention_cost, Device};
 use pixelfly::patterns::{baselines, BlockMask};
+use pixelfly::runtime::engine::Literal;
 use pixelfly::runtime::{artifacts_dir, engine, Engine};
 use pixelfly::util::Rng;
 
@@ -13,7 +14,10 @@ fn main() {
     let mut suite = BenchSuite::new("fig9_lra");
     let dir = artifacts_dir();
     let mut measured: Vec<(String, f64)> = Vec::new();
-    if dir.join("manifest.rtxt").exists() {
+    if cfg!(not(feature = "pjrt")) {
+        println!("built without the pjrt feature; cost-model section only \
+                  (rebuild with --features pjrt to measure artifacts)");
+    } else if dir.join("manifest.rtxt").exists() {
         for preset in ["lra_dense", "lra_pixelfly"] {
             let key = format!("{preset}.forward_eval");
             let mut eng = Engine::new(&dir).unwrap();
@@ -29,13 +33,13 @@ fn main() {
             let x = engine::f32_literal(&xs.dims, &rng.normal_vec(xs.elements(), 1.0)).unwrap();
             let yv: Vec<i32> = (0..ys.elements()).map(|_| rng.below(2) as i32).collect();
             let y = engine::i32_literal(&ys.dims, &yv).unwrap();
-            let mut args: Vec<&xla::Literal> = params.iter().collect();
+            let mut args: Vec<&Literal> = params.iter().collect();
             args.push(&x);
             args.push(&y);
             let art = eng.load(&key).unwrap();
-            art.exe.execute::<&xla::Literal>(&args).unwrap();
+            art.exe.execute::<&Literal>(&args).unwrap();
             suite.bench(preset, "seq=512 pallas attention", || {
-                std::hint::black_box(art.exe.execute::<&xla::Literal>(&args).unwrap());
+                std::hint::black_box(art.exe.execute::<&Literal>(&args).unwrap());
             });
             measured.push((preset.to_string(), suite.last_mean_ms()));
         }

@@ -7,9 +7,14 @@
 //! 1.25% while the cover ("actual density") is ~100%, so latency tracks
 //! the cover, not the nominal density — and only block-aligned patterns
 //! (pixelfly) stay fast.
+//!
+//! The trailing section measures the parallel tiled engine against the
+//! serial reference on the headline configuration (4k×4k, block 32, 10%
+//! block density) across thread counts, and the whole suite is written to
+//! `BENCH_table7_microbench.json` for cross-PR perf tracking.
 
 use pixelfly::bench::BenchSuite;
-use pixelfly::patterns::baselines::{random_grouped_mask, reformer_bucket_mask};
+use pixelfly::patterns::baselines::{random_grouped_mask, random_mask, reformer_bucket_mask};
 use pixelfly::patterns::butterfly::butterfly_factor_mask;
 use pixelfly::patterns::flat_butterfly_mask;
 use pixelfly::sparse::{BsrMatrix, Matrix};
@@ -32,7 +37,8 @@ fn main() {
         let note = format!("expected={:.2}% actual={:.2}%",
                            100.0 * mask.density(),
                            100.0 * mask.actual_density(hw));
-        suite.bench(&name, &note, || {
+        let flops = 2.0 * (batch * w.nnz_blocks()) as f64 * (hw * hw) as f64;
+        suite.bench_with_flops(&name, &note, flops, || {
             w.matmul_into(&x, &mut y);
             std::hint::black_box(&y);
         });
@@ -42,7 +48,8 @@ fn main() {
     {
         let w = Matrix::randn(n, n, 0.1, &mut Rng::new(2));
         let mut y = Matrix::zeros(batch, n);
-        suite.bench("dense", "expected=100% actual=100%", || {
+        let flops = 2.0 * (batch * n) as f64 * n as f64;
+        suite.bench_with_flops("dense", "expected=100% actual=100%", flops, || {
             pixelfly::sparse::dense::matmul_blocked_into(&x, &w, &mut y);
             std::hint::black_box(&y);
         });
@@ -78,11 +85,49 @@ fn main() {
         run(&mut suite, format!("pixelfly_stride{ms}"), &m);
     }
 
+    // --- parallel engine scaling: serial reference vs tiled engine ------
+    // The acceptance configuration: 4k×4k, hardware block 32, 10% block
+    // density. One plan per thread count, reused across iterations (the
+    // intended steady-state usage).
+    let scale_n = args.usize_or("scale-n", 4096);
+    let scale_batch = args.usize_or("scale-batch", if suite.quick { 64 } else { 256 });
+    {
+        let nb = scale_n / hw;
+        let mask = random_mask(nb, nb, 0.10, &mut Rng::new(5));
+        let w = BsrMatrix::random(&mask, hw, 0.05, &mut Rng::new(6));
+        let xs = Matrix::randn(scale_batch, scale_n, 1.0, &mut Rng::new(7));
+        let mut y = Matrix::zeros(scale_batch, w.cols_elems());
+        let flops = 2.0 * (scale_batch * w.nnz_blocks()) as f64 * (hw * hw) as f64;
+        let note = format!("{scale_n}x{scale_n} b=32 10% batch={scale_batch}");
+        let serial_name = "bsr4k_serial";
+        suite.bench_with_flops(serial_name, &note, flops, || {
+            w.matmul_serial_into(&xs, &mut y);
+            std::hint::black_box(&y);
+        });
+        for threads in [1usize, 2, 4, 8] {
+            let plan = w.plan(threads);
+            suite.bench_with_flops(&format!("bsr4k_par{threads}"), &note, flops, || {
+                w.matmul_with_plan(&plan, &xs, &mut y);
+                std::hint::black_box(&y);
+            });
+        }
+    }
+
     let out = suite.report();
+    match suite.write_json_default() {
+        Ok(p) => println!("json -> {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+
+    let ser = suite.mean_ms_of("bsr4k_serial").unwrap();
+    let par8 = suite.mean_ms_of("bsr4k_par8").unwrap();
+    println!("\nparallel engine speedup at 8 threads (4k, b=32, 10%): {:.2}x",
+             ser / par8);
+
     // Table-7 sanity: pixelfly must beat the same-expected-density random
     let pix = suite.mean_ms_of("pixelfly_stride2").unwrap();
     let rnd = suite.mean_ms_of("random_1x1").unwrap();
-    println!("\npixelfly_stride2 vs random_1x1 (same-order expected density): {:.1}x",
+    println!("pixelfly_stride2 vs random_1x1 (same-order expected density): {:.1}x",
              rnd / pix);
     assert!(pix < rnd, "block-aligned pattern must be faster: {out}");
 }

@@ -5,6 +5,11 @@
 //! warms up, samples, and prints a fixed-width table plus TSV lines that
 //! EXPERIMENTS.md ingests.  `--quick` (or PIXELFLY_BENCH_QUICK=1) shrinks
 //! iteration counts so `cargo bench` stays tractable on CI.
+//!
+//! For cross-PR perf tracking, [`BenchSuite::write_json_default`] emits a
+//! machine-readable `BENCH_<title>.json` (name, mean/p50/p95 ms, GFLOP/s
+//! when the bench registered its flop count, note) that CI uploads as an
+//! artifact.
 
 use crate::util::stats::{time_it, Summary};
 use crate::util::Args;
@@ -12,7 +17,9 @@ use crate::util::Args;
 pub struct BenchResult {
     pub name: String,
     pub summary: Summary,
-    /// optional user metric (e.g. GFLOP/s or speedup baseline id)
+    /// achieved GFLOP/s (mean), when the bench registered its flop count
+    pub gflops: Option<f64>,
+    /// optional user metric (e.g. speedup baseline id)
     pub note: String,
 }
 
@@ -20,6 +27,9 @@ pub struct BenchSuite {
     pub title: String,
     pub warmup: usize,
     pub iters: usize,
+    /// quick/smoke mode (--quick or PIXELFLY_BENCH_QUICK=1): benches may
+    /// also shrink their problem sizes, not just the iteration counts
+    pub quick: bool,
     pub results: Vec<BenchResult>,
 }
 
@@ -33,6 +43,7 @@ impl BenchSuite {
             title: title.to_string(),
             warmup: args.usize_or("warmup", warmup),
             iters: args.usize_or("iters", iters),
+            quick,
             results: Vec::new(),
         }
     }
@@ -43,8 +54,19 @@ impl BenchSuite {
         self.results.push(BenchResult {
             name: name.to_string(),
             summary,
+            gflops: None,
             note: note.to_string(),
         });
+        &self.results.last().unwrap().summary
+    }
+
+    /// Benchmark a closure whose one invocation performs `flops` floating
+    /// point operations; the report and JSON gain a GFLOP/s column.
+    pub fn bench_with_flops<F: FnMut()>(&mut self, name: &str, note: &str,
+                                        flops: f64, f: F) -> &Summary {
+        self.bench(name, note, f);
+        let last = self.results.last_mut().unwrap();
+        last.gflops = Some(flops / last.summary.mean_ns);
         &self.results.last().unwrap().summary
     }
 
@@ -65,11 +87,12 @@ impl BenchSuite {
         let mut out = String::new();
         out.push_str(&format!("\n=== {} (warmup={} iters={}) ===\n",
                               self.title, self.warmup, self.iters));
-        out.push_str(&format!("{:<44} {:>12} {:>12} {:>12}  note\n",
-                              "benchmark", "mean", "p50", "p95"));
+        out.push_str(&format!("{:<44} {:>12} {:>12} {:>12} {:>9}  note\n",
+                              "benchmark", "mean", "p50", "p95", "gflops"));
         for r in &self.results {
+            let gf = r.gflops.map(|g| format!("{g:>9.2}")).unwrap_or_else(|| " ".repeat(9));
             out.push_str(&format!(
-                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms  {}\n",
+                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms {gf}  {}\n",
                 r.name,
                 r.summary.mean_ms(),
                 r.summary.p50_ns / 1e6,
@@ -86,15 +109,56 @@ impl BenchSuite {
         print!("{out}");
         out
     }
+
+    /// Machine-readable JSON for CI perf tracking.
+    pub fn json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"title\": \"{}\",\n", escape(&self.title)));
+        out.push_str(&format!("  \"warmup\": {},\n  \"iters\": {},\n",
+                              self.warmup, self.iters));
+        out.push_str("  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            let gf = r.gflops.map(|g| format!("{g:.4}")).unwrap_or_else(|| "null".into());
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \
+                 \"p95_ms\": {:.6}, \"gflops\": {}, \"note\": \"{}\"}}{}\n",
+                escape(&r.name),
+                r.summary.mean_ms(),
+                r.summary.p50_ns / 1e6,
+                r.summary.p95_ns / 1e6,
+                gf,
+                escape(&r.note),
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`Self::json`] to `BENCH_<title>.json` in the working
+    /// directory (CI uploads it as an artifact); returns the path.
+    pub fn write_json_default(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::PathBuf::from(format!("BENCH_{}.json", self.title));
+        std::fs::write(&path, self.json())?;
+        Ok(path)
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn suite() -> BenchSuite {
+        BenchSuite { title: "t".into(), warmup: 0, iters: 3, quick: true, results: vec![] }
+    }
+
     #[test]
     fn suite_collects_results() {
-        let mut s = BenchSuite { title: "t".into(), warmup: 0, iters: 3, results: vec![] };
+        let mut s = suite();
         s.bench("noop", "", || {});
         s.bench("spin", "", || {
             let mut x = 0u64;
@@ -107,5 +171,29 @@ mod tests {
         assert!(s.mean_ms_of("noop").is_some());
         let rep = s.report();
         assert!(rep.contains("TSV\tt\tnoop"));
+    }
+
+    #[test]
+    fn json_carries_gflops() {
+        let mut s = suite();
+        s.bench("plain", "n=1", || {});
+        s.bench_with_flops("kernel", "n=2", 1e6, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let j = s.json();
+        assert!(j.contains("\"title\": \"t\""));
+        assert!(j.contains("\"name\": \"kernel\""));
+        assert!(j.contains("\"gflops\": null"), "plain bench has no flops: {j}");
+        assert!(s.results[1].gflops.unwrap() > 0.0);
+        // crude structural sanity: one object per result, balanced braces
+        assert_eq!(j.matches("\"name\"").count(), 2);
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+    }
+
+    #[test]
+    fn json_escapes_quotes() {
+        let mut s = suite();
+        s.bench("q", "say \"hi\"", || {});
+        assert!(s.json().contains("say \\\"hi\\\""));
     }
 }

@@ -30,6 +30,9 @@ pub struct TrainReport {
     pub final_eval: Option<EvalResult>,
     pub param_count: usize,
     pub compile_ms: f64,
+    /// worker count of the substrate execution engine during the run
+    /// (`sparse::exec::threads()`); 0 when unrecorded
+    pub substrate_threads: usize,
 }
 
 impl TrainReport {
@@ -62,8 +65,13 @@ impl TrainReport {
             .as_ref()
             .map(|s| format!(" step={:.1}ms", s.mean_ms()))
             .unwrap_or_default();
+        let thr = if self.substrate_threads > 0 {
+            format!(" threads={}", self.substrate_threads)
+        } else {
+            String::new()
+        };
         format!(
-            "{}: steps={} loss {:.4} -> {:.4}{st} thru={:.1}/s params={}{eval}",
+            "{}: steps={} loss {:.4} -> {:.4}{st} thru={:.1}/s params={}{thr}{eval}",
             self.preset,
             self.steps,
             self.initial_loss(),

@@ -17,10 +17,10 @@
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
-use xla::Literal;
 
 use crate::data::{corpus::MarkovCorpus, lra::LraDataset, lra::LraTask, vision::VisionDataset};
-use crate::runtime::engine::{self, Engine};
+use crate::runtime::engine::{self, Engine, Literal};
+use crate::sparse::exec;
 use crate::util::{Rng, Summary};
 
 use super::metrics::{EvalResult, TrainReport};
@@ -207,6 +207,10 @@ impl<'e> Trainer<'e> {
             steps: self.cfg.steps,
             param_count,
             compile_ms,
+            // host-side substrate work (batch synthesis, NTK checks, any
+            // fallback math) runs on the execution engine's pool; record
+            // the effective width so runs are comparable across machines
+            substrate_threads: exec::threads(),
             ..Default::default()
         };
         let mut times = Vec::new();
@@ -289,13 +293,12 @@ impl<'e> Trainer<'e> {
     pub fn checkpoint(&self, dir: &std::path::Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         for (i, lit) in self.params().iter().enumerate() {
-            let data = lit.to_vec::<f32>().or_else(|_| -> xla::Result<Vec<f32>> {
-                // int leaves don't occur in params, but be safe
-                Ok(lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect())
-            })?;
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            // int leaves don't occur in params, but be safe
+            let data: Vec<f32> = match lit.to_vec::<f32>() {
+                Ok(v) => v,
+                Err(_) => lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
             };
+            let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
             std::fs::write(dir.join(format!("param_{i:04}.bin")), bytes)?;
         }
         Ok(())

@@ -18,12 +18,18 @@ use pixelfly::data::lra::LraTask;
 use pixelfly::models;
 use pixelfly::ntk;
 use pixelfly::patterns::{baselines, flat_butterfly_mask, BlockMask};
+use pixelfly::runtime::engine::Literal;
 use pixelfly::runtime::{artifacts_dir, Engine};
-use pixelfly::sparse::{butterfly_mm::ButterflyProduct, BsrMatrix, Matrix};
+use pixelfly::sparse::{butterfly_mm::ButterflyProduct, exec, BsrMatrix, Matrix};
 use pixelfly::util::{stats::time_it, Args, Rng};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // Substrate worker count: --threads beats PIXELFLY_THREADS beats auto.
+    if let Some(n) = args.get("threads") {
+        let n: usize = n.parse().map_err(|_| anyhow::anyhow!("--threads expects an integer"))?;
+        exec::set_threads(n);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -54,7 +60,9 @@ fn print_help() {
          experiments  [--out results --scale 1.0]  (run the whole matrix)\n\
          microbench   [--n 1024 --batch 256]  (Table 7)\n\
          flatbench    [--n 1024 --batch 512]  (Fig 11)\n\
-         list"
+         list\n\n\
+         Global: --threads N (substrate workers; also PIXELFLY_THREADS).\n\
+         Commands that execute artifacts need a build with --features pjrt."
     );
 }
 
@@ -183,10 +191,10 @@ fn cmd_ntk_compare(args: &Args) -> Result<()> {
                 }
             }
             let x = pixelfly::runtime::engine::f32_literal(&xspec.dims, &data)?;
-            let mut argv: Vec<&xla::Literal> = params.iter().collect();
+            let mut argv: Vec<&Literal> = params.iter().collect();
             argv.push(&x);
             let art = engine.load(&key)?;
-            let outs = art.exe.execute::<&xla::Literal>(&argv)?[0][0]
+            let outs = art.exe.execute::<&Literal>(&argv)?[0][0]
                 .to_literal_sync()?
                 .to_tuple()?;
             let g = outs[0].to_vec::<f32>()?;
@@ -299,20 +307,27 @@ fn cmd_microbench(args: &Args) -> Result<()> {
     let n = args.usize_or("n", 1024);
     let batch = args.usize_or("batch", 256);
     let hw_block = 32;
+    let threads = exec::threads();
     let mut rng = Rng::new(0);
     let x = Matrix::randn(batch, n, 1.0, &mut rng);
-    println!("{:<12} {:>10} {:>16} {:>14} {:>12}", "pattern", "block", "expected dens",
-             "actual dens", "latency(ms)");
+    println!("substrate threads: {threads}");
+    println!("{:<12} {:>10} {:>16} {:>14} {:>12} {:>12} {:>9}",
+             "pattern", "block", "expected dens", "actual dens",
+             "serial(ms)", "engine(ms)", "speedup");
     let mut run = |name: &str, mask: &BlockMask, gblock: usize| {
         let cover = mask.block_cover(hw_block, hw_block);
         let w = BsrMatrix::random(&cover, hw_block, 0.1, &mut Rng::new(1));
         let mut y = Matrix::zeros(batch, w.cols_elems());
-        let s = time_it(1, 5, || w.matmul_into(&x, &mut y));
-        println!("{:<12} {:>7}x{:<3} {:>15.2}% {:>13.2}% {:>12.2}",
+        let ser = time_it(1, 5, || w.matmul_serial_into(&x, &mut y));
+        let plan = w.plan(threads);
+        let par = time_it(1, 5, || w.matmul_with_plan(&plan, &x, &mut y));
+        println!("{:<12} {:>7}x{:<3} {:>15.2}% {:>13.2}% {:>12.2} {:>12.2} {:>8.2}x",
                  name, gblock, gblock,
                  100.0 * mask.density(),
                  100.0 * mask.actual_density(hw_block),
-                 s.mean_ms());
+                 ser.mean_ms(),
+                 par.mean_ms(),
+                 ser.mean_ns / par.mean_ns);
     };
     for g in [1usize, 2, 4, 8, 16, 32] {
         let density = 0.0125;

@@ -5,7 +5,11 @@ use std::path::Path;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
-use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use xla::{ElementType, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Re-exported so callers name the boundary type as `engine::Literal`,
+/// keeping them source-compatible with the stub engine (stub.rs).
+pub use xla::Literal;
 
 use super::manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
 

@@ -36,6 +36,8 @@ impl Dtype {
         4
     }
 
+    /// Map to the PJRT boundary dtype (real engine only).
+    #[cfg(feature = "pjrt")]
     pub fn element_type(&self) -> xla::ElementType {
         match self {
             Dtype::F32 => xla::ElementType::F32,

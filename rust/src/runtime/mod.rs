@@ -9,8 +9,23 @@
 //! moments, step counter) as device-resident `PjRtBuffer`s and runs
 //! `execute_b`, so the per-step host traffic is just the input batch and
 //! the scalar loss (see `coordinator::trainer`).
+//!
+//! Feature gate (DESIGN.md "PJRT feature gate"): the real engine
+//! (`engine.rs`, over the `xla` crate) compiles only with `--features
+//! pjrt`.  The default build substitutes `stub.rs` — an API-compatible
+//! pure-Rust engine whose host-side literal plumbing works but whose
+//! `Engine::new` returns a clear error — so the trainer, CLI, examples
+//! and integration tests compile identically in both modes and tier-1
+//! stays green without artifacts or PJRT.
 
+#[cfg(feature = "pjrt")]
+#[path = "engine.rs"]
 pub mod engine;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
+pub mod engine;
+
 pub mod manifest;
 
 pub use engine::{Engine, LoadedArtifact};

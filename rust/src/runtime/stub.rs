@@ -1,0 +1,239 @@
+//! Stub engine: the default-build (`--no-default-features`-free) stand-in
+//! for the PJRT engine in `engine.rs`.
+//!
+//! Exposes the same module surface — [`Engine`], [`LoadedArtifact`],
+//! [`Literal`], and the literal helper functions — so the trainer, CLI,
+//! examples and integration tests compile identically with and without
+//! the `pjrt` feature.  Host-side literal construction and inspection are
+//! fully functional (the trainer's batch plumbing is real); anything that
+//! would need a compiled executable fails with a clear, actionable error.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+fn feature_error(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} requires the PJRT engine, but this binary was built without \
+         the `pjrt` feature. Rebuild with `cargo build --release --features \
+         pjrt` (vendored xla stub) or link the real xla bindings, and run \
+         `make artifacts` to produce the HLO artifacts (see DESIGN.md)."
+    )
+}
+
+/// Host tensor (or tuple): dims + dtype + little-endian element bytes.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Tensor { dtype: Dtype, dims: Vec<usize>, data: Vec<u8> },
+    Tuple(Vec<Literal>),
+}
+
+/// Host types storable in a stub literal.
+pub trait NativeType: Copy {
+    const DTYPE: Dtype;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const DTYPE: Dtype = Dtype::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+impl Literal {
+    /// Decode into a host vector (dtype-checked).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Tensor { dtype, data, .. } => {
+                if *dtype != T::DTYPE {
+                    bail!("literal dtype mismatch: stored {dtype:?}");
+                }
+                Ok(data
+                    .chunks_exact(4)
+                    .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            Literal::Tuple(_) => bail!("to_vec on a tuple literal"),
+        }
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?.first().copied().context("empty literal")
+    }
+
+    /// Decompose a tuple literal (a tensor decomposes to itself).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(elems) => Ok(elems),
+            t @ Literal::Tensor { .. } => Ok(vec![t]),
+        }
+    }
+}
+
+/// Device buffer stand-in; never constructed.
+pub struct StubBuffer {
+    _private: (),
+}
+
+impl StubBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(feature_error("buffer readback"))
+    }
+}
+
+/// Executable stand-in; never constructed (Engine::new fails first), but
+/// gives the trainer's execute chain something to typecheck against.
+pub struct StubExecutable {
+    _private: (),
+}
+
+impl StubExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<StubBuffer>>> {
+        Err(feature_error("artifact execution"))
+    }
+
+    pub fn execute_b(&self, _args: &[&StubBuffer]) -> Result<Vec<Vec<StubBuffer>>> {
+        Err(feature_error("artifact execution"))
+    }
+}
+
+/// A compiled artifact plus its boundary signature (stub: never built).
+pub struct LoadedArtifact {
+    pub spec: ArtifactSpec,
+    pub exe: StubExecutable,
+    pub compile_ms: f64,
+}
+
+impl LoadedArtifact {
+    pub fn run(&self, _args: &[Literal]) -> Result<Vec<Literal>> {
+        Err(feature_error("artifact execution"))
+    }
+}
+
+/// Engine stand-in: construction always fails with an actionable message.
+pub struct Engine {
+    pub manifest: Manifest,
+    _private: (),
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let _ = artifacts_dir;
+        Err(feature_error("the PJRT engine"))
+    }
+
+    pub fn load(&mut self, _key: &str) -> Result<&LoadedArtifact> {
+        Err(feature_error("artifact compilation"))
+    }
+
+    pub fn load_initial_state(&self, _preset: &str, _key: &str) -> Result<Vec<Literal>> {
+        Err(feature_error("initial-state loading"))
+    }
+}
+
+/// Build a Literal from raw little-endian bytes per the tensor spec.
+pub fn literal_from_bytes(t: &TensorSpec, bytes: &[u8]) -> Result<Literal> {
+    if bytes.len() != t.bytes() {
+        bail!("literal for {:?} needs {} bytes, got {}", t.name, t.bytes(), bytes.len());
+    }
+    Ok(Literal::Tensor { dtype: t.dtype, dims: t.dims.clone(), data: bytes.to_vec() })
+}
+
+/// Build a zero literal for a tensor spec.
+pub fn zero_literal(t: &TensorSpec) -> Result<Literal> {
+    literal_from_bytes(t, &vec![0u8; t.bytes()])
+}
+
+/// f32 tensor literal from a slice (dims must multiply to len).
+pub fn f32_literal(dims: &[usize], data: &[f32]) -> Result<Literal> {
+    assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    Ok(Literal::Tensor { dtype: Dtype::F32, dims: dims.to_vec(), data: bytes })
+}
+
+/// i32 tensor literal from a slice.
+pub fn i32_literal(dims: &[usize], data: &[i32]) -> Result<Literal> {
+    assert_eq!(dims.iter().product::<usize>().max(1), data.len());
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    Ok(Literal::Tensor { dtype: Dtype::S32, dims: dims.to_vec(), data: bytes })
+}
+
+/// Scalar literals.
+pub fn f32_scalar(v: f32) -> Result<Literal> {
+    f32_literal(&[], &[v])
+}
+
+pub fn i32_scalar(v: i32) -> Result<Literal> {
+    i32_literal(&[], &[v])
+}
+
+/// Pull an f32 vector out of an output literal.
+pub fn literal_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+}
+
+pub fn literal_i32_vec(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0];
+        let lit = f32_literal(&[2, 2], &data).unwrap();
+        assert_eq!(literal_f32_vec(&lit).unwrap(), data);
+        assert!((lit.get_first_element::<f32>().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![5i32, -7, 0];
+        let lit = i32_literal(&[3], &data).unwrap();
+        assert_eq!(literal_i32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn zero_literal_is_zero() {
+        let t = TensorSpec { name: "z".into(), dtype: Dtype::F32, dims: vec![4] };
+        let lit = zero_literal(&t).unwrap();
+        assert_eq!(literal_f32_vec(&lit).unwrap(), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let lit = f32_scalar(1.0).unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn engine_reports_missing_feature() {
+        let err = Engine::new(Path::new("/nowhere")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let a = i32_scalar(7).unwrap();
+        let t = Literal::Tuple(vec![a.clone(), a]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+}

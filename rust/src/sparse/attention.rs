@@ -10,9 +10,16 @@
 
 use crate::patterns::BlockMask;
 use crate::sparse::dense::Matrix;
+use crate::sparse::exec::{self, pool};
 
 /// Streaming block-sparse attention for one head.
 /// `mask` is [seq/b, seq/b]; rows must be non-empty.
+///
+/// Parallelised over query block rows through the execution engine's
+/// pool: block rows are partitioned into contiguous ranges weighted by
+/// their visible key blocks (the nnz that governs the work), and each
+/// scoped worker owns a disjoint `split_at_mut` slice of the output, so
+/// the parallelism is race-free by construction.
 pub fn block_sparse_attention(q: &Matrix, k: &Matrix, v: &Matrix,
                               mask: &BlockMask, causal: bool) -> Matrix {
     let (seq, d) = (q.rows, q.cols);
@@ -21,9 +28,46 @@ pub fn block_sparse_attention(q: &Matrix, k: &Matrix, v: &Matrix,
     assert_eq!(nb * b, seq);
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Matrix::zeros(seq, d);
-    let mut scores = vec![0.0f32; b];
 
-    for qb in 0..nb {
+    let threads = exec::threads();
+    // per query block row the work is ~2·(visible blocks)·b²·d flops for
+    // the qk dots alone; weight the split by visible blocks and share the
+    // engine-wide serial-fallback threshold
+    let weights: Vec<usize> =
+        (0..nb).map(|qb| mask.row_cols(qb).len().max(1)).collect();
+    let flops = 2.0 * (weights.iter().sum::<usize>() * b * b * d) as f64;
+    let ranges = if threads <= 1 || flops < exec::MIN_PAR_FLOPS {
+        vec![0..nb]
+    } else {
+        pool::weighted_ranges(&weights, threads)
+    };
+
+    if ranges.len() == 1 {
+        attention_rows(q, k, v, mask, causal, scale, b, 0..nb, &mut out.data);
+        return out;
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = out.data.as_mut_slice();
+        for r in ranges {
+            let chunk_len = (r.end - r.start) * b * d;
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(chunk_len);
+            rest = tail;
+            s.spawn(move || attention_rows(q, k, v, mask, causal, scale, b, r, mine));
+        }
+    });
+    out
+}
+
+/// Streaming attention over the query block rows `qbs`; `out_chunk` holds
+/// exactly those rows of the output.
+#[allow(clippy::too_many_arguments)]
+fn attention_rows(q: &Matrix, k: &Matrix, v: &Matrix, mask: &BlockMask,
+                  causal: bool, scale: f32, b: usize,
+                  qbs: std::ops::Range<usize>, out_chunk: &mut [f32]) {
+    let d = q.cols;
+    let mut scores = vec![0.0f32; b];
+    let qb0 = qbs.start;
+    for qb in qbs {
         // per-query-row streaming state
         let mut m = vec![f32::NEG_INFINITY; b];
         let mut l = vec![0.0f32; b];
@@ -79,7 +123,8 @@ pub fn block_sparse_attention(q: &Matrix, k: &Matrix, v: &Matrix,
             }
         }
         for qi in 0..b {
-            let orow = out.row_mut(qb * b + qi);
+            let r = (qb - qb0) * b + qi;
+            let orow = &mut out_chunk[r * d..(r + 1) * d];
             let denom = l[qi].max(1e-30);
             let arow = &acc[qi * d..(qi + 1) * d];
             for t in 0..d {
@@ -87,7 +132,6 @@ pub fn block_sparse_attention(q: &Matrix, k: &Matrix, v: &Matrix,
             }
         }
     }
-    out
 }
 
 /// Dense attention reference (oracle).
@@ -215,6 +259,17 @@ mod tests {
         }
         kk.data.clear(); // silence unused-mut lint paths
         assert!(a.max_abs_diff(&want) < 1e-4, "{}", a.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn parallel_split_matches_dense() {
+        // big enough to clear the parallel threshold, so the weighted
+        // split + scoped workers actually run (when >1 core is available)
+        let (q, k, v) = qkv(512, 16, 5);
+        let mask = crate::patterns::BlockMask::ones(16, 16);
+        let a = block_sparse_attention(&q, &k, &v, &mask, true);
+        let b = dense_attention(&q, &k, &v, true);
+        assert!(a.max_abs_diff(&b) < 1e-3, "{}", a.max_abs_diff(&b));
     }
 
     #[test]

@@ -6,12 +6,15 @@
 //! blocks — the Table 7 measurement target: latency tracks the number of
 //! blocks touched (the block cover), not the nominal density.
 
+use std::sync::{Arc, Mutex};
+
 use crate::patterns::BlockMask;
 use crate::sparse::dense::Matrix;
+use crate::sparse::exec::{self, GemmPlan};
 use crate::util::Rng;
 
 /// Block-sparse-row matrix of logical shape [nbr*b, nbc*b].
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct BsrMatrix {
     pub nbr: usize,
     pub nbc: usize,
@@ -22,6 +25,27 @@ pub struct BsrMatrix {
     pub cols: Vec<usize>,
     /// stored blocks, each b*b row-major, concatenated
     pub blocks: Vec<f32>,
+    /// lazily built engine schedule reused across `matmul_into` calls,
+    /// refreshed whenever the effective thread count changes; guarded by
+    /// the plan's structure fingerprint, so mutating `row_ptr`/`cols`
+    /// after the first multiply fails loudly rather than executing a
+    /// stale schedule (block *values* may change freely)
+    plan_cache: Mutex<Option<Arc<GemmPlan>>>,
+}
+
+impl Clone for BsrMatrix {
+    fn clone(&self) -> Self {
+        BsrMatrix {
+            nbr: self.nbr,
+            nbc: self.nbc,
+            block: self.block,
+            row_ptr: self.row_ptr.clone(),
+            cols: self.cols.clone(),
+            blocks: self.blocks.clone(),
+            // structure is identical, so the schedule stays valid
+            plan_cache: Mutex::new(self.plan_cache.lock().unwrap().clone()),
+        }
+    }
 }
 
 impl BsrMatrix {
@@ -56,7 +80,7 @@ impl BsrMatrix {
             row_ptr.push(cols.len());
         }
         let blocks = rng.normal_vec(cols.len() * block * block, scale);
-        BsrMatrix { nbr, nbc, block, row_ptr, cols, blocks }
+        BsrMatrix { nbr, nbc, block, row_ptr, cols, blocks, plan_cache: Mutex::new(None) }
     }
 
     /// Build from a dense matrix, keeping only blocks in the mask.
@@ -99,10 +123,12 @@ impl BsrMatrix {
 
     /// y = x * W (x: [m, nbr*b]) touching only stored blocks.
     ///
-    /// Hot path: for each block row i and stored block (i -> j), do an
-    /// [m, b] x [b, b] panel multiply into y columns j*b..j*b+b.  The
-    /// per-block inner kernel is written for vectorisation (contiguous
-    /// rows of x, W-block, and y).
+    /// Routed through the parallel tiled engine ([`crate::sparse::exec`]):
+    /// a [`GemmPlan`] partitions the output block columns into
+    /// nnz-weighted chunks and the scoped worker pool executes them with
+    /// register-blocked micro-kernels. Thread count comes from
+    /// [`exec::threads`] (CLI `--threads` / `PIXELFLY_THREADS` / auto);
+    /// small problems stay on the serial path inside the plan.
     pub fn matmul(&self, x: &Matrix) -> Matrix {
         let mut y = Matrix::zeros(x.rows, self.cols_elems());
         self.matmul_into(x, &mut y);
@@ -110,6 +136,43 @@ impl BsrMatrix {
     }
 
     pub fn matmul_into(&self, x: &Matrix, y: &mut Matrix) {
+        // Reuse the schedule across calls (hot loops in the benches and
+        // the butterfly product multiply the same structure repeatedly);
+        // rebuilt — and re-cached — when the thread configuration
+        // changes. The Arc is cloned out so concurrent multiplies never
+        // hold the lock across the kernel.
+        let threads = exec::threads();
+        let plan = {
+            let mut guard = self.plan_cache.lock().unwrap();
+            match guard.as_ref() {
+                Some(p) if p.threads() == threads => Arc::clone(p),
+                _ => {
+                    let p = Arc::new(GemmPlan::new(self, threads));
+                    *guard = Some(Arc::clone(&p));
+                    p
+                }
+            }
+        };
+        plan.execute(self, x, y);
+    }
+
+    /// Build a reusable execution plan for this matrix's structure.
+    /// Callers multiplying many batches against a fixed pattern should
+    /// plan once and [`Self::matmul_with_plan`] per batch.
+    pub fn plan(&self, threads: usize) -> GemmPlan {
+        GemmPlan::new(self, threads)
+    }
+
+    /// y = x * W through a prebuilt plan (must match this structure).
+    pub fn matmul_with_plan(&self, plan: &GemmPlan, x: &Matrix, y: &mut Matrix) {
+        plan.execute(self, x, y);
+    }
+
+    /// Single-threaded scalar reference path (the pre-engine kernel):
+    /// stored block outer, batch row inner. Kept as the correctness
+    /// oracle for the engine proptests and the serial baseline the
+    /// Table 7 bench reports speedups against.
+    pub fn matmul_serial_into(&self, x: &Matrix, y: &mut Matrix) {
         let b = self.block;
         assert_eq!(x.cols, self.rows());
         assert_eq!((y.rows, y.cols), (x.rows, self.cols_elems()));
@@ -171,7 +234,15 @@ impl BsrMatrix {
                 }
             }
         }
-        BsrMatrix { nbr: self.nbc, nbc: self.nbr, block: b, row_ptr, cols, blocks }
+        BsrMatrix {
+            nbr: self.nbc,
+            nbc: self.nbr,
+            block: b,
+            row_ptr,
+            cols,
+            blocks,
+            plan_cache: Mutex::new(None),
+        }
     }
 }
 
@@ -220,6 +291,22 @@ mod tests {
         let w = BsrMatrix::random(&mask, 4, 1.0, &mut rng);
         let t = w.transpose();
         assert!(t.to_dense().max_abs_diff(&w.to_dense().transpose()) < 1e-7);
+    }
+
+    #[test]
+    fn engine_path_matches_serial_reference() {
+        let mut rng = Rng::new(25);
+        let mask = baselines::random_mask(6, 5, 0.4, &mut rng);
+        let w = BsrMatrix::random(&mask, 8, 0.5, &mut rng);
+        let x = Matrix::randn(21, w.rows(), 1.0, &mut rng);
+        let mut serial = Matrix::zeros(21, w.cols_elems());
+        w.matmul_serial_into(&x, &mut serial);
+        let y = w.matmul(&x);
+        assert!(y.max_abs_diff(&serial) < 1e-4);
+        let plan = w.plan(8);
+        let mut yp = Matrix::zeros(21, w.cols_elems());
+        w.matmul_with_plan(&plan, &x, &mut yp);
+        assert!(yp.max_abs_diff(&serial) < 1e-4);
     }
 
     #[test]

@@ -68,6 +68,93 @@ impl ButterflyProduct {
     }
 }
 
+/// The paper's pixelfly layer on the substrate: flat block butterfly plus
+/// a low-rank term, W = B_flat + U·V (§3.2 "flat butterfly + low rank").
+///
+/// Both terms route through the parallel engine: the sparse term through
+/// the BSR [`crate::sparse::exec::GemmPlan`] (reused across batches), the
+/// low-rank term through the panel-tiled dense path — so the composite's
+/// latency tracks the block cover plus 2·n·r, exactly the cost model's
+/// accounting.
+pub struct FlatLowRank {
+    pub flat: BsrMatrix,
+    /// [n, r]
+    pub u: Matrix,
+    /// [r, n]
+    pub v: Matrix,
+    plan: crate::sparse::exec::GemmPlan,
+}
+
+impl FlatLowRank {
+    /// Random composite on [n, n]: flat butterfly to `max_stride` at the
+    /// given block size plus a rank-`rank` correction (rank 0 disables it).
+    pub fn random(n: usize, block: usize, max_stride: usize, rank: usize,
+                  scale: f32, rng: &mut Rng) -> Self {
+        assert_eq!(n % block, 0);
+        let mask = flat_butterfly_mask(n / block, max_stride);
+        let flat = BsrMatrix::random(&mask, block, scale, rng);
+        let lr_scale = if rank > 0 {
+            scale / (rank as f32).sqrt()
+        } else {
+            0.0
+        };
+        let u = Matrix::randn(n, rank, lr_scale, rng);
+        let v = Matrix::randn(rank, n, lr_scale, rng);
+        Self::new(flat, u, v)
+    }
+
+    /// Compose an existing flat term with a low-rank factor pair.
+    pub fn new(flat: BsrMatrix, u: Matrix, v: Matrix) -> Self {
+        assert_eq!(u.rows, flat.rows());
+        assert_eq!(u.cols, v.rows);
+        assert_eq!(v.cols, flat.cols_elems());
+        let plan = flat.plan(crate::sparse::exec::threads());
+        FlatLowRank { flat, u, v, plan }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.cols
+    }
+
+    /// y = x·B_flat + (x·U)·V.
+    pub fn matmul(&self, x: &Matrix) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, self.flat.cols_elems());
+        self.flat.matmul_with_plan(&self.plan, x, &mut y);
+        if self.rank() > 0 {
+            let t = crate::sparse::dense::matmul_blocked(x, &self.u);
+            let lr = crate::sparse::dense::matmul_blocked(&t, &self.v);
+            for (yv, lv) in y.data.iter_mut().zip(&lr.data) {
+                *yv += lv;
+            }
+        }
+        y
+    }
+
+    /// Dense materialisation (tests / inspection).
+    pub fn to_dense(&self) -> Matrix {
+        let mut w = self.flat.to_dense();
+        for i in 0..self.u.rows {
+            for j in 0..self.v.cols {
+                let mut dot = 0.0f32;
+                for r in 0..self.rank() {
+                    dot += self.u.get(i, r) * self.v.get(r, j);
+                }
+                w.set(i, j, w.get(i, j) + dot);
+            }
+        }
+        w
+    }
+
+    /// Parameter density relative to the dense [n, n] layer.
+    pub fn density(&self) -> f64 {
+        let n = self.flat.rows() * self.flat.cols_elems();
+        let params = self.flat.nnz_blocks() * self.flat.block * self.flat.block
+            + self.u.rows * self.u.cols
+            + self.v.rows * self.v.cols;
+        params as f64 / n as f64
+    }
+}
+
 /// Frobenius distance between the product operator and its flat
 /// approximation applied to x (Theorem 4.3 empirically, on the substrate).
 pub fn flat_approximation_error(bp: &ButterflyProduct, x: &Matrix) -> f64 {
@@ -114,6 +201,27 @@ mod tests {
         let e2 = flat_approximation_error(&bp, &x);
         let ratio = e2 / e1.max(1e-30);
         assert!(ratio > 2.5 && ratio < 6.0, "expected ~4x, got {ratio}");
+    }
+
+    #[test]
+    fn flat_lowrank_matches_dense_reference() {
+        let mut rng = Rng::new(36);
+        let flr = FlatLowRank::random(64, 8, 4, 16, 0.5, &mut rng);
+        let x = Matrix::randn(9, 64, 1.0, &mut rng);
+        let y = flr.matmul(&x);
+        let yref = crate::sparse::dense::matmul_blocked(&x, &flr.to_dense());
+        assert!(y.max_abs_diff(&yref) < 1e-3, "{}", y.max_abs_diff(&yref));
+        assert!(flr.density() > 0.0 && flr.density() < 1.0);
+    }
+
+    #[test]
+    fn flat_lowrank_rank_zero_is_pure_flat() {
+        let mut rng = Rng::new(37);
+        let flr = FlatLowRank::random(32, 4, 4, 0, 1.0, &mut rng);
+        let x = Matrix::randn(6, 32, 1.0, &mut rng);
+        let y = flr.matmul(&x);
+        let yref = flr.flat.matmul(&x);
+        assert!(y.max_abs_diff(&yref) < 1e-6);
     }
 
     #[test]

@@ -95,17 +95,51 @@ pub fn matmul_blocked(x: &Matrix, w: &Matrix) -> Matrix {
     y
 }
 
+/// Parallel panel-tiled dense GEMM: the batch dimension is split into row
+/// panels (one per scoped worker, each owning a contiguous `y` slice, so
+/// the parallelism is race-free by construction) and each panel runs the
+/// k-blocked serial kernel. Falls back to the serial path when the
+/// problem is too small to amortise thread spawn.
 pub fn matmul_blocked_into(x: &Matrix, w: &Matrix, y: &mut Matrix) {
     assert_eq!(x.cols, w.rows);
     assert_eq!((y.rows, y.cols), (x.rows, w.cols));
-    y.data.fill(0.0);
-    const KB: usize = 64;
     let (m, k, n) = (x.rows, x.cols, w.cols);
+    let threads = crate::sparse::exec::threads();
+    let flops = 2.0 * (m * k) as f64 * n as f64;
+    if threads <= 1 || m < 2 || flops < crate::sparse::exec::MIN_PAR_FLOPS {
+        return matmul_blocked_serial_into(x, w, y);
+    }
+    y.data.fill(0.0);
+    let rows_per = m.div_ceil(threads.min(m));
+    std::thread::scope(|s| {
+        for (p, ychunk) in y.data.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || panel_kernel(x, w, ychunk, p * rows_per));
+        }
+    });
+}
+
+/// Single-threaded k-blocked reference kernel (the pre-engine path).
+pub fn matmul_blocked_serial_into(x: &Matrix, w: &Matrix, y: &mut Matrix) {
+    assert_eq!(x.cols, w.rows);
+    assert_eq!((y.rows, y.cols), (x.rows, w.cols));
+    y.data.fill(0.0);
+    panel_kernel(x, w, &mut y.data, 0);
+}
+
+/// k-blocked GEMM over one row panel: `ychunk` holds rows
+/// `r0..r0 + ychunk.len()/n` of the (pre-zeroed) output.
+fn panel_kernel(x: &Matrix, w: &Matrix, ychunk: &mut [f32], r0: usize) {
+    const KB: usize = 64;
+    let (k, n) = (x.cols, w.cols);
+    if n == 0 {
+        return;
+    }
+    let rows = ychunk.len() / n;
     for k0 in (0..k).step_by(KB) {
         let k1 = (k0 + KB).min(k);
-        for i in 0..m {
-            let xrow = x.row(i);
-            let yrow = y.row_mut(i);
+        for i in 0..rows {
+            let xrow = x.row(r0 + i);
+            let yrow = &mut ychunk[i * n..(i + 1) * n];
             for kk in k0..k1 {
                 let xv = xrow[kk];
                 if xv == 0.0 {
@@ -113,8 +147,8 @@ pub fn matmul_blocked_into(x: &Matrix, w: &Matrix, y: &mut Matrix) {
                 }
                 let wrow = w.row(kk);
                 // inner j loop vectorises
-                for j in 0..n {
-                    yrow[j] += xv * wrow[j];
+                for (yj, wj) in yrow.iter_mut().zip(wrow) {
+                    *yj += xv * *wj;
                 }
             }
         }
@@ -145,6 +179,19 @@ mod tests {
         }
         let y = matmul_blocked(&x, &eye);
         assert!(x.max_abs_diff(&y) < 1e-6);
+    }
+
+    #[test]
+    fn parallel_panels_match_serial() {
+        // big enough to clear the parallel threshold
+        let mut rng = Rng::new(14);
+        let x = Matrix::randn(258, 128, 1.0, &mut rng);
+        let w = Matrix::randn(128, 160, 1.0, &mut rng);
+        let mut par = Matrix::zeros(258, 160);
+        matmul_blocked_into(&x, &w, &mut par);
+        let mut ser = Matrix::zeros(258, 160);
+        matmul_blocked_serial_into(&x, &w, &mut ser);
+        assert!(par.max_abs_diff(&ser) < 1e-4);
     }
 
     #[test]

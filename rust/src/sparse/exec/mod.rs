@@ -1,0 +1,79 @@
+//! Parallel, cache-tiled execution engine for the block-sparse substrate.
+//!
+//! Plan/executor split (DESIGN.md "Execution engine"):
+//! - [`plan::GemmPlan`] inverts a [`crate::sparse::BsrMatrix`]'s row
+//!   structure once into a column-owned schedule — the block rows of Wᵀ —
+//!   and partitions it into load-balanced chunks weighted by nnz blocks.
+//! - [`pool`] is the dependency-free `std::thread` scoped worker pool:
+//!   workers pull chunk × batch-panel tasks from a shared atomic cursor.
+//! - [`micro`] holds the register-blocked `b×b` panel kernels
+//!   (specialised for b ∈ {16, 32, 48}, generic fallback).
+//!
+//! Thread count resolution order: explicit [`set_threads`] (the CLI's
+//! `--threads`), then `PIXELFLY_THREADS`, then available parallelism.
+//! Small problems fall back to the serial path automatically so the
+//! engine never pessimises the tiny shapes used in tests.
+
+pub mod micro;
+pub mod plan;
+pub mod pool;
+
+pub use plan::GemmPlan;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Below this many flops the scoped-pool spawn overhead outweighs the
+/// parallel win and every engine path (BSR plan, dense panels, attention)
+/// stays serial. One knob — retune it here, not per call site.
+pub const MIN_PAR_FLOPS: f64 = 4.0e6;
+use std::sync::OnceLock;
+
+/// 0 = no override; set once from the CLI / caller.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Env/auto detection resolved once: `threads()` sits on the hot path
+/// (every matmul/attention call), so no per-call env-lock or syscall.
+static DETECTED: OnceLock<usize> = OnceLock::new();
+
+/// Override the substrate thread count for this process (0 clears the
+/// override and returns to env/auto detection).
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Effective substrate thread count: `set_threads` override, else
+/// `PIXELFLY_THREADS`, else `std::thread::available_parallelism()`
+/// (the latter two resolved once per process).
+pub fn threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    *DETECTED.get_or_init(|| {
+        parse_threads(std::env::var("PIXELFLY_THREADS").ok()).unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+    })
+}
+
+fn parse_threads(v: Option<String>) -> Option<usize> {
+    v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_threads_filters_garbage() {
+        assert_eq!(parse_threads(None), None);
+        assert_eq!(parse_threads(Some("0".into())), None);
+        assert_eq!(parse_threads(Some("abc".into())), None);
+        assert_eq!(parse_threads(Some(" 8 ".into())), Some(8));
+    }
+
+    #[test]
+    fn threads_is_positive() {
+        assert!(threads() >= 1);
+    }
+}

@@ -1,0 +1,261 @@
+//! `GemmPlan`: the plan half of the plan/executor split for BSR GEMM.
+//!
+//! `y = x · W` writes each output block column `j` from exactly the stored
+//! blocks `(i, j)` of `W`, so the natural race-free ownership unit is the
+//! block row of `Wᵀ`. The plan inverts the BSR row structure once into
+//! that column-owned schedule and partitions it into contiguous chunks of
+//! near-equal nnz-block weight; the executor hands chunks (crossed with
+//! batch-row panels when the chunk count alone cannot feed every worker)
+//! to the scoped pool. Each task owns a disjoint rows × column-stripe
+//! region of `y`, which is what makes the shared-pointer writes sound.
+//!
+//! Plans are cheap (O(nnz) integer work) but reusable: benches and layers
+//! that multiply many times against a fixed pattern should build one plan
+//! and call [`GemmPlan::execute`] per batch.
+
+use std::ops::Range;
+
+use crate::sparse::bsr::BsrMatrix;
+use crate::sparse::dense::Matrix;
+
+use super::{micro, pool, MIN_PAR_FLOPS};
+
+/// Batch rows per cache tile: at b=32 a tile holds an 8 KB y stripe and an
+/// 8 KB x panel next to the 4 KB weight block — comfortably L1-resident.
+const TILE_ROWS: usize = 64;
+
+/// Minimum batch rows worth giving a worker of its own.
+const MIN_PANEL_ROWS: usize = 8;
+
+/// Target chunks per worker; >1 so the atomic cursor can rebalance.
+const CHUNKS_PER_THREAD: usize = 4;
+
+/// One output block column and the stored blocks feeding it.
+#[derive(Clone, Debug)]
+struct ColTask {
+    /// output block column index
+    j: u32,
+    /// (input block row i, stored slot s) pairs, i ascending — the same
+    /// accumulation order as the serial reference path
+    srcs: Vec<(u32, u32)>,
+}
+
+/// Parallel tiled execution schedule for one BSR operand.
+#[derive(Clone, Debug)]
+pub struct GemmPlan {
+    nnz_blocks: usize,
+    threads: usize,
+    /// FNV-1a over (block, nbr, nbc, row_ptr, cols): executing against a
+    /// matrix whose *pattern* differs — not just shape/nnz — must fail
+    fingerprint: u64,
+    block: usize,
+    col_tasks: Vec<ColTask>,
+    /// ranges over `col_tasks`, balanced by nnz-block weight
+    chunks: Vec<Range<usize>>,
+}
+
+/// FNV-1a over the arrays that determine the schedule. O(nbr + nnz)
+/// integer work — negligible next to the O(m·nnz·b²) multiply it guards.
+fn structure_fingerprint(w: &BsrMatrix) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    mix(w.block as u64);
+    mix(w.nbr as u64);
+    mix(w.nbc as u64);
+    for &p in &w.row_ptr {
+        mix(p as u64);
+    }
+    for &c in &w.cols {
+        mix(c as u64);
+    }
+    h
+}
+
+impl GemmPlan {
+    /// Build the schedule for `w` targeting `threads` workers.
+    pub fn new(w: &BsrMatrix, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut col_tasks: Vec<ColTask> = (0..w.nbc)
+            .map(|j| ColTask { j: j as u32, srcs: Vec::new() })
+            .collect();
+        for i in 0..w.nbr {
+            for s in w.row_ptr[i]..w.row_ptr[i + 1] {
+                col_tasks[w.cols[s]].srcs.push((i as u32, s as u32));
+            }
+        }
+        col_tasks.retain(|t| !t.srcs.is_empty());
+        let weights: Vec<usize> = col_tasks.iter().map(|t| t.srcs.len()).collect();
+        let chunks = pool::weighted_ranges(&weights, threads * CHUNKS_PER_THREAD);
+        GemmPlan {
+            block: w.block,
+            nnz_blocks: w.nnz_blocks(),
+            threads,
+            fingerprint: structure_fingerprint(w),
+            col_tasks,
+            chunks,
+        }
+    }
+
+    /// Worker count this plan was built for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `y = x · w` through the schedule. `w` must be the matrix
+    /// (or one with identical structure) the plan was built from.
+    pub fn execute(&self, w: &BsrMatrix, x: &Matrix, y: &mut Matrix) {
+        let b = self.block;
+        assert_eq!(
+            structure_fingerprint(w),
+            self.fingerprint,
+            "plan built for a different sparsity structure"
+        );
+        assert_eq!(x.cols, w.rows());
+        assert_eq!((y.rows, y.cols), (x.rows, w.cols_elems()));
+        y.data.fill(0.0);
+        let m = x.rows;
+        if m == 0 || self.nnz_blocks == 0 {
+            return;
+        }
+
+        let flops = 2.0 * (m * self.nnz_blocks) as f64 * (b * b) as f64;
+        let threads = if flops < MIN_PAR_FLOPS { 1 } else { self.threads };
+
+        let n_chunks = self.chunks.len();
+        // Secondary split over the batch dimension when column chunks
+        // alone cannot feed every worker.
+        let mut row_step = m;
+        if threads > 1 && n_chunks < 2 * threads {
+            let max_panels = m.div_ceil(MIN_PANEL_ROWS);
+            let want = (2 * threads).div_ceil(n_chunks).min(max_panels.max(1));
+            row_step = m.div_ceil(want).max(1);
+        }
+        let n_panels = m.div_ceil(row_step);
+        let n_tasks = n_chunks * n_panels;
+
+        struct YBase(*mut f32);
+        unsafe impl Sync for YBase {}
+        let ybase = YBase(y.data.as_mut_ptr());
+        let ldy = y.cols;
+
+        pool::run_tasks(n_tasks, threads, |t| {
+            let chunk = &self.chunks[t % n_chunks];
+            let p = t / n_chunks;
+            let rows = p * row_step..((p + 1) * row_step).min(m);
+            let y = &ybase;
+            for ct in &self.col_tasks[chunk.clone()] {
+                let jc = ct.j as usize * b;
+                let mut r0 = rows.start;
+                while r0 < rows.end {
+                    let r1 = (r0 + TILE_ROWS).min(rows.end);
+                    for &(i, s) in &ct.srcs {
+                        let s = s as usize;
+                        let blk = &w.blocks[s * b * b..(s + 1) * b * b];
+                        // Safety: tasks partition the batch-row × block-
+                        // column grid (each column belongs to exactly one
+                        // chunk, each row to exactly one panel), so this
+                        // task exclusively owns y rows r0..r1 at columns
+                        // jc..jc+b; bounds follow from the shape asserts.
+                        unsafe {
+                            micro::block_panel(
+                                b,
+                                x,
+                                i as usize * b,
+                                r0..r1,
+                                blk,
+                                y.0,
+                                ldy,
+                                jc,
+                            );
+                        }
+                    }
+                    r0 = r1;
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::{baselines, flat_butterfly_mask, BlockMask};
+    use crate::util::Rng;
+
+    #[test]
+    fn plan_executes_like_serial_reference() {
+        let mut rng = Rng::new(71);
+        let mask = flat_butterfly_mask(8, 8);
+        let w = BsrMatrix::random(&mask, 16, 0.5, &mut rng);
+        let x = Matrix::randn(19, w.rows(), 1.0, &mut rng);
+        let mut want = Matrix::zeros(19, w.cols_elems());
+        w.matmul_serial_into(&x, &mut want);
+        for threads in [1usize, 3, 8] {
+            let plan = GemmPlan::new(&w, threads);
+            let mut y = Matrix::zeros(19, w.cols_elems());
+            plan.execute(&w, &x, &mut y);
+            assert!(
+                y.max_abs_diff(&want) < 1e-4,
+                "threads={threads}: {}",
+                y.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_ragged_structures() {
+        let mut rng = Rng::new(72);
+        // all-zero mask: executes to zeros
+        let empty = BsrMatrix::random(&BlockMask::zeros(4, 4), 8, 1.0, &mut rng);
+        let x = Matrix::randn(5, empty.rows(), 1.0, &mut rng);
+        let plan = GemmPlan::new(&empty, 4);
+        let mut y = Matrix::randn(5, empty.cols_elems(), 1.0, &mut rng);
+        plan.execute(&empty, &x, &mut y);
+        assert!(y.data.iter().all(|v| *v == 0.0));
+        // ragged random rectangular mask with empty columns
+        let mask = baselines::random_mask(3, 9, 0.2, &mut rng);
+        let w = BsrMatrix::random(&mask, 4, 1.0, &mut rng);
+        let x = Matrix::randn(2, w.rows(), 1.0, &mut rng);
+        let plan = GemmPlan::new(&w, 8);
+        let mut y = Matrix::zeros(2, w.cols_elems());
+        plan.execute(&w, &x, &mut y);
+        let mut want = Matrix::zeros(2, w.cols_elems());
+        w.matmul_serial_into(&x, &mut want);
+        assert!(y.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "different sparsity structure")]
+    fn plan_rejects_mismatched_matrix() {
+        let mut rng = Rng::new(73);
+        let a = BsrMatrix::random(&flat_butterfly_mask(4, 2), 8, 1.0, &mut rng);
+        let b = BsrMatrix::random(&flat_butterfly_mask(4, 4), 8, 1.0, &mut rng);
+        let plan = GemmPlan::new(&a, 2);
+        let x = Matrix::randn(3, b.rows(), 1.0, &mut rng);
+        let mut y = Matrix::zeros(3, b.cols_elems());
+        plan.execute(&b, &x, &mut y);
+    }
+
+    #[test]
+    #[should_panic(expected = "different sparsity structure")]
+    fn plan_rejects_same_shape_same_nnz_different_pattern() {
+        // same 2x2 grid, same block size, same nnz=2 — only the pattern
+        // differs; the fingerprint (not just shape/nnz) must catch it
+        let mut rng = Rng::new(74);
+        let mut diag = BlockMask::zeros(2, 2);
+        diag.set(0, 0, true);
+        diag.set(1, 1, true);
+        let mut anti = BlockMask::zeros(2, 2);
+        anti.set(0, 1, true);
+        anti.set(1, 0, true);
+        let a = BsrMatrix::random(&diag, 4, 1.0, &mut rng);
+        let b = BsrMatrix::random(&anti, 4, 1.0, &mut rng);
+        let plan = GemmPlan::new(&a, 2);
+        let x = Matrix::randn(3, b.rows(), 1.0, &mut rng);
+        let mut y = Matrix::zeros(3, b.cols_elems());
+        plan.execute(&b, &x, &mut y);
+    }
+}

@@ -1,0 +1,131 @@
+//! Dependency-free scoped worker pool + weighted work partitioning.
+//!
+//! `run_tasks` is the execution primitive shared by the sparse GEMM plan
+//! and the parallel dense/attention paths: workers are `std::thread::scope`
+//! threads pulling task indices from a shared atomic cursor, so an uneven
+//! task (a heavy block-column chunk) delays only the worker that drew it.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(0..n_tasks)` across up to `threads` scoped workers with dynamic
+/// (pull-based) scheduling. Serial when one worker suffices. `f` must be
+/// safe to call concurrently for distinct task indices.
+pub fn run_tasks<F>(n_tasks: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let workers = threads.min(n_tasks).max(1);
+    if workers == 1 {
+        for t in 0..n_tasks {
+            f(t);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let t = next.fetch_add(1, Ordering::Relaxed);
+                if t >= n_tasks {
+                    break;
+                }
+                f(t);
+            });
+        }
+    });
+}
+
+/// Split items `0..weights.len()` into at most `parts` contiguous,
+/// non-empty ranges of approximately equal total weight (greedy against
+/// the even share of the remaining weight). Used to chunk block columns
+/// by nnz blocks and attention query rows by visible key blocks.
+pub fn weighted_ranges(weights: &[usize], parts: usize) -> Vec<Range<usize>> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let total: usize = weights.iter().sum();
+    let mut out: Vec<Range<usize>> = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        if out.len() + 1 < parts && i + 1 < n {
+            let target = (total - assigned) / (parts - out.len());
+            if acc >= target.max(1) {
+                out.push(start..i + 1);
+                start = i + 1;
+                assigned += acc;
+                acc = 0;
+            }
+        }
+    }
+    out.push(start..n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_tasks_covers_every_index_once() {
+        for threads in [1usize, 2, 8] {
+            let hits: Vec<AtomicUsize> =
+                (0..37).map(|_| AtomicUsize::new(0)).collect();
+            run_tasks(hits.len(), threads, |t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_sums_in_parallel() {
+        let sum = AtomicU64::new(0);
+        run_tasks(100, 4, |t| {
+            sum.fetch_add(t as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn weighted_ranges_partition_and_balance() {
+        let weights = vec![1usize, 9, 1, 1, 1, 9, 1, 1];
+        let ranges = weighted_ranges(&weights, 3);
+        assert!(!ranges.is_empty() && ranges.len() <= 3);
+        // exact cover, in order, non-empty
+        let mut expect = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, expect);
+            assert!(r.end > r.start);
+            expect = r.end;
+        }
+        assert_eq!(expect, weights.len());
+        // no range should carry almost everything when 3 were requested
+        let total: usize = weights.iter().sum();
+        for r in &ranges {
+            let w: usize = weights[r.clone()].iter().sum();
+            assert!(w < total, "one range took all the weight");
+        }
+    }
+
+    #[test]
+    fn weighted_ranges_edge_cases() {
+        assert!(weighted_ranges(&[], 4).is_empty());
+        assert_eq!(weighted_ranges(&[5], 4), vec![0..1]);
+        // more parts than items: one item per range at most
+        let r = weighted_ranges(&[1, 1, 1], 10);
+        assert_eq!(r.len(), 3);
+        // zero weights don't panic
+        let r = weighted_ranges(&[0, 0, 0, 0], 2);
+        let covered: usize = r.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, 4);
+    }
+}

@@ -7,16 +7,25 @@
 //! Appendix-A cost model on a CPU (cache lines play the role of
 //! coalesced GPU blocks).
 //!
-//! - [`dense`]        row-major matrix + cache-blocked GEMM reference
+//! All multiply paths route through the parallel tiled execution engine
+//! in [`exec`] (plan/executor split, scoped `std::thread` worker pool,
+//! register-blocked micro-kernels); every operator keeps a serial
+//! reference path as the correctness oracle.
+//!
+//! - [`dense`]        row-major matrix + panel-tiled parallel GEMM
 //! - [`bsr`]          BSR matrix + GEMM, pattern-agnostic
-//! - [`butterfly_mm`] sequential butterfly product vs flat multiply
+//! - [`butterfly_mm`] butterfly product, flat multiply, low-rank composite
+//! - [`attention`]    streaming block-sparse attention
+//! - [`exec`]         the execution engine: plans, pool, micro-kernels
 
 pub mod attention;
 pub mod bsr;
 pub mod butterfly_mm;
 pub mod csr;
 pub mod dense;
+pub mod exec;
 
 pub use bsr::BsrMatrix;
 pub use csr::CsrMatrix;
 pub use dense::Matrix;
+pub use exec::GemmPlan;

@@ -117,6 +117,75 @@ fn prop_bsr_matmul_matches_dense() {
 }
 
 #[test]
+fn prop_parallel_tiled_gemm_matches_serial_reference() {
+    // the engine contract: for any mask, block size (micro-specialised and
+    // generic), batch shape and thread count, the parallel tiled path
+    // agrees with the pre-engine scalar kernel and the dense oracle
+    check("engine-vs-serial", 20, |rng| {
+        let nbr = rng.range(1, 7);
+        let nbc = rng.range(1, 7);
+        let b = [4usize, 8, 16, 32, 48][rng.below(5)];
+        let m = rng.range(1, 40);
+        let mask = baselines::random_mask(nbr, nbc, rng.f64() * 0.7, rng);
+        let w = BsrMatrix::random(&mask, b, 0.6, rng);
+        let x = Matrix::randn(m, nbr * b, 1.0, rng);
+        let mut serial = Matrix::zeros(m, w.cols_elems());
+        w.matmul_serial_into(&x, &mut serial);
+        let dense_ref = matmul_blocked(&x, &w.to_dense());
+        prop_assert!(serial.max_abs_diff(&dense_ref) < 1e-3,
+                     "serial vs dense: {}", serial.max_abs_diff(&dense_ref));
+        for threads in [1usize, 2, 8] {
+            let plan = w.plan(threads);
+            let mut y = Matrix::zeros(m, w.cols_elems());
+            w.matmul_with_plan(&plan, &x, &mut y);
+            prop_assert!(y.max_abs_diff(&serial) < 1e-4,
+                         "threads={threads} b={b} m={m}: {}",
+                         y.max_abs_diff(&serial));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_dense_matches_serial_reference() {
+    use pixelfly::sparse::dense::matmul_blocked_serial_into;
+    check("dense-par-vs-serial", 10, |rng| {
+        // smallest draw is 2·150·128·128 ≈ 4.9 MFLOP — above the engine's
+        // MIN_PAR_FLOPS (4e6), so the panel split runs whenever more than
+        // one core is available rather than re-testing serial vs itself
+        let m = rng.range(150, 300);
+        let k = 8 * rng.range(16, 32);
+        let n = 8 * rng.range(16, 32);
+        let x = Matrix::randn(m, k, 1.0, rng);
+        let w = Matrix::randn(k, n, 1.0, rng);
+        let mut par = Matrix::zeros(m, n);
+        pixelfly::sparse::dense::matmul_blocked_into(&x, &w, &mut par);
+        let mut ser = Matrix::zeros(m, n);
+        matmul_blocked_serial_into(&x, &w, &mut ser);
+        prop_assert!(par.max_abs_diff(&ser) < 1e-4, "{}", par.max_abs_diff(&ser));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flat_lowrank_composite_matches_dense() {
+    use pixelfly::sparse::butterfly_mm::FlatLowRank;
+    check("flat-lowrank-vs-dense", 10, |rng| {
+        let b = [4usize, 8, 16][rng.below(3)];
+        let nb = rand_pow2(rng, 2, 4);
+        let n = nb * b;
+        let ms = 1usize << rng.range(1, (nb.trailing_zeros() as usize) + 1);
+        let rank = rng.range(0, 3) * b;
+        let flr = FlatLowRank::random(n, b, ms, rank, 0.5, rng);
+        let x = Matrix::randn(rng.range(1, 10), n, 1.0, rng);
+        let y = flr.matmul(&x);
+        let yref = matmul_blocked(&x, &flr.to_dense());
+        prop_assert!(y.max_abs_diff(&yref) < 1e-3, "{}", y.max_abs_diff(&yref));
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_bsr_transpose_involution() {
     check("bsr-transpose", 25, |rng| {
         let mask = baselines::random_mask(rng.range(1, 8), rng.range(1, 8),

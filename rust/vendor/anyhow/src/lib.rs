@@ -1,0 +1,176 @@
+//! Vendored std-only shim for the subset of `anyhow` pixelfly uses.
+//!
+//! The repository must resolve and build with no network access, so instead
+//! of the crates.io `anyhow` this local crate provides the same surface:
+//! [`Error`], [`Result`], the [`Context`] extension trait for `Result` and
+//! `Option`, and the [`anyhow!`] / [`bail!`] macros.  Errors carry a
+//! context chain: `Display` shows the outermost message, `Debug` shows the
+//! full chain (what `.unwrap()` prints in tests).
+
+use std::fmt;
+
+/// Error with a context chain, outermost message first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Prepend a context message (becomes the outermost).
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.first() {
+            Some(m) => f.write_str(m),
+            None => f.write_str("unknown error"),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            Some((head, rest)) => {
+                f.write_str(head)?;
+                if !rest.is_empty() {
+                    f.write_str("\n\nCaused by:")?;
+                    for c in rest {
+                        write!(f, "\n    {c}")?;
+                    }
+                }
+                Ok(())
+            }
+            None => f.write_str("unknown error"),
+        }
+    }
+}
+
+// NOTE: deliberately no `impl std::error::Error for Error` — that would
+// conflict with the blanket conversion below (same trick as real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `Result<T, anyhow::Error>` unless overridden.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse().context("not an integer")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn context_chains() {
+        let e = parse("x").unwrap_err();
+        assert_eq!(format!("{e}"), "not an integer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(fail: bool) -> Result<u8> {
+            if fail {
+                bail!("boom {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 7");
+        let e: Error = anyhow!("x={}", 2);
+        assert_eq!(e.to_string(), "x=2");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<u8, std::num::ParseIntError> = "z".parse::<u8>().map(|_| 0);
+        let e = r.with_context(|| format!("parsing {}", "z")).unwrap_err();
+        assert_eq!(e.to_string(), "parsing z");
+        assert!(e.chain().count() >= 2);
+    }
+}

@@ -1,0 +1,263 @@
+//! API-compatible stub of the `xla` PJRT bindings.
+//!
+//! Keeps the `pjrt` feature of pixelfly compiling (and its host-side
+//! literal plumbing testable) in environments without the real PJRT C API.
+//! Host-side [`Literal`] construction/inspection is fully implemented;
+//! everything that needs a device — client construction, compilation,
+//! execution — returns [`Error::Unsupported`] with a pointer to DESIGN.md.
+//! Deployments replace this directory with the real bindings crate; the
+//! pixelfly sources compile unchanged against either.
+
+use std::fmt;
+
+/// Errors surfaced by the stub backend.
+#[derive(Debug)]
+pub enum Error {
+    /// The operation needs a real PJRT runtime.
+    Unsupported(&'static str),
+    /// Host-side usage error (shape/dtype mismatch, bad file, ...).
+    Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unsupported(what) => write!(
+                f,
+                "xla stub backend: {what} requires the real PJRT bindings — \
+                 replace rust/vendor/xla with the real `xla` crate and rebuild \
+                 with --features pjrt (see DESIGN.md, \"PJRT feature gate\")"
+            ),
+            Error::Invalid(m) => write!(f, "xla stub: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes crossing the boundary (subset pixelfly uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    fn size(self) -> usize {
+        4
+    }
+}
+
+/// Native host types convertible to/from literal storage.
+pub trait NativeType: Copy {
+    const DTYPE: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const DTYPE: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const DTYPE: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// Host tensor (or tuple of tensors): fully functional on the host.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Tensor {
+        dtype: ElementType,
+        dims: Vec<usize>,
+        /// little-endian element bytes
+        data: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        dtype: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product::<usize>().max(1);
+        if data.len() != elems * dtype.size() {
+            return Err(Error::Invalid(format!(
+                "literal data is {} bytes, shape {dims:?} needs {}",
+                data.len(),
+                elems * dtype.size()
+            )));
+        }
+        Ok(Literal::Tensor { dtype, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    /// Decode the tensor into a host vector; errors on dtype mismatch or
+    /// tuple literals.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Tensor { dtype, data, .. } => {
+                if *dtype != T::DTYPE {
+                    return Err(Error::Invalid(format!(
+                        "dtype mismatch: literal is {dtype:?}"
+                    )));
+                }
+                Ok(data
+                    .chunks_exact(4)
+                    .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            }
+            Literal::Tuple(_) => {
+                Err(Error::Invalid("to_vec on a tuple literal".into()))
+            }
+        }
+    }
+
+    /// First element (scalar reads).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Invalid("empty literal".into()))
+    }
+
+    /// Decompose a tuple literal into its elements (a non-tuple literal
+    /// decomposes to itself, matching the bindings' behaviour for
+    /// single-output computations).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(elems) => Ok(elems),
+            t @ Literal::Tensor { .. } => Ok(vec![t]),
+        }
+    }
+}
+
+/// Parsed HLO module handle (stub: held as text).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Invalid(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation handle.
+pub struct XlaComputation {
+    _module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        // The stub holds no state; compilation fails later with Unsupported.
+        XlaComputation { _module: HloModuleProto { _text: String::new() } }
+    }
+}
+
+/// Device buffer handle. Never constructed by the stub.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unsupported("buffer readback"))
+    }
+}
+
+/// Compiled executable handle. Never constructed by the stub.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unsupported("execution"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unsupported("execution"))
+    }
+}
+
+/// PJRT client. Construction always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unsupported("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unsupported("compilation"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unsupported("host-to-device transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes)
+                .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!((lit.get_first_element::<f32>().unwrap() - 1.5).abs() < 1e-9);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[2, 2],
+            &[0u8; 8]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let a = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[1],
+            &7i32.to_le_bytes(),
+        )
+        .unwrap();
+        let t = Literal::Tuple(vec![a.clone(), a]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn device_ops_unsupported() {
+        assert!(PjRtClient::cpu().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("PJRT"), "{msg}");
+    }
+}
