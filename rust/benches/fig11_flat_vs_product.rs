@@ -6,7 +6,7 @@
 
 use pixelfly::bench::BenchSuite;
 use pixelfly::sparse::butterfly_mm::ButterflyProduct;
-use pixelfly::sparse::Matrix;
+use pixelfly::sparse::{Matrix, Workspace};
 use pixelfly::util::{Args, Rng};
 
 fn main() {
@@ -20,13 +20,26 @@ fn main() {
 
     let nb = n / block;
     let mut speedups = Vec::new();
+    let mut ws = Workspace::new();
     let mut k = 2;
     while k <= nb {
         let bp = ButterflyProduct::random(n, block, k, 0.1, &mut rng);
         let flat = bp.flatten();
+        // in-place apply with workspace scratch: both sides of the
+        // comparison are zero-alloc, so the measured gap is pure
+        // scheduling/memory traffic (the paper's claim), not allocator
+        // noise
+        let mut y = x.clone();
+        bp.apply_assign(&mut y, &mut ws); // warmup sizes the scratch
+        let warm_allocs = ws.alloc_events();
         suite.bench(&format!("product_k{k}"), &format!("{} factors", bp.factors.len()), || {
-            std::hint::black_box(bp.matmul(&x));
+            y.data.copy_from_slice(&x.data);
+            bp.apply_assign(&mut y, &mut ws);
+            std::hint::black_box(&y);
         });
+        assert_eq!(ws.alloc_events(), warm_allocs,
+                   "product apply must be zero-alloc after warmup");
+        suite.set_scratch_bytes(ws.peak_bytes());
         let tp = suite.last_mean_ms();
         let mut y = Matrix::zeros(batch, n);
         suite.bench(&format!("flat_k{k}"), "1 sparse GEMM", || {

@@ -17,6 +17,7 @@ use pixelfly::bench::BenchSuite;
 use pixelfly::patterns::baselines::{random_grouped_mask, random_mask, reformer_bucket_mask};
 use pixelfly::patterns::butterfly::butterfly_factor_mask;
 use pixelfly::patterns::flat_butterfly_mask;
+use pixelfly::sparse::exec::{self, KernelChoice};
 use pixelfly::sparse::{BsrMatrix, Matrix};
 use pixelfly::util::{Args, Rng};
 
@@ -91,6 +92,8 @@ fn main() {
     // intended steady-state usage).
     let scale_n = args.usize_or("scale-n", 4096);
     let scale_batch = args.usize_or("scale-batch", if suite.quick { 64 } else { 256 });
+    // name of the SIMD-tier bench (when one ran), for the summary print
+    let mut simd_tier_bench: Option<String> = None;
     {
         let nb = scale_n / hw;
         let mask = random_mask(nb, nb, 0.10, &mut Rng::new(5));
@@ -111,6 +114,29 @@ fn main() {
                 std::hint::black_box(&y);
             });
         }
+
+        // --- kernel dispatch tiers on the same headline configuration ---
+        // forced-scalar vs the SIMD tier (acceptance target: simd >= 1.5x
+        // scalar at 4k/b32/10% wherever AVX2 or NEON exists); the
+        // operator's effective choice is snapshotted and restored so a
+        // pinned PIXELFLY_KERNEL round-trips
+        let prev_choice = exec::kernel_choice();
+        let plan = w.plan(exec::threads());
+        exec::set_kernel(KernelChoice::Scalar);
+        suite.bench_with_flops("bsr4k_tier_scalar", &note, flops, || {
+            w.matmul_with_plan(&plan, &xs, &mut y);
+            std::hint::black_box(&y);
+        });
+        if exec::simd_available() {
+            exec::set_kernel(KernelChoice::Simd);
+            let name = format!("bsr4k_tier_{}", exec::kernel_name());
+            suite.bench_with_flops(&name, &note, flops, || {
+                w.matmul_with_plan(&plan, &xs, &mut y);
+                std::hint::black_box(&y);
+            });
+            simd_tier_bench = Some(name);
+        }
+        exec::set_kernel(prev_choice);
     }
 
     let out = suite.report();
@@ -123,6 +149,15 @@ fn main() {
     let par8 = suite.mean_ms_of("bsr4k_par8").unwrap();
     println!("\nparallel engine speedup at 8 threads (4k, b=32, 10%): {:.2}x",
              ser / par8);
+
+    if let Some(name) = &simd_tier_bench {
+        let sc = suite.mean_ms_of("bsr4k_tier_scalar").unwrap();
+        let sm = suite.mean_ms_of(name).unwrap();
+        println!("simd tier ({name}) vs scalar tier (4k, b=32, 10%): {:.2}x \
+                  (acceptance target >= 1.5x)", sc / sm);
+    } else {
+        println!("no SIMD tier on this host; scalar tier only");
+    }
 
     // Table-7 sanity: pixelfly must beat the same-expected-density random
     let pix = suite.mean_ms_of("pixelfly_stride2").unwrap();

@@ -19,6 +19,10 @@ pub struct BenchResult {
     pub summary: Summary,
     /// achieved GFLOP/s (mean), when the bench registered its flop count
     pub gflops: Option<f64>,
+    /// peak scratch bytes the benched path touched (workspace-tracked),
+    /// when the bench registered it — the fused-attention bench uses this
+    /// column to prove the O(block²) scratch bound
+    pub scratch_bytes: Option<usize>,
     /// optional user metric (e.g. speedup baseline id)
     pub note: String,
 }
@@ -55,9 +59,18 @@ impl BenchSuite {
             name: name.to_string(),
             summary,
             gflops: None,
+            scratch_bytes: None,
             note: note.to_string(),
         });
         &self.results.last().unwrap().summary
+    }
+
+    /// Attach a peak-scratch-bytes measurement to the most recent result
+    /// (rendered as a table/TSV/JSON column).
+    pub fn set_scratch_bytes(&mut self, bytes: usize) {
+        if let Some(r) = self.results.last_mut() {
+            r.scratch_bytes = Some(bytes);
+        }
     }
 
     /// Benchmark a closure whose one invocation performs `flops` floating
@@ -87,12 +100,16 @@ impl BenchSuite {
         let mut out = String::new();
         out.push_str(&format!("\n=== {} (warmup={} iters={}) ===\n",
                               self.title, self.warmup, self.iters));
-        out.push_str(&format!("{:<44} {:>12} {:>12} {:>12} {:>9}  note\n",
-                              "benchmark", "mean", "p50", "p95", "gflops"));
+        out.push_str(&format!("{:<44} {:>12} {:>12} {:>12} {:>9} {:>11}  note\n",
+                              "benchmark", "mean", "p50", "p95", "gflops", "scratch"));
         for r in &self.results {
             let gf = r.gflops.map(|g| format!("{g:>9.2}")).unwrap_or_else(|| " ".repeat(9));
+            let sb = r
+                .scratch_bytes
+                .map(|b| format!("{:>10}B", b))
+                .unwrap_or_else(|| " ".repeat(11));
             out.push_str(&format!(
-                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms {gf}  {}\n",
+                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms {gf} {sb}  {}\n",
                 r.name,
                 r.summary.mean_ms(),
                 r.summary.p50_ns / 1e6,
@@ -100,11 +117,13 @@ impl BenchSuite {
                 r.note
             ));
         }
-        // machine-readable lines
+        // machine-readable lines (scratch bytes appended last so existing
+        // TSV consumers keep their column positions)
         for r in &self.results {
-            out.push_str(&format!("TSV\t{}\t{}\t{:.6}\t{:.6}\t{}\n",
+            let sb = r.scratch_bytes.map(|b| b.to_string()).unwrap_or_default();
+            out.push_str(&format!("TSV\t{}\t{}\t{:.6}\t{:.6}\t{}\t{}\n",
                                   self.title, r.name, r.summary.mean_ms(),
-                                  r.summary.p50_ns / 1e6, r.note));
+                                  r.summary.p50_ns / 1e6, r.note, sb));
         }
         print!("{out}");
         out
@@ -119,14 +138,20 @@ impl BenchSuite {
         out.push_str("  \"results\": [\n");
         for (i, r) in self.results.iter().enumerate() {
             let gf = r.gflops.map(|g| format!("{g:.4}")).unwrap_or_else(|| "null".into());
+            let sb = r
+                .scratch_bytes
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "null".into());
             out.push_str(&format!(
                 "    {{\"name\": \"{}\", \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \
-                 \"p95_ms\": {:.6}, \"gflops\": {}, \"note\": \"{}\"}}{}\n",
+                 \"p95_ms\": {:.6}, \"gflops\": {}, \"scratch_bytes\": {}, \
+                 \"note\": \"{}\"}}{}\n",
                 escape(&r.name),
                 r.summary.mean_ms(),
                 r.summary.p50_ns / 1e6,
                 r.summary.p95_ns / 1e6,
                 gf,
+                sb,
                 escape(&r.note),
                 if i + 1 < self.results.len() { "," } else { "" }
             ));
@@ -184,6 +209,7 @@ mod tests {
         assert!(j.contains("\"title\": \"t\""));
         assert!(j.contains("\"name\": \"kernel\""));
         assert!(j.contains("\"gflops\": null"), "plain bench has no flops: {j}");
+        assert!(j.contains("\"scratch_bytes\": null"), "no scratch registered: {j}");
         assert!(s.results[1].gflops.unwrap() > 0.0);
         // crude structural sanity: one object per result, balanced braces
         assert_eq!(j.matches("\"name\"").count(), 2);
@@ -195,5 +221,16 @@ mod tests {
         let mut s = suite();
         s.bench("q", "say \"hi\"", || {});
         assert!(s.json().contains("say \\\"hi\\\""));
+    }
+
+    #[test]
+    fn scratch_bytes_column_flows_to_json_and_tsv() {
+        let mut s = suite();
+        s.bench("attn", "fused", || {});
+        s.set_scratch_bytes(12544);
+        assert_eq!(s.results[0].scratch_bytes, Some(12544));
+        assert!(s.json().contains("\"scratch_bytes\": 12544"));
+        let rep = s.report();
+        assert!(rep.contains("12544"));
     }
 }

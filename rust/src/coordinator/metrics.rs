@@ -33,6 +33,10 @@ pub struct TrainReport {
     /// worker count of the substrate execution engine during the run
     /// (`sparse::exec::threads()`); 0 when unrecorded
     pub substrate_threads: usize,
+    /// resolved microkernel tier of the substrate during the run
+    /// (`sparse::exec::kernel_name()`: "scalar" / "avx2" / "neon");
+    /// empty when unrecorded
+    pub kernel: String,
 }
 
 impl TrainReport {
@@ -69,6 +73,11 @@ impl TrainReport {
             format!(" threads={}", self.substrate_threads)
         } else {
             String::new()
+        };
+        let thr = if self.kernel.is_empty() {
+            thr
+        } else {
+            format!("{thr} kernel={}", self.kernel)
         };
         format!(
             "{}: steps={} loss {:.4} -> {:.4}{st} thru={:.1}/s params={}{thr}{eval}",
@@ -109,5 +118,10 @@ mod tests {
         r.preset = "gpt2_s_pixelfly".into();
         r.loss_curve = vec![(0, 3.0)];
         assert!(r.summary_line().contains("gpt2_s_pixelfly"));
+        // unrecorded kernel tier stays out of the line...
+        assert!(!r.summary_line().contains("kernel="));
+        // ...and shows up once recorded
+        r.kernel = "avx2".into();
+        assert!(r.summary_line().contains("kernel=avx2"));
     }
 }

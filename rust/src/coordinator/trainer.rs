@@ -62,31 +62,44 @@ enum Sampler {
     Lra(LraDataset),
 }
 
+/// Reused sampling buffers: the steady-state training loop clears and
+/// refills these instead of allocating fresh batch vectors every step, so
+/// host-side batch synthesis stops touching the allocator after step one
+/// (the literal handed to the engine still copies, which is the engine
+/// ABI's cost, not the sampler's).
+#[derive(Default)]
+struct SampleBufs {
+    xf: Vec<f32>,
+    xi: Vec<i32>,
+    y: Vec<i32>,
+}
+
 impl Sampler {
-    fn sample(&self, batch: usize, rng: &mut Rng) -> Result<(Literal, Literal, usize)> {
+    fn sample(&self, batch: usize, rng: &mut Rng, bufs: &mut SampleBufs)
+              -> Result<(Literal, Literal, usize)> {
         match self {
             Sampler::Vision(ds) => {
-                let b = ds.sample(batch, rng);
+                ds.sample_into(batch, rng, &mut bufs.xf, &mut bufs.y);
                 Ok((
-                    engine::f32_literal(&[b.batch, b.seq, b.dim], &b.x)?,
-                    engine::i32_literal(&[b.batch], &b.y)?,
-                    b.batch,
+                    engine::f32_literal(&[batch, ds.seq, ds.dim], &bufs.xf)?,
+                    engine::i32_literal(&[batch], &bufs.y)?,
+                    batch,
                 ))
             }
             Sampler::Corpus(c, seq) => {
-                let b = c.sample(batch, *seq, rng);
+                c.sample_into(batch, *seq, rng, &mut bufs.xi, &mut bufs.y);
                 Ok((
-                    engine::i32_literal(&[b.batch, b.seq], &b.x)?,
-                    engine::i32_literal(&[b.batch, b.seq], &b.y)?,
-                    b.batch * b.seq,
+                    engine::i32_literal(&[batch, *seq], &bufs.xi)?,
+                    engine::i32_literal(&[batch, *seq], &bufs.y)?,
+                    batch * seq,
                 ))
             }
             Sampler::Lra(ds) => {
-                let b = ds.sample(batch, rng);
+                ds.sample_into(batch, rng, &mut bufs.xf, &mut bufs.y);
                 Ok((
-                    engine::f32_literal(&[b.batch, b.seq, b.dim], &b.x)?,
-                    engine::i32_literal(&[b.batch], &b.y)?,
-                    b.batch,
+                    engine::f32_literal(&[batch, ds.seq, ds.dim], &bufs.xf)?,
+                    engine::i32_literal(&[batch], &bufs.y)?,
+                    batch,
                 ))
             }
         }
@@ -104,6 +117,8 @@ pub struct Trainer<'e> {
     state: Vec<Literal>,
     step_lit: Literal,
     step: usize,
+    /// reused batch-synthesis buffers (zero-alloc steady-state sampling)
+    bufs: SampleBufs,
 }
 
 impl<'e> Trainer<'e> {
@@ -146,6 +161,7 @@ impl<'e> Trainer<'e> {
             sampler,
             family,
             cfg,
+            bufs: SampleBufs::default(),
         })
     }
 
@@ -164,7 +180,7 @@ impl<'e> Trainer<'e> {
     /// One optimizer step; returns the loss.
     pub fn step_once(&mut self, rng: &mut Rng) -> Result<f64> {
         let key = format!("{}.train_step", self.cfg.preset);
-        let (x, y, _) = self.sampler.sample(self.batch, rng)?;
+        let (x, y, _) = self.sampler.sample(self.batch, rng, &mut self.bufs)?;
         let lr = engine::f32_scalar(self.lr_at(self.step))?;
         let mut args: Vec<&Literal> = self.state.iter().collect();
         args.push(&self.step_lit);
@@ -209,8 +225,10 @@ impl<'e> Trainer<'e> {
             compile_ms,
             // host-side substrate work (batch synthesis, NTK checks, any
             // fallback math) runs on the execution engine's pool; record
-            // the effective width so runs are comparable across machines
+            // the effective width and the resolved kernel tier so runs
+            // are comparable across machines
             substrate_threads: exec::threads(),
+            kernel: exec::kernel_name().to_string(),
             ..Default::default()
         };
         let mut times = Vec::new();
@@ -261,7 +279,7 @@ impl<'e> Trainer<'e> {
         let mut total_correct = 0usize;
         let mut total_n = 0usize;
         for _ in 0..n_batches {
-            let (x, y, _) = self.sampler.sample(self.batch, &mut rng)?;
+            let (x, y, _) = self.sampler.sample(self.batch, &mut rng, &mut self.bufs)?;
             let mut args: Vec<&Literal> = self.state[..self.n_leaves].iter().collect();
             args.push(&x);
             args.push(&y);

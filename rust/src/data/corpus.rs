@@ -36,25 +36,32 @@ impl MarkovCorpus {
     }
 
     pub fn sample(&self, batch: usize, seq: usize, rng: &mut Rng) -> TokenBatch {
-        let mut x = Vec::with_capacity(batch * seq);
-        let mut y = Vec::with_capacity(batch * seq);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        self.sample_into(batch, seq, rng, &mut x, &mut y);
+        TokenBatch { x, y, batch, seq }
+    }
+
+    /// Fill caller-owned buffers (cleared first); the chain is generated
+    /// streaming — `y[t] = x[t+1]` falls out of pushing (prev, next)
+    /// pairs — so steady-state sampling allocates nothing at all.
+    pub fn sample_into(&self, batch: usize, seq: usize, rng: &mut Rng,
+                       x: &mut Vec<i32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        x.reserve(batch * seq);
+        y.reserve(batch * seq);
         for _ in 0..batch {
             let mut prev = rng.below(self.vocab);
-            let mut toks = Vec::with_capacity(seq + 1);
-            toks.push(prev);
             for _ in 0..seq {
                 // token ranks permuted per bucket so the mapping differs
                 let r = rng.zipf(&self.trans[self.bucket(prev)]);
                 let tok = (r * 31 + self.bucket(prev) * 7) % self.vocab;
-                toks.push(tok);
+                x.push(prev as i32);
+                y.push(tok as i32);
                 prev = tok;
             }
-            for t in 0..seq {
-                x.push(toks[t] as i32);
-                y.push(toks[t + 1] as i32);
-            }
         }
-        TokenBatch { x, y, batch, seq }
     }
 
     /// Unigram entropy estimate (nats) from a sample — the ppl ceiling a

@@ -54,32 +54,46 @@ pub struct LraDataset {
     pub task: LraTask,
     pub seq: usize,
     pub dim: usize,
+    /// token-embedding table, precomputed once at construction (it used
+    /// to be rebuilt — 64 fresh Vecs — on every `sample` call)
+    tbl: Vec<Vec<f32>>,
 }
 
 impl LraDataset {
     pub fn new(task: LraTask, seq: usize, dim: usize) -> Self {
-        LraDataset { task, seq, dim }
-    }
-
-    fn embed(&self, tokens: &[usize], rng_tbl: &[Vec<f32>]) -> Vec<f32> {
-        let mut x = Vec::with_capacity(tokens.len() * self.dim);
-        for &t in tokens {
-            x.extend_from_slice(&rng_tbl[t % rng_tbl.len()]);
-        }
-        x
+        LraDataset { task, seq, dim, tbl: Self::table(task, dim, 64) }
     }
 
     /// Deterministic token-embedding table per task.
-    fn table(&self, vocab: usize) -> Vec<Vec<f32>> {
-        let mut rng = Rng::new(0xE_B_E_D ^ self.task.name().len() as u64);
+    fn table(task: LraTask, dim: usize, vocab: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(0xE_B_E_D ^ task.name().len() as u64);
         (0..vocab)
-            .map(|_| rng.normal_vec(self.dim, 1.0 / (self.dim as f32).sqrt()))
+            .map(|_| rng.normal_vec(dim, 1.0 / (dim as f32).sqrt()))
             .collect()
     }
 
+    fn embed_into(&self, tokens: &[usize], x: &mut Vec<f32>) {
+        for &t in tokens {
+            x.extend_from_slice(&self.tbl[t % self.tbl.len()]);
+        }
+    }
+
     pub fn sample(&self, batch: usize, rng: &mut Rng) -> Batch {
-        let (mut xs, mut ys) = (Vec::new(), Vec::new());
-        let tbl = self.table(64);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        self.sample_into(batch, rng, &mut x, &mut y);
+        Batch { x, y, batch, seq: self.seq, dim: self.dim }
+    }
+
+    /// Fill caller-owned buffers (cleared first). Token generation still
+    /// allocates one small per-example token Vec; the embedding table and
+    /// the big feature buffer no longer allocate per batch.
+    pub fn sample_into(&self, batch: usize, rng: &mut Rng,
+                       x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        x.reserve(batch * self.seq * self.dim);
+        y.reserve(batch);
         for _ in 0..batch {
             let (tokens, label) = match self.task {
                 LraTask::ListOps => self.gen_listops(rng),
@@ -88,10 +102,9 @@ impl LraDataset {
                 LraTask::Image => self.gen_image(rng),
                 LraTask::Pathfinder => self.gen_pathfinder(rng),
             };
-            xs.extend(self.embed(&tokens, &tbl));
-            ys.push(label as i32);
+            self.embed_into(&tokens, x);
+            y.push(label as i32);
         }
-        Batch { x: xs, y: ys, batch, seq: self.seq, dim: self.dim }
     }
 
     fn gen_listops(&self, rng: &mut Rng) -> (Vec<usize>, usize) {

@@ -49,8 +49,21 @@ impl VisionDataset {
     }
 
     pub fn sample(&self, batch: usize, rng: &mut Rng) -> Batch {
-        let mut x = Vec::with_capacity(batch * self.seq * self.dim);
-        let mut y = Vec::with_capacity(batch);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        self.sample_into(batch, rng, &mut x, &mut y);
+        Batch { x, y, batch, seq: self.seq, dim: self.dim }
+    }
+
+    /// Fill caller-owned buffers (cleared first). The trainer's steady-
+    /// state loop reuses its buffers across steps, so sampling stops
+    /// allocating once the first batch has sized them.
+    pub fn sample_into(&self, batch: usize, rng: &mut Rng,
+                       x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        x.reserve(batch * self.seq * self.dim);
+        y.reserve(batch);
         for _ in 0..batch {
             let k = rng.below(self.n_classes);
             y.push(k as i32);
@@ -60,7 +73,6 @@ impl VisionDataset {
                 }
             }
         }
-        Batch { x, y, batch, seq: self.seq, dim: self.dim }
     }
 }
 

@@ -30,6 +30,12 @@ fn main() -> Result<()> {
         let n: usize = n.parse().map_err(|_| anyhow::anyhow!("--threads expects an integer"))?;
         exec::set_threads(n);
     }
+    // Microkernel tier: --kernel beats PIXELFLY_KERNEL beats auto-detect.
+    if let Some(k) = args.get("kernel") {
+        let choice = exec::KernelChoice::parse(k)
+            .ok_or_else(|| anyhow::anyhow!("--kernel expects auto|scalar|simd, got {k:?}"))?;
+        exec::set_kernel(choice);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -61,7 +67,9 @@ fn print_help() {
          microbench   [--n 1024 --batch 256]  (Table 7)\n\
          flatbench    [--n 1024 --batch 512]  (Fig 11)\n\
          list\n\n\
-         Global: --threads N (substrate workers; also PIXELFLY_THREADS).\n\
+         Global: --threads N (substrate workers; also PIXELFLY_THREADS),\n\
+                 --kernel auto|scalar|simd (microkernel tier; also\n\
+                 PIXELFLY_KERNEL; auto picks AVX2/NEON when available).\n\
          Commands that execute artifacts need a build with --features pjrt."
     );
 }
@@ -310,7 +318,7 @@ fn cmd_microbench(args: &Args) -> Result<()> {
     let threads = exec::threads();
     let mut rng = Rng::new(0);
     let x = Matrix::randn(batch, n, 1.0, &mut rng);
-    println!("substrate threads: {threads}");
+    println!("substrate threads: {threads}  kernel tier: {}", exec::kernel_name());
     println!("{:<12} {:>10} {:>16} {:>14} {:>12} {:>12} {:>9}",
              "pattern", "block", "expected dens", "actual dens",
              "serial(ms)", "engine(ms)", "speedup");

@@ -1,142 +1,419 @@
-//! Block-sparse attention on the Rust substrate (measured counterpart of
-//! the Pallas kernel; used by the Fig 7 / Fig 9 microbenches and the
-//! Reformer-style baseline, whose per-batch mask makes AOT impossible —
+//! Fused streaming block-sparse attention on the Rust substrate (measured
+//! counterpart of the Pallas kernel; used by the Fig 7 / Fig 9 benches and
+//! the Reformer-style baseline, whose per-batch mask makes AOT impossible —
 //! exactly the paper's point about dynamic sparsity).
 //!
 //! Layout: q, k, v are [seq, d] row-major (single head; callers loop
-//! heads).  The kernel walks only the visible key blocks of each query
-//! block row with a streaming (online-softmax) accumulator — the same
-//! algorithm as `kernels/attention.py`, so the two can be cross-checked.
+//! heads). The engine mirrors the BSR GEMM plan/executor split:
+//!
+//! - [`AttnPlan`] inverts the [`BlockMask`] once into per-query-block-row
+//!   visible-key lists (causal-filtered at block level), partitions the
+//!   block rows into chunks weighted by visible blocks, and carries a
+//!   structure fingerprint; plans are cached process-wide by
+//!   (mask, causal, threads), mirroring `BsrMatrix::plan`.
+//! - [`AttnPlan::execute`] is the fused single-pass kernel: one `b×b`
+//!   score tile + a running (max, denominator, output-accumulator) per
+//!   query row — the online softmax of `kernels/attention.py` — so no
+//!   `seq×seq` (or even per-row `seq`-length) score buffer ever exists.
+//!   Scratch is O(b² + b·d) per worker, L1-resident, and checked out of a
+//!   [`Workspace`] so the steady state is allocation-free.
+//! - Chunks run as nnz-weighted tasks on the engine pool
+//!   ([`pool::run_tasks_with`]): chunks partition the query block rows, so
+//!   each worker owns a disjoint slice of the output by construction.
+//! - The inner products / AXPYs route through the kernel dispatch tier
+//!   ([`exec::simd`]): AVX2/NEON where available, scalar otherwise.
+//!
+//! [`AttnPlan::execute_materializing`] keeps the pre-fusion two-pass
+//! kernel (per-row `seq`-length score buffer) as the memory-traffic
+//! baseline the Fig 7 bench reports against, and [`dense_attention`] /
+//! [`dense_attention_masked`] are the O(seq²) correctness oracles.
+
+use std::ops::Range;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::patterns::BlockMask;
 use crate::sparse::dense::Matrix;
-use crate::sparse::exec::{self, pool};
+use crate::sparse::exec::{self, pool, simd, Workspace};
 
-/// Streaming block-sparse attention for one head.
-/// `mask` is [seq/b, seq/b]; rows must be non-empty.
-///
-/// Parallelised over query block rows through the execution engine's
-/// pool: block rows are partitioned into contiguous ranges weighted by
-/// their visible key blocks (the nnz that governs the work), and each
-/// scoped worker owns a disjoint `split_at_mut` slice of the output, so
-/// the parallelism is race-free by construction.
-pub fn block_sparse_attention(q: &Matrix, k: &Matrix, v: &Matrix,
-                              mask: &BlockMask, causal: bool) -> Matrix {
-    let (seq, d) = (q.rows, q.cols);
-    let nb = mask.rows;
-    let b = seq / nb;
-    assert_eq!(nb * b, seq);
-    let scale = 1.0 / (d as f32).sqrt();
-    let mut out = Matrix::zeros(seq, d);
+/// Target chunks per worker; >1 so the pull-based cursor can rebalance.
+const CHUNKS_PER_THREAD: usize = 4;
 
-    let threads = exec::threads();
-    // per query block row the work is ~2·(visible blocks)·b²·d flops for
-    // the qk dots alone; weight the split by visible blocks and share the
-    // engine-wide serial-fallback threshold
-    let weights: Vec<usize> =
-        (0..nb).map(|qb| mask.row_cols(qb).len().max(1)).collect();
-    let flops = 2.0 * (weights.iter().sum::<usize>() * b * b * d) as f64;
-    let ranges = if threads <= 1 || flops < exec::MIN_PAR_FLOPS {
-        vec![0..nb]
-    } else {
-        pool::weighted_ranges(&weights, threads)
-    };
+/// Plans cached process-wide (attention masks recur across layers/steps).
+const PLAN_CACHE_CAP: usize = 32;
 
-    if ranges.len() == 1 {
-        attention_rows(q, k, v, mask, causal, scale, b, 0..nb, &mut out.data);
-        return out;
-    }
-    std::thread::scope(|s| {
-        let mut rest: &mut [f32] = out.data.as_mut_slice();
-        for r in ranges {
-            let chunk_len = (r.end - r.start) * b * d;
-            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(chunk_len);
-            rest = tail;
-            s.spawn(move || attention_rows(q, k, v, mask, causal, scale, b, r, mine));
-        }
-    });
-    out
+/// Reusable execution schedule for one (mask, causal, threads) attention
+/// structure — the attention counterpart of [`exec::GemmPlan`].
+#[derive(Debug)]
+pub struct AttnPlan {
+    nb: usize,
+    causal: bool,
+    threads: usize,
+    fingerprint: u64,
+    /// row_ptr[qb]..row_ptr[qb+1] indexes `kbs` for query block row qb
+    row_ptr: Vec<usize>,
+    /// visible key blocks per query block row, causal-filtered
+    kbs: Vec<u32>,
+    /// ranges over query block rows, balanced by visible-block weight
+    chunks: Vec<Range<usize>>,
+    visible_blocks: usize,
 }
 
-/// Streaming attention over the query block rows `qbs`; `out_chunk` holds
-/// exactly those rows of the output.
-#[allow(clippy::too_many_arguments)]
-fn attention_rows(q: &Matrix, k: &Matrix, v: &Matrix, mask: &BlockMask,
-                  causal: bool, scale: f32, b: usize,
-                  qbs: std::ops::Range<usize>, out_chunk: &mut [f32]) {
-    let d = q.cols;
-    let mut scores = vec![0.0f32; b];
-    let qb0 = qbs.start;
-    for qb in qbs {
-        // per-query-row streaming state
-        let mut m = vec![f32::NEG_INFINITY; b];
-        let mut l = vec![0.0f32; b];
-        let mut acc = vec![0.0f32; b * d];
-        for kb in mask.row_cols(qb) {
-            if causal && kb > qb {
-                continue;
+/// Fingerprint of the mask support + causal flag (the schedule — and the
+/// cache identity — depend on exactly these), through the engine-wide
+/// FNV-1a helper shared with the GEMM plan.
+fn mask_fingerprint(mask: &BlockMask, causal: bool) -> u64 {
+    let set_bits = (0..mask.rows)
+        .flat_map(|r| (0..mask.cols).map(move |c| (r, c)))
+        .filter(|&(r, c)| mask.get(r, c))
+        .map(|(r, c)| (r * mask.cols + c) as u64);
+    exec::plan::fnv1a(
+        [mask.rows as u64, mask.cols as u64, causal as u64]
+            .into_iter()
+            .chain(set_bits),
+    )
+}
+
+impl AttnPlan {
+    /// Build the schedule for `mask` targeting `threads` workers. Causal
+    /// filtering happens here, at block granularity, so the executor only
+    /// ever masks inside diagonal blocks.
+    pub fn new(mask: &BlockMask, causal: bool, threads: usize) -> Self {
+        assert_eq!(mask.rows, mask.cols, "attention masks are square over seq blocks");
+        let nb = mask.rows;
+        let threads = threads.max(1);
+        let mut row_ptr = Vec::with_capacity(nb + 1);
+        let mut kbs = Vec::new();
+        row_ptr.push(0);
+        for qb in 0..nb {
+            for kb in 0..nb {
+                if mask.get(qb, kb) && (!causal || kb <= qb) {
+                    kbs.push(kb as u32);
+                }
             }
+            row_ptr.push(kbs.len());
+        }
+        let weights: Vec<usize> =
+            (0..nb).map(|qb| (row_ptr[qb + 1] - row_ptr[qb]).max(1)).collect();
+        let chunks = pool::weighted_ranges(&weights, threads * CHUNKS_PER_THREAD);
+        AttnPlan {
+            nb,
+            causal,
+            threads,
+            fingerprint: mask_fingerprint(mask, causal),
+            visible_blocks: kbs.len(),
+            row_ptr,
+            kbs,
+            chunks,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn causal(&self) -> bool {
+        self.causal
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Visible (query block, key block) pairs after causal filtering —
+    /// the nnz that governs both work and the flop count.
+    pub fn visible_blocks(&self) -> usize {
+        self.visible_blocks
+    }
+
+    /// Flops of one execution at block size `b`, head dim `d`
+    /// (qk^T and p·v are 2·b²·d each per visible block).
+    pub fn flops(&self, b: usize, d: usize) -> f64 {
+        (self.visible_blocks * 4 * b * b * d) as f64
+    }
+
+    /// Per-worker scratch elements at block size `b`, head dim `d`: one
+    /// b×b score tile + running max + denominator + b×d accumulator.
+    /// Crucially independent of `seq` — the bench harness asserts this is
+    /// the whole scratch footprint.
+    pub fn scratch_elems(b: usize, d: usize) -> usize {
+        b * b + 2 * b + b * d
+    }
+
+    fn workers_for(&self, b: usize, d: usize) -> usize {
+        if self.threads <= 1 || self.flops(b, d) < exec::MIN_PAR_FLOPS {
+            1
+        } else {
+            self.threads.min(self.chunks.len()).max(1)
+        }
+    }
+
+    /// Validate q/k/v/out shapes against the plan grid; returns (b, d).
+    fn check_shapes(&self, q: &Matrix, k: &Matrix, v: &Matrix, out: &Matrix)
+                    -> (usize, usize) {
+        let (seq, d) = (q.rows, q.cols);
+        assert_eq!((k.rows, k.cols), (seq, d));
+        assert_eq!((v.rows, v.cols), (seq, d));
+        assert_eq!((out.rows, out.cols), (seq, d));
+        assert_eq!(seq % self.nb, 0, "seq must be divisible by the mask grid");
+        (seq / self.nb, d)
+    }
+
+    /// Shared executor skeleton for both kernels: checks out one scratch
+    /// buffer of `per` floats per worker from `ws`, then runs
+    /// `f(qb, out_rows, scratch)` over every query block row — serially,
+    /// or as chunk tasks on the pool with each worker owning a private
+    /// scratch slice. The unsafe disjoint-write argument lives here, once.
+    fn run_block_rows<F>(&self, out: &mut Matrix, b: usize, d: usize, per: usize,
+                         ws: &mut Workspace, f: F)
+    where
+        F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+    {
+        let workers = self.workers_for(b, d);
+        let mut scratch = ws.take(per * workers);
+        if workers == 1 {
+            let s = &mut scratch[..per];
+            for qb in 0..self.nb {
+                let orows = &mut out.data[qb * b * d..(qb + 1) * b * d];
+                f(qb, orows, s);
+            }
+        } else {
+            struct OutPtr(*mut f32);
+            unsafe impl Sync for OutPtr {}
+            let base = OutPtr(out.data.as_mut_ptr());
+            let mut parts: Vec<&mut [f32]> = scratch.chunks_mut(per).collect();
+            pool::run_tasks_with(self.chunks.len(), &mut parts, |part, c| {
+                // capture the whole wrapper (not the raw-pointer field) so
+                // the closure stays Sync under edition-2021 precise capture
+                let base = &base;
+                for qb in self.chunks[c].clone() {
+                    // Safety: chunks partition 0..nb, so this task owns
+                    // output rows qb*b..(qb+1)*b exclusively; bounds
+                    // follow from the caller's shape asserts.
+                    let orows = unsafe {
+                        std::slice::from_raw_parts_mut(base.0.add(qb * b * d), b * d)
+                    };
+                    f(qb, orows, part);
+                }
+            });
+        }
+        ws.give(scratch);
+    }
+
+    /// Fused single-pass execution: `out = softmax(q·kᵀ/√d ⊙ mask)·v`.
+    /// Scratch comes from `ws` (zero-alloc once warm).
+    pub fn execute(&self, q: &Matrix, k: &Matrix, v: &Matrix, out: &mut Matrix,
+                   ws: &mut Workspace) {
+        let (b, d) = self.check_shapes(q, k, v, out);
+        let scale = 1.0 / (d as f32).sqrt();
+        // resolve the kernel tier once; the inner loops call the
+        // pre-resolved primitives
+        let tier = simd::active_tier();
+        self.run_block_rows(out, b, d, Self::scratch_elems(b, d), ws,
+                            |qb, orows, scratch| {
+            self.fused_block_row(tier, q, k, v, scale, b, d, qb, orows, scratch);
+        });
+    }
+
+    /// One query block row, streaming over its visible key blocks with an
+    /// online-softmax accumulator. `scratch` is `scratch_elems(b, d)`
+    /// floats; `out_rows` is exactly this block row of the output.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_block_row(&self, tier: simd::Tier, q: &Matrix, k: &Matrix, v: &Matrix,
+                       scale: f32, b: usize, d: usize, qb: usize,
+                       out_rows: &mut [f32], scratch: &mut [f32]) {
+        let (scores, rest) = scratch.split_at_mut(b * b);
+        let (m, rest) = rest.split_at_mut(b);
+        let (l, acc_all) = rest.split_at_mut(b);
+        let acc = &mut acc_all[..b * d];
+        m.fill(f32::NEG_INFINITY);
+        l.fill(0.0);
+        acc.fill(0.0);
+        for &kb in &self.kbs[self.row_ptr[qb]..self.row_ptr[qb + 1]] {
+            let kb = kb as usize;
+            // score tile S = (Q_qb · K_kbᵀ)·scale — b×b, L1-resident
             for qi in 0..b {
                 let qrow = q.row(qb * b + qi);
-                let qpos = qb * b + qi;
-                // scores for this key block
-                let mut row_max = f32::NEG_INFINITY;
-                for ki in 0..b {
-                    let kpos = kb * b + ki;
-                    let s = if causal && kpos > qpos {
-                        f32::NEG_INFINITY
-                    } else {
-                        let krow = k.row(kpos);
-                        let mut dot = 0.0f32;
-                        for t in 0..d {
-                            dot += qrow[t] * krow[t];
-                        }
-                        dot * scale
-                    };
-                    scores[ki] = s;
-                    row_max = row_max.max(s);
+                let srow = &mut scores[qi * b..(qi + 1) * b];
+                for (ki, s) in srow.iter_mut().enumerate() {
+                    *s = simd::dot_with(tier, qrow, k.row(kb * b + ki)) * scale;
                 }
+                if self.causal && kb == qb {
+                    // inside the diagonal block, kpos > qpos ⇔ ki > qi
+                    for s in srow[qi + 1..].iter_mut() {
+                        *s = f32::NEG_INFINITY;
+                    }
+                }
+            }
+            // online-softmax update per query row
+            for qi in 0..b {
+                let srow = &scores[qi * b..(qi + 1) * b];
+                let row_max = srow.iter().fold(f32::NEG_INFINITY, |a, &s| a.max(s));
                 if row_max == f32::NEG_INFINITY {
                     continue;
                 }
                 let m_new = m[qi].max(row_max);
-                let alpha = if m[qi].is_finite() { (m[qi] - m_new).exp() } else { 0.0 };
+                // exp(-inf - finite) = 0, so a fresh row rescales cleanly
+                let alpha = (m[qi] - m_new).exp();
                 l[qi] *= alpha;
                 let arow = &mut acc[qi * d..(qi + 1) * d];
                 if alpha != 1.0 {
-                    for t in 0..d {
-                        arow[t] *= alpha;
-                    }
+                    simd::scale_with(tier, arow, alpha);
                 }
-                for ki in 0..b {
-                    if scores[ki] == f32::NEG_INFINITY {
+                for (ki, &s) in srow.iter().enumerate() {
+                    if s == f32::NEG_INFINITY {
                         continue;
                     }
-                    let p = (scores[ki] - m_new).exp();
+                    let p = (s - m_new).exp();
                     l[qi] += p;
-                    let vrow = v.row(kb * b + ki);
-                    for t in 0..d {
-                        arow[t] += p * vrow[t];
-                    }
+                    simd::axpy_with(tier, p, v.row(kb * b + ki), arow);
                 }
                 m[qi] = m_new;
             }
         }
         for qi in 0..b {
-            let r = (qb - qb0) * b + qi;
-            let orow = &mut out_chunk[r * d..(r + 1) * d];
-            let denom = l[qi].max(1e-30);
+            let inv = 1.0 / l[qi].max(1e-30);
             let arow = &acc[qi * d..(qi + 1) * d];
-            for t in 0..d {
-                orow[t] = arow[t] / denom;
+            let orow = &mut out_rows[qi * d..(qi + 1) * d];
+            for (o, &a) in orow.iter_mut().zip(arow) {
+                *o = a * inv;
+            }
+        }
+    }
+
+    /// The pre-fusion two-pass kernel: per query row, materialise a
+    /// `seq`-length score buffer over the visible blocks, then softmax,
+    /// then the weighted V pass. Kept as the memory-traffic baseline the
+    /// Fig 7 bench compares the fused path against (same schedule, same
+    /// parallelism — the delta is purely the materialisation).
+    pub fn execute_materializing(&self, q: &Matrix, k: &Matrix, v: &Matrix,
+                                 out: &mut Matrix, ws: &mut Workspace) {
+        let (b, d) = self.check_shapes(q, k, v, out);
+        let seq = q.rows;
+        let scale = 1.0 / (d as f32).sqrt();
+        let tier = simd::active_tier();
+        self.run_block_rows(out, b, d, seq, ws, |qb, orows, scratch| {
+            self.two_pass_block_row(tier, q, k, v, scale, b, d, seq, qb, orows, scratch);
+        });
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn two_pass_block_row(&self, tier: simd::Tier, q: &Matrix, k: &Matrix, v: &Matrix,
+                          scale: f32, b: usize, d: usize, seq: usize, qb: usize,
+                          out_rows: &mut [f32], scores: &mut [f32]) {
+        let kbs = &self.kbs[self.row_ptr[qb]..self.row_ptr[qb + 1]];
+        for qi in 0..b {
+            let qpos = qb * b + qi;
+            let qrow = q.row(qpos);
+            let orow = &mut out_rows[qi * d..(qi + 1) * d];
+            orow.fill(0.0);
+            // pass 1: materialise the full seq-length score row (the
+            // traffic the fused kernel exists to avoid)
+            scores.fill(f32::NEG_INFINITY);
+            let mut mx = f32::NEG_INFINITY;
+            for &kb in kbs {
+                let kb = kb as usize;
+                for ki in 0..b {
+                    let kpos = kb * b + ki;
+                    if self.causal && kpos > qpos {
+                        continue;
+                    }
+                    let s = simd::dot_with(tier, qrow, k.row(kpos)) * scale;
+                    scores[kpos] = s;
+                    mx = mx.max(s);
+                }
+            }
+            if mx == f32::NEG_INFINITY {
+                continue;
+            }
+            // pass 2: softmax + weighted V
+            let mut z = 0.0f32;
+            for s in scores.iter_mut() {
+                if s.is_finite() {
+                    *s = (*s - mx).exp();
+                    z += *s;
+                } else {
+                    *s = 0.0;
+                }
+            }
+            let inv = 1.0 / z.max(1e-30);
+            for (j, &p) in scores.iter().enumerate() {
+                if p > 0.0 {
+                    simd::axpy_with(tier, p * inv, v.row(j), orow);
+                }
             }
         }
     }
 }
 
+fn plan_cache() -> &'static Mutex<Vec<Arc<AttnPlan>>> {
+    static CACHE: OnceLock<Mutex<Vec<Arc<AttnPlan>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Fetch (or build and cache) the plan for this structure — the attention
+/// analogue of the `BsrMatrix` plan cache, keyed by the mask fingerprint,
+/// causal flag and thread count.
+pub fn plan_for(mask: &BlockMask, causal: bool, threads: usize) -> Arc<AttnPlan> {
+    let threads = threads.max(1);
+    let fp = mask_fingerprint(mask, causal);
+    let mut cache = plan_cache().lock().unwrap();
+    if let Some(p) = cache
+        .iter()
+        .find(|p| p.fingerprint == fp && p.causal == causal && p.threads == threads
+                  && p.nb == mask.rows)
+    {
+        return Arc::clone(p);
+    }
+    let p = Arc::new(AttnPlan::new(mask, causal, threads));
+    cache.push(Arc::clone(&p));
+    if cache.len() > PLAN_CACHE_CAP {
+        cache.remove(0);
+    }
+    p
+}
+
+/// Fused streaming block-sparse attention for one head (allocating
+/// wrapper: plans from the process cache, scratch from the thread-local
+/// workspace, so even this path is zero-alloc in steady state apart from
+/// the output itself).
+pub fn block_sparse_attention(q: &Matrix, k: &Matrix, v: &Matrix,
+                              mask: &BlockMask, causal: bool) -> Matrix {
+    let mut out = Matrix::zeros(q.rows, q.cols);
+    block_sparse_attention_into(q, k, v, mask, causal, &mut out);
+    out
+}
+
+/// Fused attention into a caller-owned output (scratch from the
+/// thread-local workspace).
+pub fn block_sparse_attention_into(q: &Matrix, k: &Matrix, v: &Matrix,
+                                   mask: &BlockMask, causal: bool,
+                                   out: &mut Matrix) {
+    let plan = plan_for(mask, causal, exec::threads());
+    exec::workspace::with_thread_workspace(|ws| plan.execute(q, k, v, out, ws));
+}
+
 /// Dense attention reference (oracle).
 pub fn dense_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matrix {
+    dense_attention_impl(q, k, v, None, causal)
+}
+
+/// Masked dense attention reference: softmax over exactly the positions
+/// the block mask admits. The O(seq²) oracle the fused engine is tested
+/// against on sparse masks (rows with no visible key get a zero output,
+/// matching the streaming kernel's convention).
+pub fn dense_attention_masked(q: &Matrix, k: &Matrix, v: &Matrix,
+                              mask: &BlockMask, causal: bool) -> Matrix {
+    dense_attention_impl(q, k, v, Some(mask), causal)
+}
+
+fn dense_attention_impl(q: &Matrix, k: &Matrix, v: &Matrix,
+                        mask: Option<&BlockMask>, causal: bool) -> Matrix {
     let (seq, d) = (q.rows, q.cols);
+    let b = mask.map(|m| {
+        assert_eq!(m.rows, m.cols, "attention masks are square over seq blocks");
+        assert_eq!(seq % m.rows, 0);
+        seq / m.rows
+    });
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Matrix::zeros(seq, d);
     let mut row = vec![0.0f32; seq];
@@ -144,7 +421,9 @@ pub fn dense_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matr
         let qi = q.row(i);
         let mut mx = f32::NEG_INFINITY;
         for j in 0..seq {
-            row[j] = if causal && j > i {
+            let visible = !(causal && j > i)
+                && mask.map_or(true, |m| m.get(i / b.unwrap(), j / b.unwrap()));
+            row[j] = if !visible {
                 f32::NEG_INFINITY
             } else {
                 let kj = k.row(j);
@@ -155,6 +434,9 @@ pub fn dense_attention(q: &Matrix, k: &Matrix, v: &Matrix, causal: bool) -> Matr
                 dot * scale
             };
             mx = mx.max(row[j]);
+        }
+        if mx == f32::NEG_INFINITY {
+            continue; // fully masked row: zero output
         }
         let mut z = 0.0f32;
         for j in 0..seq {
@@ -216,60 +498,44 @@ mod tests {
         let (q, k, v) = qkv(32, 8, 3);
         let mask = baselines::pixelfly_attention_mask(4, 2, 1);
         let a = block_sparse_attention(&q, &k, &v, &mask, false);
-        // masked-dense oracle: -inf outside visible blocks
-        let seq = 32;
-        let b = 8;
-        let mut kk = k.clone();
-        // build by zeroing via huge negative scores: emulate by computing
-        // dense attention over a k whose invisible rows can't be seen from
-        // each q row — do it directly instead:
-        let scale = 1.0 / (8f32).sqrt();
-        let mut want = Matrix::zeros(seq, 8);
-        for i in 0..seq {
-            let qb = i / b;
-            let mut row = vec![f32::NEG_INFINITY; seq];
-            let mut mx = f32::NEG_INFINITY;
-            for j in 0..seq {
-                if mask.get(qb, j / b) {
-                    let mut dot = 0.0;
-                    for t in 0..8 {
-                        dot += q.get(i, t) * kk.get(j, t);
-                    }
-                    row[j] = dot * scale;
-                    mx = mx.max(row[j]);
-                }
-            }
-            let mut z = 0.0;
-            for j in 0..seq {
-                if row[j].is_finite() {
-                    row[j] = (row[j] - mx).exp();
-                    z += row[j];
-                } else {
-                    row[j] = 0.0;
-                }
-            }
-            for j in 0..seq {
-                if row[j] > 0.0 {
-                    for t in 0..8 {
-                        let w = want.get(i, t) + row[j] / z * v.get(j, t);
-                        want.set(i, t, w);
-                    }
-                }
-            }
-        }
-        kk.data.clear(); // silence unused-mut lint paths
+        let want = dense_attention_masked(&q, &k, &v, &mask, false);
+        assert!(a.max_abs_diff(&want) < 1e-4, "{}", a.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn causal_sparse_mask_matches_masked_dense() {
+        let (q, k, v) = qkv(64, 8, 6);
+        let mask = baselines::pixelfly_attention_mask(8, 4, 1);
+        let a = block_sparse_attention(&q, &k, &v, &mask, true);
+        let want = dense_attention_masked(&q, &k, &v, &mask, true);
         assert!(a.max_abs_diff(&want) < 1e-4, "{}", a.max_abs_diff(&want));
     }
 
     #[test]
     fn parallel_split_matches_dense() {
-        // big enough to clear the parallel threshold, so the weighted
-        // split + scoped workers actually run (when >1 core is available)
+        // big enough to clear the parallel threshold, so the chunked
+        // executor actually fans out (when >1 core is available)
         let (q, k, v) = qkv(512, 16, 5);
         let mask = crate::patterns::BlockMask::ones(16, 16);
         let a = block_sparse_attention(&q, &k, &v, &mask, true);
         let b = dense_attention(&q, &k, &v, true);
         assert!(a.max_abs_diff(&b) < 1e-3, "{}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn materializing_path_matches_fused() {
+        let (q, k, v) = qkv(64, 8, 7);
+        let mask = baselines::pixelfly_attention_mask(8, 2, 1);
+        for causal in [false, true] {
+            let plan = AttnPlan::new(&mask, causal, 2);
+            let mut ws = Workspace::new();
+            let mut fused = Matrix::zeros(64, 8);
+            plan.execute(&q, &k, &v, &mut fused, &mut ws);
+            let mut two_pass = Matrix::zeros(64, 8);
+            plan.execute_materializing(&q, &k, &v, &mut two_pass, &mut ws);
+            assert!(fused.max_abs_diff(&two_pass) < 1e-4,
+                    "causal={causal}: {}", fused.max_abs_diff(&two_pass));
+        }
     }
 
     #[test]
@@ -281,5 +547,58 @@ mod tests {
         for x in &o.data {
             assert!((x - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn empty_mask_rows_produce_zero_output() {
+        let (q, k, v) = qkv(32, 8, 8);
+        let mut mask = crate::patterns::BlockMask::zeros(4, 4);
+        mask.set(0, 0, true); // only the first block row sees anything
+        let a = block_sparse_attention(&q, &k, &v, &mask, false);
+        let want = dense_attention_masked(&q, &k, &v, &mask, false);
+        assert!(a.max_abs_diff(&want) < 1e-4);
+        assert!(a.data[8 * 8..].iter().all(|&x| x == 0.0),
+                "masked-out rows must be zero");
+    }
+
+    #[test]
+    fn steady_state_is_zero_alloc_and_scratch_is_block_bounded() {
+        let (q, k, v) = qkv(128, 16, 9);
+        let mask = crate::patterns::BlockMask::ones(8, 8); // b = 16
+        let plan = AttnPlan::new(&mask, false, 2);
+        let mut out = Matrix::zeros(128, 16);
+        let mut ws = Workspace::new();
+        plan.execute(&q, &k, &v, &mut out, &mut ws);
+        let warm = ws.alloc_events();
+        for _ in 0..3 {
+            plan.execute(&q, &k, &v, &mut out, &mut ws);
+        }
+        assert_eq!(ws.alloc_events(), warm, "hot path must not allocate");
+        // scratch is O(workers · (b² + b·d)), never O(seq²) or O(seq)/row
+        let bound = 2 * AttnPlan::scratch_elems(16, 16) * 4;
+        assert!(ws.peak_bytes() <= bound,
+                "peak {} > bound {bound}", ws.peak_bytes());
+    }
+
+    #[test]
+    fn plan_cache_reuses_identical_structures() {
+        let mask = baselines::pixelfly_attention_mask(8, 2, 1);
+        let p1 = plan_for(&mask, true, 3);
+        let p2 = plan_for(&mask, true, 3);
+        assert!(Arc::ptr_eq(&p1, &p2), "same structure must hit the cache");
+        let p3 = plan_for(&mask, false, 3);
+        assert!(!Arc::ptr_eq(&p1, &p3), "causal flag is part of the key");
+        let p4 = plan_for(&mask, true, 5);
+        assert!(!Arc::ptr_eq(&p1, &p4), "thread count is part of the key");
+    }
+
+    #[test]
+    fn causal_plan_filters_blocks_above_diagonal() {
+        let mask = crate::patterns::BlockMask::ones(6, 6);
+        let causal = AttnPlan::new(&mask, true, 1);
+        let full = AttnPlan::new(&mask, false, 1);
+        assert_eq!(causal.visible_blocks(), 6 * 7 / 2);
+        assert_eq!(full.visible_blocks(), 36);
+        assert!(causal.flops(16, 8) < full.flops(16, 8));
     }
 }

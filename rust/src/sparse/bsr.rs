@@ -9,8 +9,8 @@
 use std::sync::{Arc, Mutex};
 
 use crate::patterns::BlockMask;
-use crate::sparse::dense::Matrix;
-use crate::sparse::exec::{self, GemmPlan};
+use crate::sparse::dense::{self, Matrix};
+use crate::sparse::exec::{self, plan::structure_fingerprint, GemmPlan};
 use crate::util::Rng;
 
 /// Block-sparse-row matrix of logical shape [nbr*b, nbc*b].
@@ -26,10 +26,11 @@ pub struct BsrMatrix {
     /// stored blocks, each b*b row-major, concatenated
     pub blocks: Vec<f32>,
     /// lazily built engine schedule reused across `matmul_into` calls,
-    /// refreshed whenever the effective thread count changes; guarded by
-    /// the plan's structure fingerprint, so mutating `row_ptr`/`cols`
-    /// after the first multiply fails loudly rather than executing a
-    /// stale schedule (block *values* may change freely)
+    /// refreshed whenever the effective thread count changes OR the
+    /// structure fingerprint no longer matches — so mutating
+    /// `row_ptr`/`cols` after the first multiply transparently replans
+    /// instead of executing a stale schedule (block *values* may change
+    /// freely and never trigger a replan)
     plan_cache: Mutex<Option<Arc<GemmPlan>>>,
 }
 
@@ -138,14 +139,19 @@ impl BsrMatrix {
     pub fn matmul_into(&self, x: &Matrix, y: &mut Matrix) {
         // Reuse the schedule across calls (hot loops in the benches and
         // the butterfly product multiply the same structure repeatedly);
-        // rebuilt — and re-cached — when the thread configuration
-        // changes. The Arc is cloned out so concurrent multiplies never
-        // hold the lock across the kernel.
+        // rebuilt — and re-cached — when the thread configuration changes
+        // or the structure fingerprint no longer matches (the cache used
+        // to key on thread count alone, silently trusting the pattern).
+        // The fingerprint is O(nnz) integer hashing, negligible next to
+        // the multiply; `execute` re-checks it in debug builds. The Arc
+        // is cloned out so concurrent multiplies never hold the lock
+        // across the kernel.
         let threads = exec::threads();
+        let fp = structure_fingerprint(self);
         let plan = {
             let mut guard = self.plan_cache.lock().unwrap();
             match guard.as_ref() {
-                Some(p) if p.threads() == threads => Arc::clone(p),
+                Some(p) if p.threads() == threads && p.fingerprint() == fp => Arc::clone(p),
                 _ => {
                     let p = Arc::new(GemmPlan::new(self, threads));
                     *guard = Some(Arc::clone(&p));
@@ -225,13 +231,11 @@ impl BsrMatrix {
                 let d = cursor[j];
                 cursor[j] += 1;
                 cols[d] = i;
+                // each stored block transposes through the shared
+                // cache-blocked tile kernel (dense::transpose_into)
                 let src = &self.blocks[s * b * b..(s + 1) * b * b];
                 let dst = &mut blocks[d * b * b..(d + 1) * b * b];
-                for r in 0..b {
-                    for c in 0..b {
-                        dst[c * b + r] = src[r * b + c];
-                    }
-                }
+                dense::transpose_into(src, b, b, dst);
             }
         }
         BsrMatrix {
@@ -307,6 +311,26 @@ mod tests {
         let mut yp = Matrix::zeros(21, w.cols_elems());
         w.matmul_with_plan(&plan, &x, &mut yp);
         assert!(yp.max_abs_diff(&serial) < 1e-4);
+    }
+
+    #[test]
+    fn plan_cache_replans_after_structure_mutation() {
+        // regression: the cache used to key on thread count only, so a
+        // post-multiply structure edit executed a stale schedule (caught
+        // only by the executor's loud fingerprint panic); matmul_into now
+        // detects the mutated fingerprint and transparently replans
+        let mut rng = Rng::new(26);
+        let mask = BlockMask::ones(3, 3);
+        let mut w = BsrMatrix::random(&mask, 8, 0.5, &mut rng);
+        let x = Matrix::randn(5, w.rows(), 1.0, &mut rng);
+        let _ = w.matmul(&x); // caches a plan for the original structure
+        // swap two column indices in block row 0: same shape/nnz, new pattern
+        let s = w.row_ptr[0];
+        w.cols.swap(s, s + 1);
+        let mut want = Matrix::zeros(5, w.cols_elems());
+        w.matmul_serial_into(&x, &mut want);
+        let y = w.matmul(&x); // must replan, not run the stale schedule
+        assert!(y.max_abs_diff(&want) < 1e-4, "{}", y.max_abs_diff(&want));
     }
 
     #[test]

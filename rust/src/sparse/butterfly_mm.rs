@@ -10,6 +10,7 @@
 use crate::patterns::butterfly::{butterfly_factor_mask, flat_butterfly_mask};
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
+use crate::sparse::exec::{workspace, Workspace};
 use crate::util::Rng;
 
 /// The residual-product operator (I + λB_2)…(I + λB_k) stored as factors.
@@ -35,17 +36,28 @@ impl ButterflyProduct {
     }
 
     /// y = x (I + λB_k) … (I + λB_2): apply highest stride first
-    /// (row-vector convention matching kernels/ref.py).
+    /// (row-vector convention matching kernels/ref.py). Scratch comes
+    /// from the thread-local workspace, so repeated calls are zero-alloc
+    /// apart from the output clone.
     pub fn matmul(&self, x: &Matrix) -> Matrix {
         let mut y = x.clone();
-        let mut scratch = Matrix::zeros(x.rows, x.cols);
+        workspace::with_thread_workspace(|ws| self.apply_assign(&mut y, ws));
+        y
+    }
+
+    /// In-place product application y ← y (I + λB_k) … (I + λB_2) with
+    /// scratch from `ws` — the fully zero-alloc form the benches and the
+    /// trainer-side hot loops use.
+    pub fn apply_assign(&self, y: &mut Matrix, ws: &mut Workspace) {
+        let mut scratch =
+            Matrix { rows: y.rows, cols: y.cols, data: ws.take(y.rows * y.cols) };
         for f in self.factors.iter().rev() {
-            f.matmul_into(&y, &mut scratch);
+            f.matmul_into(y, &mut scratch);
             for (yv, sv) in y.data.iter_mut().zip(&scratch.data) {
                 *yv += self.lam * sv;
             }
         }
-        y
+        ws.give(scratch.data);
     }
 
     /// The flat first-order approximation: I + λ Σ B_s as one BSR matrix.
@@ -116,18 +128,32 @@ impl FlatLowRank {
         self.u.cols
     }
 
-    /// y = x·B_flat + (x·U)·V.
+    /// y = x·B_flat + (x·U)·V (allocating wrapper over [`Self::matmul_into`];
+    /// intermediates come from the thread-local workspace).
     pub fn matmul(&self, x: &Matrix) -> Matrix {
         let mut y = Matrix::zeros(x.rows, self.flat.cols_elems());
-        self.flat.matmul_with_plan(&self.plan, x, &mut y);
+        workspace::with_thread_workspace(|ws| self.matmul_into(x, &mut y, ws));
+        y
+    }
+
+    /// y = x·B_flat + (x·U)·V with both low-rank intermediates checked out
+    /// of `ws` — the composite used to allocate three fresh matrices per
+    /// call; this form allocates nothing once the workspace is warm.
+    pub fn matmul_into(&self, x: &Matrix, y: &mut Matrix, ws: &mut Workspace) {
+        self.flat.matmul_with_plan(&self.plan, x, y);
         if self.rank() > 0 {
-            let t = crate::sparse::dense::matmul_blocked(x, &self.u);
-            let lr = crate::sparse::dense::matmul_blocked(&t, &self.v);
+            let n = self.flat.cols_elems();
+            let mut t =
+                Matrix { rows: x.rows, cols: self.rank(), data: ws.take(x.rows * self.rank()) };
+            crate::sparse::dense::matmul_blocked_into(x, &self.u, &mut t);
+            let mut lr = Matrix { rows: x.rows, cols: n, data: ws.take(x.rows * n) };
+            crate::sparse::dense::matmul_blocked_into(&t, &self.v, &mut lr);
             for (yv, lv) in y.data.iter_mut().zip(&lr.data) {
                 *yv += lv;
             }
+            ws.give(t.data);
+            ws.give(lr.data);
         }
-        y
     }
 
     /// Dense materialisation (tests / inspection).
@@ -222,6 +248,37 @@ mod tests {
         let y = flr.matmul(&x);
         let yref = flr.flat.matmul(&x);
         assert!(y.max_abs_diff(&yref) < 1e-6);
+    }
+
+    #[test]
+    fn composite_steady_state_is_zero_alloc() {
+        let mut rng = Rng::new(38);
+        let flr = FlatLowRank::random(64, 8, 4, 8, 0.5, &mut rng);
+        let x = Matrix::randn(9, 64, 1.0, &mut rng);
+        let mut y = Matrix::zeros(9, 64);
+        let mut ws = Workspace::new();
+        flr.matmul_into(&x, &mut y, &mut ws);
+        let warm = ws.alloc_events();
+        for _ in 0..3 {
+            flr.matmul_into(&x, &mut y, &mut ws);
+        }
+        assert_eq!(ws.alloc_events(), warm, "hot path must not allocate");
+    }
+
+    #[test]
+    fn product_apply_assign_matches_matmul() {
+        let mut rng = Rng::new(39);
+        let bp = ButterflyProduct::random(64, 8, 8, 0.1, &mut rng);
+        let x = Matrix::randn(7, 64, 1.0, &mut rng);
+        let want = bp.matmul(&x);
+        let mut ws = Workspace::new();
+        let mut y = x.clone();
+        bp.apply_assign(&mut y, &mut ws);
+        assert!(y.max_abs_diff(&want) < 1e-6);
+        let warm = ws.alloc_events();
+        y.data.copy_from_slice(&x.data);
+        bp.apply_assign(&mut y, &mut ws);
+        assert_eq!(ws.alloc_events(), warm);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Register-blocked `b×b` panel micro-kernels.
+//! Register-blocked `b×b` panel micro-kernels (the portable scalar tier).
 //!
 //! One call accumulates a stored weight block into the output stripe of a
 //! batch-row panel: `y[r, jc..jc+b] += x[r, ic..ic+b] · blk` for each row
@@ -7,7 +7,14 @@
 //! vectorise the fixed-width inner loops; rows are processed four at a
 //! time so one sweep over the weight block feeds four accumulator rows
 //! (the register-blocking that pays for the bandwidth-bound shapes).
+//!
+//! [`block_panel`] is the dispatch point of the kernel tier: when the
+//! resolved tier ([`super::simd`]) has an explicit AVX2/NEON kernel for
+//! this block width it runs that, otherwise the const-specialised scalar
+//! kernels below — so callers (the GEMM plan executor) never care which
+//! tier is active.
 
+use super::simd;
 use crate::sparse::dense::Matrix;
 use std::ops::Range;
 
@@ -33,6 +40,9 @@ pub unsafe fn block_panel(
 ) {
     debug_assert_eq!(blk.len(), b * b);
     debug_assert!(jc + b <= ldy && ic + b <= x.cols && rows.end <= x.rows);
+    if simd::try_block_panel(b, x, ic, rows.clone(), blk, y, ldy, jc) {
+        return;
+    }
     match b {
         16 => block_panel_const::<16>(x, ic, rows, blk, y, ldy, jc),
         32 => block_panel_const::<32>(x, ic, rows, blk, y, ldy, jc),

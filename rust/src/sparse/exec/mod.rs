@@ -13,12 +13,21 @@
 //! `--threads`), then `PIXELFLY_THREADS`, then available parallelism.
 //! Small problems fall back to the serial path automatically so the
 //! engine never pessimises the tiny shapes used in tests.
+//!
+//! Kernel tier resolution mirrors it: explicit [`set_kernel`] (the CLI's
+//! `--kernel`), then `PIXELFLY_KERNEL`, then auto-detection — see
+//! [`simd`]. [`workspace::Workspace`] is the scratch arena that keeps the
+//! steady-state hot paths allocation-free.
 
 pub mod micro;
 pub mod plan;
 pub mod pool;
+pub mod simd;
+pub mod workspace;
 
 pub use plan::GemmPlan;
+pub use simd::{kernel_choice, kernel_name, set_kernel, simd_available, KernelChoice};
+pub use workspace::Workspace;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -54,24 +54,31 @@ pub struct GemmPlan {
     chunks: Vec<Range<usize>>,
 }
 
-/// FNV-1a over the arrays that determine the schedule. O(nbr + nnz)
-/// integer work — negligible next to the O(m·nnz·b²) multiply it guards.
-fn structure_fingerprint(w: &BsrMatrix) -> u64 {
+/// FNV-1a over a stream of u64 words — the one hashing scheme behind
+/// every structure fingerprint (GEMM plans here, attention plans in
+/// `sparse::attention`), so collision behavior can only ever change in
+/// one place.
+pub fn fnv1a(words: impl IntoIterator<Item = u64>) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
-    let mut mix = |v: u64| {
-        h ^= v;
+    for w in words {
+        h ^= w;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    };
-    mix(w.block as u64);
-    mix(w.nbr as u64);
-    mix(w.nbc as u64);
-    for &p in &w.row_ptr {
-        mix(p as u64);
-    }
-    for &c in &w.cols {
-        mix(c as u64);
     }
     h
+}
+
+/// Fingerprint of the arrays that determine the schedule. O(nbr + nnz)
+/// integer work — negligible next to the O(m·nnz·b²) multiply it guards.
+/// Public so `BsrMatrix::matmul_into` can validate its cached plan (and
+/// replan, instead of executing a stale schedule, when the structure was
+/// mutated after the first multiply).
+pub fn structure_fingerprint(w: &BsrMatrix) -> u64 {
+    fnv1a(
+        [w.block as u64, w.nbr as u64, w.nbc as u64]
+            .into_iter()
+            .chain(w.row_ptr.iter().map(|&p| p as u64))
+            .chain(w.cols.iter().map(|&c| c as u64)),
+    )
 }
 
 impl GemmPlan {
@@ -104,11 +111,22 @@ impl GemmPlan {
         self.threads
     }
 
+    /// Fingerprint of the structure this plan was built from (compare
+    /// against [`structure_fingerprint`] to detect staleness cheaply).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
     /// Execute `y = x · w` through the schedule. `w` must be the matrix
     /// (or one with identical structure) the plan was built from.
     pub fn execute(&self, w: &BsrMatrix, x: &Matrix, y: &mut Matrix) {
         let b = self.block;
-        assert_eq!(
+        // debug-only: `BsrMatrix::matmul_into` already fingerprints on the
+        // cached path, so hashing here too would double the O(nnz) cost of
+        // every release-mode multiply. Explicit `matmul_with_plan` misuse
+        // still fails loudly in debug/test builds (and stays memory-safe
+        // in release: all block/slot accesses are bounds-checked slices).
+        debug_assert_eq!(
             structure_fingerprint(w),
             self.fingerprint,
             "plan built for a different sparsity structure"

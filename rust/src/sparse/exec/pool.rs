@@ -36,6 +36,44 @@ where
     });
 }
 
+/// Like [`run_tasks`], but each worker owns one element of `states` —
+/// the per-worker scratch pattern the fused attention executor relies on
+/// for its zero-alloc hot path. At most `states.len()` workers run (fewer
+/// when tasks are scarce); `f(state, task)` must be safe to call
+/// concurrently for distinct states/tasks.
+pub fn run_tasks_with<S, F>(n_tasks: usize, states: &mut [S], f: F)
+where
+    S: Send,
+    F: Fn(&mut S, usize) + Sync,
+{
+    if n_tasks == 0 {
+        return;
+    }
+    assert!(!states.is_empty(), "run_tasks_with needs at least one state");
+    let workers = states.len().min(n_tasks);
+    if workers == 1 {
+        let s = &mut states[0];
+        for t in 0..n_tasks {
+            f(s, t);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let next_ref = &next;
+    let f_ref = &f;
+    std::thread::scope(|scope| {
+        for st in states.iter_mut().take(workers) {
+            scope.spawn(move || loop {
+                let t = next_ref.fetch_add(1, Ordering::Relaxed);
+                if t >= n_tasks {
+                    break;
+                }
+                f_ref(st, t);
+            });
+        }
+    });
+}
+
 /// Split items `0..weights.len()` into at most `parts` contiguous,
 /// non-empty ranges of approximately equal total weight (greedy against
 /// the even share of the remaining weight). Used to chunk block columns
@@ -93,6 +131,18 @@ mod tests {
             sum.fetch_add(t as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn run_tasks_with_gives_each_worker_private_state() {
+        for workers in [1usize, 2, 4] {
+            let mut states = vec![0usize; workers];
+            run_tasks_with(23, &mut states, |s, _t| {
+                *s += 1;
+            });
+            // every task ran exactly once, spread over the worker states
+            assert_eq!(states.iter().sum::<usize>(), 23);
+        }
     }
 
     #[test]

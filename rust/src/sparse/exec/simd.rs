@@ -1,0 +1,794 @@
+//! SIMD microkernel dispatch tier: runtime-detected AVX2+FMA (x86_64) and
+//! NEON (aarch64) kernels behind the portable scalar tier.
+//!
+//! Selection (mirrors the thread-count resolution in `exec`): explicit
+//! [`set_kernel`] (the CLI's `--kernel {auto,scalar,simd}`), else the
+//! `PIXELFLY_KERNEL` env var, else `auto`. `auto` and `simd` both resolve
+//! to the best tier the host supports — the difference is intent: `simd`
+//! is a request (benches use it to name the tier they measured), `auto`
+//! is the default. When no vector unit is available every choice resolves
+//! to the const-specialised scalar kernels in [`super::micro`], so the
+//! substrate's numerics never depend on the host. [`kernel_name`] reports
+//! the active tier (`scalar`/`avx2`/`neon`) for `TrainReport` and bench
+//! notes.
+//!
+//! Two kernel families live here:
+//! - `block_panel`: the BSR GEMM `b×b` panel kernel (same contract as
+//!   [`super::micro::block_panel`]) — 4 activation rows share one sweep
+//!   over the weight block, columns processed in 16-lane strips of FMAs;
+//! - `dot` / `axpy` / `scale`: the vector primitives the fused streaming
+//!   attention kernel is built from.
+//!
+//! Feature detection runs once per process (`OnceLock`). Per-call
+//! dispatch costs one relaxed atomic load plus (on the no-override path)
+//! two initialized-`OnceLock` loads — fine per `b×b` panel, too much per
+//! 64-element dot inside attention's innermost loops, so hot loops
+//! resolve [`active_tier`] once and call the `*_with(tier, …)` variants.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::sparse::dense::Matrix;
+
+/// User-facing kernel selection (CLI `--kernel` / `PIXELFLY_KERNEL`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Best available tier (the default).
+    Auto,
+    /// Force the portable scalar kernels.
+    Scalar,
+    /// Request the SIMD tier (falls back to scalar when unavailable).
+    Simd,
+}
+
+impl KernelChoice {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelChoice::Auto),
+            "scalar" => Some(KernelChoice::Scalar),
+            "simd" => Some(KernelChoice::Simd),
+            _ => None,
+        }
+    }
+}
+
+/// The resolved kernel tier actually executing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+/// 0 = no override; 1..=3 encode `KernelChoice`.
+static CHOICE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// `PIXELFLY_KERNEL` resolved once (env reads off the hot path).
+static ENV_CHOICE: OnceLock<KernelChoice> = OnceLock::new();
+
+/// Hardware detection resolved once.
+static DETECTED: OnceLock<Option<Tier>> = OnceLock::new();
+
+/// Override the kernel tier selection for this process. Callers that
+/// toggle temporarily (the tier benches) should snapshot
+/// [`kernel_choice`] first and restore it, so an operator's
+/// `PIXELFLY_KERNEL`-derived choice round-trips.
+pub fn set_kernel(c: KernelChoice) {
+    let v = match c {
+        KernelChoice::Auto => 1,
+        KernelChoice::Scalar => 2,
+        KernelChoice::Simd => 3,
+    };
+    CHOICE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Effective selection: `set_kernel` override, else `PIXELFLY_KERNEL`,
+/// else `Auto`.
+pub fn kernel_choice() -> KernelChoice {
+    match CHOICE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => KernelChoice::Auto,
+        2 => KernelChoice::Scalar,
+        3 => KernelChoice::Simd,
+        _ => *ENV_CHOICE.get_or_init(|| {
+            std::env::var("PIXELFLY_KERNEL")
+                .ok()
+                .and_then(|s| KernelChoice::parse(&s))
+                .unwrap_or(KernelChoice::Auto)
+        }),
+    }
+}
+
+fn detect() -> Option<Tier> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Some(Tier::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(Tier::Neon);
+        }
+    }
+    None
+}
+
+/// The SIMD tier this host supports, if any (detection cached).
+pub fn simd_tier() -> Option<Tier> {
+    *DETECTED.get_or_init(detect)
+}
+
+/// Whether a SIMD tier exists on this host.
+pub fn simd_available() -> bool {
+    simd_tier().is_some()
+}
+
+/// The tier that executes under the current selection.
+pub fn active_tier() -> Tier {
+    match kernel_choice() {
+        KernelChoice::Scalar => Tier::Scalar,
+        KernelChoice::Auto | KernelChoice::Simd => simd_tier().unwrap_or(Tier::Scalar),
+    }
+}
+
+/// Active tier name for reports: `"scalar"`, `"avx2"`, or `"neon"`.
+pub fn kernel_name() -> &'static str {
+    match active_tier() {
+        Tier::Scalar => "scalar",
+        Tier::Avx2 => "avx2",
+        Tier::Neon => "neon",
+    }
+}
+
+/// Dispatch the BSR panel kernel to the active SIMD tier. Returns `false`
+/// when no SIMD kernel applies (tier scalar, or `b` not a lane multiple);
+/// the caller then runs the scalar kernel.
+///
+/// # Safety
+/// Same contract as [`super::micro::block_panel`].
+#[allow(clippy::too_many_arguments)]
+#[allow(unused_variables)]
+pub unsafe fn try_block_panel(
+    b: usize,
+    x: &Matrix,
+    ic: usize,
+    rows: Range<usize>,
+    blk: &[f32],
+    y: *mut f32,
+    ldy: usize,
+    jc: usize,
+) -> bool {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if b % 8 == 0 => {
+            avx2::block_panel(b, x, ic, rows, blk, y, ldy, jc);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if b % 4 == 0 => {
+            neon::block_panel(b, x, ic, rows, blk, y, ldy, jc);
+            true
+        }
+        _ => false,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Vector primitives (attention kernel building blocks)
+// ---------------------------------------------------------------------
+
+/// `Σ a[i]·b[i]` on a pre-resolved tier. `tier` must come from
+/// [`active_tier`]/[`simd_tier`] on this host (crate-internal so that
+/// invariant stays local); hot loops resolve once and reuse.
+#[inline]
+pub(crate) fn dot_with(tier: Tier, a: &[f32], b: &[f32]) -> f32 {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// `y[i] += alpha · x[i]` on a pre-resolved tier (see [`dot_with`]).
+#[inline]
+pub(crate) fn axpy_with(tier: Tier, alpha: f32, x: &[f32], y: &mut [f32]) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::axpy(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::axpy(alpha, x, y) },
+        _ => axpy_scalar(alpha, x, y),
+    }
+}
+
+/// `y[i] *= alpha` on a pre-resolved tier (see [`dot_with`]).
+#[inline]
+pub(crate) fn scale_with(tier: Tier, y: &mut [f32], alpha: f32) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::scale(y, alpha) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::scale(y, alpha) },
+        _ => scale_scalar(y, alpha),
+    }
+}
+
+/// `Σ a[i]·b[i]` over `min(len)` elements, on the active tier.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with(active_tier(), a, b)
+}
+
+/// `y[i] += alpha · x[i]`, on the active tier.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_with(active_tier(), alpha, x, y)
+}
+
+/// `y[i] *= alpha`, on the active tier.
+#[inline]
+pub fn scale(y: &mut [f32], alpha: f32) {
+    scale_with(active_tier(), y, alpha)
+}
+
+/// Portable reference for [`dot`] (4 partial sums so the scalar tier
+/// still pipelines).
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f32; 4];
+    let mut i = 0;
+    while i + 4 <= n {
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// Portable reference for [`axpy`].
+pub fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += alpha * *xv;
+    }
+}
+
+/// Portable reference for [`scale`].
+pub fn scale_scalar(y: &mut [f32], alpha: f32) {
+    for yv in y.iter_mut() {
+        *yv *= alpha;
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 + FMA (8-lane f32)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    //! AVX2+FMA kernels. Every fn is `unsafe`: the caller must have
+    //! verified `avx2` and `fma` at runtime (see [`super::simd_tier`]).
+
+    use super::Range;
+    use crate::sparse::dense::Matrix;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Same contract as `micro::block_panel`, plus `b % 8 == 0` and
+    /// AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel(
+        b: usize,
+        x: &Matrix,
+        ic: usize,
+        rows: Range<usize>,
+        blk: &[f32],
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 8, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let wp = blk.as_ptr();
+        let mut r = rows.start;
+        while r + 4 <= rows.end {
+            panel_rows4(b, xp.add(r * ldx + ic), ldx, wp, y.add(r * ldy + jc), ldy);
+            r += 4;
+        }
+        while r < rows.end {
+            panel_row1(b, xp.add(r * ldx + ic), wp, y.add(r * ldy + jc));
+            r += 1;
+        }
+    }
+
+    /// Four activation rows share one sweep over the weight block; output
+    /// columns are processed in strips of 16 (two ymm accumulators per
+    /// row) with an 8-wide tail, so b ∈ {8, 16, 24, 32, 40, 48, …} all
+    /// stay in registers.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn panel_rows4(b: usize, x0: *const f32, ldx: usize, w: *const f32, y0: *mut f32, ldy: usize) {
+        let (x1, x2, x3) = (x0.add(ldx), x0.add(2 * ldx), x0.add(3 * ldx));
+        let (y1, y2, y3) = (y0.add(ldy), y0.add(2 * ldy), y0.add(3 * ldy));
+        let mut c = 0usize;
+        while c + 16 <= b {
+            let mut a00 = _mm256_loadu_ps(y0.add(c));
+            let mut a01 = _mm256_loadu_ps(y0.add(c + 8));
+            let mut a10 = _mm256_loadu_ps(y1.add(c));
+            let mut a11 = _mm256_loadu_ps(y1.add(c + 8));
+            let mut a20 = _mm256_loadu_ps(y2.add(c));
+            let mut a21 = _mm256_loadu_ps(y2.add(c + 8));
+            let mut a30 = _mm256_loadu_ps(y3.add(c));
+            let mut a31 = _mm256_loadu_ps(y3.add(c + 8));
+            for k in 0..b {
+                let w0 = _mm256_loadu_ps(w.add(k * b + c));
+                let w1 = _mm256_loadu_ps(w.add(k * b + c + 8));
+                let s0 = _mm256_set1_ps(*x0.add(k));
+                a00 = _mm256_fmadd_ps(s0, w0, a00);
+                a01 = _mm256_fmadd_ps(s0, w1, a01);
+                let s1 = _mm256_set1_ps(*x1.add(k));
+                a10 = _mm256_fmadd_ps(s1, w0, a10);
+                a11 = _mm256_fmadd_ps(s1, w1, a11);
+                let s2 = _mm256_set1_ps(*x2.add(k));
+                a20 = _mm256_fmadd_ps(s2, w0, a20);
+                a21 = _mm256_fmadd_ps(s2, w1, a21);
+                let s3 = _mm256_set1_ps(*x3.add(k));
+                a30 = _mm256_fmadd_ps(s3, w0, a30);
+                a31 = _mm256_fmadd_ps(s3, w1, a31);
+            }
+            _mm256_storeu_ps(y0.add(c), a00);
+            _mm256_storeu_ps(y0.add(c + 8), a01);
+            _mm256_storeu_ps(y1.add(c), a10);
+            _mm256_storeu_ps(y1.add(c + 8), a11);
+            _mm256_storeu_ps(y2.add(c), a20);
+            _mm256_storeu_ps(y2.add(c + 8), a21);
+            _mm256_storeu_ps(y3.add(c), a30);
+            _mm256_storeu_ps(y3.add(c + 8), a31);
+            c += 16;
+        }
+        while c + 8 <= b {
+            let mut a0 = _mm256_loadu_ps(y0.add(c));
+            let mut a1 = _mm256_loadu_ps(y1.add(c));
+            let mut a2 = _mm256_loadu_ps(y2.add(c));
+            let mut a3 = _mm256_loadu_ps(y3.add(c));
+            for k in 0..b {
+                let wv = _mm256_loadu_ps(w.add(k * b + c));
+                a0 = _mm256_fmadd_ps(_mm256_set1_ps(*x0.add(k)), wv, a0);
+                a1 = _mm256_fmadd_ps(_mm256_set1_ps(*x1.add(k)), wv, a1);
+                a2 = _mm256_fmadd_ps(_mm256_set1_ps(*x2.add(k)), wv, a2);
+                a3 = _mm256_fmadd_ps(_mm256_set1_ps(*x3.add(k)), wv, a3);
+            }
+            _mm256_storeu_ps(y0.add(c), a0);
+            _mm256_storeu_ps(y1.add(c), a1);
+            _mm256_storeu_ps(y2.add(c), a2);
+            _mm256_storeu_ps(y3.add(c), a3);
+            c += 8;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn panel_row1(b: usize, x0: *const f32, w: *const f32, y0: *mut f32) {
+        let mut c = 0usize;
+        while c + 16 <= b {
+            let mut a0 = _mm256_loadu_ps(y0.add(c));
+            let mut a1 = _mm256_loadu_ps(y0.add(c + 8));
+            for k in 0..b {
+                let s = _mm256_set1_ps(*x0.add(k));
+                a0 = _mm256_fmadd_ps(s, _mm256_loadu_ps(w.add(k * b + c)), a0);
+                a1 = _mm256_fmadd_ps(s, _mm256_loadu_ps(w.add(k * b + c + 8)), a1);
+            }
+            _mm256_storeu_ps(y0.add(c), a0);
+            _mm256_storeu_ps(y0.add(c + 8), a1);
+            c += 16;
+        }
+        while c + 8 <= b {
+            let mut a0 = _mm256_loadu_ps(y0.add(c));
+            for k in 0..b {
+                let s = _mm256_set1_ps(*x0.add(k));
+                a0 = _mm256_fmadd_ps(s, _mm256_loadu_ps(w.add(k * b + c)), a0);
+            }
+            _mm256_storeu_ps(y0.add(c), a0);
+            c += 8;
+        }
+    }
+
+    /// # Safety
+    /// AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            i += 8;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        let lo = _mm256_castps256_ps128(acc);
+        let hi = _mm256_extractf128_ps(acc, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        let mut out = _mm_cvtss_f32(s);
+        while i < n {
+            out += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        out
+    }
+
+    /// # Safety
+    /// AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let a = _mm256_set1_ps(alpha);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let yv = _mm256_fmadd_ps(a, _mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            _mm256_storeu_ps(yp.add(i), yv);
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 present.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(y: &mut [f32], alpha: f32) {
+        let n = y.len();
+        let a = _mm256_set1_ps(alpha);
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(yp.add(i), _mm256_mul_ps(a, _mm256_loadu_ps(yp.add(i))));
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) *= alpha;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (4-lane f32)
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    //! NEON kernels. Every fn is `unsafe`: the caller must have verified
+    //! `neon` at runtime (see [`super::simd_tier`]).
+
+    use super::Range;
+    use crate::sparse::dense::Matrix;
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Same contract as `micro::block_panel`, plus `b % 4 == 0` and NEON
+    /// present.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel(
+        b: usize,
+        x: &Matrix,
+        ic: usize,
+        rows: Range<usize>,
+        blk: &[f32],
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 4, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let wp = blk.as_ptr();
+        let mut r = rows.start;
+        while r + 4 <= rows.end {
+            panel_rows4(b, xp.add(r * ldx + ic), ldx, wp, y.add(r * ldy + jc), ldy);
+            r += 4;
+        }
+        while r < rows.end {
+            panel_row1(b, xp.add(r * ldx + ic), wp, y.add(r * ldy + jc));
+            r += 1;
+        }
+    }
+
+    /// Four activation rows share one sweep over the weight block; output
+    /// columns in strips of 8 (two q-register accumulators per row) with
+    /// a 4-wide tail.
+    #[target_feature(enable = "neon")]
+    unsafe fn panel_rows4(b: usize, x0: *const f32, ldx: usize, w: *const f32, y0: *mut f32, ldy: usize) {
+        let (x1, x2, x3) = (x0.add(ldx), x0.add(2 * ldx), x0.add(3 * ldx));
+        let (y1, y2, y3) = (y0.add(ldy), y0.add(2 * ldy), y0.add(3 * ldy));
+        let mut c = 0usize;
+        while c + 8 <= b {
+            let mut a00 = vld1q_f32(y0.add(c));
+            let mut a01 = vld1q_f32(y0.add(c + 4));
+            let mut a10 = vld1q_f32(y1.add(c));
+            let mut a11 = vld1q_f32(y1.add(c + 4));
+            let mut a20 = vld1q_f32(y2.add(c));
+            let mut a21 = vld1q_f32(y2.add(c + 4));
+            let mut a30 = vld1q_f32(y3.add(c));
+            let mut a31 = vld1q_f32(y3.add(c + 4));
+            for k in 0..b {
+                let w0 = vld1q_f32(w.add(k * b + c));
+                let w1 = vld1q_f32(w.add(k * b + c + 4));
+                let s0 = *x0.add(k);
+                a00 = vfmaq_n_f32(a00, w0, s0);
+                a01 = vfmaq_n_f32(a01, w1, s0);
+                let s1 = *x1.add(k);
+                a10 = vfmaq_n_f32(a10, w0, s1);
+                a11 = vfmaq_n_f32(a11, w1, s1);
+                let s2 = *x2.add(k);
+                a20 = vfmaq_n_f32(a20, w0, s2);
+                a21 = vfmaq_n_f32(a21, w1, s2);
+                let s3 = *x3.add(k);
+                a30 = vfmaq_n_f32(a30, w0, s3);
+                a31 = vfmaq_n_f32(a31, w1, s3);
+            }
+            vst1q_f32(y0.add(c), a00);
+            vst1q_f32(y0.add(c + 4), a01);
+            vst1q_f32(y1.add(c), a10);
+            vst1q_f32(y1.add(c + 4), a11);
+            vst1q_f32(y2.add(c), a20);
+            vst1q_f32(y2.add(c + 4), a21);
+            vst1q_f32(y3.add(c), a30);
+            vst1q_f32(y3.add(c + 4), a31);
+            c += 8;
+        }
+        while c + 4 <= b {
+            let mut a0 = vld1q_f32(y0.add(c));
+            let mut a1 = vld1q_f32(y1.add(c));
+            let mut a2 = vld1q_f32(y2.add(c));
+            let mut a3 = vld1q_f32(y3.add(c));
+            for k in 0..b {
+                let wv = vld1q_f32(w.add(k * b + c));
+                a0 = vfmaq_n_f32(a0, wv, *x0.add(k));
+                a1 = vfmaq_n_f32(a1, wv, *x1.add(k));
+                a2 = vfmaq_n_f32(a2, wv, *x2.add(k));
+                a3 = vfmaq_n_f32(a3, wv, *x3.add(k));
+            }
+            vst1q_f32(y0.add(c), a0);
+            vst1q_f32(y1.add(c), a1);
+            vst1q_f32(y2.add(c), a2);
+            vst1q_f32(y3.add(c), a3);
+            c += 4;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn panel_row1(b: usize, x0: *const f32, w: *const f32, y0: *mut f32) {
+        let mut c = 0usize;
+        while c + 8 <= b {
+            let mut a0 = vld1q_f32(y0.add(c));
+            let mut a1 = vld1q_f32(y0.add(c + 4));
+            for k in 0..b {
+                let s = *x0.add(k);
+                a0 = vfmaq_n_f32(a0, vld1q_f32(w.add(k * b + c)), s);
+                a1 = vfmaq_n_f32(a1, vld1q_f32(w.add(k * b + c + 4)), s);
+            }
+            vst1q_f32(y0.add(c), a0);
+            vst1q_f32(y0.add(c + 4), a1);
+            c += 8;
+        }
+        while c + 4 <= b {
+            let mut a0 = vld1q_f32(y0.add(c));
+            for k in 0..b {
+                a0 = vfmaq_n_f32(a0, vld1q_f32(w.add(k * b + c)), *x0.add(k));
+            }
+            vst1q_f32(y0.add(c), a0);
+            c += 4;
+        }
+    }
+
+    /// # Safety
+    /// NEON present.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(ap.add(i + 4)), vld1q_f32(bp.add(i + 4)));
+            i += 8;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(ap.add(i)), vld1q_f32(bp.add(i)));
+            i += 4;
+        }
+        let mut out = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            out += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        out
+    }
+
+    /// # Safety
+    /// NEON present.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let yv = vfmaq_n_f32(vld1q_f32(yp.add(i)), vld1q_f32(xp.add(i)), alpha);
+            vst1q_f32(yp.add(i), yv);
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) += alpha * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// NEON present.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(y: &mut [f32], alpha: f32) {
+        let n = y.len();
+        let a = vdupq_n_f32(alpha);
+        let yp = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(yp.add(i), vmulq_f32(a, vld1q_f32(yp.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) *= alpha;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn choice_parses() {
+        assert_eq!(KernelChoice::parse("auto"), Some(KernelChoice::Auto));
+        assert_eq!(KernelChoice::parse(" SIMD "), Some(KernelChoice::Simd));
+        assert_eq!(KernelChoice::parse("scalar"), Some(KernelChoice::Scalar));
+        assert_eq!(KernelChoice::parse("avx512"), None);
+    }
+
+    #[test]
+    fn kernel_name_is_consistent_with_tier() {
+        // whatever the host, the reported name matches the resolved tier
+        let name = kernel_name();
+        match active_tier() {
+            Tier::Scalar => assert_eq!(name, "scalar"),
+            Tier::Avx2 => assert_eq!(name, "avx2"),
+            Tier::Neon => assert_eq!(name, "neon"),
+        }
+    }
+
+    #[test]
+    fn scalar_primitives_agree_with_naive() {
+        let mut rng = Rng::new(42);
+        let a = rng.normal_vec(37, 1.0);
+        let b = rng.normal_vec(37, 1.0);
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot_scalar(&a, &b) - naive).abs() < 1e-3);
+        let mut y = b.clone();
+        axpy_scalar(0.5, &a, &mut y);
+        for i in 0..37 {
+            assert!((y[i] - (b[i] + 0.5 * a[i])).abs() < 1e-5);
+        }
+        scale_scalar(&mut y, 2.0);
+        for i in 0..37 {
+            assert!((y[i] - 2.0 * (b[i] + 0.5 * a[i])).abs() < 1e-4);
+        }
+    }
+
+    // SIMD-vs-scalar parity, exercised directly against the arch kernels
+    // (no global kernel-choice mutation, so tests stay race-free).
+    #[test]
+    fn simd_primitives_match_scalar_when_available() {
+        if simd_tier().is_none() {
+            return; // host has no vector unit; the scalar tier is the tier
+        }
+        let mut rng = Rng::new(43);
+        for n in [1usize, 4, 7, 8, 16, 33, 64, 100] {
+            let a = rng.normal_vec(n, 1.0);
+            let b = rng.normal_vec(n, 1.0);
+            let want = dot_scalar(&a, &b);
+            let got = dot(&a, &b);
+            assert!((got - want).abs() < 1e-3 * (n as f32).sqrt(), "dot n={n}");
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            axpy(0.7, &a, &mut y1);
+            axpy_scalar(0.7, &a, &mut y2);
+            for i in 0..n {
+                assert!((y1[i] - y2[i]).abs() < 1e-4, "axpy n={n} i={i}");
+            }
+            scale(&mut y1, 0.3);
+            scale_scalar(&mut y2, 0.3);
+            for i in 0..n {
+                assert!((y1[i] - y2[i]).abs() < 1e-4, "scale n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_block_panel_matches_scalar_reference() {
+        if simd_tier().is_none() {
+            return;
+        }
+        use crate::sparse::dense::Matrix;
+        for b in [8usize, 16, 32, 48] {
+            let mut rng = Rng::new(200 + b as u64);
+            let x = Matrix::randn(7, 3 * b, 1.0, &mut rng);
+            let blk = rng.normal_vec(b * b, 0.5);
+            let mut got = Matrix::randn(7, 2 * b, 1.0, &mut rng);
+            let mut want = got.clone();
+            // scalar reference: plain triple loop
+            for r in 0..7 {
+                for k in 0..b {
+                    let a = x.get(r, b + k);
+                    for c in 0..b {
+                        let v = want.get(r, b + c) + a * blk[k * b + c];
+                        want.set(r, b + c, v);
+                    }
+                }
+            }
+            let ldy = got.cols;
+            let handled = unsafe {
+                try_block_panel(b, &x, b, 0..7, &blk, got.data.as_mut_ptr(), ldy, b)
+            };
+            // under choice=scalar this returns false — run the arch kernel
+            // directly so the parity check always executes where possible
+            if !handled {
+                #[cfg(target_arch = "x86_64")]
+                unsafe {
+                    avx2::block_panel(b, &x, b, 0..7, &blk, got.data.as_mut_ptr(), ldy, b)
+                };
+                #[cfg(target_arch = "aarch64")]
+                unsafe {
+                    neon::block_panel(b, &x, b, 0..7, &blk, got.data.as_mut_ptr(), ldy, b)
+                };
+            }
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "b={b}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+}

@@ -15,8 +15,9 @@
 //! - [`dense`]        row-major matrix + panel-tiled parallel GEMM
 //! - [`bsr`]          BSR matrix + GEMM, pattern-agnostic
 //! - [`butterfly_mm`] butterfly product, flat multiply, low-rank composite
-//! - [`attention`]    streaming block-sparse attention
-//! - [`exec`]         the execution engine: plans, pool, micro-kernels
+//! - [`attention`]    fused streaming block-sparse attention (`AttnPlan`)
+//! - [`exec`]         the execution engine: plans, pool, kernel tiers
+//!   (scalar/SIMD), workspace scratch arena
 
 pub mod attention;
 pub mod bsr;
@@ -25,7 +26,8 @@ pub mod csr;
 pub mod dense;
 pub mod exec;
 
+pub use attention::AttnPlan;
 pub use bsr::BsrMatrix;
 pub use csr::CsrMatrix;
 pub use dense::Matrix;
-pub use exec::GemmPlan;
+pub use exec::{GemmPlan, Workspace};

@@ -186,6 +186,72 @@ fn prop_flat_lowrank_composite_matches_dense() {
 }
 
 #[test]
+fn prop_fused_attention_matches_masked_dense_oracle() {
+    use pixelfly::sparse::attention::{self, AttnPlan};
+    use pixelfly::sparse::Workspace;
+    // fused streaming engine vs the O(seq²) masked-dense oracle across
+    // random masks × block sizes {16, 32} × causal flag × threads {1, 4}.
+    // Tolerances are loose-ish on purpose: online softmax reorders the
+    // sums, so bit-equality is not the contract — 1e-3 max-abs-diff is.
+    check("fused-attn-vs-oracle", 12, |rng| {
+        let b = [16usize, 32][rng.below(2)];
+        let nb = rng.range(2, 9);
+        let seq = nb * b;
+        let d = [16usize, 32][rng.below(2)];
+        let causal = rng.bool(0.5);
+        let mut mask = baselines::random_mask(nb, nb, rng.f64() * 0.6, rng);
+        for i in 0..nb {
+            mask.set(i, i, true); // diagonal keeps causal rows non-empty
+        }
+        let q = Matrix::randn(seq, d, 1.0, rng);
+        let k = Matrix::randn(seq, d, 1.0, rng);
+        let v = Matrix::randn(seq, d, 1.0, rng);
+        let want = attention::dense_attention_masked(&q, &k, &v, &mask, causal);
+        for threads in [1usize, 4] {
+            let plan = AttnPlan::new(&mask, causal, threads);
+            let mut ws = Workspace::new();
+            let mut out = Matrix::zeros(seq, d);
+            plan.execute(&q, &k, &v, &mut out, &mut ws);
+            prop_assert!(out.max_abs_diff(&want) < 1e-3,
+                         "threads={threads} b={b} nb={nb} causal={causal}: {}",
+                         out.max_abs_diff(&want));
+            // the materializing two-pass kernel shares the schedule and
+            // must agree with the fused path on the same inputs
+            let mut out2 = Matrix::zeros(seq, d);
+            plan.execute_materializing(&q, &k, &v, &mut out2, &mut ws);
+            prop_assert!(out2.max_abs_diff(&out) < 1e-3,
+                         "two-pass vs fused, threads={threads}: {}",
+                         out2.max_abs_diff(&out));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bsr_plan_cache_replans_on_structure_change() {
+    // regression companion to the unit test: random structures, random
+    // in-place pattern edits, the cached-plan path must keep matching the
+    // serial oracle
+    check("plan-cache-replan", 15, |rng| {
+        let mask = baselines::random_mask(rng.range(2, 6), rng.range(2, 6),
+                                          0.4 + rng.f64() * 0.5, rng);
+        let mut w = BsrMatrix::random(&mask, 8, 0.7, rng);
+        let x = Matrix::randn(rng.range(1, 8), w.rows(), 1.0, rng);
+        let _ = w.matmul(&x); // populate the plan cache
+        // mutate the pattern when some row has >= 2 stored blocks
+        if let Some(i) = (0..w.nbr).find(|&i| w.row_ptr[i + 1] - w.row_ptr[i] >= 2) {
+            let s = w.row_ptr[i];
+            w.cols.swap(s, s + 1);
+        }
+        let mut want = Matrix::zeros(x.rows, w.cols_elems());
+        w.matmul_serial_into(&x, &mut want);
+        let y = w.matmul(&x);
+        prop_assert!(y.max_abs_diff(&want) < 1e-4, "{}", y.max_abs_diff(&want));
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_bsr_transpose_involution() {
     check("bsr-transpose", 25, |rng| {
         let mask = baselines::random_mask(rng.range(1, 8), rng.range(1, 8),

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Advisory bench-regression check.
+
+Compares fresh BENCH_*.json files (written by the in-crate bench harness,
+rust/src/bench.rs) against the committed baseline under
+benchmarks/baseline/. The primary metric is GFLOP/s (higher is better);
+benches without a flop count fall back to mean_ms (lower is better).
+
+Regressions beyond the threshold emit GitHub Actions `::warning::`
+annotations so they are visible on the run, but the script ALWAYS exits 0
+— this step is advisory and must never fail the gate (CI runners are too
+noisy for a hard perf gate; the trajectory lives in the uploaded
+artifacts).
+
+Refreshing the baseline: download the bench artifacts from a trusted CI
+run and commit them into benchmarks/baseline/ (same file names).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"::notice::could not read {path}: {e}")
+        return None
+
+
+def result_map(doc):
+    return {r.get("name"): r for r in doc.get("results", [])}
+
+
+def compare(base, fresh, threshold):
+    """Yield (name, metric, base_val, new_val, rel_change) for regressions."""
+    bmap = result_map(base)
+    for r in fresh.get("results", []):
+        name = r.get("name")
+        b = bmap.get(name)
+        if b is None:
+            print(f"  new benchmark (no baseline): {name}")
+            continue
+        if r.get("gflops") is not None and b.get("gflops") is not None:
+            new_v, base_v, metric, higher_better = (
+                r["gflops"], b["gflops"], "GFLOP/s", True)
+        elif r.get("mean_ms") is not None and b.get("mean_ms") is not None:
+            new_v, base_v, metric, higher_better = (
+                r["mean_ms"], b["mean_ms"], "mean_ms", False)
+        else:
+            continue
+        if base_v <= 0:
+            continue
+        # relative regression, positive = worse
+        rel = (base_v - new_v) / base_v if higher_better else (new_v - base_v) / base_v
+        status = "REGRESSION" if rel > threshold else "ok"
+        print(f"  {name}: {metric} {base_v:.3f} -> {new_v:.3f} "
+              f"({-rel * 100.0:+.1f}%) {status}")
+        if rel > threshold:
+            yield name, metric, base_v, new_v, rel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/baseline",
+                    help="directory with committed BENCH_*.json baselines")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative regression that triggers a warning")
+    ap.add_argument("fresh", nargs="+", help="fresh BENCH_*.json files")
+    args = ap.parse_args()
+
+    warned = 0
+    for path in args.fresh:
+        name = os.path.basename(path)
+        print(f"== {name}")
+        fresh = load(path)
+        if fresh is None:
+            continue
+        base_path = os.path.join(args.baseline, name)
+        if not os.path.exists(base_path):
+            print(f"::notice::no committed baseline for {name}; "
+                  f"commit the CI artifact to benchmarks/baseline/ to enable the diff")
+            continue
+        base = load(base_path)
+        if base is None:
+            continue
+        for bench, metric, bv, nv, rel in compare(base, fresh, args.threshold):
+            warned += 1
+            print(f"::warning title=bench regression::{name}:{bench} {metric} "
+                  f"regressed {rel * 100.0:.1f}% (baseline {bv:.3f}, now {nv:.3f})")
+
+    if warned:
+        print(f"\n{warned} advisory regression warning(s); not failing the gate.")
+    else:
+        print("\nno regressions beyond threshold.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
