@@ -14,6 +14,21 @@
 use crate::util::stats::{time_it, Summary};
 use crate::util::Args;
 
+/// Per-phase columns for train-step benches (forward / backward /
+/// optimizer update). Lives in the shared formatter so every suite that
+/// measures phases — fig1 today, anything later — renders identically
+/// (no per-bench ad-hoc columns).
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseCols {
+    pub fwd_ms: f64,
+    pub bwd_ms: f64,
+    pub update_ms: f64,
+    /// per-phase GFLOP/s when the bench registered per-phase flop counts
+    pub fwd_gflops: Option<f64>,
+    pub bwd_gflops: Option<f64>,
+    pub update_gflops: Option<f64>,
+}
+
 pub struct BenchResult {
     pub name: String,
     pub summary: Summary,
@@ -23,6 +38,8 @@ pub struct BenchResult {
     /// when the bench registered it — the fused-attention bench uses this
     /// column to prove the O(block²) scratch bound
     pub scratch_bytes: Option<usize>,
+    /// fwd/bwd/update split, when the bench measured one
+    pub phases: Option<PhaseCols>,
     /// optional user metric (e.g. speedup baseline id)
     pub note: String,
 }
@@ -60,6 +77,7 @@ impl BenchSuite {
             summary,
             gflops: None,
             scratch_bytes: None,
+            phases: None,
             note: note.to_string(),
         });
         &self.results.last().unwrap().summary
@@ -70,6 +88,26 @@ impl BenchSuite {
     pub fn set_scratch_bytes(&mut self, bytes: usize) {
         if let Some(r) = self.results.last_mut() {
             r.scratch_bytes = Some(bytes);
+        }
+    }
+
+    /// Attach a fwd/bwd/update phase split (mean ms per phase) to the
+    /// most recent result; `flops` per phase, when given, adds per-phase
+    /// GFLOP/s to the JSON. One formatter serves every phase-measuring
+    /// bench.
+    pub fn set_phase_split(&mut self, ms: [f64; 3], flops: Option<[f64; 3]>) {
+        if let Some(r) = self.results.last_mut() {
+            let gf = |ms: f64, fl: Option<f64>| {
+                fl.filter(|_| ms > 0.0).map(|f| f / (ms * 1e6))
+            };
+            r.phases = Some(PhaseCols {
+                fwd_ms: ms[0],
+                bwd_ms: ms[1],
+                update_ms: ms[2],
+                fwd_gflops: gf(ms[0], flops.map(|f| f[0])),
+                bwd_gflops: gf(ms[1], flops.map(|f| f[1])),
+                update_gflops: gf(ms[2], flops.map(|f| f[2])),
+            });
         }
     }
 
@@ -95,12 +133,20 @@ impl BenchSuite {
             .map(|r| r.summary.mean_ms())
     }
 
-    /// Print the table; returns it as a string too (for tee-ing).
+    /// Print the table; returns it as a string too (for tee-ing). Phase
+    /// columns (fwd/bwd/upd) render only when some result measured them,
+    /// so phase-free suites keep their existing layout.
     pub fn report(&self) -> String {
+        let has_phases = self.results.iter().any(|r| r.phases.is_some());
         let mut out = String::new();
         out.push_str(&format!("\n=== {} (warmup={} iters={}) ===\n",
                               self.title, self.warmup, self.iters));
-        out.push_str(&format!("{:<44} {:>12} {:>12} {:>12} {:>9} {:>11}  note\n",
+        let phase_hdr = if has_phases {
+            format!(" {:>9} {:>9} {:>9}", "fwd", "bwd", "upd")
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("{:<44} {:>12} {:>12} {:>12} {:>9} {:>11}{phase_hdr}  note\n",
                               "benchmark", "mean", "p50", "p95", "gflops", "scratch"));
         for r in &self.results {
             let gf = r.gflops.map(|g| format!("{g:>9.2}")).unwrap_or_else(|| " ".repeat(9));
@@ -108,8 +154,17 @@ impl BenchSuite {
                 .scratch_bytes
                 .map(|b| format!("{:>10}B", b))
                 .unwrap_or_else(|| " ".repeat(11));
+            let ph = if has_phases {
+                match &r.phases {
+                    Some(p) => format!(" {:>7.2}ms {:>7.2}ms {:>7.2}ms",
+                                       p.fwd_ms, p.bwd_ms, p.update_ms),
+                    None => " ".repeat(30),
+                }
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
-                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms {gf} {sb}  {}\n",
+                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms {gf} {sb}{ph}  {}\n",
                 r.name,
                 r.summary.mean_ms(),
                 r.summary.p50_ns / 1e6,
@@ -117,13 +172,18 @@ impl BenchSuite {
                 r.note
             ));
         }
-        // machine-readable lines (scratch bytes appended last so existing
-        // TSV consumers keep their column positions)
+        // machine-readable lines (new columns appended last so existing
+        // TSV consumers keep their column positions: ..., scratch, fwd,
+        // bwd, upd)
         for r in &self.results {
             let sb = r.scratch_bytes.map(|b| b.to_string()).unwrap_or_default();
-            out.push_str(&format!("TSV\t{}\t{}\t{:.6}\t{:.6}\t{}\t{}\n",
+            let ph = r
+                .phases
+                .map(|p| format!("\t{:.6}\t{:.6}\t{:.6}", p.fwd_ms, p.bwd_ms, p.update_ms))
+                .unwrap_or_default();
+            out.push_str(&format!("TSV\t{}\t{}\t{:.6}\t{:.6}\t{}\t{}{}\n",
                                   self.title, r.name, r.summary.mean_ms(),
-                                  r.summary.p50_ns / 1e6, r.note, sb));
+                                  r.summary.p50_ns / 1e6, r.note, sb, ph));
         }
         print!("{out}");
         out
@@ -142,9 +202,23 @@ impl BenchSuite {
                 .scratch_bytes
                 .map(|b| b.to_string())
                 .unwrap_or_else(|| "null".into());
+            let opt = |v: Option<f64>| v.map(|g| format!("{g:.4}")).unwrap_or_else(|| "null".into());
+            let ph = match &r.phases {
+                Some(p) => format!(
+                    ", \"fwd_ms\": {:.6}, \"bwd_ms\": {:.6}, \"update_ms\": {:.6}, \
+                     \"fwd_gflops\": {}, \"bwd_gflops\": {}, \"update_gflops\": {}",
+                    p.fwd_ms,
+                    p.bwd_ms,
+                    p.update_ms,
+                    opt(p.fwd_gflops),
+                    opt(p.bwd_gflops),
+                    opt(p.update_gflops)
+                ),
+                None => String::new(),
+            };
             out.push_str(&format!(
                 "    {{\"name\": \"{}\", \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \
-                 \"p95_ms\": {:.6}, \"gflops\": {}, \"scratch_bytes\": {}, \
+                 \"p95_ms\": {:.6}, \"gflops\": {}, \"scratch_bytes\": {}{ph}, \
                  \"note\": \"{}\"}}{}\n",
                 escape(&r.name),
                 r.summary.mean_ms(),
@@ -221,6 +295,29 @@ mod tests {
         let mut s = suite();
         s.bench("q", "say \"hi\"", || {});
         assert!(s.json().contains("say \\\"hi\\\""));
+    }
+
+    #[test]
+    fn phase_split_flows_to_table_json_and_tsv() {
+        let mut s = suite();
+        s.bench("plain", "", || {});
+        s.bench("train_step", "sparse", || {});
+        s.set_phase_split([1.5, 3.0, 0.25], Some([1.5e9, 3.0e9, 0.5e9]));
+        // table gains the phase header and the phased row renders values
+        let rep = s.report();
+        assert!(rep.contains("fwd"), "{rep}");
+        assert!(rep.contains("1.50ms"), "{rep}");
+        // TSV: phase columns appended after scratch
+        assert!(rep.contains("TSV\tt\ttrain_step"), "{rep}");
+        assert!(rep.contains("\t1.500000\t3.000000\t0.250000"), "{rep}");
+        // JSON: per-phase ms + GFLOP/s (1.5e9 flops / 1.5 ms = 1000 GF/s)
+        let j = s.json();
+        assert!(j.contains("\"fwd_ms\": 1.500000"), "{j}");
+        assert!(j.contains("\"fwd_gflops\": 1000.0000"), "{j}");
+        assert!(j.contains("\"update_gflops\": 2000.0000"), "{j}");
+        // the phase-free result carries no phase keys
+        assert_eq!(j.matches("fwd_ms").count(), 1, "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 
     #[test]

@@ -37,6 +37,13 @@ pub struct TrainReport {
     /// (`sparse::exec::kernel_name()`: "scalar" / "avx2" / "neon");
     /// empty when unrecorded
     pub kernel: String,
+    /// per-phase step-time split (forward / backward / optimizer update),
+    /// recorded by drivers that run all three on the substrate
+    /// (`TrainStep`); `None` for engine-path runs where the phases
+    /// execute inside one opaque artifact
+    pub fwd_time: Option<Summary>,
+    pub bwd_time: Option<Summary>,
+    pub update_time: Option<Summary>,
 }
 
 impl TrainReport {
@@ -69,6 +76,15 @@ impl TrainReport {
             .as_ref()
             .map(|s| format!(" step={:.1}ms", s.mean_ms()))
             .unwrap_or_default();
+        let st = match (&self.fwd_time, &self.bwd_time, &self.update_time) {
+            (Some(f), Some(b), Some(u)) => format!(
+                "{st} (fwd={:.1} bwd={:.1} upd={:.1})",
+                f.mean_ms(),
+                b.mean_ms(),
+                u.mean_ms()
+            ),
+            _ => st,
+        };
         let thr = if self.substrate_threads > 0 {
             format!(" threads={}", self.substrate_threads)
         } else {
@@ -110,6 +126,23 @@ mod tests {
         assert!(tsv.contains("10\t1.250000"));
         assert!((r.initial_loss() - 2.5).abs() < 1e-12);
         assert!((r.final_loss() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_line_shows_phase_split_when_recorded() {
+        let mut r = TrainReport::default();
+        r.preset = "substrate_mlp".into();
+        r.loss_curve = vec![(0, 1.0)];
+        assert!(!r.summary_line().contains("fwd="));
+        let s = Summary { mean_ns: 2e6, p50_ns: 2e6, p95_ns: 2e6, ..Default::default() };
+        r.step_time = Some(s.clone());
+        r.fwd_time = Some(s.clone());
+        r.bwd_time = Some(s.clone());
+        r.update_time = Some(s);
+        let line = r.summary_line();
+        assert!(line.contains("fwd=2.0"), "{line}");
+        assert!(line.contains("bwd=2.0"), "{line}");
+        assert!(line.contains("upd=2.0"), "{line}");
     }
 
     #[test]

@@ -17,4 +17,7 @@ pub mod trainer;
 
 pub use budget::{cost_optimal, projected_speedup, rule_of_thumb, Allocation};
 pub use planner::{plan_attention, plan_layer, plan_model, AttentionPlan, LayerPlan, ModelPlan};
-pub use trainer::{TrainConfig, Trainer};
+pub use trainer::{
+    AttnTrainStep, DenseLinear, Linear, SparseLinear, StepTimings, TrainConfig,
+    TrainStep, Trainer,
+};

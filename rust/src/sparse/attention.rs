@@ -55,7 +55,38 @@ pub struct AttnPlan {
     kbs: Vec<u32>,
     /// ranges over query block rows, balanced by visible-block weight
     chunks: Vec<Range<usize>>,
+    /// reverse schedule (the same row-owned inversion trick as the GEMM
+    /// plan): kb_ptr[kb]..kb_ptr[kb+1] indexes `qbs` — the query block
+    /// rows that see key block `kb`. dK/dV rows are owned key-side, so
+    /// the backward pass is race-free without atomics or replication.
+    kb_ptr: Vec<usize>,
+    qbs: Vec<u32>,
+    /// ranges over key block rows, balanced by visible-block weight
+    key_chunks: Vec<Range<usize>>,
     visible_blocks: usize,
+}
+
+/// Per-row softmax statistics the fused forward stashes for the
+/// recompute backward: `m[i]` is the running max, `l[i]` the softmax
+/// denominator of query row `i` (`l == 0` marks a fully masked row).
+/// `O(seq)` floats — the whole price of never materialising `seq×seq`
+/// probabilities for the backward pass. Buffers grow on first use and
+/// are reused in place afterwards (steady-state zero-alloc).
+#[derive(Clone, Debug, Default)]
+pub struct AttnStats {
+    pub m: Vec<f32>,
+    pub l: Vec<f32>,
+}
+
+impl AttnStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, seq: usize) {
+        self.m.resize(seq, 0.0);
+        self.l.resize(seq, 0.0);
+    }
 }
 
 /// Fingerprint of the mask support + causal flag (the schedule — and the
@@ -95,6 +126,29 @@ impl AttnPlan {
         let weights: Vec<usize> =
             (0..nb).map(|qb| (row_ptr[qb + 1] - row_ptr[qb]).max(1)).collect();
         let chunks = pool::weighted_ranges(&weights, threads * CHUNKS_PER_THREAD);
+
+        // invert the visibility lists once for the backward pass: which
+        // query block rows see each key block (counting sort, O(nnz))
+        let mut kb_ptr = vec![0usize; nb + 1];
+        for &kb in &kbs {
+            kb_ptr[kb as usize + 1] += 1;
+        }
+        for kb in 0..nb {
+            kb_ptr[kb + 1] += kb_ptr[kb];
+        }
+        let mut qbs = vec![0u32; kbs.len()];
+        let mut cursor = kb_ptr.clone();
+        for qb in 0..nb {
+            for s in row_ptr[qb]..row_ptr[qb + 1] {
+                let kb = kbs[s] as usize;
+                qbs[cursor[kb]] = qb as u32;
+                cursor[kb] += 1;
+            }
+        }
+        let key_weights: Vec<usize> =
+            (0..nb).map(|kb| (kb_ptr[kb + 1] - kb_ptr[kb]).max(1)).collect();
+        let key_chunks = pool::weighted_ranges(&key_weights, threads * CHUNKS_PER_THREAD);
+
         AttnPlan {
             nb,
             causal,
@@ -104,6 +158,9 @@ impl AttnPlan {
             row_ptr,
             kbs,
             chunks,
+            kb_ptr,
+            qbs,
+            key_chunks,
         }
     }
 
@@ -113,6 +170,12 @@ impl AttnPlan {
 
     pub fn causal(&self) -> bool {
         self.causal
+    }
+
+    /// Side length of the block grid this plan was built over (`nb`);
+    /// `seq / nb` recovers the block size for a given sequence.
+    pub fn grid_blocks(&self) -> usize {
+        self.nb
     }
 
     pub fn fingerprint(&self) -> u64 {
@@ -137,6 +200,14 @@ impl AttnPlan {
     /// the whole scratch footprint.
     pub fn scratch_elems(b: usize, d: usize) -> usize {
         b * b + 2 * b + b * d
+    }
+
+    /// Per-worker scratch elements of the recompute backward: one b×b
+    /// probability tile (scores are recomputed from Q·Kᵀ + the stored
+    /// stats, never stored at `seq` scale). The shared `O(seq)` row of
+    /// `D = dot(dO_i, O_i)` values comes on top, once, not per worker.
+    pub fn backward_scratch_elems(b: usize) -> usize {
+        b * b
     }
 
     fn workers_for(&self, b: usize, d: usize) -> usize {
@@ -177,9 +248,7 @@ impl AttnPlan {
                 f(qb, orows, s);
             }
         } else {
-            struct OutPtr(*mut f32);
-            unsafe impl Sync for OutPtr {}
-            let base = OutPtr(out.data.as_mut_ptr());
+            let base = pool::SyncPtr(out.data.as_mut_ptr());
             let mut parts: Vec<&mut [f32]> = scratch.chunks_mut(per).collect();
             pool::run_tasks_with(self.chunks.len(), &mut parts, |part, c| {
                 // capture the whole wrapper (not the raw-pointer field) so
@@ -203,24 +272,48 @@ impl AttnPlan {
     /// Scratch comes from `ws` (zero-alloc once warm).
     pub fn execute(&self, q: &Matrix, k: &Matrix, v: &Matrix, out: &mut Matrix,
                    ws: &mut Workspace) {
+        self.execute_impl(q, k, v, out, ws, None);
+    }
+
+    /// Fused forward that additionally stashes the per-row softmax
+    /// statistics `(max, denom)` into `stats` — the `O(seq)` state the
+    /// Flash-style [`Self::backward`] needs to recompute probability
+    /// tiles instead of storing them. Costs two extra scalar writes per
+    /// query row over [`Self::execute`]; numerics are identical.
+    pub fn execute_stats(&self, q: &Matrix, k: &Matrix, v: &Matrix, out: &mut Matrix,
+                         stats: &mut AttnStats, ws: &mut Workspace) {
+        stats.ensure(q.rows);
+        let ptrs = (stats.m.as_mut_ptr(), stats.l.as_mut_ptr());
+        self.execute_impl(q, k, v, out, ws, Some(ptrs));
+    }
+
+    fn execute_impl(&self, q: &Matrix, k: &Matrix, v: &Matrix, out: &mut Matrix,
+                    ws: &mut Workspace, stats: Option<(*mut f32, *mut f32)>) {
         let (b, d) = self.check_shapes(q, k, v, out);
         let scale = 1.0 / (d as f32).sqrt();
         // resolve the kernel tier once; the inner loops call the
         // pre-resolved primitives
         let tier = simd::active_tier();
+        let sp: Option<(pool::SyncPtr<f32>, pool::SyncPtr<f32>)> =
+            stats.map(|(m, l)| (pool::SyncPtr(m), pool::SyncPtr(l)));
         self.run_block_rows(out, b, d, Self::scratch_elems(b, d), ws,
                             |qb, orows, scratch| {
-            self.fused_block_row(tier, q, k, v, scale, b, d, qb, orows, scratch);
+            let sp = &sp;
+            self.fused_block_row(tier, q, k, v, scale, b, d, qb, orows, scratch,
+                                 sp.as_ref().map(|(m, l)| (m.0, l.0)));
         });
     }
 
     /// One query block row, streaming over its visible key blocks with an
     /// online-softmax accumulator. `scratch` is `scratch_elems(b, d)`
-    /// floats; `out_rows` is exactly this block row of the output.
+    /// floats; `out_rows` is exactly this block row of the output. When
+    /// `stats` carries the (m, l) base pointers, the final per-row max
+    /// and denominator are stashed there for the recompute backward.
     #[allow(clippy::too_many_arguments)]
     fn fused_block_row(&self, tier: simd::Tier, q: &Matrix, k: &Matrix, v: &Matrix,
                        scale: f32, b: usize, d: usize, qb: usize,
-                       out_rows: &mut [f32], scratch: &mut [f32]) {
+                       out_rows: &mut [f32], scratch: &mut [f32],
+                       stats: Option<(*mut f32, *mut f32)>) {
         let (scores, rest) = scratch.split_at_mut(b * b);
         let (m, rest) = rest.split_at_mut(b);
         let (l, acc_all) = rest.split_at_mut(b);
@@ -268,6 +361,18 @@ impl AttnPlan {
                     simd::axpy_with(tier, p, v.row(kb * b + ki), arow);
                 }
                 m[qi] = m_new;
+            }
+        }
+        if let Some((mp, lp)) = stats {
+            // Safety: this task exclusively owns query rows
+            // qb*b..(qb+1)*b of the stats vectors (same ownership
+            // argument as out_rows); both were sized to seq by the
+            // caller.
+            unsafe {
+                for qi in 0..b {
+                    *mp.add(qb * b + qi) = m[qi];
+                    *lp.add(qb * b + qi) = l[qi];
+                }
             }
         }
         for qi in 0..b {
@@ -342,6 +447,197 @@ impl AttnPlan {
                 }
             }
         }
+    }
+
+    /// Flash-style recompute backward of the fused kernel:
+    /// given `o = execute_stats(q, k, v, …)`, its stashed per-row
+    /// `(max, denom)` stats and the upstream gradient `dout`, computes
+    /// `dq`, `dk`, `dv` touching only the visible blocks.
+    ///
+    /// Probability tiles are *recomputed* one `b×b` tile at a time from
+    /// `Q·Kᵀ` plus the stats — the `seq×seq` probability matrix never
+    /// exists, matching the forward's memory contract. Two phases, both
+    /// race-free by ownership:
+    ///
+    /// 1. **dQ** over the query-side schedule (each task owns its query
+    ///    rows): `dS = P ⊙ (dO·Vᵀ − D)`, `dQ += scale·dS·K`, with
+    ///    `D_i = dot(dO_i, O_i)` precomputed once into an `O(seq)` row.
+    /// 2. **dK/dV** over the *inverted* key-side schedule (each task owns
+    ///    its key rows): the same tiles are recomputed transposed-role,
+    ///    `dV += Pᵀ·dO`, `dK += scale·dSᵀ·Q`.
+    ///
+    /// Scratch: one b×b tile per worker + the shared D row — asserted
+    /// O(block²), never O(seq²), by the fig1 bench.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward(&self, q: &Matrix, k: &Matrix, v: &Matrix, o: &Matrix,
+                    dout: &Matrix, stats: &AttnStats,
+                    dq: &mut Matrix, dk: &mut Matrix, dv: &mut Matrix,
+                    ws: &mut Workspace) {
+        let (b, d) = self.check_shapes(q, k, v, o);
+        let seq = q.rows;
+        for (name, m) in [("dout", &*dout), ("dq", &*dq), ("dk", &*dk), ("dv", &*dv)] {
+            assert_eq!((m.rows, m.cols), (seq, d), "{name} shape");
+        }
+        assert_eq!(stats.m.len(), seq, "stats not from this forward (run execute_stats)");
+        assert_eq!(stats.l.len(), seq);
+        let scale = 1.0 / (d as f32).sqrt();
+        let tier = simd::active_tier();
+
+        // D_i = dot(dO_i, O_i) = Σ_j P_ij·dP_ij: one O(seq·d) serial pass
+        // into workspace scratch, shared read-only by both phases
+        let mut dvec = ws.take(seq);
+        for i in 0..seq {
+            dvec[i] = simd::dot_with(tier, dout.row(i), o.row(i));
+        }
+
+        let per = Self::backward_scratch_elems(b);
+        self.run_block_rows(dq, b, d, per, ws, |qb, dq_rows, scratch| {
+            self.backward_q_block_row(tier, q, k, v, dout, stats, &dvec, scale,
+                                      b, d, qb, dq_rows, scratch);
+        });
+        self.run_key_rows(dk, dv, b, d, per, ws, |kb, dk_rows, dv_rows, scratch| {
+            self.backward_k_block_row(tier, q, k, v, dout, stats, &dvec, scale,
+                                      b, d, kb, dk_rows, dv_rows, scratch);
+        });
+        ws.give(dvec);
+    }
+
+    /// Recompute the probability tile P[qi, ki] of (query block `qb`,
+    /// key block `kb`) from Q·Kᵀ and the stored stats:
+    /// `P = exp(scale·s − m_row) / l_row`, with the causal diagonal
+    /// masked exactly like the forward. Rows with `l == 0` (fully
+    /// masked) come out all-zero.
+    #[allow(clippy::too_many_arguments)]
+    fn prob_tile(&self, tier: simd::Tier, q: &Matrix, k: &Matrix, stats: &AttnStats,
+                 scale: f32, b: usize, qb: usize, kb: usize, p: &mut [f32]) {
+        for qi in 0..b {
+            let qpos = qb * b + qi;
+            let prow = &mut p[qi * b..(qi + 1) * b];
+            let l = stats.l[qpos];
+            if l == 0.0 {
+                prow.fill(0.0);
+                continue;
+            }
+            let inv_l = 1.0 / l;
+            let m = stats.m[qpos];
+            let qrow = q.row(qpos);
+            // inside the diagonal block, kpos > qpos ⇔ ki > qi
+            let lim = if self.causal && kb == qb { qi + 1 } else { b };
+            for (ki, pv) in prow[..lim].iter_mut().enumerate() {
+                let s = simd::dot_with(tier, qrow, k.row(kb * b + ki)) * scale;
+                *pv = (s - m).exp() * inv_l;
+            }
+            prow[lim..].fill(0.0);
+        }
+    }
+
+    /// Phase 1: dQ rows of one query block row (exclusively owned).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_q_block_row(&self, tier: simd::Tier, q: &Matrix, k: &Matrix,
+                            v: &Matrix, dout: &Matrix, stats: &AttnStats,
+                            dvec: &[f32], scale: f32, b: usize, d: usize,
+                            qb: usize, dq_rows: &mut [f32], scratch: &mut [f32]) {
+        let p_tile = &mut scratch[..b * b];
+        dq_rows.fill(0.0);
+        for &kb in &self.kbs[self.row_ptr[qb]..self.row_ptr[qb + 1]] {
+            let kb = kb as usize;
+            self.prob_tile(tier, q, k, stats, scale, b, qb, kb, p_tile);
+            for qi in 0..b {
+                let qpos = qb * b + qi;
+                if stats.l[qpos] == 0.0 {
+                    continue;
+                }
+                let dorow = dout.row(qpos);
+                let prow = &p_tile[qi * b..(qi + 1) * b];
+                let dqrow = &mut dq_rows[qi * d..(qi + 1) * d];
+                for (ki, &pv) in prow.iter().enumerate() {
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let kpos = kb * b + ki;
+                    // dS = P ⊙ (dP − D), dP[qi,ki] = dot(dO_qi, V_ki)
+                    let ds = pv * (simd::dot_with(tier, dorow, v.row(kpos)) - dvec[qpos]);
+                    simd::axpy_with(tier, scale * ds, k.row(kpos), dqrow);
+                }
+            }
+        }
+    }
+
+    /// Phase 2: dK/dV rows of one key block row (exclusively owned via
+    /// the inverted schedule).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_k_block_row(&self, tier: simd::Tier, q: &Matrix, k: &Matrix,
+                            v: &Matrix, dout: &Matrix, stats: &AttnStats,
+                            dvec: &[f32], scale: f32, b: usize, d: usize, kb: usize,
+                            dk_rows: &mut [f32], dv_rows: &mut [f32],
+                            scratch: &mut [f32]) {
+        let p_tile = &mut scratch[..b * b];
+        dk_rows.fill(0.0);
+        dv_rows.fill(0.0);
+        for &qb in &self.qbs[self.kb_ptr[kb]..self.kb_ptr[kb + 1]] {
+            let qb = qb as usize;
+            self.prob_tile(tier, q, k, stats, scale, b, qb, kb, p_tile);
+            for qi in 0..b {
+                let qpos = qb * b + qi;
+                if stats.l[qpos] == 0.0 {
+                    continue;
+                }
+                let dorow = dout.row(qpos);
+                let qrow = q.row(qpos);
+                let prow = &p_tile[qi * b..(qi + 1) * b];
+                for (ki, &pv) in prow.iter().enumerate() {
+                    if pv == 0.0 {
+                        continue;
+                    }
+                    let kpos = kb * b + ki;
+                    let ds = pv * (simd::dot_with(tier, dorow, v.row(kpos)) - dvec[qpos]);
+                    simd::axpy_with(tier, pv, dorow, &mut dv_rows[ki * d..(ki + 1) * d]);
+                    simd::axpy_with(tier, scale * ds, qrow, &mut dk_rows[ki * d..(ki + 1) * d]);
+                }
+            }
+        }
+    }
+
+    /// Key-side twin of [`Self::run_block_rows`]: hands each worker the
+    /// dK and dV row slices of the key block rows its chunk owns, plus a
+    /// private scratch slice. Chunks partition 0..nb over `key_chunks`,
+    /// so the disjoint-write argument is identical.
+    fn run_key_rows<F>(&self, dk: &mut Matrix, dv: &mut Matrix, b: usize, d: usize,
+                       per: usize, ws: &mut Workspace, f: F)
+    where
+        F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+    {
+        let workers = self.workers_for(b, d);
+        let mut scratch = ws.take(per * workers);
+        if workers == 1 {
+            let s = &mut scratch[..per];
+            for kb in 0..self.nb {
+                let dk_rows = &mut dk.data[kb * b * d..(kb + 1) * b * d];
+                let dv_rows = &mut dv.data[kb * b * d..(kb + 1) * b * d];
+                f(kb, dk_rows, dv_rows, s);
+            }
+        } else {
+            let dk_base = pool::SyncPtr(dk.data.as_mut_ptr());
+            let dv_base = pool::SyncPtr(dv.data.as_mut_ptr());
+            let mut parts: Vec<&mut [f32]> = scratch.chunks_mut(per).collect();
+            pool::run_tasks_with(self.key_chunks.len(), &mut parts, |part, c| {
+                let dk_base = &dk_base;
+                let dv_base = &dv_base;
+                for kb in self.key_chunks[c].clone() {
+                    // Safety: key chunks partition 0..nb, so this task
+                    // owns dk/dv rows kb*b..(kb+1)*b exclusively; bounds
+                    // follow from the caller's shape asserts.
+                    let dk_rows = unsafe {
+                        std::slice::from_raw_parts_mut(dk_base.0.add(kb * b * d), b * d)
+                    };
+                    let dv_rows = unsafe {
+                        std::slice::from_raw_parts_mut(dv_base.0.add(kb * b * d), b * d)
+                    };
+                    f(kb, dk_rows, dv_rows, part);
+                }
+            });
+        }
+        ws.give(scratch);
     }
 }
 
@@ -462,6 +758,94 @@ fn dense_attention_impl(q: &Matrix, k: &Matrix, v: &Matrix,
     out
 }
 
+/// Dense backward oracle for masked attention (O(seq²), tests only):
+/// textbook softmax-attention gradients `dV = Pᵀ·dO`,
+/// `dS = P ⊙ (dO·Vᵀ − rowsum(P ⊙ dO·Vᵀ))`, `dQ = scale·dS·K`,
+/// `dK = scale·dSᵀ·Q`, over exactly the positions the block mask (and
+/// the causal flag) admit. The engine backward is tested against this.
+pub fn dense_attention_backward_masked(q: &Matrix, k: &Matrix, v: &Matrix,
+                                       dout: &Matrix, mask: &BlockMask,
+                                       causal: bool) -> (Matrix, Matrix, Matrix) {
+    let (seq, d) = (q.rows, q.cols);
+    assert_eq!((k.rows, k.cols), (seq, d));
+    assert_eq!((v.rows, v.cols), (seq, d));
+    assert_eq!((dout.rows, dout.cols), (seq, d));
+    assert_eq!(mask.rows, mask.cols, "attention masks are square over seq blocks");
+    assert_eq!(seq % mask.rows, 0);
+    let b = seq / mask.rows;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut dq = Matrix::zeros(seq, d);
+    let mut dk = Matrix::zeros(seq, d);
+    let mut dv = Matrix::zeros(seq, d);
+    let mut s = vec![0.0f32; seq];
+    let mut dp = vec![0.0f32; seq];
+    for i in 0..seq {
+        let qi = q.row(i);
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..seq {
+            let visible = !(causal && j > i) && mask.get(i / b, j / b);
+            s[j] = if !visible {
+                f32::NEG_INFINITY
+            } else {
+                let kj = k.row(j);
+                let mut dot = 0.0;
+                for t in 0..d {
+                    dot += qi[t] * kj[t];
+                }
+                dot * scale
+            };
+            mx = mx.max(s[j]);
+        }
+        if mx == f32::NEG_INFINITY {
+            continue; // fully masked row: zero output, zero gradient
+        }
+        let mut z = 0.0f32;
+        for sj in s.iter_mut() {
+            if sj.is_finite() {
+                *sj = (*sj - mx).exp();
+                z += *sj;
+            } else {
+                *sj = 0.0;
+            }
+        }
+        for sj in s.iter_mut() {
+            *sj /= z; // s now holds P row i
+        }
+        let doi = dout.row(i);
+        let mut dsum = 0.0f32; // D_i = Σ_j P_ij·dP_ij
+        for j in 0..seq {
+            dp[j] = if s[j] > 0.0 {
+                let vj = v.row(j);
+                let mut dot = 0.0;
+                for t in 0..d {
+                    dot += doi[t] * vj[t];
+                }
+                dot
+            } else {
+                0.0
+            };
+            dsum += s[j] * dp[j];
+        }
+        for j in 0..seq {
+            if s[j] == 0.0 {
+                continue;
+            }
+            let ds = s[j] * (dp[j] - dsum);
+            let kj = k.row(j);
+            for t in 0..d {
+                dq.data[i * d + t] += scale * ds * kj[t];
+            }
+            let qrow = q.row(i);
+            let doi = dout.row(i);
+            for t in 0..d {
+                dk.data[j * d + t] += scale * ds * qrow[t];
+                dv.data[j * d + t] += s[j] * doi[t];
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -578,6 +962,122 @@ mod tests {
         let bound = 2 * AttnPlan::scratch_elems(16, 16) * 4;
         assert!(ws.peak_bytes() <= bound,
                 "peak {} > bound {bound}", ws.peak_bytes());
+    }
+
+    #[test]
+    fn execute_stats_matches_execute_and_flags_masked_rows() {
+        let (q, k, v) = qkv(64, 8, 10);
+        let mut mask = crate::patterns::BlockMask::zeros(4, 4);
+        mask.set(0, 0, true);
+        mask.set(1, 0, true);
+        mask.set(3, 2, true);
+        let plan = AttnPlan::new(&mask, false, 2);
+        let mut ws = Workspace::new();
+        let mut plain = Matrix::zeros(64, 8);
+        plan.execute(&q, &k, &v, &mut plain, &mut ws);
+        let mut out = Matrix::zeros(64, 8);
+        let mut stats = AttnStats::new();
+        plan.execute_stats(&q, &k, &v, &mut out, &mut stats, &mut ws);
+        assert!(out.max_abs_diff(&plain) < 1e-6, "stats variant must not change numerics");
+        // visible rows have a positive denominator, masked rows l == 0
+        for i in 0..64 {
+            let visible = i < 32 || i >= 48; // block rows 0,1,3 see keys
+            if visible {
+                assert!(stats.l[i] > 0.0, "row {i} should be live");
+                assert!(stats.m[i].is_finite());
+            } else {
+                assert_eq!(stats.l[i], 0.0, "row {i} is fully masked");
+            }
+        }
+    }
+
+    fn engine_backward(plan: &AttnPlan, q: &Matrix, k: &Matrix, v: &Matrix,
+                       dout: &Matrix) -> (Matrix, Matrix, Matrix) {
+        let (seq, d) = (q.rows, q.cols);
+        let mut ws = Workspace::new();
+        let mut o = Matrix::zeros(seq, d);
+        let mut stats = AttnStats::new();
+        plan.execute_stats(q, k, v, &mut o, &mut stats, &mut ws);
+        let mut dq = Matrix::zeros(seq, d);
+        let mut dk = Matrix::zeros(seq, d);
+        let mut dv = Matrix::zeros(seq, d);
+        plan.backward(q, k, v, &o, dout, &stats, &mut dq, &mut dk, &mut dv, &mut ws);
+        (dq, dk, dv)
+    }
+
+    #[test]
+    fn backward_matches_dense_oracle_full_mask() {
+        let (q, k, v) = qkv(32, 8, 11);
+        let dout = Matrix::randn(32, 8, 1.0, &mut Rng::new(12));
+        let mask = crate::patterns::BlockMask::ones(4, 4);
+        for causal in [false, true] {
+            let (wdq, wdk, wdv) =
+                dense_attention_backward_masked(&q, &k, &v, &dout, &mask, causal);
+            for threads in [1usize, 4] {
+                let plan = AttnPlan::new(&mask, causal, threads);
+                let (dq, dk, dv) = engine_backward(&plan, &q, &k, &v, &dout);
+                assert!(dq.max_abs_diff(&wdq) < 1e-3,
+                        "dq causal={causal} threads={threads}: {}", dq.max_abs_diff(&wdq));
+                assert!(dk.max_abs_diff(&wdk) < 1e-3,
+                        "dk causal={causal} threads={threads}: {}", dk.max_abs_diff(&wdk));
+                assert!(dv.max_abs_diff(&wdv) < 1e-3,
+                        "dv causal={causal} threads={threads}: {}", dv.max_abs_diff(&wdv));
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_dense_oracle_sparse_mask_with_empty_rows() {
+        let (q, k, v) = qkv(64, 16, 13);
+        let dout = Matrix::randn(64, 16, 1.0, &mut Rng::new(14));
+        let mut mask = baselines::pixelfly_attention_mask(4, 2, 1);
+        // punch out block row 2 entirely: masked query rows AND a key
+        // block seen by fewer query blocks
+        for j in 0..4 {
+            mask.set(2, j, false);
+        }
+        for causal in [false, true] {
+            let (wdq, wdk, wdv) =
+                dense_attention_backward_masked(&q, &k, &v, &dout, &mask, causal);
+            let plan = AttnPlan::new(&mask, causal, 3);
+            let (dq, dk, dv) = engine_backward(&plan, &q, &k, &v, &dout);
+            assert!(dq.max_abs_diff(&wdq) < 1e-3, "dq causal={causal}: {}",
+                    dq.max_abs_diff(&wdq));
+            assert!(dk.max_abs_diff(&wdk) < 1e-3, "dk causal={causal}: {}",
+                    dk.max_abs_diff(&wdk));
+            assert!(dv.max_abs_diff(&wdv) < 1e-3, "dv causal={causal}: {}",
+                    dv.max_abs_diff(&wdv));
+            // masked-out query rows get zero dq
+            assert!(dq.data[2 * 16 * 16..3 * 16 * 16].iter().all(|&x| x == 0.0),
+                    "masked query rows must have zero gradient");
+        }
+    }
+
+    #[test]
+    fn backward_steady_state_is_zero_alloc_and_block_bounded() {
+        let (q, k, v) = qkv(128, 16, 15);
+        let dout = Matrix::randn(128, 16, 1.0, &mut Rng::new(16));
+        let mask = crate::patterns::BlockMask::ones(8, 8); // b = 16
+        let plan = AttnPlan::new(&mask, false, 2);
+        let mut ws = Workspace::new();
+        let mut o = Matrix::zeros(128, 16);
+        let mut stats = AttnStats::new();
+        plan.execute_stats(&q, &k, &v, &mut o, &mut stats, &mut ws);
+        let mut dq = Matrix::zeros(128, 16);
+        let mut dk = Matrix::zeros(128, 16);
+        let mut dv = Matrix::zeros(128, 16);
+        plan.backward(&q, &k, &v, &o, &dout, &stats, &mut dq, &mut dk, &mut dv, &mut ws);
+        let warm = ws.alloc_events();
+        for _ in 0..3 {
+            plan.execute_stats(&q, &k, &v, &mut o, &mut stats, &mut ws);
+            plan.backward(&q, &k, &v, &o, &dout, &stats, &mut dq, &mut dk, &mut dv,
+                          &mut ws);
+        }
+        assert_eq!(ws.alloc_events(), warm, "backward hot path must not allocate");
+        // scratch: forward tiles + backward tile per worker + the O(seq)
+        // D row — nothing anywhere near seq×seq
+        assert!(ws.peak_bytes() < 128 * 128 * 4,
+                "peak {} suggests a seq×seq buffer", ws.peak_bytes());
     }
 
     #[test]

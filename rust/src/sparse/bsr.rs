@@ -136,30 +136,57 @@ impl BsrMatrix {
         y
     }
 
-    pub fn matmul_into(&self, x: &Matrix, y: &mut Matrix) {
-        // Reuse the schedule across calls (hot loops in the benches and
-        // the butterfly product multiply the same structure repeatedly);
-        // rebuilt — and re-cached — when the thread configuration changes
-        // or the structure fingerprint no longer matches (the cache used
-        // to key on thread count alone, silently trusting the pattern).
-        // The fingerprint is O(nnz) integer hashing, negligible next to
-        // the multiply; `execute` re-checks it in debug builds. The Arc
-        // is cloned out so concurrent multiplies never hold the lock
-        // across the kernel.
+    /// Fetch (or build and re-cache) the lazily cached plan. Reused by
+    /// every engine path — forward, fused-epilogue forward, and both
+    /// backward executors ride the SAME cached schedule, keyed by the
+    /// same structure fingerprint.
+    ///
+    /// Rebuilt when the thread configuration changes or the structure
+    /// fingerprint no longer matches (the cache used to key on thread
+    /// count alone, silently trusting the pattern). The fingerprint is
+    /// O(nnz) integer hashing, negligible next to the multiply; the
+    /// executors re-check it in debug builds. The Arc is cloned out so
+    /// concurrent multiplies never hold the lock across the kernel.
+    fn cached_plan(&self) -> Arc<GemmPlan> {
         let threads = exec::threads();
         let fp = structure_fingerprint(self);
-        let plan = {
-            let mut guard = self.plan_cache.lock().unwrap();
-            match guard.as_ref() {
-                Some(p) if p.threads() == threads && p.fingerprint() == fp => Arc::clone(p),
-                _ => {
-                    let p = Arc::new(GemmPlan::new(self, threads));
-                    *guard = Some(Arc::clone(&p));
-                    p
-                }
+        let mut guard = self.plan_cache.lock().unwrap();
+        match guard.as_ref() {
+            Some(p) if p.threads() == threads && p.fingerprint() == fp => Arc::clone(p),
+            _ => {
+                let p = Arc::new(GemmPlan::new(self, threads));
+                *guard = Some(Arc::clone(&p));
+                p
             }
-        };
-        plan.execute(self, x, y);
+        }
+    }
+
+    pub fn matmul_into(&self, x: &Matrix, y: &mut Matrix) {
+        self.cached_plan().execute(self, x, y);
+    }
+
+    /// y = act(x · W + bias) with the epilogue fused into the engine's
+    /// output sweep (see [`GemmPlan::execute_fused`]); `pre` stashes the
+    /// pre-activation when the activation's backward needs it.
+    pub fn matmul_fused_into(&self, x: &Matrix, y: &mut Matrix,
+                             epi: &exec::Epilogue, pre: Option<&mut Matrix>) {
+        self.cached_plan().execute_fused(self, x, y, epi, pre);
+    }
+
+    /// dX = dY · Wᵀ through the transpose-free backward schedule of the
+    /// cached plan ([`GemmPlan::execute_dx`]): the BSR row structure is
+    /// read as Wᵀ's rows, and the stored blocks are consumed untransposed
+    /// — no `Wᵀ` (and no per-block transpose) is ever materialised.
+    pub fn matmul_dx_into(&self, dy: &Matrix, dx: &mut Matrix) {
+        self.cached_plan().execute_dx(self, dy, dx);
+    }
+
+    /// dW = Xᵀ · dY scatter-accumulated into exactly the stored-block
+    /// pattern ([`GemmPlan::execute_dw`]). `dw` mirrors `self.blocks`
+    /// slot for slot (the pattern-frozen gradient of a fixed-structure
+    /// butterfly layer — fill-in cannot exist by construction).
+    pub fn matmul_dw_into(&self, x: &Matrix, dy: &Matrix, dw: &mut [f32]) {
+        self.cached_plan().execute_dw(self, x, dy, dw);
     }
 
     /// Build a reusable execution plan for this matrix's structure.
@@ -203,6 +230,65 @@ impl BsrMatrix {
                     for (&xv, wrow) in xrow.iter().zip(blk.chunks_exact(b)) {
                         for (yc, &wc) in ycols.iter_mut().zip(wrow) {
                             *yc += xv * wc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Single-threaded scalar reference for dX = dY · Wᵀ, mirroring the
+    /// forward convention (stored block outer, batch row inner): the
+    /// correctness oracle for [`Self::matmul_dx_into`] in the gradcheck
+    /// proptests. Reads stored blocks untransposed, like the engine.
+    pub fn matmul_dx_serial_into(&self, dy: &Matrix, dx: &mut Matrix) {
+        let b = self.block;
+        assert_eq!(dy.cols, self.cols_elems());
+        assert_eq!((dx.rows, dx.cols), (dy.rows, self.rows()));
+        dx.data.fill(0.0);
+        let m = dy.rows;
+        for i in 0..self.nbr {
+            for s in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.cols[s];
+                let blk = &self.blocks[s * b * b..(s + 1) * b * b];
+                for r in 0..m {
+                    let dyrow = &dy.row(r)[j * b..(j + 1) * b];
+                    let dxrow = &mut dx.row_mut(r)[i * b..(i + 1) * b];
+                    // dx[c] += Σ_k dy[k] · blk[c, k]: block rows are the
+                    // contiguous dot operands of the transpose product
+                    for (dxc, wrow) in dxrow.iter_mut().zip(blk.chunks_exact(b)) {
+                        let mut acc = 0.0f32;
+                        for (dv, wv) in dyrow.iter().zip(wrow) {
+                            acc += *dv * *wv;
+                        }
+                        *dxc += acc;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Single-threaded scalar reference for dW = Xᵀ · dY restricted to
+    /// the stored pattern: the oracle for [`Self::matmul_dw_into`]. `dw`
+    /// mirrors `self.blocks` slot for slot.
+    pub fn matmul_dw_serial_into(&self, x: &Matrix, dy: &Matrix, dw: &mut [f32]) {
+        let b = self.block;
+        assert_eq!(x.cols, self.rows());
+        assert_eq!(dy.cols, self.cols_elems());
+        assert_eq!(x.rows, dy.rows);
+        assert_eq!(dw.len(), self.blocks.len());
+        dw.fill(0.0);
+        let m = x.rows;
+        for i in 0..self.nbr {
+            for s in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let j = self.cols[s];
+                let blk = &mut dw[s * b * b..(s + 1) * b * b];
+                for r in 0..m {
+                    let xrow = &x.row(r)[i * b..(i + 1) * b];
+                    let dyrow = &dy.row(r)[j * b..(j + 1) * b];
+                    for (&xv, wrow) in xrow.iter().zip(blk.chunks_exact_mut(b)) {
+                        for (wc, &dv) in wrow.iter_mut().zip(dyrow) {
+                            *wc += xv * dv;
                         }
                     }
                 }
@@ -330,6 +416,105 @@ mod tests {
         let mut want = Matrix::zeros(5, w.cols_elems());
         w.matmul_serial_into(&x, &mut want);
         let y = w.matmul(&x); // must replan, not run the stale schedule
+        assert!(y.max_abs_diff(&want) < 1e-4, "{}", y.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn backward_engine_matches_serial_references() {
+        let mut rng = Rng::new(27);
+        let mask = baselines::random_mask(5, 6, 0.4, &mut rng);
+        let w = BsrMatrix::random(&mask, 8, 0.5, &mut rng);
+        let x = Matrix::randn(17, w.rows(), 1.0, &mut rng);
+        let dy = Matrix::randn(17, w.cols_elems(), 1.0, &mut rng);
+        // dX
+        let mut want_dx = Matrix::zeros(17, w.rows());
+        w.matmul_dx_serial_into(&dy, &mut want_dx);
+        let mut dx = Matrix::zeros(17, w.rows());
+        w.matmul_dx_into(&dy, &mut dx);
+        assert!(dx.max_abs_diff(&want_dx) < 1e-4, "{}", dx.max_abs_diff(&want_dx));
+        // dW
+        let mut want_dw = vec![0.0f32; w.blocks.len()];
+        w.matmul_dw_serial_into(&x, &dy, &mut want_dw);
+        let mut dw = vec![0.0f32; w.blocks.len()];
+        w.matmul_dw_into(&x, &dy, &mut dw);
+        let diff = dw
+            .iter()
+            .zip(&want_dw)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 1e-4, "{diff}");
+    }
+
+    #[test]
+    fn serial_backward_matches_dense_transpose_math() {
+        let mut rng = Rng::new(28);
+        let mask = flat_butterfly_mask(6, 4);
+        let w = BsrMatrix::random(&mask, 4, 0.5, &mut rng);
+        let x = Matrix::randn(9, w.rows(), 1.0, &mut rng);
+        let dy = Matrix::randn(9, w.cols_elems(), 1.0, &mut rng);
+        let wd = w.to_dense();
+        // dX = dY·Wᵀ (dense transpose lives only in the test)
+        let mut dx = Matrix::zeros(9, w.rows());
+        w.matmul_dx_serial_into(&dy, &mut dx);
+        let want_dx = matmul_blocked(&dy, &wd.transpose());
+        assert!(dx.max_abs_diff(&want_dx) < 1e-4, "{}", dx.max_abs_diff(&want_dx));
+        // dW = Xᵀ·dY on the stored pattern
+        let mut dw = vec![0.0f32; w.blocks.len()];
+        w.matmul_dw_serial_into(&x, &dy, &mut dw);
+        let dwd = matmul_blocked(&x.transpose(), &dy);
+        let b = w.block;
+        for i in 0..w.nbr {
+            for s in w.row_ptr[i]..w.row_ptr[i + 1] {
+                let j = w.cols[s];
+                for r in 0..b {
+                    for c in 0..b {
+                        let got = dw[s * b * b + r * b + c];
+                        let want = dwd.get(i * b + r, j * b + c);
+                        assert!((got - want).abs() < 1e-4, "slot {s} ({r},{c})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_shares_the_forward_plan_cache() {
+        // one cached plan serves forward, fused forward, dX and dW; a
+        // structure edit between calls must transparently replan for the
+        // backward paths exactly like it does for the forward path
+        let mut rng = Rng::new(29);
+        let mask = BlockMask::ones(3, 3);
+        let mut w = BsrMatrix::random(&mask, 8, 0.5, &mut rng);
+        let dy = Matrix::randn(5, w.cols_elems(), 1.0, &mut rng);
+        let mut dx = Matrix::zeros(5, w.rows());
+        w.matmul_dx_into(&dy, &mut dx); // caches a plan
+        let s = w.row_ptr[0];
+        w.cols.swap(s, s + 1); // same shape/nnz, new pattern
+        let mut want = Matrix::zeros(5, w.rows());
+        w.matmul_dx_serial_into(&dy, &mut want);
+        w.matmul_dx_into(&dy, &mut dx); // must replan
+        assert!(dx.max_abs_diff(&want) < 1e-4, "{}", dx.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn fused_wrapper_matches_unfused_plus_epilogue() {
+        use crate::sparse::exec::{Activation, Epilogue};
+        let mut rng = Rng::new(30);
+        let mask = baselines::random_mask(4, 4, 0.6, &mut rng);
+        let w = BsrMatrix::random(&mask, 8, 0.5, &mut rng);
+        let x = Matrix::randn(7, w.rows(), 1.0, &mut rng);
+        let bias = rng.normal_vec(w.cols_elems(), 1.0);
+        let z = w.matmul(&x);
+        let mut want = Matrix::zeros(7, w.cols_elems());
+        for r in 0..7 {
+            for c in 0..w.cols_elems() {
+                want.set(r, c, Activation::Relu.apply(z.get(r, c) + bias[c]));
+            }
+        }
+        let mut y = Matrix::zeros(7, w.cols_elems());
+        w.matmul_fused_into(&x, &mut y,
+                            &Epilogue { bias: Some(&bias), act: Activation::Relu },
+                            None);
         assert!(y.max_abs_diff(&want) < 1e-4, "{}", y.max_abs_diff(&want));
     }
 

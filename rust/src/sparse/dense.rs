@@ -177,6 +177,109 @@ fn panel_kernel(x: &Matrix, w: &Matrix, ychunk: &mut [f32], r0: usize) {
     }
 }
 
+/// `y = a · bᵀ` without materialising `bᵀ`: `y[i, j] = dot(a_i, b_j)` —
+/// both operands stream row-major, the transpose is purely algorithmic.
+/// Parallel over row panels of `y` (safe `chunks_mut` ownership) above
+/// the engine threshold; [`matmul_abt_serial_into`] is the oracle.
+pub fn matmul_abt_into(a: &Matrix, b: &Matrix, y: &mut Matrix) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((y.rows, y.cols), (a.rows, b.rows));
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let threads = crate::sparse::exec::threads();
+    let flops = 2.0 * (m * k) as f64 * n as f64;
+    if threads <= 1 || m < 2 || flops < crate::sparse::exec::MIN_PAR_FLOPS {
+        return matmul_abt_serial_into(a, b, y);
+    }
+    let rows_per = m.div_ceil(threads.min(m));
+    let tier = crate::sparse::exec::simd::active_tier();
+    std::thread::scope(|s| {
+        for (p, ychunk) in y.data.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || abt_panel(tier, a, b, ychunk, p * rows_per));
+        }
+    });
+}
+
+/// Single-threaded reference for [`matmul_abt_into`].
+pub fn matmul_abt_serial_into(a: &Matrix, b: &Matrix, y: &mut Matrix) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((y.rows, y.cols), (a.rows, b.rows));
+    let tier = crate::sparse::exec::simd::active_tier();
+    abt_panel(tier, a, b, &mut y.data, 0);
+}
+
+fn abt_panel(tier: crate::sparse::exec::simd::Tier, a: &Matrix, b: &Matrix,
+             ychunk: &mut [f32], r0: usize) {
+    let n = b.rows;
+    if n == 0 {
+        return;
+    }
+    let rows = ychunk.len() / n;
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let yrow = &mut ychunk[i * n..(i + 1) * n];
+        for (j, yv) in yrow.iter_mut().enumerate() {
+            *yv = crate::sparse::exec::simd::dot_with(tier, arow, b.row(j));
+        }
+    }
+}
+
+/// `y = aᵀ · b` without materialising `aᵀ`: accumulated as rank-1 updates
+/// `y[k, :] += a[i, k] · b[i, :]` so both operands stream row-major.
+/// Parallel over row ranges of `y` (= column ranges of `a`): each worker
+/// sweeps all of `a`/`b` but writes only its own `y` rows, race-free by
+/// construction. [`matmul_atb_serial_into`] is the oracle.
+pub fn matmul_atb_into(a: &Matrix, b: &Matrix, y: &mut Matrix) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((y.rows, y.cols), (a.cols, b.cols));
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let threads = crate::sparse::exec::threads();
+    let flops = 2.0 * (m * k) as f64 * n as f64;
+    if threads <= 1 || k < 2 || flops < crate::sparse::exec::MIN_PAR_FLOPS {
+        return matmul_atb_serial_into(a, b, y);
+    }
+    let rows_per = k.div_ceil(threads.min(k));
+    let tier = crate::sparse::exec::simd::active_tier();
+    std::thread::scope(|s| {
+        for (p, ychunk) in y.data.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || atb_panel(tier, a, b, ychunk, p * rows_per));
+        }
+    });
+}
+
+/// Single-threaded reference for [`matmul_atb_into`].
+pub fn matmul_atb_serial_into(a: &Matrix, b: &Matrix, y: &mut Matrix) {
+    assert_eq!(a.rows, b.rows);
+    assert_eq!((y.rows, y.cols), (a.cols, b.cols));
+    let tier = crate::sparse::exec::simd::active_tier();
+    atb_panel(tier, a, b, &mut y.data, 0);
+}
+
+/// Accumulate rows `k0..k0 + ychunk.len()/n` of `aᵀ·b` into `ychunk`.
+fn atb_panel(tier: crate::sparse::exec::simd::Tier, a: &Matrix, b: &Matrix,
+             ychunk: &mut [f32], k0: usize) {
+    let n = b.cols;
+    if n == 0 {
+        return;
+    }
+    ychunk.fill(0.0);
+    let krows = ychunk.len() / n;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for kk in 0..krows {
+            let av = arow[k0 + kk];
+            if av != 0.0 {
+                crate::sparse::exec::simd::axpy_with(
+                    tier,
+                    av,
+                    brow,
+                    &mut ychunk[kk * n..(kk + 1) * n],
+                );
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +317,39 @@ mod tests {
         let mut ser = Matrix::zeros(258, 160);
         matmul_blocked_serial_into(&x, &w, &mut ser);
         assert!(par.max_abs_diff(&ser) < 1e-4);
+    }
+
+    #[test]
+    fn abt_matches_explicit_transpose() {
+        let mut rng = Rng::new(16);
+        // small (serial) and large (parallel path) shapes
+        for (m, k, n) in [(5usize, 9usize, 7usize), (200, 128, 160)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            let want = matmul_blocked(&a, &b.transpose());
+            let mut y = Matrix::zeros(m, n);
+            matmul_abt_into(&a, &b, &mut y);
+            assert!(y.max_abs_diff(&want) < 1e-3, "{m}x{k}x{n}: {}", y.max_abs_diff(&want));
+            let mut ys = Matrix::zeros(m, n);
+            matmul_abt_serial_into(&a, &b, &mut ys);
+            assert!(ys.max_abs_diff(&want) < 1e-3, "serial {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn atb_matches_explicit_transpose() {
+        let mut rng = Rng::new(17);
+        for (m, k, n) in [(6usize, 8usize, 10usize), (180, 128, 144)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(m, n, 1.0, &mut rng);
+            let want = matmul_blocked(&a.transpose(), &b);
+            let mut y = Matrix::zeros(k, n);
+            matmul_atb_into(&a, &b, &mut y);
+            assert!(y.max_abs_diff(&want) < 1e-3, "{m}x{k}x{n}: {}", y.max_abs_diff(&want));
+            let mut ys = Matrix::zeros(k, n);
+            matmul_atb_serial_into(&a, &b, &mut ys);
+            assert!(ys.max_abs_diff(&want) < 1e-3, "serial {m}x{k}x{n}");
+        }
     }
 
     #[test]

@@ -18,6 +18,11 @@
 //! `--kernel`), then `PIXELFLY_KERNEL`, then auto-detection — see
 //! [`simd`]. [`workspace::Workspace`] is the scratch arena that keeps the
 //! steady-state hot paths allocation-free.
+//!
+//! The training tier lives here too: [`Activation`] (the epilogue the
+//! GEMM plans can fuse into their output sweep), [`epilogue_backward`]
+//! (the matching dz = dy ⊙ act' pass with the bias gradient folded in),
+//! and [`sgd_momentum`] (the fused optimizer sweep over stored blocks).
 
 pub mod micro;
 pub mod plan;
@@ -25,10 +30,11 @@ pub mod pool;
 pub mod simd;
 pub mod workspace;
 
-pub use plan::GemmPlan;
+pub use plan::{Epilogue, GemmPlan};
 pub use simd::{kernel_choice, kernel_name, set_kernel, simd_available, KernelChoice};
 pub use workspace::Workspace;
 
+use crate::sparse::dense::Matrix;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Below this many flops the scoped-pool spawn overhead outweighs the
@@ -69,9 +75,159 @@ fn parse_threads(v: Option<String>) -> Option<usize> {
     v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
 }
 
+// ---------------------------------------------------------------------
+// Epilogues + optimizer sweep (the training tier's scalar contracts)
+// ---------------------------------------------------------------------
+
+/// `tanh` coefficient of the GELU approximation, √(2/π).
+const GELU_C: f32 = 0.797_884_56;
+/// Cubic coefficient of the GELU approximation.
+const GELU_A: f32 = 0.044_715;
+
+/// Elementwise activation a GEMM plan can fuse into its output sweep
+/// (and whose derivative the backward pass folds into the dz sweep).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Identity,
+    Relu,
+    /// tanh-approximated GELU (the transformer MLP default).
+    Gelu,
+}
+
+impl Activation {
+    /// a = act(z).
+    #[inline]
+    pub fn apply(self, z: f32) -> f32 {
+        match self {
+            Activation::Identity => z,
+            Activation::Relu => z.max(0.0),
+            Activation::Gelu => {
+                0.5 * z * (1.0 + (GELU_C * (z + GELU_A * z * z * z)).tanh())
+            }
+        }
+    }
+
+    /// Whether the backward pass needs the pre-activation `z` (GELU) or
+    /// can recover act' from the activated output alone (Identity/ReLU).
+    /// Fused forwards must stash `z` exactly when this is true.
+    #[inline]
+    pub fn needs_pre(self) -> bool {
+        matches!(self, Activation::Gelu)
+    }
+
+    /// Select the auxiliary matrix [`Self::grad_from_aux`] consumes from
+    /// a layer's activated output and (optional) stashed pre-activation
+    /// — the one place the aux contract lives, so every backward caller
+    /// (trainer layers, tests) picks identically.
+    #[inline]
+    pub fn pick_aux<'a>(self, out: &'a Matrix, pre: Option<&'a Matrix>)
+                        -> Option<&'a Matrix> {
+        match self {
+            Activation::Identity => None,
+            Activation::Relu => Some(out),
+            Activation::Gelu => pre,
+        }
+    }
+
+    /// act'(z) given the auxiliary value the forward kept: the activated
+    /// output `a` for ReLU (act' = 1[a > 0]), the pre-activation `z` for
+    /// GELU; Identity ignores it.
+    #[inline]
+    pub fn grad_from_aux(self, aux: f32) -> f32 {
+        match self {
+            Activation::Identity => 1.0,
+            Activation::Relu => {
+                if aux > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Gelu => {
+                let z = aux;
+                let u = GELU_C * (z + GELU_A * z * z * z);
+                let t = u.tanh();
+                0.5 * (1.0 + t)
+                    + 0.5 * z * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * z * z)
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Identity => "identity",
+            Activation::Relu => "relu",
+            Activation::Gelu => "gelu",
+        }
+    }
+}
+
+/// Backward epilogue, fused: `dy ⊙= act'(aux)` in place AND (when `db` is
+/// given) `db[c] += Σ_r dz[r, c]` in the same sweep — the two O(m·n)
+/// passes an unfused backward would spend on the activation derivative
+/// and the bias reduction collapse into one.
+///
+/// `aux` is what the fused forward kept: the activated output for ReLU,
+/// the stashed pre-activation for GELU (see [`Activation::grad_from_aux`]);
+/// `None` is allowed only for Identity. `db` accumulates (callers zero it
+/// once per step, so microbatches can sum).
+pub fn epilogue_backward(dy: &mut Matrix, aux: Option<&Matrix>, act: Activation,
+                         mut db: Option<&mut [f32]>) {
+    if let Some(a) = aux {
+        assert_eq!((a.rows, a.cols), (dy.rows, dy.cols));
+    } else {
+        assert_eq!(act, Activation::Identity, "{act:?} backward needs its aux matrix");
+    }
+    if let Some(db) = db.as_deref() {
+        assert_eq!(db.len(), dy.cols);
+    }
+    for r in 0..dy.rows {
+        let dyrow = &mut dy.data[r * dy.cols..(r + 1) * dy.cols];
+        if act != Activation::Identity {
+            let auxrow = aux.unwrap().row(r);
+            for (d, &a) in dyrow.iter_mut().zip(auxrow) {
+                *d *= act.grad_from_aux(a);
+            }
+        }
+        if let Some(db) = db.as_deref_mut() {
+            for (acc, &d) in db.iter_mut().zip(dyrow.iter()) {
+                *acc += d;
+            }
+        }
+    }
+}
+
+/// Fused SGD-with-momentum update `m = momentum·m + g; w -= lr·m` over a
+/// parameter slice — one SIMD sweep (two FMAs per element), split across
+/// the worker pool when the slice is large enough to be bandwidth-bound.
+/// This is the whole optimizer step for a BSR layer: `w` is the stored
+/// blocks, `g` the pattern-frozen gradient, no densification anywhere.
+pub fn sgd_momentum(w: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: f32) {
+    let n = w.len();
+    assert_eq!(n, g.len());
+    assert_eq!(n, m.len());
+    let tier = simd::active_tier();
+    let workers = threads();
+    // 2 flops/element; reuse the global threshold so tiny layers stay serial
+    if workers <= 1 || (2 * n) as f64 * 2.0 < MIN_PAR_FLOPS {
+        return simd::sgd_momentum_with(tier, w, g, m, lr, momentum);
+    }
+    let per = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for ((wc, gc), mc) in w
+            .chunks_mut(per)
+            .zip(g.chunks(per))
+            .zip(m.chunks_mut(per))
+        {
+            s.spawn(move || simd::sgd_momentum_with(tier, wc, gc, mc, lr, momentum));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn parse_threads_filters_garbage() {
@@ -84,5 +240,79 @@ mod tests {
     #[test]
     fn threads_is_positive() {
         assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn activations_match_hand_values() {
+        assert_eq!(Activation::Identity.apply(-1.5), -1.5);
+        assert_eq!(Activation::Relu.apply(-1.5), 0.0);
+        assert_eq!(Activation::Relu.apply(2.0), 2.0);
+        // GELU anchor points: gelu(0) = 0; gelu(z) → z for large z,
+        // → 0 for very negative z
+        assert_eq!(Activation::Gelu.apply(0.0), 0.0);
+        assert!((Activation::Gelu.apply(10.0) - 10.0).abs() < 1e-4);
+        assert!(Activation::Gelu.apply(-10.0).abs() < 1e-4);
+        // a known midpoint: gelu(1) ≈ 0.8412 (tanh approximation)
+        assert!((Activation::Gelu.apply(1.0) - 0.8412).abs() < 1e-3);
+    }
+
+    #[test]
+    fn activation_grads_match_finite_differences() {
+        let eps = 1e-3f32;
+        for act in [Activation::Identity, Activation::Gelu] {
+            for z in [-2.0f32, -0.7, 0.0, 0.3, 1.9] {
+                let fd = (act.apply(z + eps) - act.apply(z - eps)) / (2.0 * eps);
+                let an = act.grad_from_aux(z); // identity ignores aux
+                assert!((fd - an).abs() < 1e-2, "{act:?} z={z}: fd {fd} vs {an}");
+            }
+        }
+        // ReLU's grad comes from the OUTPUT a, not z
+        assert_eq!(Activation::Relu.grad_from_aux(2.0), 1.0);
+        assert_eq!(Activation::Relu.grad_from_aux(0.0), 0.0);
+    }
+
+    #[test]
+    fn epilogue_backward_scales_and_reduces_in_one_pass() {
+        let mut rng = Rng::new(51);
+        let dy0 = Matrix::randn(5, 8, 1.0, &mut rng);
+        let z = Matrix::randn(5, 8, 1.0, &mut rng);
+        // gelu path: dz = dy ⊙ gelu'(z), db = column sums of dz
+        let mut dy = dy0.clone();
+        let mut db = vec![0.0f32; 8];
+        epilogue_backward(&mut dy, Some(&z), Activation::Gelu, Some(&mut db));
+        for r in 0..5 {
+            for c in 0..8 {
+                let want = dy0.get(r, c) * Activation::Gelu.grad_from_aux(z.get(r, c));
+                assert!((dy.get(r, c) - want).abs() < 1e-5);
+            }
+        }
+        for c in 0..8 {
+            let want: f32 = (0..5).map(|r| dy.get(r, c)).sum();
+            assert!((db[c] - want).abs() < 1e-5);
+        }
+        // identity + no db is a no-op
+        let mut dy2 = dy0.clone();
+        epilogue_backward(&mut dy2, None, Activation::Identity, None);
+        assert!(dy2.max_abs_diff(&dy0) < 1e-7);
+    }
+
+    #[test]
+    fn sgd_momentum_parallel_matches_serial() {
+        let mut rng = Rng::new(52);
+        // large enough to clear MIN_PAR_FLOPS so the scoped split runs
+        let n = 2_000_000;
+        let w0 = rng.normal_vec(n, 1.0);
+        let g = rng.normal_vec(n, 1.0);
+        let m0 = rng.normal_vec(n, 1.0);
+        let mut wp = w0.clone();
+        let mut mp = m0.clone();
+        sgd_momentum(&mut wp, &g, &mut mp, 0.1, 0.9);
+        let mut ws = w0.clone();
+        let mut ms = m0.clone();
+        simd::sgd_momentum_scalar(&mut ws, &g, &mut ms, 0.1, 0.9);
+        for i in (0..n).step_by(997) {
+            assert!((wp[i] - ws[i]).abs() < 1e-5, "i={i}");
+            assert!((mp[i] - ms[i]).abs() < 1e-5, "i={i}");
+        }
     }
 }

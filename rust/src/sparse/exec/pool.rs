@@ -8,6 +8,17 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Shared raw-pointer wrapper for the executors' disjoint-write pattern:
+/// worker tasks write through one base pointer into regions their
+/// schedule proves disjoint. This wrapper only asserts that *sharing*
+/// the pointer across the scoped workers is safe (`Sync`) — every
+/// executor must still carry its own safety comment arguing the
+/// disjointness of the writes it performs through it. Living next to
+/// [`run_tasks`] keeps that one line of `unsafe impl` in a single
+/// audited place instead of re-stated per executor.
+pub struct SyncPtr<T>(pub *mut T);
+unsafe impl<T> Sync for SyncPtr<T> {}
+
 /// Run `f(0..n_tasks)` across up to `threads` scoped workers with dynamic
 /// (pull-based) scheduling. Serial when one worker suffices. `f` must be
 /// safe to call concurrently for distinct task indices.
@@ -72,6 +83,28 @@ where
             });
         }
     });
+}
+
+/// Split `0..n` into at most `parts` contiguous, non-empty ranges of
+/// near-equal length — the unweighted sibling of [`weighted_ranges`] for
+/// item sets whose per-item cost is uniform (e.g. stored-block slots in
+/// the dW scatter schedule, where every block costs the same m·b² flops).
+/// Avoids materialising a constant weights vector just to chunk evenly.
+pub fn even_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
 }
 
 /// Split items `0..weights.len()` into at most `parts` contiguous,
@@ -163,6 +196,26 @@ mod tests {
         for r in &ranges {
             let w: usize = weights[r.clone()].iter().sum();
             assert!(w < total, "one range took all the weight");
+        }
+    }
+
+    #[test]
+    fn even_ranges_partition_exactly() {
+        assert!(even_ranges(0, 4).is_empty());
+        for (n, parts) in [(1usize, 1usize), (1, 5), (7, 3), (8, 4), (10, 10), (23, 4)] {
+            let r = even_ranges(n, parts);
+            assert!(r.len() <= parts && !r.is_empty(), "n={n} parts={parts}");
+            let mut expect = 0usize;
+            let (mut min_len, mut max_len) = (usize::MAX, 0usize);
+            for range in &r {
+                assert_eq!(range.start, expect);
+                assert!(range.end > range.start);
+                min_len = min_len.min(range.len());
+                max_len = max_len.max(range.len());
+                expect = range.end;
+            }
+            assert_eq!(expect, n, "n={n} parts={parts}");
+            assert!(max_len - min_len <= 1, "n={n} parts={parts}: uneven split");
         }
     }
 

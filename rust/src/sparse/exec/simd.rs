@@ -12,12 +12,15 @@
 //! the active tier (`scalar`/`avx2`/`neon`) for `TrainReport` and bench
 //! notes.
 //!
-//! Two kernel families live here:
-//! - `block_panel`: the BSR GEMM `b×b` panel kernel (same contract as
-//!   [`super::micro::block_panel`]) — 4 activation rows share one sweep
-//!   over the weight block, columns processed in 16-lane strips of FMAs;
+//! Three kernel families live here:
+//! - `block_panel` and its backward siblings `block_panel_t` (dX = dY·Wᵀ,
+//!   dot-formulated against the untransposed block rows) and
+//!   `scatter_block` (dW = Xᵀ·dY rank-panel scatter into one stored
+//!   block) — same contracts as the [`super::micro`] scalar tier;
 //! - `dot` / `axpy` / `scale`: the vector primitives the fused streaming
-//!   attention kernel is built from.
+//!   attention kernel (forward and backward) is built from;
+//! - `sgd_momentum`: the fused optimizer sweep (`m = μ·m + g;
+//!   w -= lr·m`) the training step runs over stored blocks.
 //!
 //! Feature detection runs once per process (`OnceLock`). Per-call
 //! dispatch costs one relaxed atomic load plus (on the no-override path)
@@ -175,6 +178,69 @@ pub unsafe fn try_block_panel(
     }
 }
 
+/// Dispatch the transpose panel kernel (`y += x · blkᵀ`) to the active
+/// SIMD tier. Returns `false` when no SIMD kernel applies.
+///
+/// # Safety
+/// Same contract as [`super::micro::block_panel`].
+#[allow(clippy::too_many_arguments)]
+#[allow(unused_variables)]
+pub unsafe fn try_block_panel_t(
+    b: usize,
+    x: &Matrix,
+    ic: usize,
+    rows: Range<usize>,
+    blk: &[f32],
+    y: *mut f32,
+    ldy: usize,
+    jc: usize,
+) -> bool {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if b % 8 == 0 => {
+            avx2::block_panel_t(b, x, ic, rows, blk, y, ldy, jc);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if b % 4 == 0 => {
+            neon::block_panel_t(b, x, ic, rows, blk, y, ldy, jc);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Dispatch the dW scatter kernel to the active SIMD tier. Returns
+/// `false` when no SIMD kernel applies.
+///
+/// # Safety
+/// `blk.len() == b*b`, `ic + b <= x.cols`, `jc + b <= dy.cols`, and
+/// `rows.end <= x.rows.min(dy.rows)` (the arch kernels load unchecked).
+#[allow(unused_variables)]
+pub unsafe fn try_scatter_block(
+    b: usize,
+    x: &Matrix,
+    ic: usize,
+    dy: &Matrix,
+    jc: usize,
+    rows: Range<usize>,
+    blk: &mut [f32],
+) -> bool {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if b % 8 == 0 => {
+            avx2::scatter_block(b, x, ic, dy, jc, rows, blk);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if b % 4 == 0 => {
+            neon::scatter_block(b, x, ic, dy, jc, rows, blk);
+            true
+        }
+        _ => false,
+    }
+}
+
 // ---------------------------------------------------------------------
 // Vector primitives (attention kernel building blocks)
 // ---------------------------------------------------------------------
@@ -267,6 +333,37 @@ pub fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
 pub fn scale_scalar(y: &mut [f32], alpha: f32) {
     for yv in y.iter_mut() {
         *yv *= alpha;
+    }
+}
+
+/// Fused SGD-with-momentum sweep on a pre-resolved tier (see
+/// [`dot_with`]): `m[i] = momentum·m[i] + g[i]; w[i] -= lr·m[i]` over
+/// `min(len)` elements — one pass, two FMAs per element, no temporary.
+#[inline]
+pub(crate) fn sgd_momentum_with(tier: Tier, w: &mut [f32], g: &[f32], m: &mut [f32],
+                                lr: f32, momentum: f32) {
+    match tier {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { avx2::sgd_momentum(w, g, m, lr, momentum) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::sgd_momentum(w, g, m, lr, momentum) },
+        _ => sgd_momentum_scalar(w, g, m, lr, momentum),
+    }
+}
+
+/// Fused SGD-with-momentum sweep on the active tier.
+#[inline]
+pub fn sgd_momentum(w: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: f32) {
+    sgd_momentum_with(active_tier(), w, g, m, lr, momentum)
+}
+
+/// Portable reference for [`sgd_momentum`].
+pub fn sgd_momentum_scalar(w: &mut [f32], g: &[f32], m: &mut [f32], lr: f32,
+                           momentum: f32) {
+    let n = w.len().min(g.len()).min(m.len());
+    for i in 0..n {
+        m[i] = momentum * m[i] + g[i];
+        w[i] -= lr * m[i];
     }
 }
 
@@ -477,6 +574,196 @@ pub mod avx2 {
             i += 1;
         }
     }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Transpose panel kernel `y += x · blkᵀ`: per output column `c` the
+    /// stored block row `c` is a contiguous dot operand, so the transpose
+    /// costs nothing — four activation rows share each weight-row load
+    /// and reduce with one horizontal sum per (row, column) pair.
+    ///
+    /// # Safety
+    /// Same contract as `micro::block_panel`, plus `b % 8 == 0` and
+    /// AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel_t(
+        b: usize,
+        x: &Matrix,
+        ic: usize,
+        rows: Range<usize>,
+        blk: &[f32],
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 8, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let wp = blk.as_ptr();
+        let mut r = rows.start;
+        while r + 4 <= rows.end {
+            t_rows4(b, xp.add(r * ldx + ic), ldx, wp, y.add(r * ldy + jc), ldy);
+            r += 4;
+        }
+        while r < rows.end {
+            t_row1(b, xp.add(r * ldx + ic), wp, y.add(r * ldy + jc));
+            r += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn t_rows4(b: usize, x0: *const f32, ldx: usize, w: *const f32, y0: *mut f32, ldy: usize) {
+        let (x1, x2, x3) = (x0.add(ldx), x0.add(2 * ldx), x0.add(3 * ldx));
+        let (y1, y2, y3) = (y0.add(ldy), y0.add(2 * ldy), y0.add(3 * ldy));
+        for c in 0..b {
+            let wrow = w.add(c * b);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut k = 0usize;
+            while k < b {
+                let wv = _mm256_loadu_ps(wrow.add(k));
+                a0 = _mm256_fmadd_ps(_mm256_loadu_ps(x0.add(k)), wv, a0);
+                a1 = _mm256_fmadd_ps(_mm256_loadu_ps(x1.add(k)), wv, a1);
+                a2 = _mm256_fmadd_ps(_mm256_loadu_ps(x2.add(k)), wv, a2);
+                a3 = _mm256_fmadd_ps(_mm256_loadu_ps(x3.add(k)), wv, a3);
+                k += 8;
+            }
+            *y0.add(c) += hsum(a0);
+            *y1.add(c) += hsum(a1);
+            *y2.add(c) += hsum(a2);
+            *y3.add(c) += hsum(a3);
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn t_row1(b: usize, x0: *const f32, w: *const f32, y0: *mut f32) {
+        for c in 0..b {
+            let wrow = w.add(c * b);
+            let mut acc = _mm256_setzero_ps();
+            let mut k = 0usize;
+            while k < b {
+                acc = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(x0.add(k)),
+                    _mm256_loadu_ps(wrow.add(k)),
+                    acc,
+                );
+                k += 8;
+            }
+            *y0.add(c) += hsum(acc);
+        }
+    }
+
+    /// dW scatter kernel: `blk[k, c] += Σ_r x[r, ic+k] · dy[r, jc+c]`.
+    /// Four batch rows share one load/store sweep over the gradient
+    /// block, so each `blk` row round-trips memory once per four rank-1
+    /// updates.
+    ///
+    /// # Safety
+    /// `blk.len() == b*b` with `b % 8 == 0`; `ic + b <= x.cols`,
+    /// `jc + b <= dy.cols`, `rows.end <= x.rows.min(dy.rows)`; AVX2+FMA
+    /// present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scatter_block(
+        b: usize,
+        x: &Matrix,
+        ic: usize,
+        dy: &Matrix,
+        jc: usize,
+        rows: Range<usize>,
+        blk: &mut [f32],
+    ) {
+        debug_assert_eq!(b % 8, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let dp = dy.data.as_ptr();
+        let (ldx, ldd) = (x.cols, dy.cols);
+        let wp = blk.as_mut_ptr();
+        let mut r = rows.start;
+        while r + 4 <= rows.end {
+            let x0 = xp.add(r * ldx + ic);
+            let (x1, x2, x3) = (x0.add(ldx), x0.add(2 * ldx), x0.add(3 * ldx));
+            let d0 = dp.add(r * ldd + jc);
+            let (d1, d2, d3) = (d0.add(ldd), d0.add(2 * ldd), d0.add(3 * ldd));
+            for k in 0..b {
+                let wrow = wp.add(k * b);
+                let s0 = _mm256_set1_ps(*x0.add(k));
+                let s1 = _mm256_set1_ps(*x1.add(k));
+                let s2 = _mm256_set1_ps(*x2.add(k));
+                let s3 = _mm256_set1_ps(*x3.add(k));
+                let mut c = 0usize;
+                while c < b {
+                    let mut acc = _mm256_loadu_ps(wrow.add(c));
+                    acc = _mm256_fmadd_ps(s0, _mm256_loadu_ps(d0.add(c)), acc);
+                    acc = _mm256_fmadd_ps(s1, _mm256_loadu_ps(d1.add(c)), acc);
+                    acc = _mm256_fmadd_ps(s2, _mm256_loadu_ps(d2.add(c)), acc);
+                    acc = _mm256_fmadd_ps(s3, _mm256_loadu_ps(d3.add(c)), acc);
+                    _mm256_storeu_ps(wrow.add(c), acc);
+                    c += 8;
+                }
+            }
+            r += 4;
+        }
+        while r < rows.end {
+            let x0 = xp.add(r * ldx + ic);
+            let d0 = dp.add(r * ldd + jc);
+            for k in 0..b {
+                let wrow = wp.add(k * b);
+                let s0 = _mm256_set1_ps(*x0.add(k));
+                let mut c = 0usize;
+                while c < b {
+                    let acc = _mm256_fmadd_ps(
+                        s0,
+                        _mm256_loadu_ps(d0.add(c)),
+                        _mm256_loadu_ps(wrow.add(c)),
+                    );
+                    _mm256_storeu_ps(wrow.add(c), acc);
+                    c += 8;
+                }
+            }
+            r += 1;
+        }
+    }
+
+    /// Fused SGD-with-momentum sweep (`m = μ·m + g; w -= lr·m`).
+    ///
+    /// # Safety
+    /// AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn sgd_momentum(w: &mut [f32], g: &[f32], m: &mut [f32], lr: f32,
+                               momentum: f32) {
+        let n = w.len().min(g.len()).min(m.len());
+        let vmu = _mm256_set1_ps(momentum);
+        let vlr = _mm256_set1_ps(lr);
+        let wp = w.as_mut_ptr();
+        let gp = g.as_ptr();
+        let mp = m.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let mv = _mm256_fmadd_ps(vmu, _mm256_loadu_ps(mp.add(i)), _mm256_loadu_ps(gp.add(i)));
+            _mm256_storeu_ps(mp.add(i), mv);
+            let wv = _mm256_fnmadd_ps(vlr, mv, _mm256_loadu_ps(wp.add(i)));
+            _mm256_storeu_ps(wp.add(i), wv);
+            i += 8;
+        }
+        while i < n {
+            let mv = momentum * *mp.add(i) + *gp.add(i);
+            *mp.add(i) = mv;
+            *wp.add(i) -= lr * mv;
+            i += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -673,6 +960,167 @@ pub mod neon {
             i += 1;
         }
     }
+
+    /// Transpose panel kernel `y += x · blkᵀ` (see the AVX2 twin): the
+    /// stored block rows are contiguous dot operands, one `vaddvq`
+    /// horizontal sum per (row, column) pair.
+    ///
+    /// # Safety
+    /// Same contract as `micro::block_panel`, plus `b % 4 == 0` and NEON
+    /// present.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel_t(
+        b: usize,
+        x: &Matrix,
+        ic: usize,
+        rows: Range<usize>,
+        blk: &[f32],
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 4, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let wp = blk.as_ptr();
+        let mut r = rows.start;
+        while r + 4 <= rows.end {
+            let x0 = xp.add(r * ldx + ic);
+            let (x1, x2, x3) = (x0.add(ldx), x0.add(2 * ldx), x0.add(3 * ldx));
+            let y0 = y.add(r * ldy + jc);
+            let (y1, y2, y3) = (y0.add(ldy), y0.add(2 * ldy), y0.add(3 * ldy));
+            for c in 0..b {
+                let wrow = wp.add(c * b);
+                let mut a0 = vdupq_n_f32(0.0);
+                let mut a1 = vdupq_n_f32(0.0);
+                let mut a2 = vdupq_n_f32(0.0);
+                let mut a3 = vdupq_n_f32(0.0);
+                let mut k = 0usize;
+                while k < b {
+                    let wv = vld1q_f32(wrow.add(k));
+                    a0 = vfmaq_f32(a0, vld1q_f32(x0.add(k)), wv);
+                    a1 = vfmaq_f32(a1, vld1q_f32(x1.add(k)), wv);
+                    a2 = vfmaq_f32(a2, vld1q_f32(x2.add(k)), wv);
+                    a3 = vfmaq_f32(a3, vld1q_f32(x3.add(k)), wv);
+                    k += 4;
+                }
+                *y0.add(c) += vaddvq_f32(a0);
+                *y1.add(c) += vaddvq_f32(a1);
+                *y2.add(c) += vaddvq_f32(a2);
+                *y3.add(c) += vaddvq_f32(a3);
+            }
+            r += 4;
+        }
+        while r < rows.end {
+            let x0 = xp.add(r * ldx + ic);
+            let y0 = y.add(r * ldy + jc);
+            for c in 0..b {
+                let wrow = wp.add(c * b);
+                let mut acc = vdupq_n_f32(0.0);
+                let mut k = 0usize;
+                while k < b {
+                    acc = vfmaq_f32(acc, vld1q_f32(x0.add(k)), vld1q_f32(wrow.add(k)));
+                    k += 4;
+                }
+                *y0.add(c) += vaddvq_f32(acc);
+            }
+            r += 1;
+        }
+    }
+
+    /// dW scatter kernel (see the AVX2 twin).
+    ///
+    /// # Safety
+    /// `blk.len() == b*b` with `b % 4 == 0`; `ic + b <= x.cols`,
+    /// `jc + b <= dy.cols`, `rows.end <= x.rows.min(dy.rows)`; NEON
+    /// present.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scatter_block(
+        b: usize,
+        x: &Matrix,
+        ic: usize,
+        dy: &Matrix,
+        jc: usize,
+        rows: Range<usize>,
+        blk: &mut [f32],
+    ) {
+        debug_assert_eq!(b % 4, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let dp = dy.data.as_ptr();
+        let (ldx, ldd) = (x.cols, dy.cols);
+        let wp = blk.as_mut_ptr();
+        let mut r = rows.start;
+        while r + 4 <= rows.end {
+            let x0 = xp.add(r * ldx + ic);
+            let (x1, x2, x3) = (x0.add(ldx), x0.add(2 * ldx), x0.add(3 * ldx));
+            let d0 = dp.add(r * ldd + jc);
+            let (d1, d2, d3) = (d0.add(ldd), d0.add(2 * ldd), d0.add(3 * ldd));
+            for k in 0..b {
+                let wrow = wp.add(k * b);
+                let (s0, s1, s2, s3) =
+                    (*x0.add(k), *x1.add(k), *x2.add(k), *x3.add(k));
+                let mut c = 0usize;
+                while c < b {
+                    let mut acc = vld1q_f32(wrow.add(c));
+                    acc = vfmaq_n_f32(acc, vld1q_f32(d0.add(c)), s0);
+                    acc = vfmaq_n_f32(acc, vld1q_f32(d1.add(c)), s1);
+                    acc = vfmaq_n_f32(acc, vld1q_f32(d2.add(c)), s2);
+                    acc = vfmaq_n_f32(acc, vld1q_f32(d3.add(c)), s3);
+                    vst1q_f32(wrow.add(c), acc);
+                    c += 4;
+                }
+            }
+            r += 4;
+        }
+        while r < rows.end {
+            let x0 = xp.add(r * ldx + ic);
+            let d0 = dp.add(r * ldd + jc);
+            for k in 0..b {
+                let wrow = wp.add(k * b);
+                let s0 = *x0.add(k);
+                let mut c = 0usize;
+                while c < b {
+                    let acc =
+                        vfmaq_n_f32(vld1q_f32(wrow.add(c)), vld1q_f32(d0.add(c)), s0);
+                    vst1q_f32(wrow.add(c), acc);
+                    c += 4;
+                }
+            }
+            r += 1;
+        }
+    }
+
+    /// Fused SGD-with-momentum sweep (`m = μ·m + g; w -= lr·m`).
+    ///
+    /// # Safety
+    /// NEON present.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sgd_momentum(w: &mut [f32], g: &[f32], m: &mut [f32], lr: f32,
+                               momentum: f32) {
+        let n = w.len().min(g.len()).min(m.len());
+        let wp = w.as_mut_ptr();
+        let gp = g.as_ptr();
+        let mp = m.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let mv = vfmaq_n_f32(vld1q_f32(gp.add(i)), vld1q_f32(mp.add(i)), momentum);
+            vst1q_f32(mp.add(i), mv);
+            // w -= lr·m as an FMA with the negated rate (avoids relying on
+            // the fused-subtract intrinsic)
+            let wv = vfmaq_n_f32(vld1q_f32(wp.add(i)), mv, -lr);
+            vst1q_f32(wp.add(i), wv);
+            i += 4;
+        }
+        while i < n {
+            let mv = momentum * *mp.add(i) + *gp.add(i);
+            *mp.add(i) = mv;
+            *wp.add(i) -= lr * mv;
+            i += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -743,6 +1191,124 @@ mod tests {
             for i in 0..n {
                 assert!((y1[i] - y2[i]).abs() < 1e-4, "scale n={n} i={i}");
             }
+        }
+    }
+
+    #[test]
+    fn sgd_momentum_matches_scalar_and_hand_math() {
+        let mut rng = Rng::new(44);
+        for n in [1usize, 4, 7, 8, 16, 33, 100] {
+            let w0 = rng.normal_vec(n, 1.0);
+            let g = rng.normal_vec(n, 1.0);
+            let m0 = rng.normal_vec(n, 1.0);
+            // hand math
+            let mut wh = w0.clone();
+            let mut mh = m0.clone();
+            for i in 0..n {
+                mh[i] = 0.9 * mh[i] + g[i];
+                wh[i] -= 0.01 * mh[i];
+            }
+            // scalar tier
+            let mut ws = w0.clone();
+            let mut ms = m0.clone();
+            sgd_momentum_scalar(&mut ws, &g, &mut ms, 0.01, 0.9);
+            for i in 0..n {
+                assert!((ws[i] - wh[i]).abs() < 1e-6, "scalar w n={n} i={i}");
+                assert!((ms[i] - mh[i]).abs() < 1e-6, "scalar m n={n} i={i}");
+            }
+            // active tier (SIMD where available)
+            let mut wv = w0.clone();
+            let mut mv = m0.clone();
+            sgd_momentum(&mut wv, &g, &mut mv, 0.01, 0.9);
+            for i in 0..n {
+                assert!((wv[i] - wh[i]).abs() < 1e-5, "simd w n={n} i={i}");
+                assert!((mv[i] - mh[i]).abs() < 1e-5, "simd m n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_block_panel_t_matches_scalar_reference() {
+        if simd_tier().is_none() {
+            return;
+        }
+        use crate::sparse::dense::Matrix;
+        for b in [8usize, 16, 32, 48] {
+            let mut rng = Rng::new(500 + b as u64);
+            let x = Matrix::randn(7, 3 * b, 1.0, &mut rng);
+            let blk = rng.normal_vec(b * b, 0.5);
+            let mut got = Matrix::randn(7, 2 * b, 1.0, &mut rng);
+            let mut want = got.clone();
+            // scalar reference: y[r, c] += dot(x-seg, blk row c)
+            for r in 0..7 {
+                for c in 0..b {
+                    let mut acc = want.get(r, b + c);
+                    for k in 0..b {
+                        acc += x.get(r, b + k) * blk[c * b + k];
+                    }
+                    want.set(r, b + c, acc);
+                }
+            }
+            let ldy = got.cols;
+            let handled = unsafe {
+                try_block_panel_t(b, &x, b, 0..7, &blk, got.data.as_mut_ptr(), ldy, b)
+            };
+            if !handled {
+                #[cfg(target_arch = "x86_64")]
+                unsafe {
+                    avx2::block_panel_t(b, &x, b, 0..7, &blk, got.data.as_mut_ptr(), ldy, b)
+                };
+                #[cfg(target_arch = "aarch64")]
+                unsafe {
+                    neon::block_panel_t(b, &x, b, 0..7, &blk, got.data.as_mut_ptr(), ldy, b)
+                };
+            }
+            assert!(
+                got.max_abs_diff(&want) < 1e-3,
+                "b={b}: {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn simd_scatter_block_matches_scalar_reference() {
+        if simd_tier().is_none() {
+            return;
+        }
+        use crate::sparse::dense::Matrix;
+        for b in [8usize, 16, 32, 48] {
+            let mut rng = Rng::new(600 + b as u64);
+            let x = Matrix::randn(7, 3 * b, 1.0, &mut rng);
+            let dy = Matrix::randn(7, 2 * b, 1.0, &mut rng);
+            let mut got = rng.normal_vec(b * b, 0.5);
+            let mut want = got.clone();
+            for r in 0..7 {
+                for k in 0..b {
+                    for c in 0..b {
+                        want[k * b + c] += x.get(r, b + k) * dy.get(r, b + c);
+                    }
+                }
+            }
+            let handled = unsafe {
+                try_scatter_block(b, &x, b, &dy, b, 0..7, &mut got)
+            };
+            if !handled {
+                #[cfg(target_arch = "x86_64")]
+                unsafe {
+                    avx2::scatter_block(b, &x, b, &dy, b, 0..7, &mut got)
+                };
+                #[cfg(target_arch = "aarch64")]
+                unsafe {
+                    neon::scatter_block(b, &x, b, &dy, b, 0..7, &mut got)
+                };
+            }
+            let diff = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-3, "b={b}: {diff}");
         }
     }
 

@@ -26,8 +26,8 @@ pub mod csr;
 pub mod dense;
 pub mod exec;
 
-pub use attention::AttnPlan;
+pub use attention::{AttnPlan, AttnStats};
 pub use bsr::BsrMatrix;
 pub use csr::CsrMatrix;
 pub use dense::Matrix;
-pub use exec::{GemmPlan, Workspace};
+pub use exec::{Activation, Epilogue, GemmPlan, Workspace};

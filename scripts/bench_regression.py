@@ -13,12 +13,15 @@ noisy for a hard perf gate; the trajectory lives in the uploaded
 artifacts).
 
 Refreshing the baseline: download the bench artifacts from a trusted CI
-run and commit them into benchmarks/baseline/ (same file names).
+run and commit them into benchmarks/baseline/ (same file names), or run
+the benches locally/on CI and pass --update-baseline to copy the fresh
+JSON files into the baseline directory in one step (then commit).
 """
 
 import argparse
 import json
 import os
+import shutil
 import sys
 
 
@@ -69,6 +72,10 @@ def main():
                     help="directory with committed BENCH_*.json baselines")
     ap.add_argument("--threshold", type=float, default=0.10,
                     help="relative regression that triggers a warning")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="after diffing, copy each fresh JSON over the "
+                         "committed baseline (commit the result to arm "
+                         "future diffs)")
     ap.add_argument("fresh", nargs="+", help="fresh BENCH_*.json files")
     args = ap.parse_args()
 
@@ -91,6 +98,15 @@ def main():
             warned += 1
             print(f"::warning title=bench regression::{name}:{bench} {metric} "
                   f"regressed {rel * 100.0:.1f}% (baseline {bv:.3f}, now {nv:.3f})")
+
+    if args.update_baseline:
+        os.makedirs(args.baseline, exist_ok=True)
+        for path in args.fresh:
+            if load(path) is None:
+                continue  # never overwrite a baseline with unreadable data
+            dst = os.path.join(args.baseline, os.path.basename(path))
+            shutil.copyfile(path, dst)
+            print(f"baseline updated: {dst}")
 
     if warned:
         print(f"\n{warned} advisory regression warning(s); not failing the gate.")
