@@ -1,0 +1,88 @@
+//! End-to-end compiled-model bench: the whole `preset → budget →
+//! compile → train_step` pipeline on the substrate, per testbed preset —
+//! the fig8-style measurement for models the compiler assembled rather
+//! than hand-built layer chains.
+//!
+//! Per preset (quick mode: vit-s + gpt2-s at one budget) the suite times
+//! the fused train step (fwd+bwd+update over one sequence) and the
+//! frozen InferenceSession forward, both with GFLOP/s from the Module
+//! flop accounting and the peak workspace bytes column. Hard asserts
+//! enforce the compiled-model contract: zero workspace allocations in
+//! the steady state for BOTH paths (the session's `run` additionally
+//! self-asserts), and a decreasing loss across the timed train steps.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::coordinator::budget::rule_of_thumb;
+use pixelfly::costmodel::Device;
+use pixelfly::models::preset;
+use pixelfly::nn::compile;
+use pixelfly::sparse::exec;
+use pixelfly::sparse::Matrix;
+use pixelfly::util::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("e2e_compiled_models");
+    let block = 16usize;
+    let dev = Device::with_block(block);
+    let threads = exec::threads();
+    let kernel = exec::kernel_name();
+    let presets: &[&str] = if suite.quick {
+        &["vit-s", "gpt2-s"]
+    } else {
+        &["vit-s", "mixer-s", "gpt2-s"]
+    };
+    let budgets: &[f64] = if suite.quick { &[0.2] } else { &[0.1, 0.2] };
+
+    for &name in presets {
+        for &budget in budgets {
+            let schema = preset(name, 1).expect("testbed preset");
+            let alloc = rule_of_thumb(&schema, budget, &dev);
+            let mut model = compile(&schema, &alloc, block, 42).expect("compile");
+            let mut rng = Rng::new(9);
+            let x = Matrix::randn(model.seq, model.in_dim(), 1.0, &mut rng);
+            let t = Matrix::randn(model.seq, model.out_dim(), 0.5, &mut rng);
+            let fl = model.flops();
+            let note = format!(
+                "seq={} d={} params={} kept={:.1}% threads={threads} {kernel}",
+                model.seq,
+                schema.d_model,
+                model.param_count(),
+                100.0 * model.stats.sparsification_ratio(),
+            );
+            let tag = format!("{name}_d{:02}", (budget * 100.0) as usize);
+
+            // --- fused train step -------------------------------------
+            let (first_loss, _) = model.train_step(&x, &t, 1e-3, 0.9); // warmup
+            let warm = model.alloc_events();
+            let mut last_loss = first_loss;
+            suite.bench_with_flops(&format!("{tag}_train"), &note, fl.total(), || {
+                let (loss, _) = model.train_step(&x, &t, 1e-3, 0.9);
+                last_loss = loss;
+                std::hint::black_box(loss);
+            });
+            assert_eq!(model.alloc_events(), warm,
+                       "{tag}: steady-state train_step must not allocate");
+            assert!(last_loss.is_finite() && last_loss < first_loss,
+                    "{tag}: training must reduce the fixed-batch loss \
+                     ({first_loss} -> {last_loss})");
+            suite.set_scratch_bytes(model.peak_scratch_bytes());
+
+            // --- frozen inference session -----------------------------
+            let mut sess = model.into_inference();
+            sess.run(&x); // warm the session (run() self-asserts afterwards)
+            let warm = sess.alloc_events();
+            suite.bench_with_flops(&format!("{tag}_infer"), &note, fl.fwd, || {
+                std::hint::black_box(sess.run(&x).data[0]);
+            });
+            assert_eq!(sess.alloc_events(), warm,
+                       "{tag}: steady-state inference must not allocate");
+            suite.set_scratch_bytes(sess.peak_scratch_bytes());
+        }
+    }
+
+    suite.report();
+    match suite.write_json_default() {
+        Ok(p) => println!("json -> {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+}

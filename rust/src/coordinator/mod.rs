@@ -5,7 +5,9 @@
 //! - [`planner`] sparsity-mask selection: rank + max-stride filling a
 //!   layer's budget (§3.3 step 2)
 //! - [`trainer`] the training loop over PJRT artifacts: batching, LR
-//!   schedule, metrics, eval, loss-curve logging
+//!   schedule, metrics, eval, loss-curve logging — plus the substrate
+//!   train-step drivers riding the [`crate::nn::Module`] trait (whole
+//!   compiled models live in `crate::nn::compile`)
 //! - [`metrics`] run reports (loss curves, step timing, throughput) and
 //!   their CSV/TSV serialization for EXPERIMENTS.md
 

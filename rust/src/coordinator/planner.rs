@@ -7,8 +7,8 @@
 //! (`max_stride`, `rank`, `attn_max_stride`, `attn_global_blocks`).
 
 use crate::models::{LayerType, ModelSchema};
-use crate::patterns::butterfly::{flat_butterfly_nnz_blocks, max_stride_for_budget};
-use crate::patterns::{flat_butterfly_mask, BlockMask};
+use crate::patterns::butterfly::{max_stride_for_budget, stretched_flat_butterfly};
+use crate::patterns::BlockMask;
 
 use super::budget::Allocation;
 
@@ -28,18 +28,24 @@ pub struct LayerPlan {
 }
 
 impl LayerPlan {
-    /// The butterfly part's block mask (square patterns; rectangular
-    /// layers use the stretched mask at apply time).
+    /// The butterfly term's block mask — the SAME stretched mask the
+    /// compiler materializes (square plans reduce to the square flat
+    /// pattern; rectangular plans get the Appendix-I.4 stretch), so the
+    /// mask, [`Self::butterfly_params`] and the realized weights agree.
     pub fn butterfly_mask(&self) -> BlockMask {
-        let nb = (self.rows.min(self.cols)) / self.block;
-        flat_butterfly_mask(nb, self.max_stride.min(nb))
+        stretched_flat_butterfly(self.rows / self.block, self.cols / self.block,
+                                 self.max_stride)
     }
 
+    /// Exact weight elements of the materialized butterfly term: counted
+    /// off the same stretched mask the compiler builds, so planner
+    /// accounting and `nn::compile`'s realized parameter counts agree on
+    /// EVERY shape (integer-ratio shortcuts used to diverge when the
+    /// long side was not a block-multiple of the short side).
     pub fn butterfly_params(&self) -> usize {
-        let nb = (self.rows.min(self.cols)) / self.block;
-        let scale = (self.rows / self.block).max(self.cols / self.block) / nb;
-        flat_butterfly_nnz_blocks(nb, self.max_stride.min(nb))
-            * self.block * self.block * scale
+        stretched_flat_butterfly(self.rows / self.block, self.cols / self.block,
+                                 self.max_stride)
+            .nnz() * self.block * self.block
     }
 
     pub fn lowrank_params(&self) -> usize {
@@ -55,25 +61,56 @@ pub fn plan_layer(layer: LayerType, rows: usize, cols: usize, block: usize,
     let dense_params = rows * cols;
     let budget = (density * dense_params as f64) as usize;
 
+    let (nbr, nbc) = (rows / block, cols / block);
+    let nb = nbr.min(nbc);
+    // the power-of-two stride domain of the stretched pattern (mirrors
+    // stretched_flat_butterfly's internal grid)
+    let p2 = if nb.is_power_of_two() {
+        nb
+    } else {
+        (nb.next_power_of_two() / 2).max(1)
+    };
+    // EXACT materialized cost of the stretched flat butterfly at stride
+    // k — the same mask the compiler builds, so rounding can only go
+    // down and planner accounting matches realized weights on every
+    // shape (including long sides that are not multiples of the short)
+    let bf_cost = |k: usize| stretched_flat_butterfly(nbr, nbc, k).nnz() * block * block;
+    // the flat term never drops below the block diagonal, so a plan
+    // always pays at least one stride level
+    let diag_params = bf_cost(1);
+
     // low-rank share, rank as a block multiple (rounded to the nearest
     // block so a 0.96-block budget still buys the paper's minimum rank)
     let lr_budget = (lowrank_share * budget as f64) as usize;
     let rank_blocks = ((lr_budget as f64 / ((rows + cols) * block) as f64) + 0.5) as usize;
     let mut rank = rank_blocks * block;
-    // never let the low-rank term eat more than half the total budget
-    while rank > 0 && rank * (rows + cols) > budget / 2 {
+    // never let the low-rank term eat more than half the total budget —
+    // and always leave room for the mandatory diagonal, so the nearest-
+    // block rounding can only round DOWN the realized density, never
+    // past the request
+    while rank > 0
+        && (rank * (rows + cols) > budget / 2
+            || rank * (rows + cols) + diag_params > budget)
+    {
         rank -= block;
     }
     let lr_params = rank * (rows + cols);
 
-    // remaining budget fills the flat butterfly stride
-    let nb = rows.min(cols) / block;
-    let scale = ((rows / block).max(cols / block)) / nb.max(1);
-    let per_block = block * block * scale;
-    let bf_budget_blocks = (budget - lr_params) / per_block.max(1);
-    let max_stride = max_stride_for_budget(nb, bf_budget_blocks.max(nb));
+    // remaining budget fills the flat butterfly stride against the real
+    // stretched-mask cost; no forced minimum — the stride-1 diagonal is
+    // the floor, the only case where the realized density may exceed a
+    // request below the diagonal floor itself
+    let bf_budget = budget.saturating_sub(lr_params);
+    let mut max_stride = 1;
+    while max_stride < p2 {
+        let next = max_stride * 2;
+        if bf_cost(next) > bf_budget {
+            break;
+        }
+        max_stride = next;
+    }
 
-    let bf_params = flat_butterfly_nnz_blocks(nb, max_stride) * per_block;
+    let bf_params = bf_cost(max_stride);
     LayerPlan {
         layer,
         rows,
@@ -112,7 +149,10 @@ pub fn plan_attention(seq_len: usize, block: usize, density: f64,
     }
     let stripe = 2 * global_blocks * nb - global_blocks * global_blocks;
     let rest = budget_blocks.saturating_sub(stripe);
-    let max_stride = max_stride_for_budget(nb, rest.max(nb));
+    // no forced diagonal minimum: for any request at or above the
+    // diagonal floor (1/nb density) the realized union mask stays within
+    // the block budget (stripe + flat, overlaps counted once)
+    let max_stride = max_stride_for_budget(nb, rest);
     let mask = crate::patterns::baselines::pixelfly_attention_mask(nb, max_stride, global_blocks);
     AttentionPlan {
         seq_blocks: nb,
@@ -207,6 +247,61 @@ mod tests {
         assert!(!plan.layers.is_empty());
         assert!(plan.attention.is_some());
         assert!(plan.total_density < 0.6, "density {}", plan.total_density);
+    }
+
+    #[test]
+    fn realized_density_never_exceeds_request() {
+        // PR 4 satellite: block-count rounding must round DOWN — above
+        // the mandatory-diagonal floor, the realized density can never
+        // exceed the requested allocation. Includes shapes whose long
+        // side is NOT a block-multiple of the short side (the case where
+        // integer-ratio accounting used to overshoot).
+        for &(rows, cols, block) in &[(512usize, 512usize, 32usize), (256, 512, 32),
+                                      (128, 256, 16), (1024, 1024, 32),
+                                      (128, 128, 16), (128, 320, 32),
+                                      (320, 128, 32)] {
+            let diag = stretched_flat_butterfly(rows / block, cols / block, 1).nnz()
+                * block * block;
+            let floor = diag as f64 / (rows * cols) as f64;
+            for density in [0.08, 0.10, 0.15, 0.25, 0.30, 0.40, 0.60] {
+                if density < floor {
+                    continue; // the diagonal itself outweighs the request
+                }
+                for share in [0.0, 0.25, 0.33] {
+                    let p = plan_layer(LayerType::Mlp, rows, cols, block, density,
+                                       share);
+                    assert!(p.achieved_density <= density + 1e-9,
+                            "{rows}x{cols} b={block} density {density} share \
+                             {share}: achieved {}", p.achieved_density);
+                    // the plan's accounting is the realized cost: what
+                    // the compiler materializes equals butterfly_params
+                    assert_eq!(p.butterfly_params(),
+                               stretched_flat_butterfly(rows / block, cols / block,
+                                                        p.max_stride)
+                                   .nnz() * block * block);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_realized_density_never_exceeds_request() {
+        for &(seq, block) in &[(1024usize, 32usize), (512, 32), (256, 16),
+                               (128, 16)] {
+            let nb = seq / block;
+            let floor = 1.0 / nb as f64; // the block diagonal
+            for density in [0.05, 0.10, 0.20, 0.40] {
+                if density < floor {
+                    continue;
+                }
+                for share in [0.0, 0.25] {
+                    let p = plan_attention(seq, block, density, share);
+                    assert!(p.achieved_density <= density + 1e-9,
+                            "seq {seq} b={block} density {density} share {share}: \
+                             achieved {}", p.achieved_density);
+                }
+            }
+        }
     }
 
     #[test]

@@ -3,9 +3,9 @@
 //! State layout contract with `python/compile/train.py` (pytree flatten
 //! order, recorded in the manifest):
 //!
-//!   train_step inputs : [P params][P m][P v][step s32][lr f32][x][y]
-//!   train_step outputs: (loss, [P params], [P m], [P v], step)
-//!   forward_eval inputs : [P params][x][y]   outputs: (loss, n_correct)
+//!     train_step inputs : [P params][P m][P v][step s32][lr f32][x][y]
+//!     train_step outputs: (loss, [P params], [P m], [P v], step)
+//!     forward_eval inputs : [P params][x][y]   outputs: (loss, n_correct)
 //!
 //! Each step samples a synthetic batch (family-specific substrate),
 //! executes the train-step artifact, and swaps the returned state literals
@@ -14,20 +14,25 @@
 //! paper's recipe) is computed host-side and passed as a scalar so no
 //! recompilation is ever needed.
 
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::{corpus::MarkovCorpus, lra::LraDataset, lra::LraTask, vision::VisionDataset};
+use crate::nn::{self, mse_loss_grad, Module, StepTimer};
 use crate::patterns::BlockMask;
 use crate::runtime::engine::{self, Engine, Literal};
 use crate::sparse::attention::{self, AttnPlan, AttnStats};
-use crate::sparse::bsr::BsrMatrix;
-use crate::sparse::dense::{self, Matrix};
-use crate::sparse::exec::{self, Activation, Epilogue, Workspace};
+use crate::sparse::dense::Matrix;
+use crate::sparse::exec::{self, Workspace};
 use crate::util::{Rng, Summary};
 
 use super::metrics::{EvalResult, TrainReport};
+
+// The linear building blocks grew into the Module API and live in
+// `crate::nn` now; re-exported here so the established
+// `coordinator::{SparseLinear, …}` paths keep working.
+pub use crate::nn::{DenseLinear, Linear, SparseLinear, StepTimings};
 
 /// What to train and how long.
 #[derive(Clone, Debug)]
@@ -330,272 +335,32 @@ impl<'e> Trainer<'e> {
 // =====================================================================
 // Substrate training tier: forward → backward → update without the
 // engine. The `Trainer` above drives compiled train_step artifacts (the
-// PJRT parity path); `TrainStep` / `AttnTrainStep` below run every phase
-// on the pure-Rust substrate — fused-epilogue forward, transpose-free
-// backward, pattern-frozen dW scatter, SIMD optimizer sweep — which is
-// what makes the paper's Fig-1 training-speedup claim measurable
-// end-to-end in Rust (benches/fig1_train_step.rs).
+// PJRT parity path); `TrainStep` / `AttnTrainStep` below are thin
+// drivers over the `crate::nn::Module` trait — the layers own their
+// stashes and gradients, the drivers own the inter-layer buffers and the
+// phase clock. They remain the gradcheck-oracle-bearing harnesses the
+// fig1 bench and the proptests pin the engine against; whole models
+// (attention + MLP chains, ViT/Mixer/GPT-2 presets) run through the
+// model compiler (`crate::nn::compile`) on the same trait.
 // =====================================================================
-
-/// Wall-time split of one substrate training step.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct StepTimings {
-    pub fwd: Duration,
-    pub bwd: Duration,
-    pub update: Duration,
-}
-
-impl StepTimings {
-    pub fn total(&self) -> Duration {
-        self.fwd + self.bwd + self.update
-    }
-}
-
-/// Block-sparse linear layer with a fused bias+activation epilogue and a
-/// pattern-frozen gradient: weights, gradient and momentum all live on
-/// the stored-block layout, so no phase of training ever densifies.
-pub struct SparseLinear {
-    pub w: BsrMatrix,
-    pub bias: Vec<f32>,
-    pub act: Activation,
-    dw: Vec<f32>,
-    db: Vec<f32>,
-    mw: Vec<f32>,
-    mb: Vec<f32>,
-}
-
-impl SparseLinear {
-    pub fn random(mask: &BlockMask, block: usize, act: Activation, scale: f32,
-                  rng: &mut Rng) -> Self {
-        let w = BsrMatrix::random(mask, block, scale, rng);
-        let n_out = w.cols_elems();
-        let n_blk = w.blocks.len();
-        SparseLinear {
-            w,
-            bias: vec![0.0; n_out],
-            act,
-            dw: vec![0.0; n_blk],
-            db: vec![0.0; n_out],
-            mw: vec![0.0; n_blk],
-            mb: vec![0.0; n_out],
-        }
-    }
-
-    fn forward(&self, x: &Matrix, y: &mut Matrix, pre: Option<&mut Matrix>) {
-        self.w.matmul_fused_into(
-            x,
-            y,
-            &Epilogue { bias: Some(&self.bias), act: self.act },
-            pre,
-        );
-    }
-
-    /// `dy` arrives as dL/d(output) and leaves as dL/d(pre-activation)
-    /// (the epilogue backward runs in place, folding the bias gradient
-    /// into the same sweep); `aux` is the activated output (ReLU) or the
-    /// stashed pre-activation (GELU), per [`Activation::grad_from_aux`].
-    /// `dx: None` skips the input-gradient GEMM — the first layer of a
-    /// chain has no upstream to feed, so that third of its backward
-    /// flops is pure waste.
-    fn backward(&mut self, x: &Matrix, aux: Option<&Matrix>, dy: &mut Matrix,
-                dx: Option<&mut Matrix>) {
-        self.db.fill(0.0);
-        exec::epilogue_backward(dy, aux, self.act, Some(&mut self.db));
-        self.w.matmul_dw_into(x, dy, &mut self.dw);
-        if let Some(dx) = dx {
-            self.w.matmul_dx_into(dy, dx);
-        }
-    }
-
-    fn update(&mut self, lr: f32, momentum: f32) {
-        exec::sgd_momentum(&mut self.w.blocks, &self.dw, &mut self.mw, lr, momentum);
-        exec::sgd_momentum(&mut self.bias, &self.db, &mut self.mb, lr, momentum);
-    }
-}
-
-/// Dense twin of [`SparseLinear`] — the baseline the fig1 bench compares
-/// against. Same API; unfused epilogue (dense GEMM + a separate bias/act
-/// pass), backward through the transpose-free `A·Bᵀ` / `Aᵀ·B` kernels.
-pub struct DenseLinear {
-    /// [in, out]
-    pub w: Matrix,
-    pub bias: Vec<f32>,
-    pub act: Activation,
-    dw: Matrix,
-    db: Vec<f32>,
-    mw: Vec<f32>,
-    mb: Vec<f32>,
-}
-
-impl DenseLinear {
-    pub fn random(in_dim: usize, out_dim: usize, act: Activation, scale: f32,
-                  rng: &mut Rng) -> Self {
-        DenseLinear {
-            w: Matrix::randn(in_dim, out_dim, scale, rng),
-            bias: vec![0.0; out_dim],
-            act,
-            dw: Matrix::zeros(in_dim, out_dim),
-            db: vec![0.0; out_dim],
-            mw: vec![0.0; in_dim * out_dim],
-            mb: vec![0.0; out_dim],
-        }
-    }
-
-    fn forward(&self, x: &Matrix, y: &mut Matrix, pre: Option<&mut Matrix>) {
-        dense::matmul_blocked_into(x, &self.w, y);
-        let n = y.cols;
-        match pre {
-            Some(p) => {
-                for r in 0..y.rows {
-                    let yrow = &mut y.data[r * n..(r + 1) * n];
-                    let prow = &mut p.data[r * n..(r + 1) * n];
-                    for c in 0..n {
-                        let z = yrow[c] + self.bias[c];
-                        prow[c] = z;
-                        yrow[c] = self.act.apply(z);
-                    }
-                }
-            }
-            None => {
-                for r in 0..y.rows {
-                    let yrow = &mut y.data[r * n..(r + 1) * n];
-                    for c in 0..n {
-                        yrow[c] = self.act.apply(yrow[c] + self.bias[c]);
-                    }
-                }
-            }
-        }
-    }
-
-    fn backward(&mut self, x: &Matrix, aux: Option<&Matrix>, dy: &mut Matrix,
-                dx: Option<&mut Matrix>) {
-        self.db.fill(0.0);
-        exec::epilogue_backward(dy, aux, self.act, Some(&mut self.db));
-        dense::matmul_atb_into(x, dy, &mut self.dw);
-        if let Some(dx) = dx {
-            dense::matmul_abt_into(dy, &self.w, dx);
-        }
-    }
-
-    fn update(&mut self, lr: f32, momentum: f32) {
-        exec::sgd_momentum(&mut self.w.data, &self.dw.data, &mut self.mw, lr, momentum);
-        exec::sgd_momentum(&mut self.bias, &self.db, &mut self.mb, lr, momentum);
-    }
-}
-
-/// A layer of the substrate MLP chain — sparse engine path or dense
-/// baseline, one API.
-pub enum Linear {
-    Sparse(SparseLinear),
-    Dense(DenseLinear),
-}
-
-impl Linear {
-    pub fn in_dim(&self) -> usize {
-        match self {
-            Linear::Sparse(l) => l.w.rows(),
-            Linear::Dense(l) => l.w.rows,
-        }
-    }
-
-    pub fn out_dim(&self) -> usize {
-        match self {
-            Linear::Sparse(l) => l.w.cols_elems(),
-            Linear::Dense(l) => l.w.cols,
-        }
-    }
-
-    pub fn act(&self) -> Activation {
-        match self {
-            Linear::Sparse(l) => l.act,
-            Linear::Dense(l) => l.act,
-        }
-    }
-
-    pub fn param_count(&self) -> usize {
-        match self {
-            Linear::Sparse(l) => l.w.blocks.len() + l.bias.len(),
-            Linear::Dense(l) => l.w.data.len() + l.bias.len(),
-        }
-    }
-
-    /// Multiply flops of one forward pass over `m` batch rows (the
-    /// epilogue's O(m·n) is noise next to it and left out on both paths).
-    pub fn fwd_flops(&self, m: usize) -> f64 {
-        match self {
-            Linear::Sparse(l) => {
-                2.0 * (m * l.w.nnz_blocks()) as f64 * (l.w.block * l.w.block) as f64
-            }
-            Linear::Dense(l) => 2.0 * (m * l.w.rows) as f64 * l.w.cols as f64,
-        }
-    }
-
-    /// Backward flops: dX and dW each cost one forward's worth.
-    pub fn bwd_flops(&self, m: usize) -> f64 {
-        2.0 * self.fwd_flops(m)
-    }
-
-    /// Optimizer flops: two FMAs per parameter.
-    pub fn update_flops(&self) -> f64 {
-        4.0 * self.param_count() as f64
-    }
-
-    pub fn forward(&self, x: &Matrix, y: &mut Matrix, pre: Option<&mut Matrix>) {
-        match self {
-            Linear::Sparse(l) => l.forward(x, y, pre),
-            Linear::Dense(l) => l.forward(x, y, pre),
-        }
-    }
-
-    /// `dx: None` skips the input-gradient GEMM (first layer of a chain).
-    pub fn backward(&mut self, x: &Matrix, aux: Option<&Matrix>, dy: &mut Matrix,
-                    dx: Option<&mut Matrix>) {
-        match self {
-            Linear::Sparse(l) => l.backward(x, aux, dy, dx),
-            Linear::Dense(l) => l.backward(x, aux, dy, dx),
-        }
-    }
-
-    pub fn update(&mut self, lr: f32, momentum: f32) {
-        match self {
-            Linear::Sparse(l) => l.update(lr, momentum),
-            Linear::Dense(l) => l.update(lr, momentum),
-        }
-    }
-}
-
-/// MSE loss `mean((y − target)²)` and its gradient written into `g`.
-fn mse_loss_grad(y: &Matrix, target: &Matrix, g: &mut Matrix) -> f64 {
-    assert_eq!((y.rows, y.cols), (target.rows, target.cols));
-    assert_eq!((g.rows, g.cols), (y.rows, y.cols));
-    let n = (y.rows * y.cols) as f64;
-    let scale = (2.0 / n) as f32;
-    let mut loss = 0.0f64;
-    for ((gv, &yv), &tv) in g.data.iter_mut().zip(&y.data).zip(&target.data) {
-        let diff = yv - tv;
-        loss += (diff as f64) * (diff as f64);
-        *gv = scale * diff;
-    }
-    loss / n
-}
 
 /// Substrate train-step driver for a chain of [`Linear`] layers: one
 /// `step` runs fused forward → transpose-free backward → SIMD optimizer
 /// update, timing each phase. The step's allocation-freedom is
 /// structural: every activation/gradient buffer is sized once at
-/// construction and the BSR forward/backward engines need no scratch at
-/// all, so no phase ever touches an allocator or a workspace. (The
-/// attention driver below DOES need scratch and carries real,
-/// assertable workspace counters.)
+/// construction, the layers' stashes size themselves on first forward,
+/// and the BSR forward/backward engines need no scratch at all — the
+/// workspace threaded through the Module calls is never drawn from on
+/// this path. (The attention driver below DOES need scratch and carries
+/// real, assertable workspace counters.)
 pub struct TrainStep {
     pub layers: Vec<Linear>,
     batch: usize,
-    /// acts[i] = activated output of layer i
+    /// `acts[i]` = activated output of layer i
     acts: Vec<Matrix>,
-    /// pre-activations, stashed only where the activation needs them
-    pres: Vec<Option<Matrix>>,
-    /// grads[i] = dL/d(acts[i]), consumed in place by layer i's backward
+    /// `grads[i]` = dL/d(`acts[i]`), consumed in place by layer i's backward
     grads: Vec<Matrix>,
+    ws: Workspace,
 }
 
 impl TrainStep {
@@ -606,13 +371,9 @@ impl TrainStep {
         }
         let acts: Vec<Matrix> =
             layers.iter().map(|l| Matrix::zeros(batch, l.out_dim())).collect();
-        let pres: Vec<Option<Matrix>> = layers
-            .iter()
-            .map(|l| l.act().needs_pre().then(|| Matrix::zeros(batch, l.out_dim())))
-            .collect();
         let grads: Vec<Matrix> =
             layers.iter().map(|l| Matrix::zeros(batch, l.out_dim())).collect();
-        TrainStep { layers, batch, acts, pres, grads }
+        TrainStep { layers, batch, acts, grads, ws: Workspace::new() }
     }
 
     pub fn batch(&self) -> usize {
@@ -642,41 +403,39 @@ impl TrainStep {
         assert_eq!((x.rows, x.cols), (self.batch, self.layers[0].in_dim()));
         let nl = self.layers.len();
 
-        let t0 = Instant::now();
+        let mut timer = StepTimer::start();
         for i in 0..nl {
             let (done, rest) = self.acts.split_at_mut(i);
             let input: &Matrix = if i == 0 { x } else { &done[i - 1] };
-            self.layers[i].forward(input, &mut rest[0], self.pres[i].as_mut());
+            self.layers[i].forward_into(input, &mut rest[0], &mut self.ws);
         }
-        let fwd = t0.elapsed();
+        timer.fwd_done();
 
-        let t1 = Instant::now();
         let loss = mse_loss_grad(&self.acts[nl - 1], target, &mut self.grads[nl - 1]);
         for i in (0..nl).rev() {
             let (gprev, gcur) = self.grads.split_at_mut(i);
             let dy = &mut gcur[0];
-            let aux = self.layers[i].act().pick_aux(&self.acts[i], self.pres[i].as_ref());
             // the first layer feeds no upstream: skip its dX GEMM entirely
             let (input, dx): (&Matrix, Option<&mut Matrix>) = if i == 0 {
                 (x, None)
             } else {
                 (&self.acts[i - 1], Some(&mut gprev[i - 1]))
             };
-            self.layers[i].backward(input, aux, dy, dx);
+            self.layers[i].backward_into(input, &self.acts[i], dy, dx, &mut self.ws);
         }
-        let bwd = t1.elapsed();
+        timer.bwd_done();
 
-        let t2 = Instant::now();
         for layer in &mut self.layers {
-            layer.update(lr, momentum);
+            Module::update(layer, lr, momentum);
         }
-        let update = t2.elapsed();
+        timer.update_done();
 
-        (loss, StepTimings { fwd, bwd, update })
+        (loss, timer.finish())
     }
 
     /// Train against a fixed synthetic regression batch (throughput- and
-    /// convergence-checkable) and report with the fwd/bwd/update split.
+    /// convergence-checkable) through the shared report driver, with the
+    /// fwd/bwd/update split.
     pub fn train(&mut self, steps: usize, lr: f32, momentum: f32, seed: u64)
                  -> TrainReport {
         let mut rng = Rng::new(seed ^ 0x5B57_7A7E);
@@ -687,41 +446,10 @@ impl TrainStep {
             0.5,
             &mut rng,
         );
-        let mut report = TrainReport {
-            preset: "substrate_mlp".into(),
-            steps,
-            param_count: self.param_count(),
-            substrate_threads: exec::threads(),
-            kernel: exec::kernel_name().to_string(),
-            ..Default::default()
-        };
-        let mut totals = Vec::with_capacity(steps);
-        let mut fwds = Vec::with_capacity(steps);
-        let mut bwds = Vec::with_capacity(steps);
-        let mut upds = Vec::with_capacity(steps);
-        for s in 0..steps {
-            let (loss, t) = self.step(&x, &target, lr, momentum);
-            totals.push(t.total());
-            fwds.push(t.fwd);
-            bwds.push(t.bwd);
-            upds.push(t.update);
-            if s % 10 == 0 || s + 1 == steps {
-                report.loss_curve.push((s, loss));
-            }
-        }
-        // skip warmup-heavy samples for the timing summaries, like the
-        // engine trainer
-        let hot = |v: &[Duration]| {
-            let v = if v.len() > 3 { &v[2..] } else { v };
-            Summary::from_durations(v)
-        };
-        let st = hot(&totals);
-        report.throughput = self.batch as f64 / (st.mean_ns / 1e9);
-        report.step_time = Some(st);
-        report.fwd_time = Some(hot(&fwds));
-        report.bwd_time = Some(hot(&bwds));
-        report.update_time = Some(hot(&upds));
-        report
+        let params = self.param_count();
+        let batch = self.batch;
+        nn::drive_substrate_training("substrate_mlp", steps, params, batch, 10,
+                                     |_s| self.step(&x, &target, lr, momentum))
     }
 }
 
@@ -738,7 +466,6 @@ pub struct AttnTrainStep {
     ws: Workspace,
     o: Matrix,
     y: Matrix,
-    pre: Option<Matrix>,
     gy: Matrix,
     d_o: Matrix,
     dq: Matrix,
@@ -753,7 +480,6 @@ impl AttnTrainStep {
     pub fn new(mask: &BlockMask, causal: bool, seq: usize, d: usize, wo: Linear) -> Self {
         assert_eq!(wo.in_dim(), d, "projection must consume the head output");
         let plan = attention::plan_for(mask, causal, exec::threads());
-        let pre = wo.act().needs_pre().then(|| Matrix::zeros(seq, wo.out_dim()));
         AttnTrainStep {
             plan,
             causal,
@@ -761,7 +487,6 @@ impl AttnTrainStep {
             ws: Workspace::new(),
             o: Matrix::zeros(seq, d),
             y: Matrix::zeros(seq, wo.out_dim()),
-            pre,
             gy: Matrix::zeros(seq, wo.out_dim()),
             d_o: Matrix::zeros(seq, d),
             dq: Matrix::zeros(seq, d),
@@ -797,15 +522,14 @@ impl AttnTrainStep {
                 -> (f64, StepTimings) {
         assert_eq!((x.rows, x.cols), (self.seq, self.d));
 
-        let t0 = Instant::now();
+        let mut timer = StepTimer::start();
         self.plan.execute_stats(x, x, x, &mut self.o, &mut self.stats, &mut self.ws);
-        self.wo.forward(&self.o, &mut self.y, self.pre.as_mut());
-        let fwd = t0.elapsed();
+        self.wo.forward_into(&self.o, &mut self.y, &mut self.ws);
+        timer.fwd_done();
 
-        let t1 = Instant::now();
         let loss = mse_loss_grad(&self.y, target, &mut self.gy);
-        let aux = self.wo.act().pick_aux(&self.y, self.pre.as_ref());
-        self.wo.backward(&self.o, aux, &mut self.gy, Some(&mut self.d_o));
+        self.wo.backward_into(&self.o, &self.y, &mut self.gy, Some(&mut self.d_o),
+                              &mut self.ws);
         self.plan.backward(x, x, x, &self.o, &self.d_o, &self.stats,
                            &mut self.dq, &mut self.dk, &mut self.dv, &mut self.ws);
         // self-attention: x feeds q, k and v, so the input gradient sums
@@ -818,13 +542,12 @@ impl AttnTrainStep {
         {
             *dxv = dqv + dkv + dvv;
         }
-        let bwd = t1.elapsed();
+        timer.bwd_done();
 
-        let t2 = Instant::now();
-        self.wo.update(lr, momentum);
-        let update = t2.elapsed();
+        Module::update(&mut self.wo, lr, momentum);
+        timer.update_done();
 
-        (loss, StepTimings { fwd, bwd, update })
+        (loss, timer.finish())
     }
 }
 
@@ -832,6 +555,7 @@ impl AttnTrainStep {
 mod substrate_tests {
     use super::*;
     use crate::patterns::baselines;
+    use crate::sparse::exec::Activation;
 
     fn mlp(sparse: bool, n: usize, block: usize, batch: usize, seed: u64) -> TrainStep {
         let mut rng = Rng::new(seed);
@@ -879,24 +603,10 @@ mod substrate_tests {
         let mask = crate::patterns::BlockMask::ones(n / block, n / block);
         let s1 = SparseLinear::random(&mask, block, Activation::Gelu, 0.3, &mut rng);
         let s2 = SparseLinear::random(&mask, block, Activation::Identity, 0.3, &mut rng);
-        let d1 = DenseLinear {
-            w: s1.w.to_dense(),
-            bias: s1.bias.clone(),
-            act: Activation::Gelu,
-            dw: Matrix::zeros(n, n),
-            db: vec![0.0; n],
-            mw: vec![0.0; n * n],
-            mb: vec![0.0; n],
-        };
-        let d2 = DenseLinear {
-            w: s2.w.to_dense(),
-            bias: s2.bias.clone(),
-            act: Activation::Identity,
-            dw: Matrix::zeros(n, n),
-            db: vec![0.0; n],
-            mw: vec![0.0; n * n],
-            mb: vec![0.0; n],
-        };
+        let d1 = DenseLinear::from_parts(s1.w.to_dense(), s1.bias.clone(),
+                                         Activation::Gelu);
+        let d2 = DenseLinear::from_parts(s2.w.to_dense(), s2.bias.clone(),
+                                         Activation::Identity);
         let mut sp = TrainStep::new(vec![Linear::Sparse(s1), Linear::Sparse(s2)], batch);
         let mut de = TrainStep::new(vec![Linear::Dense(d1), Linear::Dense(d2)], batch);
         let x = Matrix::randn(batch, n, 1.0, &mut rng);
@@ -911,9 +621,10 @@ mod substrate_tests {
 
     #[test]
     fn repeated_steps_on_fixed_buffers_stay_finite() {
-        // the linear chain reuses its member buffers across steps (no
-        // workspace exists to draw from — allocation-freedom is
-        // structural); repeated stepping must stay numerically sane
+        // the linear chain reuses its member buffers across steps (the
+        // workspace threaded through the Module calls is never drawn from
+        // on this path — allocation-freedom is structural); repeated
+        // stepping must stay numerically sane
         let mut ts = mlp(true, 64, 16, 8, 4);
         let mut rng = Rng::new(5);
         let x = Matrix::randn(8, 64, 1.0, &mut rng);
@@ -925,6 +636,8 @@ mod substrate_tests {
             last = loss;
         }
         assert!(last.is_finite());
+        assert_eq!(ts.ws.alloc_events(), 0,
+                   "the MLP chain must never draw workspace scratch");
     }
 
     #[test]

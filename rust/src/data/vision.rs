@@ -16,7 +16,7 @@ pub struct VisionDataset {
     pub seq: usize,
     pub dim: usize,
     pub noise: f32,
-    /// prototypes[class][position][dim]
+    /// `prototypes[class][position][dim]`
     prototypes: Vec<Vec<Vec<f32>>>,
 }
 

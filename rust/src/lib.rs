@@ -17,6 +17,8 @@
 //! - [`costmodel`]  Appendix-A hardware cost model (block memory access)
 //! - [`sparse`]     pure-Rust BSR GEMM substrate (Table 7 / Fig 11 testbed)
 //! - [`models`]     model schemas, presets, parameter/FLOP accounting
+//! - [`nn`]         Module API + model compiler: composable blocks,
+//!   `Sequential`, `compile(schema, alloc, …) -> Model`, inference sessions
 //! - [`data`]       synthetic vision / corpus / LRA workloads
 //! - [`runtime`]    PJRT engine: manifest, executables, device buffers
 //! - [`coordinator`] budget allocation, mask planning, the training loop
@@ -30,6 +32,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod models;
+pub mod nn;
 pub mod ntk;
 pub mod patterns;
 pub mod rigl;

@@ -59,6 +59,8 @@ fn print_help() {
         "pixelfly — Pixelated Butterfly (ICLR 2022) coordinator\n\n\
          USAGE: pixelfly <cmd> [--flags]\n\n\
          train        --preset gpt2_s_pixelfly --steps 100 --lr 1e-3 [--lra-task text]\n\
+         train        --model vit-s --budget 0.1 [--block 16 --steps 20]\n\
+                      (compiled substrate path: preset -> budget -> compile -> train)\n\
          compare      --presets mixer_s_dense,mixer_s_pixelfly --steps 50\n\
          ntk-compare  [--batches 2]           (Fig 4, uses ntk_* artifacts)\n\
          ntk-search   [--nb 16 --budget 96]   (Appendix K, analytic NTK)\n\
@@ -95,6 +97,11 @@ fn cmd_list() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // `--model <preset>` routes to the pure-Rust compiled path:
+    // preset → budget → compile → train, no artifacts needed.
+    if args.get("model").is_some() {
+        return cmd_train_compiled(args);
+    }
     let mut engine = Engine::new(&artifacts_dir())?;
     let cfg = TrainConfig {
         preset: args.str_or("preset", "mixer_s_pixelfly"),
@@ -116,6 +123,51 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.checkpoint(std::path::Path::new(dir))?;
         println!("checkpoint -> {dir}");
     }
+    Ok(())
+}
+
+/// The end-to-end pipeline of the paper, entirely on the substrate:
+/// `models::preset` → §3.3 budget rule → `planner::plan_model` →
+/// `nn::compile` → fused train steps → frozen inference session.
+fn cmd_train_compiled(args: &Args) -> Result<()> {
+    let model_name = args.str_or("model", "vit-s");
+    let budget_frac = args.f64_or("budget", 0.1);
+    let block = args.usize_or("block", 16);
+    let steps = args.usize_or("steps", 20);
+    let lr = args.f32_or("lr", 1e-2);
+    let momentum = args.f32_or("momentum", 0.9);
+    let seed = args.u64_or("seed", 0);
+    let dev = Device::with_block(block);
+    let schema = models::preset(&model_name, 1)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?}"))?;
+    let alloc = budget::rule_of_thumb(&schema, budget_frac, &dev);
+    let mut model = pixelfly::nn::compile(&schema, &alloc, block, seed)?;
+    println!(
+        "compiled {model_name}: params={} (sparsified {} / dense-kept {} / bias {}) \
+         plan density={:.3} kept {:.1}% of dense GEMM weights",
+        model.param_count(),
+        model.stats.sparsified_weight_params,
+        model.stats.dense_weight_params,
+        model.stats.bias_params,
+        model.plan.total_density,
+        100.0 * model.stats.sparsification_ratio(),
+    );
+    let report = model.train(steps, lr, momentum, seed);
+    println!("{}", report.summary_line());
+    if args.bool("curve") {
+        println!("{}", report.curve_tsv());
+    }
+    // freeze into a serving session; run() hard-asserts the zero-alloc
+    // steady state, so two passes here double as a serving smoke test
+    let seq = model.seq;
+    let in_dim = model.in_dim();
+    let mut rng = Rng::new(seed ^ 0x1D1E);
+    let x = Matrix::randn(seq, in_dim, 1.0, &mut rng);
+    let mut sess = model.into_inference();
+    sess.run(&x);
+    sess.run(&x);
+    println!("inference session: steady-state zero-alloc verified, peak scratch {}B",
+             sess.peak_scratch_bytes());
     Ok(())
 }
 

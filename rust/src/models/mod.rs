@@ -82,9 +82,50 @@ pub struct ModelSchema {
     pub seq_len: usize,
     pub d_model: usize,
     pub n_layers: usize,
+    /// autoregressive attention (LM presets); a schema property so the
+    /// model compiler never has to guess from the preset name
+    pub causal: bool,
+}
+
+/// Coarse architecture family a schema describes — what the model
+/// compiler dispatches on when turning entries into blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelFamily {
+    /// attention + MLP blocks (ViT / GPT-2 shape)
+    Transformer,
+    /// token-mixing + channel MLP blocks
+    Mixer,
 }
 
 impl ModelSchema {
+    /// Architecture family derived from the entry set: any token-mixing
+    /// entry makes it a mixer; any attention projection a transformer.
+    pub fn family(&self) -> Option<ModelFamily> {
+        if self.entries.iter().any(|e| e.layer == LayerType::TokenMix) {
+            Some(ModelFamily::Mixer)
+        } else if self.entries.iter().any(|e| e.layer == LayerType::AttnProj) {
+            Some(ModelFamily::Transformer)
+        } else {
+            None
+        }
+    }
+
+    /// Hidden width of the channel MLP (the `d_model -> hidden` entry).
+    pub fn mlp_hidden(&self) -> Option<usize> {
+        self.entries
+            .iter()
+            .find(|e| e.layer == LayerType::Mlp && e.rows == self.d_model)
+            .map(|e| e.cols)
+    }
+
+    /// Hidden width of the mixer's token-mixing MLP (`seq -> hidden`).
+    pub fn token_hidden(&self) -> Option<usize> {
+        self.entries
+            .iter()
+            .find(|e| e.layer == LayerType::TokenMix && e.rows == self.seq_len)
+            .map(|e| e.cols)
+    }
+
     pub fn total_params(&self) -> usize {
         self.entries.iter().map(|e| e.weight_params()).sum()
     }
@@ -126,6 +167,7 @@ pub fn transformer_schema(name: &str, d: usize, layers: usize, seq: usize,
         seq_len: seq,
         d_model: d,
         n_layers: layers,
+        causal: false,
         entries: vec![
             SchemaEntry { layer: LayerType::AttnProj, count: 4 * layers, rows: d, cols: d, tokens },
             SchemaEntry { layer: LayerType::AttnScore, count: 2 * layers, rows: seq, cols: seq, tokens: batch * d },
@@ -143,6 +185,7 @@ pub fn mixer_schema(name: &str, d: usize, layers: usize, seq: usize,
         seq_len: seq,
         d_model: d,
         n_layers: layers,
+        causal: false,
         entries: vec![
             SchemaEntry { layer: LayerType::TokenMix, count: layers, rows: seq, cols: 2 * seq, tokens: batch * d },
             SchemaEntry { layer: LayerType::TokenMix, count: layers, rows: 2 * seq, cols: seq, tokens: batch * d },
@@ -153,8 +196,10 @@ pub fn mixer_schema(name: &str, d: usize, layers: usize, seq: usize,
 }
 
 /// Named presets mirroring the paper's model zoo (scaled; Tables 4–6).
+/// LM presets (`gpt2-*`) are marked causal; everything else attends
+/// bidirectionally.
 pub fn preset(name: &str, batch: usize) -> Option<ModelSchema> {
-    Some(match name {
+    let mut schema = match name {
         // paper-scale schemas (for budget/cost projections; not trained here)
         "mixer-s16" => mixer_schema(name, 512, 8, 196, 4, batch),
         "mixer-b16" => mixer_schema(name, 768, 12, 196, 4, batch),
@@ -168,7 +213,9 @@ pub fn preset(name: &str, batch: usize) -> Option<ModelSchema> {
         "gpt2-s" => transformer_schema(name, 128, 2, 128, 2, batch),
         "lra" => transformer_schema(name, 64, 1, 512, 2, batch),
         _ => return None,
-    })
+    };
+    schema.causal = name.starts_with("gpt2");
+    Some(schema)
 }
 
 #[cfg(test)]
@@ -220,6 +267,28 @@ mod tests {
         let attn = get(LayerType::AttnProj) + get(LayerType::AttnScore);
         let ratio = mlp / attn;
         assert!(ratio > 0.8 && ratio < 3.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn lm_presets_are_causal() {
+        for name in ["gpt2-s", "gpt2-small", "gpt2-medium"] {
+            assert!(preset(name, 4).unwrap().causal, "{name}");
+        }
+        for name in ["vit-s", "mixer-s", "lra"] {
+            assert!(!preset(name, 4).unwrap().causal, "{name}");
+        }
+    }
+
+    #[test]
+    fn family_and_hidden_dims_derive_from_entries() {
+        let vit = preset("vit-s", 4).unwrap();
+        assert_eq!(vit.family(), Some(ModelFamily::Transformer));
+        assert_eq!(vit.mlp_hidden(), Some(2 * vit.d_model));
+        assert_eq!(vit.token_hidden(), None);
+        let mixer = preset("mixer-s", 4).unwrap();
+        assert_eq!(mixer.family(), Some(ModelFamily::Mixer));
+        assert_eq!(mixer.mlp_hidden(), Some(2 * mixer.d_model));
+        assert_eq!(mixer.token_hidden(), Some(2 * mixer.seq_len));
     }
 
     #[test]

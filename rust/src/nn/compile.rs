@@ -1,0 +1,424 @@
+//! The model compiler: `preset → budget → plan → executable model`.
+//!
+//! [`compile`] walks a schema's [`crate::coordinator::planner::ModelPlan`]
+//! and materialises every `LayerPlan` (stretched flat-butterfly mask →
+//! BSR + low-rank rank, §3.3 step 2) into [`Module`] building blocks —
+//! [`PixelflyAttention`] + [`MlpBlock`] per transformer layer,
+//! [`MixerBlock`] per mixer layer — between a dense-kept [`Embedding`]
+//! and [`ClassifierHead`], all chained under one [`Sequential`] and one
+//! [`Workspace`]. The result is a [`Model`] exposing `train_step` /
+//! `train` and a forward-only [`InferenceSession`] with frozen plans and
+//! a metered zero-alloc steady state.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::budget::Allocation;
+use crate::coordinator::metrics::TrainReport;
+use crate::coordinator::planner::{plan_model, LayerPlan, ModelPlan};
+use crate::models::{LayerType, ModelFamily, ModelSchema};
+use crate::patterns::baselines;
+use crate::sparse::dense::Matrix;
+use crate::sparse::exec::{Activation, Workspace};
+use crate::util::Rng;
+
+use super::blocks::{ClassifierHead, Embedding, LowRankResidual, MixerBlock, MlpBlock,
+                    PixelflyAttention};
+use super::{drive_substrate_training, ensure_shape, mse_loss_grad, Module,
+            PhaseFlops, Sequential, StepTimer, StepTimings};
+
+/// Parameter accounting of one compiled model, split the way the paper's
+/// sparsification story needs it: what was sparsified, what stayed dense
+/// by design, and what the dense schema would have cost.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompileStats {
+    /// materialised butterfly + low-rank weight elements (biases excluded)
+    pub sparsified_weight_params: usize,
+    /// embedding + classifier head weights (kept dense per the paper)
+    pub dense_weight_params: usize,
+    /// bias parameters across every layer
+    pub bias_params: usize,
+    /// `ModelSchema::total_params()` — the dense GEMM weights the
+    /// sparsified set replaces
+    pub schema_dense_params: usize,
+}
+
+impl CompileStats {
+    /// All trainable parameters of the compiled model.
+    pub fn total_params(&self) -> usize {
+        self.sparsified_weight_params + self.dense_weight_params + self.bias_params
+    }
+
+    /// Fraction of the schema's dense GEMM weights the compiled model
+    /// keeps (the realized compression of §3.3).
+    pub fn sparsification_ratio(&self) -> f64 {
+        self.sparsified_weight_params as f64 / self.schema_dense_params.max(1) as f64
+    }
+}
+
+/// Materialise one GEMM's layer plan as a pixelfly module and account it.
+fn materialize(p: &LayerPlan, act: Activation, stats: &mut CompileStats,
+               rng: &mut Rng) -> Box<dyn Module> {
+    let scale = 1.0 / (p.rows as f32).sqrt();
+    let m = LowRankResidual::random(p.rows, p.cols, p.block, p.max_stride, p.rank,
+                                    act, scale, rng);
+    stats.sparsified_weight_params += m.weight_param_count();
+    stats.bias_params += p.cols;
+    Box::new(m)
+}
+
+/// Look up the plan entry for a GEMM shape (plans are per distinct
+/// (type, rows, cols), shared by every repeat of that layer).
+fn layer_plan<'a>(plan: &'a ModelPlan, lt: LayerType, rows: usize,
+                  cols: usize) -> Result<&'a LayerPlan> {
+    plan.layers
+        .iter()
+        .find(|p| p.layer == lt && p.rows == rows && p.cols == cols)
+        .ok_or_else(|| anyhow!("no layer plan for {lt:?} {rows}x{cols}"))
+}
+
+/// Compile a schema under a budget allocation into an executable model:
+/// walk [`plan_model`]'s output, materialise every layer, and wire the
+/// blocks per the schema's family. `seed` fixes the initialisation.
+pub fn compile(schema: &ModelSchema, alloc: &Allocation, block: usize,
+               seed: u64) -> Result<Model> {
+    let family = schema
+        .family()
+        .ok_or_else(|| anyhow!("schema {:?} has no sparsifiable blocks", schema.name))?;
+    let (d, seq) = (schema.d_model, schema.seq_len);
+    if d % block != 0 || seq % block != 0 {
+        bail!("schema {:?}: d_model {d} and seq {seq} must be multiples of the \
+               hardware block {block}", schema.name);
+    }
+    // checked BEFORE planning: plan_attention builds the score mask and
+    // would panic on a non-power-of-two grid deep inside plan_model
+    if family == ModelFamily::Transformer && !(seq / block).is_power_of_two() {
+        bail!("attention grid {} blocks must be a power of two (seq {seq} at \
+               block {block}); pick a block that divides seq into a \
+               power-of-two grid", seq / block);
+    }
+    let plan = plan_model(schema, alloc, block);
+    let mut stats = CompileStats {
+        schema_dense_params: schema.total_params(),
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed ^ 0xC0DE_C0DE);
+    let mut mods: Vec<Box<dyn Module>> = Vec::new();
+
+    // dense-kept input embedding (the paper never sparsifies the edges)
+    let scale_d = 1.0 / (d as f32).sqrt();
+    mods.push(Box::new(Embedding::random(d, d, scale_d, &mut rng)));
+    stats.dense_weight_params += d * d;
+    stats.bias_params += d;
+
+    let hidden = schema
+        .mlp_hidden()
+        .ok_or_else(|| anyhow!("schema {:?} has no channel MLP entry", schema.name))?;
+    match family {
+        ModelFamily::Transformer => {
+            let ap = layer_plan(&plan, LayerType::AttnProj, d, d)?;
+            let up = layer_plan(&plan, LayerType::Mlp, d, hidden)?;
+            let down = layer_plan(&plan, LayerType::Mlp, hidden, d)?;
+            let attn = plan
+                .attention
+                .as_ref()
+                .ok_or_else(|| anyhow!("transformer plan without an attention mask"))?;
+            let mask = baselines::pixelfly_attention_mask(attn.seq_blocks,
+                                                          attn.max_stride,
+                                                          attn.global_blocks);
+            // a schema property, not a name convention (LM presets set it)
+            let causal = schema.causal;
+            for _ in 0..schema.n_layers {
+                let wq = materialize(ap, Activation::Identity, &mut stats, &mut rng);
+                let wk = materialize(ap, Activation::Identity, &mut stats, &mut rng);
+                let wv = materialize(ap, Activation::Identity, &mut stats, &mut rng);
+                let wo = materialize(ap, Activation::Identity, &mut stats, &mut rng);
+                mods.push(Box::new(PixelflyAttention::new(&mask, causal, wq, wk, wv,
+                                                          wo, true)));
+                mods.push(Box::new(MlpBlock::new(
+                    materialize(up, Activation::Gelu, &mut stats, &mut rng),
+                    materialize(down, Activation::Identity, &mut stats, &mut rng),
+                    true,
+                )));
+            }
+        }
+        ModelFamily::Mixer => {
+            let th = schema
+                .token_hidden()
+                .ok_or_else(|| anyhow!("mixer schema without a token-mix entry"))?;
+            let tu = layer_plan(&plan, LayerType::TokenMix, seq, th)?;
+            let td = layer_plan(&plan, LayerType::TokenMix, th, seq)?;
+            let cu = layer_plan(&plan, LayerType::Mlp, d, hidden)?;
+            let cd = layer_plan(&plan, LayerType::Mlp, hidden, d)?;
+            for _ in 0..schema.n_layers {
+                let token = MlpBlock::new(
+                    materialize(tu, Activation::Gelu, &mut stats, &mut rng),
+                    materialize(td, Activation::Identity, &mut stats, &mut rng),
+                    true,
+                );
+                let channel = MlpBlock::new(
+                    materialize(cu, Activation::Gelu, &mut stats, &mut rng),
+                    materialize(cd, Activation::Identity, &mut stats, &mut rng),
+                    true,
+                );
+                mods.push(Box::new(MixerBlock::new(token, channel)));
+            }
+        }
+    }
+
+    // dense-kept classifier / LM head
+    mods.push(Box::new(ClassifierHead::random(d, d, scale_d, &mut rng)));
+    stats.dense_weight_params += d * d;
+    stats.bias_params += d;
+
+    let body = Sequential::new(mods);
+    debug_assert_eq!(body.param_count(), stats.total_params());
+    Ok(Model {
+        name: schema.name.clone(),
+        seq,
+        plan,
+        stats,
+        body,
+        ws: Workspace::new(),
+        y: Matrix::zeros(0, 0),
+        gy: Matrix::zeros(0, 0),
+        dx: Matrix::zeros(0, 0),
+    })
+}
+
+/// An executable compiled model: one module tree, one workspace, member
+/// loss/gradient buffers sized once — `train_step` is zero-alloc after
+/// the first step and every phase is timed.
+pub struct Model {
+    pub name: String,
+    /// sequence length the model is bound to (attention grids and mixer
+    /// token dims fix it at compile time)
+    pub seq: usize,
+    /// the sparsity plan this model materialises (inspection / reports)
+    pub plan: ModelPlan,
+    pub stats: CompileStats,
+    body: Sequential,
+    ws: Workspace,
+    y: Matrix,
+    gy: Matrix,
+    dx: Matrix,
+}
+
+impl Model {
+    pub fn in_dim(&self) -> usize {
+        self.body.in_dim()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.body.out_dim()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.body.param_count()
+    }
+
+    /// FLOP accounting of one training step at the bound sequence length.
+    pub fn flops(&self) -> PhaseFlops {
+        self.body.flops(self.seq)
+    }
+
+    /// Workspace allocation events so far (flat in steady state).
+    pub fn alloc_events(&self) -> usize {
+        self.ws.alloc_events()
+    }
+
+    /// The module tree's per-phase workspace hint
+    /// ([`Module::scratch_elems`]) at the bound sequence length — tests
+    /// assert the measured peak stays within a small multiple of this,
+    /// so the per-block bounds cannot silently drift from reality.
+    pub fn scratch_elems(&self) -> usize {
+        self.body.scratch_elems(self.seq)
+    }
+
+    pub fn peak_scratch_bytes(&self) -> usize {
+        self.ws.peak_bytes()
+    }
+
+    fn forward_only(&mut self, x: &Matrix) {
+        assert_eq!(x.rows, self.seq, "compiled models run whole sequences");
+        assert_eq!(x.cols, self.body.in_dim());
+        ensure_shape(&mut self.y, x.rows, self.body.out_dim());
+        let Model { body, ws, y, .. } = self;
+        body.forward_into(x, y, ws);
+    }
+
+    /// Forward pass; the returned reference lives in the model's output
+    /// buffer (overwritten by the next call).
+    pub fn forward(&mut self, x: &Matrix) -> &Matrix {
+        self.forward_only(x);
+        &self.y
+    }
+
+    /// Forward + MSE loss against `target`, no gradients — what finite-
+    /// difference oracles probe.
+    pub fn loss_only(&mut self, x: &Matrix, target: &Matrix) -> f64 {
+        self.forward_only(x);
+        ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
+        mse_loss_grad(&self.y, target, &mut self.gy)
+    }
+
+    /// Forward + backward WITHOUT the optimizer update, surfacing dL/dx —
+    /// the whole-chain gradcheck entry point (parameters are untouched,
+    /// so finite differences can re-evaluate the same loss).
+    pub fn loss_and_input_grad(&mut self, x: &Matrix, target: &Matrix)
+                               -> (f64, &Matrix) {
+        self.forward_only(x);
+        ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
+        ensure_shape(&mut self.dx, x.rows, self.body.in_dim());
+        let Model { body, ws, y, gy, dx, .. } = self;
+        let loss = mse_loss_grad(y, target, gy);
+        body.backward_into(x, y, gy, Some(dx), ws);
+        (loss, &self.dx)
+    }
+
+    /// One fused training step (forward → backward → update), phase-timed.
+    pub fn train_step(&mut self, x: &Matrix, target: &Matrix, lr: f32,
+                      momentum: f32) -> (f64, StepTimings) {
+        let mut timer = StepTimer::start();
+        self.forward_only(x);
+        timer.fwd_done();
+        ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
+        let Model { body, ws, y, gy, .. } = self;
+        let loss = mse_loss_grad(y, target, gy);
+        body.backward_into(x, y, gy, None, ws);
+        timer.bwd_done();
+        self.body.update(lr, momentum);
+        timer.update_done();
+        (loss, timer.finish())
+    }
+
+    /// Train against a fixed synthetic regression batch (throughput- and
+    /// convergence-checkable, like `TrainStep::train`) through the shared
+    /// report driver.
+    pub fn train(&mut self, steps: usize, lr: f32, momentum: f32, seed: u64)
+                 -> TrainReport {
+        let mut rng = Rng::new(seed ^ 0x5EED_C0DE);
+        let x = Matrix::randn(self.seq, self.in_dim(), 1.0, &mut rng);
+        let target = Matrix::randn(self.seq, self.out_dim(), 0.5, &mut rng);
+        let preset = format!("{}_compiled", self.name);
+        let params = self.param_count();
+        let units = self.seq;
+        drive_substrate_training(&preset, steps, params, units, 10, |_s| {
+            self.train_step(&x, &target, lr, momentum)
+        })
+    }
+
+    /// Freeze into a forward-only serving session. Plans stay cached;
+    /// the session gets a FRESH workspace so its scratch metering
+    /// (`peak_scratch_bytes`) reports the serving footprint alone, not
+    /// the training high-water mark, and the training-sized scratch pool
+    /// is released. (Module-owned gradient/momentum buffers remain
+    /// inside the tree — shedding them is future work.) The first `run`
+    /// is the warmup pass; `run` hard-asserts zero allocations from the
+    /// second pass on.
+    pub fn into_inference(self) -> InferenceSession {
+        InferenceSession {
+            body: self.body,
+            ws: Workspace::new(),
+            y: self.y,
+            last_shape: None,
+            warm_allocs: None,
+        }
+    }
+}
+
+/// Forward-only serving session over a compiled model with a hard
+/// zero-alloc steady-state contract: after the first pass at a given
+/// input shape, `run` ASSERTS that the workspace never touches the
+/// allocator again (`alloc_events` metered) — the contract is enforced,
+/// not aspirational.
+pub struct InferenceSession {
+    body: Sequential,
+    ws: Workspace,
+    y: Matrix,
+    last_shape: Option<(usize, usize)>,
+    warm_allocs: Option<usize>,
+}
+
+impl InferenceSession {
+    pub fn in_dim(&self) -> usize {
+        self.body.in_dim()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.body.out_dim()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.body.param_count()
+    }
+
+    pub fn alloc_events(&self) -> usize {
+        self.ws.alloc_events()
+    }
+
+    pub fn peak_scratch_bytes(&self) -> usize {
+        self.ws.peak_bytes()
+    }
+
+    /// One forward pass; the returned reference lives in the session's
+    /// output buffer. Panics if a steady-state pass (same input shape as
+    /// the previous one, post-warmup) allocates.
+    pub fn run(&mut self, x: &Matrix) -> &Matrix {
+        let shape = (x.rows, x.cols);
+        if self.last_shape != Some(shape) {
+            // new shape: the next pass is a fresh warmup
+            self.last_shape = Some(shape);
+            self.warm_allocs = None;
+        }
+        ensure_shape(&mut self.y, x.rows, self.body.out_dim());
+        let InferenceSession { body, ws, y, .. } = self;
+        body.forward_into(x, y, ws);
+        match self.warm_allocs {
+            None => self.warm_allocs = Some(self.ws.alloc_events()),
+            Some(w) => assert_eq!(
+                self.ws.alloc_events(), w,
+                "InferenceSession steady state must not allocate"
+            ),
+        }
+        &self.y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::budget::rule_of_thumb;
+    use crate::costmodel::Device;
+    use crate::models::{preset, transformer_schema};
+
+    #[test]
+    fn compile_rejects_misaligned_block() {
+        let schema = preset("vit-s", 1).unwrap();
+        let dev = Device::with_block(48);
+        let alloc = rule_of_thumb(&schema, 0.2, &dev);
+        assert!(compile(&schema, &alloc, 48, 0).is_err(), "128 % 48 != 0");
+    }
+
+    #[test]
+    fn compile_rejects_non_pow2_attention_grid_gracefully() {
+        // seq 192 at block 16 = a 12-block grid: must Err with advice,
+        // not panic inside plan_attention's mask construction
+        let schema = transformer_schema("t", 128, 1, 192, 2, 1);
+        let dev = Device::with_block(16);
+        let alloc = rule_of_thumb(&schema, 0.2, &dev);
+        assert!(compile(&schema, &alloc, 16, 0).is_err());
+    }
+
+    #[test]
+    fn stats_total_matches_module_accounting() {
+        let schema = preset("mixer-s", 1).unwrap();
+        let dev = Device::with_block(16);
+        let alloc = rule_of_thumb(&schema, 0.25, &dev);
+        let model = compile(&schema, &alloc, 16, 1).unwrap();
+        assert_eq!(model.param_count(), model.stats.total_params());
+        assert!(model.stats.sparsification_ratio() < 1.0);
+        assert!(model.stats.sparsified_weight_params > 0);
+        assert_eq!(model.stats.dense_weight_params,
+                   2 * schema.d_model * schema.d_model);
+    }
+}

@@ -1,0 +1,524 @@
+//! Unified Module API: the execution seam every whole-model path runs
+//! through (DESIGN.md "Module API & model compiler").
+//!
+//! A [`Module`] is a trainable operator `[rows, in_dim] -> [rows, out_dim]`
+//! over the block-sparse substrate with an explicit three-phase contract —
+//! `forward_into` / `backward_into` / `update` — plus parameter/FLOP
+//! accounting and workspace-metered scratch. Building blocks
+//! ([`linear`], [`blocks`]) compose through [`Sequential`]; the model
+//! compiler ([`compile()`]) walks a `planner::ModelPlan` and materializes a
+//! whole ViT / Mixer / GPT-2 preset as one module tree exposing
+//! `train_step` and a forward-only [`InferenceSession`].
+//!
+//! Ownership rules (the part that keeps the hot path allocation-free):
+//!
+//! - Modules own their parameters, gradients, momentum AND whatever
+//!   activation stash their backward needs (pre-activations, attention
+//!   stats, sub-module intermediates). Member buffers are sized lazily on
+//!   first forward and reused in place afterwards.
+//! - Transient scratch comes from the one [`Workspace`] threaded through
+//!   every call, so steady-state allocation-freedom is *metered*
+//!   (`Workspace::alloc_events`), not aspirational.
+//! - `backward_into` receives the module's own forward output `y` back
+//!   from the caller (composites keep their children's outputs, so no
+//!   module ever copies its output just to remember it) and consumes the
+//!   upstream gradient `dy` in place.
+
+pub mod blocks;
+pub mod compile;
+pub mod linear;
+
+pub use blocks::{ClassifierHead, Embedding, LowRankResidual, MixerBlock, MlpBlock,
+                 PixelflyAttention};
+pub use compile::{compile, CompileStats, InferenceSession, Model};
+pub use linear::{DenseLinear, Linear, SparseLinear};
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::TrainReport;
+use crate::sparse::dense::Matrix;
+use crate::sparse::exec::{self, Activation, Workspace};
+use crate::util::Summary;
+
+/// Multiply-FLOP split of one training step of a module (the epilogue and
+/// loss sweeps are O(rows·dim) noise next to the GEMMs and left out,
+/// matching the accounting of the pre-Module drivers).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseFlops {
+    pub fwd: f64,
+    pub bwd: f64,
+    pub update: f64,
+}
+
+impl PhaseFlops {
+    pub fn total(&self) -> f64 {
+        self.fwd + self.bwd + self.update
+    }
+}
+
+impl std::ops::Add for PhaseFlops {
+    type Output = PhaseFlops;
+    fn add(self, o: PhaseFlops) -> PhaseFlops {
+        PhaseFlops {
+            fwd: self.fwd + o.fwd,
+            bwd: self.bwd + o.bwd,
+            update: self.update + o.update,
+        }
+    }
+}
+
+impl std::iter::Sum for PhaseFlops {
+    fn sum<I: Iterator<Item = PhaseFlops>>(iter: I) -> PhaseFlops {
+        iter.fold(PhaseFlops::default(), |a, b| a + b)
+    }
+}
+
+/// A trainable operator `[rows, in_dim] -> [rows, out_dim]` on the
+/// substrate. See the module docs for the ownership contract.
+pub trait Module {
+    /// Input feature dimension (columns of `x`).
+    fn in_dim(&self) -> usize;
+
+    /// Output feature dimension (columns of `y`).
+    fn out_dim(&self) -> usize;
+
+    /// `y = forward(x)`, stashing internally whatever the backward pass
+    /// will need. `y` must be pre-shaped to `[x.rows, out_dim]`; scratch
+    /// comes from `ws` only.
+    fn forward_into(&mut self, x: &Matrix, y: &mut Matrix, ws: &mut Workspace);
+
+    /// Backward of the latest `forward_into(x, …)` with the SAME `x`:
+    /// `y` is the module's own forward output handed back by the caller,
+    /// `dy` arrives as dL/dy and is consumed in place, parameter
+    /// gradients land in module-owned buffers, and dL/dx is written to
+    /// `dx` when given (`None` skips the input-gradient GEMMs — the
+    /// first module of a chain has no upstream to feed).
+    fn backward_into(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                     dx: Option<&mut Matrix>, ws: &mut Workspace);
+
+    /// Fused SGD-with-momentum sweep over every parameter buffer,
+    /// consuming the gradients of the latest `backward_into`.
+    fn update(&mut self, lr: f32, momentum: f32);
+
+    /// Trainable parameters (weights + biases) owned by this module.
+    fn param_count(&self) -> usize;
+
+    /// Multiply-FLOP accounting of one step over `rows` input rows.
+    fn flops(&self, rows: usize) -> PhaseFlops;
+
+    /// Upper bound on the workspace elements any single phase checks out
+    /// at `rows` input rows (0 = the module never touches the workspace).
+    fn scratch_elems(&self, rows: usize) -> usize {
+        let _ = rows;
+        0
+    }
+}
+
+/// Resize `m` to `[rows, cols]` in place (no-op at the same shape, so the
+/// steady state never reallocates; fresh growth is the one-time sizing
+/// cost every member buffer pays on first use).
+pub fn ensure_shape(m: &mut Matrix, rows: usize, cols: usize) {
+    if m.rows != rows || m.cols != cols {
+        m.rows = rows;
+        m.cols = cols;
+        m.data.resize(rows * cols, 0.0);
+    }
+}
+
+/// Shared unfused bias+activation epilogue: `y = act(y + bias)` row by
+/// row, stashing the pre-activation into `pre` when given (callers pass
+/// it exactly when the activation's backward needs it). The one place
+/// the two-GEMM layers (dense baseline, flat+low-rank composite) share
+/// their epilogue sweep.
+pub(crate) fn apply_bias_act(y: &mut Matrix, pre: Option<&mut Matrix>, bias: &[f32],
+                             act: Activation) {
+    let n = y.cols;
+    assert_eq!(bias.len(), n);
+    match pre {
+        Some(p) => {
+            assert_eq!((p.rows, p.cols), (y.rows, y.cols));
+            for r in 0..y.rows {
+                let yrow = &mut y.data[r * n..(r + 1) * n];
+                let prow = &mut p.data[r * n..(r + 1) * n];
+                for c in 0..n {
+                    let z = yrow[c] + bias[c];
+                    prow[c] = z;
+                    yrow[c] = act.apply(z);
+                }
+            }
+        }
+        None => {
+            for r in 0..y.rows {
+                let yrow = &mut y.data[r * n..(r + 1) * n];
+                for c in 0..n {
+                    yrow[c] = act.apply(yrow[c] + bias[c]);
+                }
+            }
+        }
+    }
+}
+
+/// MSE loss `mean((y − target)²)` and its gradient written into `g` —
+/// the shared loss head of every substrate training driver.
+pub fn mse_loss_grad(y: &Matrix, target: &Matrix, g: &mut Matrix) -> f64 {
+    assert_eq!((y.rows, y.cols), (target.rows, target.cols));
+    assert_eq!((g.rows, g.cols), (y.rows, y.cols));
+    let n = (y.rows * y.cols) as f64;
+    let scale = (2.0 / n) as f32;
+    let mut loss = 0.0f64;
+    for ((gv, &yv), &tv) in g.data.iter_mut().zip(&y.data).zip(&target.data) {
+        let diff = yv - tv;
+        loss += (diff as f64) * (diff as f64);
+        *gv = scale * diff;
+    }
+    loss / n
+}
+
+// ---------------------------------------------------------------------
+// Shared step-timing / report plumbing (deduplicated from the drivers)
+// ---------------------------------------------------------------------
+
+/// Wall-time split of one substrate training step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTimings {
+    pub fwd: Duration,
+    pub bwd: Duration,
+    pub update: Duration,
+}
+
+impl StepTimings {
+    pub fn total(&self) -> Duration {
+        self.fwd + self.bwd + self.update
+    }
+}
+
+/// Phase stopwatch every substrate step driver shares: mark the end of
+/// each phase and collect the split once — the `t0/t1/t2` boilerplate
+/// that used to be copied between the drivers lives here now.
+pub struct StepTimer {
+    t: Instant,
+    timings: StepTimings,
+}
+
+impl StepTimer {
+    pub fn start() -> Self {
+        StepTimer { t: Instant::now(), timings: StepTimings::default() }
+    }
+
+    pub fn fwd_done(&mut self) {
+        self.timings.fwd = self.t.elapsed();
+        self.t = Instant::now();
+    }
+
+    pub fn bwd_done(&mut self) {
+        self.timings.bwd = self.t.elapsed();
+        self.t = Instant::now();
+    }
+
+    pub fn update_done(&mut self) {
+        self.timings.update = self.t.elapsed();
+        self.t = Instant::now();
+    }
+
+    pub fn finish(self) -> StepTimings {
+        self.timings
+    }
+}
+
+/// Shared loss-curve / throughput / phase-timing report driver for
+/// substrate training loops: run `steps` invocations of `step_fn`,
+/// sample the loss curve every `log_every` steps, and fold the per-phase
+/// wall times into a [`TrainReport`] (warmup-heavy leading samples
+/// skipped, like the engine trainer). Every substrate driver
+/// (`TrainStep::train`, `Model::train`) routes through here, so the
+/// report plumbing exists exactly once.
+pub fn drive_substrate_training(
+    preset: &str,
+    steps: usize,
+    param_count: usize,
+    units_per_step: usize,
+    log_every: usize,
+    mut step_fn: impl FnMut(usize) -> (f64, StepTimings),
+) -> TrainReport {
+    let mut report = TrainReport {
+        preset: preset.into(),
+        steps,
+        param_count,
+        substrate_threads: exec::threads(),
+        kernel: exec::kernel_name().to_string(),
+        ..Default::default()
+    };
+    let log_every = log_every.max(1);
+    let mut totals = Vec::with_capacity(steps);
+    let mut fwds = Vec::with_capacity(steps);
+    let mut bwds = Vec::with_capacity(steps);
+    let mut upds = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let (loss, t) = step_fn(s);
+        totals.push(t.total());
+        fwds.push(t.fwd);
+        bwds.push(t.bwd);
+        upds.push(t.update);
+        if s % log_every == 0 || s + 1 == steps {
+            report.loss_curve.push((s, loss));
+        }
+    }
+    let hot = |v: &[Duration]| {
+        let v = if v.len() > 3 { &v[2..] } else { v };
+        Summary::from_durations(v)
+    };
+    let st = hot(&totals);
+    report.throughput = units_per_step as f64 / (st.mean_ns / 1e9);
+    report.step_time = Some(st);
+    report.fwd_time = Some(hot(&fwds));
+    report.bwd_time = Some(hot(&bwds));
+    report.update_time = Some(hot(&upds));
+    report
+}
+
+// ---------------------------------------------------------------------
+// Sequential combinator
+// ---------------------------------------------------------------------
+
+/// Chain of modules executed in order, itself a [`Module`] (so chains
+/// nest). Owns the inter-stage activation and gradient buffers; the
+/// caller's `y`/`dy` serve the last stage directly, so the combinator
+/// adds no copies.
+pub struct Sequential {
+    mods: Vec<Box<dyn Module>>,
+    /// `acts[i]` = output of stage i (stages 0..n-1; the last writes `y`)
+    acts: Vec<Matrix>,
+    /// `grads[i]` = dL/d(`acts[i]`), consumed in place by stage i's backward
+    grads: Vec<Matrix>,
+}
+
+impl Sequential {
+    pub fn new(mods: Vec<Box<dyn Module>>) -> Self {
+        assert!(!mods.is_empty(), "Sequential needs at least one module");
+        for pair in mods.windows(2) {
+            assert_eq!(pair[0].out_dim(), pair[1].in_dim(), "module dims must chain");
+        }
+        let n = mods.len();
+        Sequential {
+            acts: (1..n).map(|_| Matrix::zeros(0, 0)).collect(),
+            grads: (1..n).map(|_| Matrix::zeros(0, 0)).collect(),
+            mods,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mods.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mods.is_empty()
+    }
+
+    pub fn modules(&self) -> &[Box<dyn Module>] {
+        &self.mods
+    }
+}
+
+impl Module for Sequential {
+    fn in_dim(&self) -> usize {
+        self.mods[0].in_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        self.mods.last().unwrap().out_dim()
+    }
+
+    fn forward_into(&mut self, x: &Matrix, y: &mut Matrix, ws: &mut Workspace) {
+        let n = self.mods.len();
+        for i in 0..n - 1 {
+            let cols = self.mods[i].out_dim();
+            ensure_shape(&mut self.acts[i], x.rows, cols);
+        }
+        for i in 0..n {
+            let (done, rest) = self.acts.split_at_mut(i);
+            let input: &Matrix = if i == 0 { x } else { &done[i - 1] };
+            if i + 1 == n {
+                self.mods[i].forward_into(input, y, ws);
+            } else {
+                self.mods[i].forward_into(input, &mut rest[0], ws);
+            }
+        }
+    }
+
+    fn backward_into(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                     mut dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        let n = self.mods.len();
+        for i in 0..n - 1 {
+            let cols = self.mods[i].out_dim();
+            ensure_shape(&mut self.grads[i], x.rows, cols);
+        }
+        for i in (0..n).rev() {
+            let is_last = i + 1 == n;
+            let (gprev, gcur) = self.grads.split_at_mut(i);
+            let input: &Matrix = if i == 0 { x } else { &self.acts[i - 1] };
+            let out: &Matrix = if is_last { y } else { &self.acts[i] };
+            let dxi: Option<&mut Matrix> = if i == 0 {
+                dx.as_deref_mut()
+            } else {
+                Some(&mut gprev[i - 1])
+            };
+            if is_last {
+                self.mods[i].backward_into(input, out, dy, dxi, ws);
+            } else {
+                self.mods[i].backward_into(input, out, &mut gcur[0], dxi, ws);
+            }
+        }
+    }
+
+    fn update(&mut self, lr: f32, momentum: f32) {
+        for m in &mut self.mods {
+            m.update(lr, momentum);
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.mods.iter().map(|m| m.param_count()).sum()
+    }
+
+    fn flops(&self, rows: usize) -> PhaseFlops {
+        self.mods.iter().map(|m| m.flops(rows)).sum()
+    }
+
+    fn scratch_elems(&self, rows: usize) -> usize {
+        // stages run one after another and give their scratch back, so
+        // the footprint is the widest single stage, not the sum
+        self.mods.iter().map(|m| m.scratch_elems(rows)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::BlockMask;
+    use crate::sparse::exec::Activation;
+    use crate::util::Rng;
+
+    fn dense(n: usize, act: Activation, rng: &mut Rng) -> DenseLinear {
+        DenseLinear::random(n, n, act, 1.0 / (n as f32).sqrt(), rng)
+    }
+
+    #[test]
+    fn sequential_matches_manual_composition() {
+        let mut rng = Rng::new(70);
+        let n = 32;
+        let l1 = dense(n, Activation::Gelu, &mut rng);
+        let l2 = dense(n, Activation::Identity, &mut rng);
+        // manual composition over clones of the same weights
+        let mut m1 = DenseLinear::from_parts(l1.w.clone(), l1.bias.clone(),
+                                             Activation::Gelu);
+        let mut m2 = DenseLinear::from_parts(l2.w.clone(), l2.bias.clone(),
+                                             Activation::Identity);
+        let mut seq = Sequential::new(vec![Box::new(l1), Box::new(l2)]);
+        assert_eq!(seq.in_dim(), n);
+        assert_eq!(seq.out_dim(), n);
+        let x = Matrix::randn(5, n, 1.0, &mut rng);
+        let mut ws = Workspace::new();
+        let mut y = Matrix::zeros(5, n);
+        seq.forward_into(&x, &mut y, &mut ws);
+        let mut h = Matrix::zeros(5, n);
+        let mut want = Matrix::zeros(5, n);
+        m1.forward_into(&x, &mut h, &mut ws);
+        m2.forward_into(&h, &mut want, &mut ws);
+        assert!(y.max_abs_diff(&want) < 1e-6);
+    }
+
+    #[test]
+    fn nested_sequential_composes() {
+        let mut rng = Rng::new(71);
+        let n = 16;
+        let inner = Sequential::new(vec![
+            Box::new(dense(n, Activation::Relu, &mut rng)),
+            Box::new(dense(n, Activation::Identity, &mut rng)),
+        ]);
+        let mut outer = Sequential::new(vec![
+            Box::new(inner) as Box<dyn Module>,
+            Box::new(dense(n, Activation::Identity, &mut rng)),
+        ]);
+        assert_eq!(outer.param_count(), 3 * (n * n + n));
+        let x = Matrix::randn(4, n, 1.0, &mut rng);
+        let t = Matrix::randn(4, n, 0.5, &mut rng);
+        let mut ws = Workspace::new();
+        let mut y = Matrix::zeros(4, n);
+        let mut gy = Matrix::zeros(4, n);
+        // a few steps must reduce the fixed-batch loss through the nest
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for s in 0..30 {
+            outer.forward_into(&x, &mut y, &mut ws);
+            let loss = mse_loss_grad(&y, &t, &mut gy);
+            outer.backward_into(&x, &y, &mut gy, None, &mut ws);
+            outer.update(5e-2, 0.9);
+            if s == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first, "loss must fall through nested chains: {first} -> {last}");
+    }
+
+    #[test]
+    fn sequential_input_grad_matches_finite_differences() {
+        let mut rng = Rng::new(72);
+        let n = 16;
+        let mut seq = Sequential::new(vec![
+            Box::new(dense(n, Activation::Gelu, &mut rng)),
+            Box::new(dense(n, Activation::Identity, &mut rng)),
+        ]);
+        let x = Matrix::randn(3, n, 0.5, &mut rng);
+        let cot = Matrix::randn(3, n, 0.5, &mut rng);
+        let mut ws = Workspace::new();
+        let mut y = Matrix::zeros(3, n);
+        let loss = |seq: &mut Sequential, x: &Matrix, y: &mut Matrix,
+                    ws: &mut Workspace| -> f64 {
+            seq.forward_into(x, y, ws);
+            y.data.iter().zip(&cot.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        loss(&mut seq, &x, &mut y, &mut ws);
+        let mut dy = cot.clone();
+        let mut dx = Matrix::zeros(3, n);
+        seq.backward_into(&x, &y, &mut dy, Some(&mut dx), &mut ws);
+        let eps = 1e-2f32;
+        for &(r, c) in &[(0usize, 0usize), (1, 7), (2, 15)] {
+            let mut xp = x.clone();
+            xp.set(r, c, x.get(r, c) + eps);
+            let lp = loss(&mut seq, &xp, &mut y, &mut ws);
+            xp.set(r, c, x.get(r, c) - eps);
+            let lm = loss(&mut seq, &xp, &mut y, &mut ws);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let an = dx.get(r, c);
+            assert!((fd - an).abs() < 1e-2 * (1.0 + an.abs()),
+                    "({r},{c}): fd {fd} vs analytic {an}");
+        }
+    }
+
+    #[test]
+    fn sequential_steady_state_shapes_are_stable() {
+        let mut rng = Rng::new(73);
+        let mask = BlockMask::ones(2, 2);
+        let mut seq = Sequential::new(vec![
+            Box::new(SparseLinear::random(&mask, 8, Activation::Gelu, 0.3, &mut rng)),
+            Box::new(dense(16, Activation::Identity, &mut rng)),
+        ]);
+        let x = Matrix::randn(4, 16, 1.0, &mut rng);
+        let t = Matrix::randn(4, 16, 0.5, &mut rng);
+        let mut ws = Workspace::new();
+        let mut y = Matrix::zeros(4, 16);
+        let mut gy = Matrix::zeros(4, 16);
+        seq.forward_into(&x, &mut y, &mut ws);
+        mse_loss_grad(&y, &t, &mut gy);
+        seq.backward_into(&x, &y, &mut gy, None, &mut ws);
+        let warm = ws.alloc_events();
+        for _ in 0..3 {
+            seq.forward_into(&x, &mut y, &mut ws);
+            mse_loss_grad(&y, &t, &mut gy);
+            seq.backward_into(&x, &y, &mut gy, None, &mut ws);
+            seq.update(1e-2, 0.9);
+        }
+        assert_eq!(ws.alloc_events(), warm, "steady-state chain must not allocate");
+    }
+}

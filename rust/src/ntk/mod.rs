@@ -26,7 +26,7 @@ pub fn relative_distance(a: &[f32], b: &[f32]) -> f64 {
 /// first-layer weights (Definition G.2 adapted to a row mask): the kernel
 /// of example pair (x, y) restricted to the coordinates each hidden unit
 /// sees.  For unit r with support S_r:
-///     K(x,y) = E_r [ <x_S, y_S> * P(w·x_S >= 0, w·y_S >= 0) ]
+/// `K(x,y) = E_r [ <x_S, y_S> * P(w·x_S >= 0, w·y_S >= 0) ]`
 /// where the arc-cosine formula gives the probability.
 pub fn two_layer_relu_ntk(x: &[f32], y: &[f32], supports: &[Vec<usize>]) -> f64 {
     let mut acc = 0.0f64;
@@ -49,7 +49,7 @@ pub fn two_layer_relu_ntk(x: &[f32], y: &[f32], supports: &[Vec<usize>]) -> f64 
 }
 
 /// Build hidden-unit supports from a weight block mask: unit group j sees
-/// input blocks with mask[i][j] set.
+/// input blocks with `mask[i][j]` set.
 pub fn supports_from_mask(mask: &BlockMask, block: usize) -> Vec<Vec<usize>> {
     let t = mask.transpose();
     (0..t.rows)

@@ -49,14 +49,14 @@ pub struct AttnPlan {
     causal: bool,
     threads: usize,
     fingerprint: u64,
-    /// row_ptr[qb]..row_ptr[qb+1] indexes `kbs` for query block row qb
+    /// `row_ptr[qb]..row_ptr[qb+1]` indexes `kbs` for query block row qb
     row_ptr: Vec<usize>,
     /// visible key blocks per query block row, causal-filtered
     kbs: Vec<u32>,
     /// ranges over query block rows, balanced by visible-block weight
     chunks: Vec<Range<usize>>,
     /// reverse schedule (the same row-owned inversion trick as the GEMM
-    /// plan): kb_ptr[kb]..kb_ptr[kb+1] indexes `qbs` — the query block
+    /// plan): `kb_ptr[kb]..kb_ptr[kb+1]` indexes `qbs` — the query block
     /// rows that see key block `kb`. dK/dV rows are owned key-side, so
     /// the backward pass is race-free without atomics or replication.
     kb_ptr: Vec<usize>,

@@ -19,7 +19,7 @@ pub struct BsrMatrix {
     pub nbr: usize,
     pub nbc: usize,
     pub block: usize,
-    /// row_ptr[i]..row_ptr[i+1] indexes cols/blocks of block row i
+    /// `row_ptr[i]..row_ptr[i+1]` indexes cols/blocks of block row i
     pub row_ptr: Vec<usize>,
     /// block column index per stored block
     pub cols: Vec<usize>,

@@ -202,6 +202,28 @@ impl FlatLowRank {
         Self::new(flat, u, v)
     }
 
+    /// Random rectangular composite on [rows, cols]: the stretched flat
+    /// butterfly (Appendix I.4 — the square pattern tiled along the long
+    /// dimension) plus a rank-`rank` correction (rank 0 disables it).
+    /// This is what the model compiler materialises `LayerPlan`s with;
+    /// the square [`Self::random`] stays as the Fig-11 testbed form.
+    pub fn random_rect(rows: usize, cols: usize, block: usize, max_stride: usize,
+                       rank: usize, scale: f32, rng: &mut Rng) -> Self {
+        assert_eq!(rows % block, 0);
+        assert_eq!(cols % block, 0);
+        let mask = crate::patterns::butterfly::stretched_flat_butterfly(
+            rows / block, cols / block, max_stride);
+        let flat = BsrMatrix::random(&mask, block, scale, rng);
+        let lr_scale = if rank > 0 {
+            scale / (rank as f32).sqrt()
+        } else {
+            0.0
+        };
+        let u = Matrix::randn(rows, rank, lr_scale, rng);
+        let v = Matrix::randn(rank, cols, lr_scale, rng);
+        Self::new(flat, u, v)
+    }
+
     /// Compose an existing flat term with a low-rank factor pair.
     pub fn new(flat: BsrMatrix, u: Matrix, v: Matrix) -> Self {
         assert_eq!(u.rows, flat.rows());
@@ -253,16 +275,23 @@ impl FlatLowRank {
     /// terms use the `A·Bᵀ` / `Aᵀ·B` kernels, which never materialise a
     /// transpose either. All three intermediates (`x·U`, `dY·Vᵀ`, the
     /// low-rank dX term) share ONE workspace checkout lifetime — the
-    /// whole backward is zero-alloc once `ws` is warm.
-    pub fn backward_into(&self, x: &Matrix, dy: &Matrix, dx: &mut Matrix,
+    /// whole backward is zero-alloc once `ws` is warm. `dx: None` skips
+    /// BOTH input-gradient terms (the sparse dY·Bᵀ sweep and the
+    /// low-rank dY·Vᵀ·Uᵀ GEMM) — a first-layer composite pays only the
+    /// parameter gradients.
+    pub fn backward_into(&self, x: &Matrix, dy: &Matrix, mut dx: Option<&mut Matrix>,
                          g: &mut FlatLowRankGrads, ws: &mut Workspace) {
         let (m, n) = (x.rows, self.flat.cols_elems());
         assert_eq!(x.cols, self.flat.rows());
         assert_eq!((dy.rows, dy.cols), (m, n));
-        assert_eq!((dx.rows, dx.cols), (m, self.flat.rows()));
+        if let Some(dx) = dx.as_deref() {
+            assert_eq!((dx.rows, dx.cols), (m, self.flat.rows()));
+        }
         assert_eq!(g.d_flat.len(), self.flat.blocks.len());
         self.plan.execute_dw(&self.flat, x, dy, &mut g.d_flat);
-        self.plan.execute_dx(&self.flat, dy, dx);
+        if let Some(dx) = dx.as_deref_mut() {
+            self.plan.execute_dx(&self.flat, dy, dx);
+        }
         let r = self.rank();
         if r > 0 {
             assert_eq!((g.du.rows, g.du.cols), (self.u.rows, r));
@@ -277,15 +306,18 @@ impl FlatLowRank {
             crate::sparse::dense::matmul_abt_into(dy, &self.v, &mut dyv);
             // dU = Xᵀ·dyv
             crate::sparse::dense::matmul_atb_into(x, &dyv, &mut g.du);
-            // dX += dyv·Uᵀ
-            let mut dxlr = Matrix { rows: m, cols: dx.cols, data: ws.take(m * dx.cols) };
-            crate::sparse::dense::matmul_abt_into(&dyv, &self.u, &mut dxlr);
-            for (dv, lv) in dx.data.iter_mut().zip(&dxlr.data) {
-                *dv += lv;
+            if let Some(dx) = dx.as_deref_mut() {
+                // dX += dyv·Uᵀ
+                let mut dxlr =
+                    Matrix { rows: m, cols: dx.cols, data: ws.take(m * dx.cols) };
+                crate::sparse::dense::matmul_abt_into(&dyv, &self.u, &mut dxlr);
+                for (dv, lv) in dx.data.iter_mut().zip(&dxlr.data) {
+                    *dv += lv;
+                }
+                ws.give(dxlr.data);
             }
             ws.give(t.data);
             ws.give(dyv.data);
-            ws.give(dxlr.data);
         }
     }
 
@@ -374,6 +406,24 @@ mod tests {
     }
 
     #[test]
+    fn rect_composite_matches_dense_reference() {
+        let mut rng = Rng::new(44);
+        let flr = FlatLowRank::random_rect(64, 32, 8, 4, 8, 0.5, &mut rng);
+        let x = Matrix::randn(6, 64, 1.0, &mut rng);
+        let y = flr.matmul(&x);
+        let yref = crate::sparse::dense::matmul_blocked(&x, &flr.to_dense());
+        assert!(y.max_abs_diff(&yref) < 1e-3, "{}", y.max_abs_diff(&yref));
+        // and its backward stays consistent on the rectangular shape
+        let dy = Matrix::randn(6, 32, 1.0, &mut rng);
+        let mut dx = Matrix::zeros(6, 64);
+        let mut g = FlatLowRankGrads::zeros_like(&flr);
+        let mut ws = Workspace::new();
+        flr.backward_into(&x, &dy, Some(&mut dx), &mut g, &mut ws);
+        let want_dx = crate::sparse::dense::matmul_blocked(&dy, &flr.to_dense().transpose());
+        assert!(dx.max_abs_diff(&want_dx) < 1e-3, "{}", dx.max_abs_diff(&want_dx));
+    }
+
+    #[test]
     fn flat_lowrank_rank_zero_is_pure_flat() {
         let mut rng = Rng::new(37);
         let flr = FlatLowRank::random(32, 4, 4, 0, 1.0, &mut rng);
@@ -424,7 +474,7 @@ mod tests {
         let mut dx = Matrix::zeros(9, 64);
         let mut g = FlatLowRankGrads::zeros_like(&flr);
         let mut ws = Workspace::new();
-        flr.backward_into(&x, &dy, &mut dx, &mut g, &mut ws);
+        flr.backward_into(&x, &dy, Some(&mut dx), &mut g, &mut ws);
         // dX = dY·Wᵀ with W the full dense composite
         let want_dx = matmul_blocked(&dy, &flr.to_dense().transpose());
         assert!(dx.max_abs_diff(&want_dx) < 1e-3, "{}", dx.max_abs_diff(&want_dx));
@@ -452,7 +502,7 @@ mod tests {
         assert!(g.du.max_abs_diff(&want_du) < 1e-3, "{}", g.du.max_abs_diff(&want_du));
         // steady state allocates nothing new
         let warm = ws.alloc_events();
-        flr.backward_into(&x, &dy, &mut dx, &mut g, &mut ws);
+        flr.backward_into(&x, &dy, Some(&mut dx), &mut g, &mut ws);
         assert_eq!(ws.alloc_events(), warm, "backward hot path must not allocate");
     }
 
@@ -466,7 +516,7 @@ mod tests {
         let mut dx = Matrix::zeros(5, 32);
         let mut g = FlatLowRankGrads::zeros_like(&flr);
         let mut ws = Workspace::new();
-        flr.backward_into(&x, &dy, &mut dx, &mut g, &mut ws);
+        flr.backward_into(&x, &dy, Some(&mut dx), &mut g, &mut ws);
         let want = matmul_blocked(&dy, &flr.flat.to_dense().transpose());
         assert!(dx.max_abs_diff(&want) < 1e-3);
     }

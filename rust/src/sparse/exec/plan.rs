@@ -98,7 +98,7 @@ pub struct GemmPlan {
     row_tasks: Vec<RowTask>,
     /// ranges over `row_tasks`, balanced by nnz-block weight
     row_chunks: Vec<Range<usize>>,
-    /// block row of each stored slot (slot → (i, cols[s]) recovers the
+    /// block row of each stored slot (slot → `(i, cols[s])` recovers the
     /// block coordinates inside the dW scatter tasks)
     slot_rows: Vec<u32>,
     /// ranges over stored slots; every slot costs the same m·b² flops,
