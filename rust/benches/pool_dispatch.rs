@@ -1,0 +1,173 @@
+//! Dispatch-latency microbench for the resident worker-pool runtime:
+//! resident doorbell dispatch vs scoped spawn-per-call vs serial, across
+//! raw task counts, the 1k/b32 GEMM headline shape, fused attention, and
+//! a single-sequence `InferenceSession::run` serving row.
+//!
+//! Hard asserts (the PR-5 runtime contract):
+//! - resident dispatch strictly beats scoped spawn-per-call on the
+//!   1k/b32/10% GEMM at batch 32 and on single-sequence inference;
+//! - steady-state dispatch allocates nothing: after warmup, repeated
+//!   scratch-carrying dispatches leave BOTH the caller workspace counter
+//!   and the resident workers' pinned-workspace counter
+//!   (`pool::worker_alloc_events`) flat.
+//!
+//! `PIXELFLY_PAR_FLOPS` is pinned before the first engine call so the
+//! serial-vs-parallel cutover cannot flap with CI timer noise — the
+//! bench measures the dispatch substrate, not the calibrator.
+
+use pixelfly::bench::BenchSuite;
+use pixelfly::coordinator::budget::rule_of_thumb;
+use pixelfly::costmodel::Device;
+use pixelfly::models::transformer_schema;
+use pixelfly::nn::compile;
+use pixelfly::patterns::baselines;
+use pixelfly::sparse::exec::{self, pool};
+use pixelfly::sparse::exec::pool::PoolMode;
+use pixelfly::sparse::{AttnPlan, BsrMatrix, Matrix, Workspace};
+use pixelfly::util::Rng;
+
+fn main() {
+    // pin the cutover BEFORE anything triggers calibration: every op at
+    // or above 1 MFLOP goes parallel, deterministically, in both modes
+    std::env::set_var("PIXELFLY_PAR_FLOPS", "1e6");
+    let threads = exec::threads().max(2);
+    exec::set_threads(threads);
+
+    let mut suite = BenchSuite::new("pool_dispatch");
+    let kernel = exec::kernel_name();
+
+    // --- raw dispatch latency: empty job batches ------------------------
+    for n_tasks in [4usize, 32, 256] {
+        let note = format!("n_tasks={n_tasks} threads={threads}");
+        suite.bench(&format!("dispatch{n_tasks}_resident"), &note, || {
+            pool::run_tasks_in(PoolMode::Resident, n_tasks, threads, |t| {
+                std::hint::black_box(t);
+            });
+        });
+        suite.bench(&format!("dispatch{n_tasks}_scoped"), &note, || {
+            pool::run_tasks_in(PoolMode::Scoped, n_tasks, threads, |t| {
+                std::hint::black_box(t);
+            });
+        });
+        suite.bench(&format!("dispatch{n_tasks}_serial"), &note, || {
+            pool::run_tasks_in(PoolMode::Resident, n_tasks, 1, |t| {
+                std::hint::black_box(t);
+            });
+        });
+    }
+
+    // --- the 1k/b32 headline GEMM at small batch ------------------------
+    // batch 32 keeps the per-dispatch work small enough that the launch
+    // tax is a visible fraction — exactly the serving regime the resident
+    // pool exists for
+    let (n, b, batch, density) = (1024usize, 32usize, 32usize, 0.10);
+    let mut rng = Rng::new(11);
+    let mask = baselines::random_mask(n / b, n / b, density, &mut rng);
+    let w = BsrMatrix::random(&mask, b, 0.5, &mut rng);
+    let x = Matrix::randn(batch, n, 1.0, &mut rng);
+    let mut y = Matrix::zeros(batch, w.cols_elems());
+    let flops = 2.0 * (batch * w.nnz_blocks()) as f64 * (b * b) as f64;
+    let note = format!("n={n} b={b} batch={batch} density={:.0}% threads={threads} \
+                        {kernel}", 100.0 * density);
+    let plan = w.plan(threads);
+    let serial_plan = w.plan(1);
+    exec::set_pool_mode(Some(PoolMode::Resident));
+    suite.bench_with_flops("gemm1k_b32_resident", &note, flops, || {
+        plan.execute(&w, &x, &mut y);
+    });
+    exec::set_pool_mode(Some(PoolMode::Scoped));
+    suite.bench_with_flops("gemm1k_b32_scoped", &note, flops, || {
+        plan.execute(&w, &x, &mut y);
+    });
+    exec::set_pool_mode(None);
+    suite.bench_with_flops("gemm1k_b32_serial", &note, flops, || {
+        serial_plan.execute(&w, &x, &mut y);
+    });
+    let res = suite.mean_ms_of("gemm1k_b32_resident").unwrap();
+    let sco = suite.mean_ms_of("gemm1k_b32_scoped").unwrap();
+    assert!(res < sco,
+            "resident dispatch must beat scoped spawn-per-call at 1k/b32 \
+             (resident {res:.3}ms vs scoped {sco:.3}ms)");
+
+    // --- fused attention + the zero-alloc steady-state contract ---------
+    let (seq, ab, d) = (1024usize, 32usize, 64usize);
+    let amask = baselines::pixelfly_attention_mask(seq / ab, 4, 1);
+    let aplan = AttnPlan::new(&amask, false, threads);
+    let mut ws = Workspace::new();
+    let (q, k, v) = (Matrix::randn(seq, d, 1.0, &mut rng),
+                     Matrix::randn(seq, d, 1.0, &mut rng),
+                     Matrix::randn(seq, d, 1.0, &mut rng));
+    let mut out = Matrix::zeros(seq, d);
+    let anote = format!("seq={seq} b={ab} d={d} density={:.3} threads={threads} \
+                         {kernel}", amask.density());
+    exec::set_pool_mode(Some(PoolMode::Resident));
+    // warm until the caller + every resident worker has sized its pinned
+    // scratch, then require a long flat tail: steady-state dispatch must
+    // not touch the allocator on either side of the worker boundary
+    let mut flat_streak = 0usize;
+    let mut prev = ws.alloc_events() + pool::worker_alloc_events();
+    for _ in 0..50 {
+        aplan.execute(&q, &k, &v, &mut out, &mut ws);
+        let now = ws.alloc_events() + pool::worker_alloc_events();
+        if now == prev {
+            flat_streak += 1;
+        } else {
+            flat_streak = 0;
+            prev = now;
+        }
+    }
+    assert!(flat_streak >= 10,
+            "steady-state resident dispatch must stop allocating \
+             (caller + worker workspaces still moving after 50 rounds)");
+    suite.bench_with_flops("attn1k_resident", &anote, aplan.flops(ab, d), || {
+        aplan.execute(&q, &k, &v, &mut out, &mut ws);
+    });
+    suite.set_scratch_bytes(ws.peak_bytes());
+    exec::set_pool_mode(Some(PoolMode::Scoped));
+    suite.bench_with_flops("attn1k_scoped", &anote, aplan.flops(ab, d), || {
+        aplan.execute(&q, &k, &v, &mut out, &mut ws);
+    });
+    exec::set_pool_mode(None);
+
+    // --- single-sequence serving latency --------------------------------
+    // seq-1024 transformer (block-16 grid = 64 blocks, power of two):
+    // ~40 job batches per run — the whole-step dispatch shape. One model
+    // per mode so each session's zero-alloc self-assert sees one
+    // consistent scratch pattern.
+    let schema = transformer_schema("pool-bench", 256, 4, 1024, 4, 1);
+    let dev = Device::with_block(16);
+    let alloc = rule_of_thumb(&schema, 0.2, &dev);
+    let mut rng = Rng::new(12);
+    let xs = Matrix::randn(1024, 256, 1.0, &mut rng);
+    let mut infer_ms = [0.0f64; 2];
+    for (slot, mode) in [(0usize, PoolMode::Resident), (1, PoolMode::Scoped)] {
+        exec::set_pool_mode(Some(mode));
+        let model = compile(&schema, &alloc, 16, 7).expect("compile pool-bench");
+        let fwd = model.flops().fwd;
+        let mut sess = model.into_inference();
+        sess.run(&xs); // warmup (run() self-asserts zero-alloc afterwards)
+        let name = format!("infer_seq1k_{}", mode.name());
+        let inote = format!("seq=1024 d=256 layers=4 budget=0.2 threads={threads} \
+                             {kernel}");
+        suite.bench_with_flops(&name, &inote, fwd, || {
+            std::hint::black_box(sess.run(&xs).data[0]);
+        });
+        suite.set_scratch_bytes(sess.peak_scratch_bytes());
+        infer_ms[slot] = suite.mean_ms_of(&name).unwrap();
+    }
+    exec::set_pool_mode(None);
+    assert!(infer_ms[0] < infer_ms[1],
+            "resident dispatch must beat scoped spawn on single-sequence \
+             InferenceSession::run (resident {:.3}ms vs scoped {:.3}ms)",
+            infer_ms[0], infer_ms[1]);
+
+    suite.report();
+    match suite.write_json_default() {
+        Ok(p) => println!("json -> {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+    println!("\npool dispatch contract: resident beats scoped at 1k/b32 GEMM \
+              ({res:.3}ms vs {sco:.3}ms) and at seq-1k inference ({:.3}ms vs \
+              {:.3}ms); steady-state dispatch allocation-free.",
+             infer_ms[0], infer_ms[1]);
+}

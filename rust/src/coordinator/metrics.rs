@@ -44,6 +44,13 @@ pub struct TrainReport {
     pub fwd_time: Option<Summary>,
     pub bwd_time: Option<Summary>,
     pub update_time: Option<Summary>,
+    /// the engine's calibrated serial-vs-parallel cutover in flops
+    /// (`sparse::exec::calibration()`; infinity on single-core hosts);
+    /// 0 when unrecorded
+    pub par_threshold_flops: f64,
+    /// measured pool dispatch overhead feeding that cutover, ns; 0 when
+    /// unrecorded or when `PIXELFLY_PAR_FLOPS` pinned the threshold
+    pub dispatch_ns: f64,
 }
 
 impl TrainReport {
@@ -94,6 +101,13 @@ impl TrainReport {
             thr
         } else {
             format!("{thr} kernel={}", self.kernel)
+        };
+        // calibrated cutover (finite ⇔ parallelism is ever worth it)
+        let thr = if self.par_threshold_flops > 0.0 && self.par_threshold_flops.is_finite()
+        {
+            format!("{thr} par_cutover={:.1e}f", self.par_threshold_flops)
+        } else {
+            thr
         };
         format!(
             "{}: steps={} loss {:.4} -> {:.4}{st} thru={:.1}/s params={}{thr}{eval}",
@@ -156,5 +170,18 @@ mod tests {
         // ...and shows up once recorded
         r.kernel = "avx2".into();
         assert!(r.summary_line().contains("kernel=avx2"));
+    }
+
+    #[test]
+    fn summary_line_shows_calibrated_cutover_only_when_finite() {
+        let mut r = TrainReport::default();
+        r.preset = "p".into();
+        r.loss_curve = vec![(0, 1.0)];
+        assert!(!r.summary_line().contains("par_cutover="), "unrecorded stays out");
+        r.par_threshold_flops = f64::INFINITY; // single-core host
+        assert!(!r.summary_line().contains("par_cutover="), "inf stays out");
+        r.par_threshold_flops = 3.2e6;
+        assert!(r.summary_line().contains("par_cutover=3.2e6f"),
+                "{}", r.summary_line());
     }
 }

@@ -238,6 +238,8 @@ impl<'e> Trainer<'e> {
             // are comparable across machines
             substrate_threads: exec::threads(),
             kernel: exec::kernel_name().to_string(),
+            par_threshold_flops: exec::calibration().par_threshold_flops,
+            dispatch_ns: exec::calibration().dispatch_ns,
             ..Default::default()
         };
         let mut times = Vec::new();
@@ -398,9 +400,17 @@ impl TrainStep {
     }
 
     /// One training step on `(x, target)`; returns (loss, phase split).
+    /// Runs as one whole-step dispatch region ([`exec::step_scope`]): the
+    /// layer chain's job batches flow through the resident pool
+    /// latch-to-latch instead of paying a park/wake per op.
     pub fn step(&mut self, x: &Matrix, target: &Matrix, lr: f32, momentum: f32)
                 -> (f64, StepTimings) {
         assert_eq!((x.rows, x.cols), (self.batch, self.layers[0].in_dim()));
+        exec::step_scope(|| self.step_inner(x, target, lr, momentum))
+    }
+
+    fn step_inner(&mut self, x: &Matrix, target: &Matrix, lr: f32, momentum: f32)
+                  -> (f64, StepTimings) {
         let nl = self.layers.len();
 
         let mut timer = StepTimer::start();
@@ -517,11 +527,16 @@ impl AttnTrainStep {
     }
 
     /// One training step on sequence `x` against `target`; returns
-    /// (loss, phase split).
+    /// (loss, phase split). One whole-step dispatch region, like
+    /// [`TrainStep::step`].
     pub fn step(&mut self, x: &Matrix, target: &Matrix, lr: f32, momentum: f32)
                 -> (f64, StepTimings) {
         assert_eq!((x.rows, x.cols), (self.seq, self.d));
+        exec::step_scope(|| self.step_inner(x, target, lr, momentum))
+    }
 
+    fn step_inner(&mut self, x: &Matrix, target: &Matrix, lr: f32, momentum: f32)
+                  -> (f64, StepTimings) {
         let mut timer = StepTimer::start();
         self.plan.execute_stats(x, x, x, &mut self.o, &mut self.stats, &mut self.ws);
         self.wo.forward_into(&self.o, &mut self.y, &mut self.ws);

@@ -1,17 +1,35 @@
-//! Threaded batch prefetching (std::mpsc; the offline substitute for a
-//! tokio pipeline).  Batch synthesis is host work on the trainer's hot
-//! path; overlapping it with device execution is the classic input-
-//! pipeline optimisation (§Perf L3).
+//! Threaded batch prefetching (the offline substitute for a tokio
+//! pipeline). Batch synthesis is host work on the trainer's hot path;
+//! overlapping it with device execution is the classic input-pipeline
+//! optimisation (§Perf L3).
+//!
+//! The bounded queue is built on the engine's [`Doorbell`] primitive —
+//! the same Condvar-wakeup pairing the resident worker pool parks on —
+//! so both sides block exactly until the state they need exists: the
+//! producer parks when the queue is full, the consumer when it is
+//! empty, and `Drop` is one flag flip + join. No sleeps, no timeouts,
+//! no drain loops.
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::Arc;
 use std::thread::JoinHandle;
+
+use crate::sparse::exec::pool::Doorbell;
+
+struct Shared<T> {
+    q: VecDeque<T>,
+    /// consumer dropped: the producer must exit
+    stopped: bool,
+    /// producer exited (normally or by panic): `next` must fail loudly
+    /// instead of parking forever
+    done: bool,
+}
 
 /// A prefetcher running a generator closure on a worker thread, keeping a
 /// bounded queue of ready items.
 pub struct Prefetcher<T: Send + 'static> {
-    rx: mpsc::Receiver<T>,
+    shared: Arc<Doorbell<Shared<T>>>,
     handle: Option<JoinHandle<()>>,
-    stop: mpsc::Sender<()>,
 }
 
 impl<T: Send + 'static> Prefetcher<T> {
@@ -20,38 +38,75 @@ impl<T: Send + 'static> Prefetcher<T> {
     where
         F: FnMut(usize) -> T + Send + 'static,
     {
-        let (tx, rx) = mpsc::sync_channel(depth);
-        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let depth = depth.max(1);
+        let shared = Arc::new(Doorbell::new(Shared {
+            q: VecDeque::with_capacity(depth),
+            stopped: false,
+            done: false,
+        }));
+        let bell = Arc::clone(&shared);
         let handle = std::thread::spawn(move || {
+            // flag `done` on every exit path, unwinds included, so a
+            // panicking `make` turns into a loud `next` instead of a hang
+            struct DoneGuard<T>(Arc<Doorbell<Shared<T>>>);
+            impl<T> Drop for DoneGuard<T> {
+                fn drop(&mut self) {
+                    self.0.update(|s| s.done = true);
+                }
+            }
+            let _guard = DoneGuard(Arc::clone(&bell));
             let mut i = 0usize;
             loop {
-                if stop_rx.try_recv().is_ok() {
-                    break;
-                }
-                let item = make(i);
+                let item = make(i); // synthesized OUTSIDE the lock (overlap)
                 i += 1;
-                // blocks when the queue is full (backpressure)
-                if tx.send(item).is_err() {
+                let mut slot = Some(item);
+                // park until there is room (backpressure) or we are told
+                // to stop; the push itself rings the consumer's bell
+                let stopped = bell.wait_until(|s| {
+                    if s.stopped {
+                        return Some(true);
+                    }
+                    if s.q.len() < depth {
+                        s.q.push_back(slot.take().expect("pushed exactly once"));
+                        return Some(false);
+                    }
+                    None
+                });
+                if stopped {
                     break;
                 }
             }
         });
-        Prefetcher { rx, handle: Some(handle), stop: stop_tx }
+        Prefetcher { shared, handle: Some(handle) }
     }
 
-    /// Get the next item (blocks until available).
+    /// Get the next item (parks until one is ready; panics if the worker
+    /// died).
     pub fn next(&self) -> T {
-        self.rx.recv().expect("prefetch worker died")
+        self.shared
+            .wait_until(|s| {
+                if let Some(item) = s.q.pop_front() {
+                    // the exit ring doubles as the producer's "room
+                    // available" wakeup
+                    return Some(Some(item));
+                }
+                if s.done {
+                    return Some(None);
+                }
+                None
+            })
+            .expect("prefetch worker died")
     }
 }
 
 impl<T: Send + 'static> Drop for Prefetcher<T> {
     fn drop(&mut self) {
-        let _ = self.stop.send(());
-        // drain so the worker unblocks from send, then join
-        while self.rx.try_recv().is_ok() {}
-        // one more recv attempt may be needed if worker was mid-send
-        let _ = self.rx.recv_timeout(std::time::Duration::from_millis(200));
+        // one flag flip wakes a producer parked on a full queue; clearing
+        // the queue frees its items eagerly
+        self.shared.update(|s| {
+            s.stopped = true;
+            s.q.clear();
+        });
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -72,8 +127,8 @@ mod tests {
 
     #[test]
     fn overlaps_production() {
-        // items take 5ms to make; consuming 4 of them with a depth-2 queue
-        // after a 15ms pause should be nearly free (already prefetched)
+        // items take 5ms to make; consuming 2 of them with a depth-2 queue
+        // after a 25ms pause should be nearly free (already prefetched)
         let p = Prefetcher::new(2, |i| {
             std::thread::sleep(std::time::Duration::from_millis(5));
             i
@@ -90,5 +145,19 @@ mod tests {
         let p = Prefetcher::new(1, |i| vec![i; 1000]);
         let _ = p.next();
         drop(p); // must not hang
+    }
+
+    #[test]
+    fn dead_worker_fails_loudly_instead_of_hanging() {
+        let p = Prefetcher::new(1, |i| {
+            if i >= 2 {
+                panic!("generator bug");
+            }
+            i
+        });
+        assert_eq!(p.next(), 0);
+        assert_eq!(p.next(), 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| p.next()));
+        assert!(r.is_err(), "next() after a producer panic must not park forever");
     }
 }

@@ -36,6 +36,12 @@ fn main() -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--kernel expects auto|scalar|simd, got {k:?}"))?;
         exec::set_kernel(choice);
     }
+    // Pool runtime: --pool beats PIXELFLY_POOL beats resident default.
+    if let Some(p) = args.get("pool") {
+        let mode = exec::PoolMode::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("--pool expects resident|scoped, got {p:?}"))?;
+        exec::set_pool_mode(Some(mode));
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -71,7 +77,11 @@ fn print_help() {
          list\n\n\
          Global: --threads N (substrate workers; also PIXELFLY_THREADS),\n\
                  --kernel auto|scalar|simd (microkernel tier; also\n\
-                 PIXELFLY_KERNEL; auto picks AVX2/NEON when available).\n\
+                 PIXELFLY_KERNEL; auto picks AVX2/NEON when available),\n\
+                 --pool resident|scoped (worker runtime; also PIXELFLY_POOL;\n\
+                 resident = parked long-lived workers, the default).\n\
+                 PIXELFLY_PAR_FLOPS pins the calibrated serial-vs-parallel\n\
+                 cutover (otherwise measured once at startup).\n\
          Commands that execute artifacts need a build with --features pjrt."
     );
 }

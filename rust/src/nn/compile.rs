@@ -18,7 +18,7 @@ use crate::coordinator::planner::{plan_model, LayerPlan, ModelPlan};
 use crate::models::{LayerType, ModelFamily, ModelSchema};
 use crate::patterns::baselines;
 use crate::sparse::dense::Matrix;
-use crate::sparse::exec::{Activation, Workspace};
+use crate::sparse::exec::{self, Activation, Workspace};
 use crate::util::Rng;
 
 use super::blocks::{ClassifierHead, Embedding, LowRankResidual, MixerBlock, MlpBlock,
@@ -266,29 +266,38 @@ impl Model {
     /// so finite differences can re-evaluate the same loss).
     pub fn loss_and_input_grad(&mut self, x: &Matrix, target: &Matrix)
                                -> (f64, &Matrix) {
-        self.forward_only(x);
-        ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
-        ensure_shape(&mut self.dx, x.rows, self.body.in_dim());
-        let Model { body, ws, y, gy, dx, .. } = self;
-        let loss = mse_loss_grad(y, target, gy);
-        body.backward_into(x, y, gy, Some(dx), ws);
+        let loss = exec::step_scope(|| {
+            self.forward_only(x);
+            ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
+            ensure_shape(&mut self.dx, x.rows, self.body.in_dim());
+            let Model { body, ws, y, gy, dx, .. } = self;
+            let loss = mse_loss_grad(y, target, gy);
+            body.backward_into(x, y, gy, Some(dx), ws);
+            loss
+        });
         (loss, &self.dx)
     }
 
-    /// One fused training step (forward → backward → update), phase-timed.
+    /// One fused training step (forward → backward → update), phase-timed
+    /// and submitted as ONE whole-step dispatch region
+    /// ([`exec::step_scope`]): the layer chain runs as a sequence of job
+    /// batches separated by pool-internal latches, with the resident
+    /// workers flowing batch-to-batch instead of parking per op.
     pub fn train_step(&mut self, x: &Matrix, target: &Matrix, lr: f32,
                       momentum: f32) -> (f64, StepTimings) {
-        let mut timer = StepTimer::start();
-        self.forward_only(x);
-        timer.fwd_done();
-        ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
-        let Model { body, ws, y, gy, .. } = self;
-        let loss = mse_loss_grad(y, target, gy);
-        body.backward_into(x, y, gy, None, ws);
-        timer.bwd_done();
-        self.body.update(lr, momentum);
-        timer.update_done();
-        (loss, timer.finish())
+        exec::step_scope(|| {
+            let mut timer = StepTimer::start();
+            self.forward_only(x);
+            timer.fwd_done();
+            ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
+            let Model { body, ws, y, gy, .. } = self;
+            let loss = mse_loss_grad(y, target, gy);
+            body.backward_into(x, y, gy, None, ws);
+            timer.bwd_done();
+            self.body.update(lr, momentum);
+            timer.update_done();
+            (loss, timer.finish())
+        })
     }
 
     /// Train against a fixed synthetic regression batch (throughput- and
@@ -362,7 +371,9 @@ impl InferenceSession {
 
     /// One forward pass; the returned reference lives in the session's
     /// output buffer. Panics if a steady-state pass (same input shape as
-    /// the previous one, post-warmup) allocates.
+    /// the previous one, post-warmup) allocates. Runs as one whole-step
+    /// dispatch region, so serving latency pays the pool's doorbell once
+    /// per layer batch, never a thread spawn.
     pub fn run(&mut self, x: &Matrix) -> &Matrix {
         let shape = (x.rows, x.cols);
         if self.last_shape != Some(shape) {
@@ -372,7 +383,7 @@ impl InferenceSession {
         }
         ensure_shape(&mut self.y, x.rows, self.body.out_dim());
         let InferenceSession { body, ws, y, .. } = self;
-        body.forward_into(x, y, ws);
+        exec::step_scope(|| body.forward_into(x, y, ws));
         match self.warm_allocs {
             None => self.warm_allocs = Some(self.ws.alloc_events()),
             Some(w) => assert_eq!(

@@ -246,6 +246,8 @@ pub fn drive_substrate_training(
         param_count,
         substrate_threads: exec::threads(),
         kernel: exec::kernel_name().to_string(),
+        par_threshold_flops: exec::calibration().par_threshold_flops,
+        dispatch_ns: exec::calibration().dispatch_ns,
         ..Default::default()
     };
     let log_every = log_every.max(1);

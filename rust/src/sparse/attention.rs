@@ -18,8 +18,10 @@
 //!   Scratch is O(b² + b·d) per worker, L1-resident, and checked out of a
 //!   [`Workspace`] so the steady state is allocation-free.
 //! - Chunks run as nnz-weighted tasks on the engine pool
-//!   ([`pool::run_tasks_with`]): chunks partition the query block rows, so
-//!   each worker owns a disjoint slice of the output by construction.
+//!   ([`pool::run_tasks_scratch`]): chunks partition the query block
+//!   rows, so each worker owns a disjoint slice of the output by
+//!   construction, and each participant's b²-scale scratch is pinned to
+//!   the worker itself (resident workers own their workspace).
 //! - The inner products / AXPYs route through the kernel dispatch tier
 //!   ([`exec::simd`]): AVX2/NEON where available, scalar otherwise.
 //!
@@ -211,7 +213,7 @@ impl AttnPlan {
     }
 
     fn workers_for(&self, b: usize, d: usize) -> usize {
-        if self.threads <= 1 || self.flops(b, d) < exec::MIN_PAR_FLOPS {
+        if self.threads <= 1 || self.flops(b, d) < exec::par_threshold_flops() {
             1
         } else {
             self.threads.min(self.chunks.len()).max(1)
@@ -229,43 +231,34 @@ impl AttnPlan {
         (seq / self.nb, d)
     }
 
-    /// Shared executor skeleton for both kernels: checks out one scratch
-    /// buffer of `per` floats per worker from `ws`, then runs
-    /// `f(qb, out_rows, scratch)` over every query block row — serially,
-    /// or as chunk tasks on the pool with each worker owning a private
-    /// scratch slice. The unsafe disjoint-write argument lives here, once.
+    /// Shared executor skeleton for both kernels: runs
+    /// `f(qb, out_rows, scratch)` over every query block row as chunk
+    /// tasks on the pool, each participant carrying `per` floats of
+    /// private scratch — resident workers draw theirs from their own
+    /// pinned workspace, the caller from `ws`
+    /// ([`pool::run_tasks_scratch`]). The unsafe disjoint-write argument
+    /// lives here, once.
     fn run_block_rows<F>(&self, out: &mut Matrix, b: usize, d: usize, per: usize,
                          ws: &mut Workspace, f: F)
     where
         F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
     {
         let workers = self.workers_for(b, d);
-        let mut scratch = ws.take(per * workers);
-        if workers == 1 {
-            let s = &mut scratch[..per];
-            for qb in 0..self.nb {
-                let orows = &mut out.data[qb * b * d..(qb + 1) * b * d];
-                f(qb, orows, s);
+        let base = pool::SyncPtr(out.data.as_mut_ptr());
+        pool::run_tasks_scratch(self.chunks.len(), workers, per, ws, |scratch, c| {
+            // capture the whole wrapper (not the raw-pointer field) so
+            // the closure stays Sync under edition-2021 precise capture
+            let base = &base;
+            for qb in self.chunks[c].clone() {
+                // Safety: chunks partition 0..nb, so this task owns
+                // output rows qb*b..(qb+1)*b exclusively; bounds
+                // follow from the caller's shape asserts.
+                let orows = unsafe {
+                    std::slice::from_raw_parts_mut(base.0.add(qb * b * d), b * d)
+                };
+                f(qb, orows, scratch);
             }
-        } else {
-            let base = pool::SyncPtr(out.data.as_mut_ptr());
-            let mut parts: Vec<&mut [f32]> = scratch.chunks_mut(per).collect();
-            pool::run_tasks_with(self.chunks.len(), &mut parts, |part, c| {
-                // capture the whole wrapper (not the raw-pointer field) so
-                // the closure stays Sync under edition-2021 precise capture
-                let base = &base;
-                for qb in self.chunks[c].clone() {
-                    // Safety: chunks partition 0..nb, so this task owns
-                    // output rows qb*b..(qb+1)*b exclusively; bounds
-                    // follow from the caller's shape asserts.
-                    let orows = unsafe {
-                        std::slice::from_raw_parts_mut(base.0.add(qb * b * d), b * d)
-                    };
-                    f(qb, orows, part);
-                }
-            });
-        }
-        ws.give(scratch);
+        });
     }
 
     /// Fused single-pass execution: `out = softmax(q·kᵀ/√d ⊙ mask)·v`.
@@ -598,46 +591,35 @@ impl AttnPlan {
         }
     }
 
-    /// Key-side twin of [`Self::run_block_rows`]: hands each worker the
-    /// dK and dV row slices of the key block rows its chunk owns, plus a
-    /// private scratch slice. Chunks partition 0..nb over `key_chunks`,
-    /// so the disjoint-write argument is identical.
+    /// Key-side twin of [`Self::run_block_rows`]: hands each task the
+    /// dK and dV row slices of the key block rows its chunk owns, plus
+    /// the participant's private scratch. Chunks partition 0..nb over
+    /// `key_chunks`, so the disjoint-write argument is identical.
     fn run_key_rows<F>(&self, dk: &mut Matrix, dv: &mut Matrix, b: usize, d: usize,
                        per: usize, ws: &mut Workspace, f: F)
     where
         F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
     {
         let workers = self.workers_for(b, d);
-        let mut scratch = ws.take(per * workers);
-        if workers == 1 {
-            let s = &mut scratch[..per];
-            for kb in 0..self.nb {
-                let dk_rows = &mut dk.data[kb * b * d..(kb + 1) * b * d];
-                let dv_rows = &mut dv.data[kb * b * d..(kb + 1) * b * d];
-                f(kb, dk_rows, dv_rows, s);
+        let dk_base = pool::SyncPtr(dk.data.as_mut_ptr());
+        let dv_base = pool::SyncPtr(dv.data.as_mut_ptr());
+        pool::run_tasks_scratch(self.key_chunks.len(), workers, per, ws,
+                                |scratch, c| {
+            let dk_base = &dk_base;
+            let dv_base = &dv_base;
+            for kb in self.key_chunks[c].clone() {
+                // Safety: key chunks partition 0..nb, so this task
+                // owns dk/dv rows kb*b..(kb+1)*b exclusively; bounds
+                // follow from the caller's shape asserts.
+                let dk_rows = unsafe {
+                    std::slice::from_raw_parts_mut(dk_base.0.add(kb * b * d), b * d)
+                };
+                let dv_rows = unsafe {
+                    std::slice::from_raw_parts_mut(dv_base.0.add(kb * b * d), b * d)
+                };
+                f(kb, dk_rows, dv_rows, scratch);
             }
-        } else {
-            let dk_base = pool::SyncPtr(dk.data.as_mut_ptr());
-            let dv_base = pool::SyncPtr(dv.data.as_mut_ptr());
-            let mut parts: Vec<&mut [f32]> = scratch.chunks_mut(per).collect();
-            pool::run_tasks_with(self.key_chunks.len(), &mut parts, |part, c| {
-                let dk_base = &dk_base;
-                let dv_base = &dv_base;
-                for kb in self.key_chunks[c].clone() {
-                    // Safety: key chunks partition 0..nb, so this task
-                    // owns dk/dv rows kb*b..(kb+1)*b exclusively; bounds
-                    // follow from the caller's shape asserts.
-                    let dk_rows = unsafe {
-                        std::slice::from_raw_parts_mut(dk_base.0.add(kb * b * d), b * d)
-                    };
-                    let dv_rows = unsafe {
-                        std::slice::from_raw_parts_mut(dv_base.0.add(kb * b * d), b * d)
-                    };
-                    f(kb, dk_rows, dv_rows, part);
-                }
-            });
-        }
-        ws.give(scratch);
+        });
     }
 }
 

@@ -1,5 +1,13 @@
 //! Row-major f32 matrix + cache-blocked dense GEMM (substrate baseline).
+//!
+//! The parallel paths split their output into contiguous row panels and
+//! run one task per panel on the shared engine pool
+//! ([`crate::sparse::exec::pool::run_tasks`]) — the same scheduling
+//! substrate as the BSR plans and the attention executors, so dense
+//! baselines pay the same (resident, calibrated) dispatch cost and no
+//! private spawn logic exists here.
 
+use crate::sparse::exec::pool;
 use crate::util::Rng;
 
 /// Row-major f32 matrix.
@@ -118,25 +126,34 @@ pub fn matmul_blocked(x: &Matrix, w: &Matrix) -> Matrix {
 }
 
 /// Parallel panel-tiled dense GEMM: the batch dimension is split into row
-/// panels (one per scoped worker, each owning a contiguous `y` slice, so
-/// the parallelism is race-free by construction) and each panel runs the
-/// k-blocked serial kernel. Falls back to the serial path when the
-/// problem is too small to amortise thread spawn.
+/// panels (one pool task per panel, each owning a contiguous `y` slice,
+/// so the parallelism is race-free by construction) and each panel runs
+/// the k-blocked serial kernel. Falls back to the serial path when the
+/// problem is too small to amortise a dispatch (calibrated cutover).
 pub fn matmul_blocked_into(x: &Matrix, w: &Matrix, y: &mut Matrix) {
     assert_eq!(x.cols, w.rows);
     assert_eq!((y.rows, y.cols), (x.rows, w.cols));
     let (m, k, n) = (x.rows, x.cols, w.cols);
     let threads = crate::sparse::exec::threads();
     let flops = 2.0 * (m * k) as f64 * n as f64;
-    if threads <= 1 || m < 2 || flops < crate::sparse::exec::MIN_PAR_FLOPS {
+    if threads <= 1 || m < 2 || flops < crate::sparse::exec::par_threshold_flops() {
         return matmul_blocked_serial_into(x, w, y);
     }
     y.data.fill(0.0);
     let rows_per = m.div_ceil(threads.min(m));
-    std::thread::scope(|s| {
-        for (p, ychunk) in y.data.chunks_mut(rows_per * n).enumerate() {
-            s.spawn(move || panel_kernel(x, w, ychunk, p * rows_per));
-        }
+    let n_panels = m.div_ceil(rows_per);
+    let ybase = pool::SyncPtr(y.data.as_mut_ptr());
+    pool::run_tasks(n_panels, threads, |p| {
+        let ybase = &ybase;
+        let r0 = p * rows_per;
+        let rows = rows_per.min(m - r0);
+        // Safety: panels partition the batch rows, so this task
+        // exclusively owns y rows r0..r0+rows; r0 + rows <= m keeps the
+        // slice in bounds of the shape-asserted output.
+        let ychunk = unsafe {
+            std::slice::from_raw_parts_mut(ybase.0.add(r0 * n), rows * n)
+        };
+        panel_kernel(x, w, ychunk, r0);
     });
 }
 
@@ -179,23 +196,31 @@ fn panel_kernel(x: &Matrix, w: &Matrix, ychunk: &mut [f32], r0: usize) {
 
 /// `y = a · bᵀ` without materialising `bᵀ`: `y[i, j] = dot(a_i, b_j)` —
 /// both operands stream row-major, the transpose is purely algorithmic.
-/// Parallel over row panels of `y` (safe `chunks_mut` ownership) above
-/// the engine threshold; [`matmul_abt_serial_into`] is the oracle.
+/// Parallel over row panels of `y` on the shared pool above the
+/// calibrated cutover; [`matmul_abt_serial_into`] is the oracle.
 pub fn matmul_abt_into(a: &Matrix, b: &Matrix, y: &mut Matrix) {
     assert_eq!(a.cols, b.cols);
     assert_eq!((y.rows, y.cols), (a.rows, b.rows));
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let threads = crate::sparse::exec::threads();
     let flops = 2.0 * (m * k) as f64 * n as f64;
-    if threads <= 1 || m < 2 || flops < crate::sparse::exec::MIN_PAR_FLOPS {
+    if threads <= 1 || m < 2 || flops < crate::sparse::exec::par_threshold_flops() {
         return matmul_abt_serial_into(a, b, y);
     }
     let rows_per = m.div_ceil(threads.min(m));
+    let n_panels = m.div_ceil(rows_per);
     let tier = crate::sparse::exec::simd::active_tier();
-    std::thread::scope(|s| {
-        for (p, ychunk) in y.data.chunks_mut(rows_per * n).enumerate() {
-            s.spawn(move || abt_panel(tier, a, b, ychunk, p * rows_per));
-        }
+    let ybase = pool::SyncPtr(y.data.as_mut_ptr());
+    pool::run_tasks(n_panels, threads, |p| {
+        let ybase = &ybase;
+        let r0 = p * rows_per;
+        let rows = rows_per.min(m - r0);
+        // Safety: panels partition a's rows, so this task exclusively
+        // owns y rows r0..r0+rows; r0 + rows <= m bounds the slice.
+        let ychunk = unsafe {
+            std::slice::from_raw_parts_mut(ybase.0.add(r0 * n), rows * n)
+        };
+        abt_panel(tier, a, b, ychunk, r0);
     });
 }
 
@@ -225,7 +250,7 @@ fn abt_panel(tier: crate::sparse::exec::simd::Tier, a: &Matrix, b: &Matrix,
 
 /// `y = aᵀ · b` without materialising `aᵀ`: accumulated as rank-1 updates
 /// `y[k, :] += a[i, k] · b[i, :]` so both operands stream row-major.
-/// Parallel over row ranges of `y` (= column ranges of `a`): each worker
+/// Parallel over row ranges of `y` (= column ranges of `a`): each task
 /// sweeps all of `a`/`b` but writes only its own `y` rows, race-free by
 /// construction. [`matmul_atb_serial_into`] is the oracle.
 pub fn matmul_atb_into(a: &Matrix, b: &Matrix, y: &mut Matrix) {
@@ -234,15 +259,24 @@ pub fn matmul_atb_into(a: &Matrix, b: &Matrix, y: &mut Matrix) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let threads = crate::sparse::exec::threads();
     let flops = 2.0 * (m * k) as f64 * n as f64;
-    if threads <= 1 || k < 2 || flops < crate::sparse::exec::MIN_PAR_FLOPS {
+    if threads <= 1 || k < 2 || flops < crate::sparse::exec::par_threshold_flops() {
         return matmul_atb_serial_into(a, b, y);
     }
     let rows_per = k.div_ceil(threads.min(k));
+    let n_panels = k.div_ceil(rows_per);
     let tier = crate::sparse::exec::simd::active_tier();
-    std::thread::scope(|s| {
-        for (p, ychunk) in y.data.chunks_mut(rows_per * n).enumerate() {
-            s.spawn(move || atb_panel(tier, a, b, ychunk, p * rows_per));
-        }
+    let ybase = pool::SyncPtr(y.data.as_mut_ptr());
+    pool::run_tasks(n_panels, threads, |p| {
+        let ybase = &ybase;
+        let k0 = p * rows_per;
+        let rows = rows_per.min(k - k0);
+        // Safety: panels partition y's rows (= a's columns), so this
+        // task exclusively owns y rows k0..k0+rows; k0 + rows <= k
+        // bounds the slice.
+        let ychunk = unsafe {
+            std::slice::from_raw_parts_mut(ybase.0.add(k0 * n), rows * n)
+        };
+        atb_panel(tier, a, b, ychunk, k0);
     });
 }
 

@@ -4,15 +4,20 @@
 //! - [`plan::GemmPlan`] inverts a [`crate::sparse::BsrMatrix`]'s row
 //!   structure once into a column-owned schedule — the block rows of Wᵀ —
 //!   and partitions it into load-balanced chunks weighted by nnz blocks.
-//! - [`pool`] is the dependency-free `std::thread` scoped worker pool:
-//!   workers pull chunk × batch-panel tasks from a shared atomic cursor.
+//! - [`pool`] is the dependency-free resident worker-pool runtime:
+//!   long-lived workers park on a Condvar/atomic-epoch doorbell and pull
+//!   chunk × batch-panel tasks of dispatched job batches from a shared
+//!   atomic cursor (`PIXELFLY_POOL=scoped` keeps the old spawn-per-call
+//!   path as the fallback/oracle).
 //! - [`micro`] holds the register-blocked `b×b` panel kernels
 //!   (specialised for b ∈ {16, 32, 48}, generic fallback).
 //!
 //! Thread count resolution order: explicit [`set_threads`] (the CLI's
 //! `--threads`), then `PIXELFLY_THREADS`, then available parallelism.
-//! Small problems fall back to the serial path automatically so the
-//! engine never pessimises the tiny shapes used in tests.
+//! Small problems fall back to the serial path automatically; the
+//! cutover is no longer a hard-coded constant but a one-shot startup
+//! [`calibration`] of measured dispatch overhead against the measured
+//! per-flop kernel rate (override with `PIXELFLY_PAR_FLOPS`).
 //!
 //! Kernel tier resolution mirrors it: explicit [`set_kernel`] (the CLI's
 //! `--kernel`), then `PIXELFLY_KERNEL`, then auto-detection — see
@@ -31,17 +36,14 @@ pub mod simd;
 pub mod workspace;
 
 pub use plan::{Epilogue, GemmPlan};
+pub use pool::{pool_mode, set_pool_mode, step_scope, worker_alloc_events, PoolMode};
 pub use simd::{kernel_choice, kernel_name, set_kernel, simd_available, KernelChoice};
 pub use workspace::Workspace;
 
 use crate::sparse::dense::Matrix;
 use std::sync::atomic::{AtomicUsize, Ordering};
-
-/// Below this many flops the scoped-pool spawn overhead outweighs the
-/// parallel win and every engine path (BSR plan, dense panels, attention)
-/// stays serial. One knob — retune it here, not per call site.
-pub const MIN_PAR_FLOPS: f64 = 4.0e6;
 use std::sync::OnceLock;
+use std::time::Instant;
 
 /// 0 = no override; set once from the CLI / caller.
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
@@ -73,6 +75,111 @@ pub fn threads() -> usize {
 
 fn parse_threads(v: Option<String>) -> Option<usize> {
     v.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+// ---------------------------------------------------------------------
+// Startup calibration: serial-vs-parallel cutover from measured numbers
+// ---------------------------------------------------------------------
+
+/// One-shot startup measurement replacing the old hard-coded
+/// `MIN_PAR_FLOPS` constant: the cutover between the serial path and a
+/// pool dispatch is decided from *this machine's* dispatch overhead and
+/// kernel rate, not a number tuned on whatever box wrote the constant.
+#[derive(Clone, Copy, Debug)]
+pub struct Calibration {
+    /// measured cost of one empty job-batch dispatch on the active pool
+    /// mode (resident doorbell ring or scoped spawn+join), nanoseconds
+    pub dispatch_ns: f64,
+    /// measured serial rate of the active SIMD tier's dot primitive
+    /// (the building block of every hot loop), ns per flop
+    pub ns_per_flop: f64,
+    /// flops below which every engine path (BSR plan, dense panels,
+    /// attention, optimizer sweep) stays serial
+    pub par_threshold_flops: f64,
+}
+
+/// One slot per [`PoolMode`] (resident, scoped): dispatch cost differs
+/// by orders of magnitude between the substrates, so a threshold
+/// measured under one mode must never govern the other after a
+/// `set_pool_mode` switch.
+static CALIBRATIONS: [OnceLock<Calibration>; 2] = [OnceLock::new(), OnceLock::new()];
+
+/// The calibration for the ACTIVE pool mode, measured once per mode on
+/// first use (a few hundred microseconds). `PIXELFLY_PAR_FLOPS=<flops>`
+/// pins the threshold without measuring — CI determinism and
+/// experiments.
+pub fn calibration() -> &'static Calibration {
+    let mode = pool::pool_mode();
+    let slot = match mode {
+        PoolMode::Resident => &CALIBRATIONS[0],
+        PoolMode::Scoped => &CALIBRATIONS[1],
+    };
+    slot.get_or_init(|| measure_calibration(mode))
+}
+
+fn measure_calibration(mode: PoolMode) -> Calibration {
+    {
+        if let Some(t) = std::env::var("PIXELFLY_PAR_FLOPS")
+            .ok()
+            .and_then(|s| s.trim().parse::<f64>().ok())
+            .filter(|t| *t > 0.0)
+        {
+            return Calibration { dispatch_ns: 0.0, ns_per_flop: 0.0,
+                                 par_threshold_flops: t };
+        }
+        let workers = threads();
+        if workers <= 1 {
+            // one worker: parallelism never pays, whatever the numbers
+            return Calibration { dispatch_ns: 0.0, ns_per_flop: 0.0,
+                                 par_threshold_flops: f64::INFINITY };
+        }
+        // (a) dispatch overhead of the requested pool mode: empty job
+        // batches, one task per worker. The first call warms the pool
+        // (spawns residents / first scoped spawn) outside the clock.
+        pool::run_tasks_in(mode, workers, workers, |t| {
+            std::hint::black_box(t);
+        });
+        const REPS: usize = 32;
+        let t0 = Instant::now();
+        for _ in 0..REPS {
+            pool::run_tasks_in(mode, workers, workers, |t| {
+                std::hint::black_box(t);
+            });
+        }
+        let dispatch_ns = t0.elapsed().as_nanos() as f64 / REPS as f64;
+        // (b) serial kernel rate: the resolved tier's dot primitive over
+        // an L1-resident operand pair
+        let tier = simd::active_tier();
+        let n = 4096usize;
+        let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.71).cos()).collect();
+        const KREPS: usize = 256;
+        let t0 = Instant::now();
+        let mut acc = 0.0f32;
+        for _ in 0..KREPS {
+            acc += simd::dot_with(tier, std::hint::black_box(&a),
+                                  std::hint::black_box(&b));
+        }
+        std::hint::black_box(acc);
+        let ns_per_flop =
+            (t0.elapsed().as_nanos() as f64 / (2 * n * KREPS) as f64).max(1e-4);
+        // breakeven: f·r = f·r/w + D  ⇒  f = D / (r·(1 − 1/w)); 2× safety
+        // so borderline shapes stay serial, clamped against degenerate
+        // timer readings on noisy machines
+        let frac = (1.0 - 1.0 / workers as f64).max(0.25);
+        let thresh = 2.0 * dispatch_ns / (ns_per_flop * frac);
+        Calibration {
+            dispatch_ns,
+            ns_per_flop,
+            par_threshold_flops: thresh.clamp(2.0e5, 6.4e7),
+        }
+    }
+}
+
+/// The calibrated serial-vs-parallel cutover in flops — what every
+/// engine path consults where `MIN_PAR_FLOPS` used to sit.
+pub fn par_threshold_flops() -> f64 {
+    calibration().par_threshold_flops
 }
 
 // ---------------------------------------------------------------------
@@ -206,21 +313,41 @@ pub fn sgd_momentum(w: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: 
     let n = w.len();
     assert_eq!(n, g.len());
     assert_eq!(n, m.len());
-    let tier = simd::active_tier();
     let workers = threads();
-    // 2 flops/element; reuse the global threshold so tiny layers stay serial
-    if workers <= 1 || (2 * n) as f64 * 2.0 < MIN_PAR_FLOPS {
+    // 2 flops/element; reuse the calibrated cutover so tiny layers stay serial
+    if workers <= 1 || (2 * n) as f64 * 2.0 < par_threshold_flops() {
+        let tier = simd::active_tier();
         return simd::sgd_momentum_with(tier, w, g, m, lr, momentum);
     }
-    let per = n.div_ceil(workers);
-    std::thread::scope(|s| {
-        for ((wc, gc), mc) in w
-            .chunks_mut(per)
-            .zip(g.chunks(per))
-            .zip(m.chunks_mut(per))
-        {
-            s.spawn(move || simd::sgd_momentum_with(tier, wc, gc, mc, lr, momentum));
-        }
+    sgd_momentum_split(w, g, m, lr, momentum, workers);
+}
+
+/// The pool-split sweep behind [`sgd_momentum`], gate-free so the parity
+/// test can exercise the parallel path regardless of what the host's
+/// calibration decided. Arithmetic chunking (no range vector): this sits
+/// on the per-layer per-step hot path, and a dispatch must not allocate.
+fn sgd_momentum_split(w: &mut [f32], g: &[f32], m: &mut [f32], lr: f32,
+                      momentum: f32, workers: usize) {
+    let n = w.len();
+    let tier = simd::active_tier();
+    let per = n.div_ceil(workers.max(1));
+    let n_chunks = n.div_ceil(per.max(1));
+    let wp = pool::SyncPtr(w.as_mut_ptr());
+    let mp = pool::SyncPtr(m.as_mut_ptr());
+    pool::run_tasks(n_chunks, workers, |t| {
+        // capture the whole wrappers (not the raw-pointer fields) so the
+        // closure stays Sync under edition-2021 precise capture
+        let (wp, mp) = (&wp, &mp);
+        let start = t * per;
+        let len = per.min(n - start);
+        // Safety: the chunks partition 0..n, so this task exclusively
+        // owns w[start..start+len] and m[start..start+len]; g is shared
+        // read-only; start + len <= n bounds every access.
+        let (wc, mc) = unsafe {
+            (std::slice::from_raw_parts_mut(wp.0.add(start), len),
+             std::slice::from_raw_parts_mut(mp.0.add(start), len))
+        };
+        simd::sgd_momentum_with(tier, wc, &g[start..start + len], mc, lr, momentum);
     });
 }
 
@@ -240,6 +367,19 @@ mod tests {
     #[test]
     fn threads_is_positive() {
         assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn calibration_yields_a_usable_threshold() {
+        let c = calibration();
+        assert!(c.par_threshold_flops > 0.0);
+        // repeated calls return the same one-shot measurement
+        assert_eq!(calibration().par_threshold_flops, c.par_threshold_flops);
+        if threads() > 1 && std::env::var("PIXELFLY_PAR_FLOPS").is_err() {
+            assert!(c.par_threshold_flops.is_finite(), "multi-core must allow parallel");
+            assert!(c.ns_per_flop > 0.0);
+            assert!(c.dispatch_ns >= 0.0);
+        }
     }
 
     #[test]
@@ -299,14 +439,16 @@ mod tests {
     #[test]
     fn sgd_momentum_parallel_matches_serial() {
         let mut rng = Rng::new(52);
-        // large enough to clear MIN_PAR_FLOPS so the scoped split runs
         let n = 2_000_000;
         let w0 = rng.normal_vec(n, 1.0);
         let g = rng.normal_vec(n, 1.0);
         let m0 = rng.normal_vec(n, 1.0);
         let mut wp = w0.clone();
         let mut mp = m0.clone();
-        sgd_momentum(&mut wp, &g, &mut mp, 0.1, 0.9);
+        // drive the pool split directly (gate-free): the public wrapper's
+        // calibrated cutover may keep this shape serial on slow hosts,
+        // and the point here is parallel-vs-serial parity
+        sgd_momentum_split(&mut wp, &g, &mut mp, 0.1, 0.9, 4);
         let mut ws = w0.clone();
         let mut ms = m0.clone();
         simd::sgd_momentum_scalar(&mut ws, &g, &mut ms, 0.1, 0.9);

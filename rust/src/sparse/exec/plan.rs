@@ -38,7 +38,7 @@ use std::ops::Range;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 
-use super::{micro, pool, Activation, MIN_PAR_FLOPS};
+use super::{micro, par_threshold_flops, pool, Activation};
 
 /// Batch rows per cache tile: at b=32 a tile holds an 8 KB y stripe and an
 /// 8 KB x panel next to the 4 KB weight block — comfortably L1-resident.
@@ -214,9 +214,10 @@ impl GemmPlan {
         row_step
     }
 
-    /// Effective worker count for a problem of `flops` floating ops.
+    /// Effective worker count for a problem of `flops` floating ops
+    /// (serial below the calibrated dispatch-vs-kernel cutover).
     fn workers_for(&self, flops: f64) -> usize {
-        if flops < MIN_PAR_FLOPS {
+        if flops < par_threshold_flops() {
             1
         } else {
             self.threads
