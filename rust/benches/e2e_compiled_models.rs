@@ -68,11 +68,15 @@ fn main() {
             suite.set_scratch_bytes(model.peak_scratch_bytes());
 
             // --- frozen inference session -----------------------------
-            let mut sess = model.into_inference();
-            sess.run(&x); // warm the session (run() self-asserts afterwards)
+            // strict(): benches keep the old hard-assert contract; serving
+            // callers get typed Err instead
+            let mut sess = model.into_inference().strict();
+            assert_eq!(sess.training_state_bytes(), 0,
+                       "{tag}: freeze must shed gradient/momentum buffers");
+            sess.run(&x).unwrap(); // warmup pass sets the rows envelope
             let warm = sess.alloc_events();
             suite.bench_with_flops(&format!("{tag}_infer"), &note, fl.fwd, || {
-                std::hint::black_box(sess.run(&x).data[0]);
+                std::hint::black_box(sess.run(&x).unwrap().data[0]);
             });
             assert_eq!(sess.alloc_events(), warm,
                        "{tag}: steady-state inference must not allocate");

@@ -144,13 +144,13 @@ fn main() {
         exec::set_pool_mode(Some(mode));
         let model = compile(&schema, &alloc, 16, 7).expect("compile pool-bench");
         let fwd = model.flops().fwd;
-        let mut sess = model.into_inference();
-        sess.run(&xs); // warmup (run() self-asserts zero-alloc afterwards)
+        let mut sess = model.into_inference().strict();
+        sess.run(&xs).unwrap(); // warmup (strict() keeps zero-alloc a hard assert)
         let name = format!("infer_seq1k_{}", mode.name());
         let inote = format!("seq=1024 d=256 layers=4 budget=0.2 threads={threads} \
                              {kernel}");
         suite.bench_with_flops(&name, &inote, fwd, || {
-            std::hint::black_box(sess.run(&xs).data[0]);
+            std::hint::black_box(sess.run(&xs).unwrap().data[0]);
         });
         suite.set_scratch_bytes(sess.peak_scratch_bytes());
         infer_ms[slot] = suite.mean_ms_of(&name).unwrap();

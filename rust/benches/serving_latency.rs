@@ -1,0 +1,205 @@
+//! Serving-latency bench (PR 6): the KV-cache and continuous-batching
+//! contracts, measured.
+//!
+//! Part A — single-request decode on gpt2-s:
+//!   * per-token KV decode latency must be FLAT in sequence position
+//!     (hard assert: last-quartile step mean ≤ 3.5× first-quartile) —
+//!     the O(seq)-per-token story vs O(seq²) re-prefill
+//!   * `kv_decode_gen` vs `reprefill_gen`: one full generation through the
+//!     incremental path vs re-running the whole-sequence InferenceSession
+//!     per token; KV must win (hard assert)
+//!
+//! Part B — continuous batching at concurrency 1/4/16: client threads
+//! hammer the engine directly (no TCP, so the numbers isolate the
+//! batching loop); each row reports tokens/s + request-latency
+//! p50/p90/p99. Hard assert: throughput at concurrency 4 beats serial
+//! one-at-a-time (concurrency 1).
+
+use std::thread;
+use std::time::Instant;
+
+use pixelfly::bench::{BenchResult, BenchSuite};
+use pixelfly::coordinator::budget::rule_of_thumb;
+use pixelfly::costmodel::Device;
+use pixelfly::models::preset;
+use pixelfly::nn::{compile, DecodeSession, InferenceSession, Model};
+use pixelfly::serving::{percentile, EngineConfig, ServeEngine};
+use pixelfly::sparse::exec;
+use pixelfly::sparse::Matrix;
+use pixelfly::util::stats::Summary;
+use pixelfly::util::Rng;
+
+const BLOCK: usize = 16;
+const SEED: u64 = 42;
+const PROMPT_ROWS: usize = 8;
+
+fn compile_gpt2s() -> Model {
+    let schema = preset("gpt2-s", 1).expect("gpt2-s preset");
+    let dev = Device::with_block(BLOCK);
+    let alloc = rule_of_thumb(&schema, 0.2, &dev);
+    compile(&schema, &alloc, BLOCK, SEED).expect("compile gpt2-s")
+}
+
+/// One greedy generation through the KV decode path; optionally records
+/// per-step wall times. Returns a value sink so the work can't be DCE'd.
+fn kv_generate(sess: &mut DecodeSession, prompt: &Matrix, gen: usize,
+               mut step_ns: Option<&mut Vec<f64>>) -> f32 {
+    let d = sess.out_dim();
+    let mut x = Matrix::zeros(1, d);
+    let mut last = vec![0.0f32; d];
+    let mut acc = 0.0f32;
+    for pos in 0..prompt.rows + gen - 1 {
+        let src: &[f32] = if pos < prompt.rows { prompt.row(pos) } else { &last };
+        x.row_mut(0).copy_from_slice(src);
+        let t0 = Instant::now();
+        let y = sess.step(&x, &[0], &[pos]).expect("decode step");
+        let dt = t0.elapsed().as_nanos() as f64;
+        if pos + 1 >= prompt.rows {
+            last.copy_from_slice(y.row(0));
+            acc += last[0];
+        }
+        if let Some(v) = step_ns.as_deref_mut() {
+            v.push(dt);
+        }
+    }
+    acc
+}
+
+/// The no-KV-cache baseline: re-run the whole-sequence forward for every
+/// generated token and read one row. Causality makes the zero rows past
+/// the current position irrelevant to the row we read.
+fn reprefill_generate(sess: &mut InferenceSession, seq: usize, prompt: &Matrix,
+                      gen: usize) -> f32 {
+    let d = prompt.cols;
+    let mut buf = Matrix::zeros(seq, d);
+    for r in 0..prompt.rows {
+        buf.row_mut(r).copy_from_slice(prompt.row(r));
+    }
+    let mut acc = 0.0f32;
+    for t in 0..gen {
+        let pos = prompt.rows - 1 + t;
+        let next = sess.run(&buf).expect("prefill run").row(pos).to_vec();
+        if pos + 1 < seq {
+            buf.row_mut(pos + 1).copy_from_slice(&next);
+        }
+        acc += next[0];
+    }
+    acc
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("serving_latency");
+    let threads = exec::threads();
+    let kernel = exec::kernel_name();
+    let gen = if suite.quick { 48 } else { 96 };
+    let mut rng = Rng::new(SEED ^ 0xBE);
+
+    // ---- Part A: single-request decode ---------------------------------
+    let mut sess = compile_gpt2s().into_decode(1).expect("gpt2-s decodes").strict();
+    let (d, seq) = (sess.in_dim(), sess.max_seq());
+    let prompt = Matrix::randn(PROMPT_ROWS, d, 1.0, &mut rng);
+    let note = format!("seq={seq} d={d} prompt={PROMPT_ROWS} gen={gen} \
+                        threads={threads} {kernel}");
+
+    std::hint::black_box(kv_generate(&mut sess, &prompt, gen, None)); // warm
+    let mut step_ns: Vec<f64> = Vec::new();
+    std::hint::black_box(kv_generate(&mut sess, &prompt, gen, Some(&mut step_ns)));
+    let q = (step_ns.len() / 4).max(1);
+    let head = step_ns[..q].iter().sum::<f64>() / q as f64;
+    let tail = step_ns[step_ns.len() - q..].iter().sum::<f64>() / q as f64;
+    println!("decode step latency: first-quartile {:.1}us, last-quartile {:.1}us \
+              ({} steps)", head / 1e3, tail / 1e3, step_ns.len());
+    assert!(tail <= 3.5 * head,
+            "per-token KV decode latency must stay flat in position \
+             (first-quartile {:.1}us vs last-quartile {:.1}us)",
+            head / 1e3, tail / 1e3);
+
+    suite.bench("kv_decode_gen", &note, || {
+        std::hint::black_box(kv_generate(&mut sess, &prompt, gen, None));
+    });
+    suite.set_scratch_bytes(sess.peak_scratch_bytes());
+    let kv_ms = suite.last_mean_ms();
+
+    let mut full = compile_gpt2s().into_inference().strict();
+    reprefill_generate(&mut full, seq, &prompt, 2); // warm the rows envelope
+    suite.bench("reprefill_gen", &note, || {
+        std::hint::black_box(reprefill_generate(&mut full, seq, &prompt, gen));
+    });
+    suite.set_scratch_bytes(full.peak_scratch_bytes());
+    let reprefill_ms = suite.last_mean_ms();
+    assert!(kv_ms < reprefill_ms,
+            "KV-cached decode must beat re-prefill generation \
+             ({kv_ms:.2}ms vs {reprefill_ms:.2}ms for {gen} tokens)");
+    drop(sess);
+
+    // ---- Part B: continuous batching vs concurrency --------------------
+    let reqs_per_client = if suite.quick { 2 } else { 4 };
+    const BGEN: usize = 16;
+    let mut tps: Vec<f64> = Vec::new();
+    for &c in &[1usize, 4, 16] {
+        let dsess = compile_gpt2s().into_decode(c).expect("decode session");
+        let engine = ServeEngine::start(
+            dsess,
+            EngineConfig { max_batch: c, queue_depth: 64 },
+        );
+        let h0 = engine.handle();
+        let wall0 = Instant::now();
+        let workers: Vec<_> = (0..c)
+            .map(|ci| {
+                let h = h0.clone();
+                thread::spawn(move || {
+                    let d = h.d();
+                    let mut lats = Vec::with_capacity(reqs_per_client);
+                    for r in 0..reqs_per_client {
+                        let mut rng = Rng::new(7000 + (ci * 100 + r) as u64);
+                        let p = Matrix::randn(PROMPT_ROWS, d, 1.0, &mut rng);
+                        let t0 = Instant::now();
+                        std::hint::black_box(h.generate(p, BGEN).expect("generate"));
+                        lats.push(t0.elapsed().as_nanos() as f64);
+                    }
+                    lats
+                })
+            })
+            .collect();
+        let mut lat_ns: Vec<f64> = Vec::new();
+        for w in workers {
+            lat_ns.extend(w.join().expect("client thread"));
+        }
+        let wall_s = wall0.elapsed().as_secs_f64();
+        engine.shutdown();
+        let reqs = c * reqs_per_client;
+        let tokens_per_s = (reqs * BGEN) as f64 / wall_s;
+        tps.push(tokens_per_s);
+        let mut sorted = lat_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        suite.results.push(BenchResult {
+            name: format!("continuous_batch_c{c:02}"),
+            summary: Summary::from_ns(&mut lat_ns),
+            gflops: None,
+            scratch_bytes: None,
+            phases: None,
+            note: format!(
+                "tokens/s={:.1} p50={:.2}ms p90={:.2}ms p99={:.2}ms reqs={reqs} \
+                 gen={BGEN} threads={threads}",
+                tokens_per_s,
+                percentile(&sorted, 0.50) / 1e6,
+                percentile(&sorted, 0.90) / 1e6,
+                percentile(&sorted, 0.99) / 1e6,
+            ),
+        });
+    }
+    assert!(tps[1] > tps[0],
+            "continuous batching at concurrency 4 must out-throughput serial \
+             one-at-a-time ({:.1} vs {:.1} tokens/s)", tps[1], tps[0]);
+
+    suite.report();
+    match suite.write_json_default() {
+        Ok(p) => println!("json -> {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+    println!("\nserving contract: per-token decode flat in position \
+              ({:.1}us -> {:.1}us), KV beats re-prefill ({kv_ms:.2}ms vs \
+              {reprefill_ms:.2}ms), batching c=4 beats serial ({:.1} vs {:.1} \
+              tok/s).",
+             head / 1e3, tail / 1e3, tps[1], tps[0]);
+}

@@ -24,6 +24,8 @@
 //! - [`coordinator`] budget allocation, mask planning, the training loop
 //! - [`ntk`]        empirical-NTK distance + Algorithm-2 pattern search
 //! - [`rigl`]       RigL dynamic-sparsity baseline (Fig 6)
+//! - [`serving`]    continuous-batching serving runtime: KV-cached decode,
+//!   admission queue, TCP front end, latency metrics
 //! - [`util`]       PRNG, timers, stats, CLI & property-test helpers
 //! - [`bench`]      in-crate micro-benchmark harness (criterion substitute)
 
@@ -37,5 +39,6 @@ pub mod ntk;
 pub mod patterns;
 pub mod rigl;
 pub mod runtime;
+pub mod serving;
 pub mod sparse;
 pub mod util;

@@ -6,6 +6,7 @@
 //!   ntk-compare  Fig 4: NTK distance of each pattern vs dense (artifacts)
 //!   ntk-search   Appendix K / Algorithm 2 over the analytic NTK
 //!   plan         budget allocation + mask plan for a model schema
+//!   serve        continuous-batching TCP inference on a compiled preset
 //!   microbench   Table 7: expected vs actual density & latency
 //!   flatbench    Fig 11: flat vs product butterfly multiply
 //!   list         list artifacts in the manifest
@@ -16,10 +17,12 @@ use pixelfly::coordinator::{budget, planner, TrainConfig, Trainer};
 use pixelfly::costmodel::Device;
 use pixelfly::data::lra::LraTask;
 use pixelfly::models;
+use pixelfly::nn::Model;
 use pixelfly::ntk;
 use pixelfly::patterns::{baselines, flat_butterfly_mask, BlockMask};
 use pixelfly::runtime::engine::Literal;
 use pixelfly::runtime::{artifacts_dir, Engine};
+use pixelfly::serving::{EngineConfig, ServeEngine, TcpServer};
 use pixelfly::sparse::{butterfly_mm::ButterflyProduct, exec, BsrMatrix, Matrix};
 use pixelfly::util::{stats::time_it, Args, Rng};
 
@@ -45,6 +48,7 @@ fn main() -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "compare" => cmd_compare(&args),
         "ntk-compare" => cmd_ntk_compare(&args),
         "ntk-search" => cmd_ntk_search(&args),
@@ -67,6 +71,10 @@ fn print_help() {
          train        --preset gpt2_s_pixelfly --steps 100 --lr 1e-3 [--lra-task text]\n\
          train        --model vit-s --budget 0.1 [--block 16 --steps 20]\n\
                       (compiled substrate path: preset -> budget -> compile -> train)\n\
+         serve        --model gpt2-s --budget 0.2 [--port 7878 --max-batch 8\n\
+                      --queue-depth 64 --steps 0]\n\
+                      (continuous-batching TCP inference, KV-cached decode;\n\
+                      --steps N trains before freezing; protocol: PXF1)\n\
          compare      --presets mixer_s_dense,mixer_s_pixelfly --steps 50\n\
          ntk-compare  [--batches 2]           (Fig 4, uses ntk_* artifacts)\n\
          ntk-search   [--nb 16 --budget 96]   (Appendix K, analytic NTK)\n\
@@ -136,49 +144,109 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Flags shared by the compiled-substrate subcommands (`train --model`,
+/// `serve`): preset, §3.3 budget fraction, hardware block, seed — one
+/// parsing convention for both, per the CLI contract in README.
+struct CompiledOpts {
+    model: String,
+    budget: f64,
+    block: usize,
+    seed: u64,
+}
+
+impl CompiledOpts {
+    fn from_args(args: &Args, default_model: &str) -> Self {
+        CompiledOpts {
+            model: args.str_or("model", default_model),
+            budget: args.f64_or("budget", 0.1),
+            block: args.usize_or("block", 16),
+            seed: args.u64_or("seed", 0),
+        }
+    }
+
+    /// `models::preset` → §3.3 budget rule → `nn::compile`, with the
+    /// one-line compile summary both subcommands print.
+    fn compile(&self) -> Result<Model> {
+        let dev = Device::with_block(self.block);
+        let schema = models::preset(&self.model, 1)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {:?}", self.model))?;
+        let alloc = budget::rule_of_thumb(&schema, self.budget, &dev);
+        let model = pixelfly::nn::compile(&schema, &alloc, self.block, self.seed)?;
+        println!(
+            "compiled {}: params={} (sparsified {} / dense-kept {} / bias {}) \
+             plan density={:.3} kept {:.1}% of dense GEMM weights",
+            self.model,
+            model.param_count(),
+            model.stats.sparsified_weight_params,
+            model.stats.dense_weight_params,
+            model.stats.bias_params,
+            model.plan.total_density,
+            100.0 * model.stats.sparsification_ratio(),
+        );
+        Ok(model)
+    }
+}
+
 /// The end-to-end pipeline of the paper, entirely on the substrate:
 /// `models::preset` → §3.3 budget rule → `planner::plan_model` →
 /// `nn::compile` → fused train steps → frozen inference session.
 fn cmd_train_compiled(args: &Args) -> Result<()> {
-    let model_name = args.str_or("model", "vit-s");
-    let budget_frac = args.f64_or("budget", 0.1);
-    let block = args.usize_or("block", 16);
+    let opts = CompiledOpts::from_args(args, "vit-s");
     let steps = args.usize_or("steps", 20);
     let lr = args.f32_or("lr", 1e-2);
     let momentum = args.f32_or("momentum", 0.9);
-    let seed = args.u64_or("seed", 0);
-    let dev = Device::with_block(block);
-    let schema = models::preset(&model_name, 1)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?}"))?;
-    let alloc = budget::rule_of_thumb(&schema, budget_frac, &dev);
-    let mut model = pixelfly::nn::compile(&schema, &alloc, block, seed)?;
-    println!(
-        "compiled {model_name}: params={} (sparsified {} / dense-kept {} / bias {}) \
-         plan density={:.3} kept {:.1}% of dense GEMM weights",
-        model.param_count(),
-        model.stats.sparsified_weight_params,
-        model.stats.dense_weight_params,
-        model.stats.bias_params,
-        model.plan.total_density,
-        100.0 * model.stats.sparsification_ratio(),
-    );
-    let report = model.train(steps, lr, momentum, seed);
+    let mut model = opts.compile()?;
+    let report = model.train(steps, lr, momentum, opts.seed);
     println!("{}", report.summary_line());
     if args.bool("curve") {
         println!("{}", report.curve_tsv());
     }
-    // freeze into a serving session; run() hard-asserts the zero-alloc
-    // steady state, so two passes here double as a serving smoke test
+    // freeze into a serving session; strict() keeps the zero-alloc steady
+    // state a hard assert, so two passes here double as a serving smoke test
     let seq = model.seq;
     let in_dim = model.in_dim();
-    let mut rng = Rng::new(seed ^ 0x1D1E);
+    let mut rng = Rng::new(opts.seed ^ 0x1D1E);
     let x = Matrix::randn(seq, in_dim, 1.0, &mut rng);
-    let mut sess = model.into_inference();
-    sess.run(&x);
-    sess.run(&x);
-    println!("inference session: steady-state zero-alloc verified, peak scratch {}B",
-             sess.peak_scratch_bytes());
+    let mut sess = model.into_inference().strict();
+    sess.run(&x)?;
+    sess.run(&x)?;
+    println!("inference session: steady-state zero-alloc verified, peak scratch {}B, \
+              training state shed to {}B",
+             sess.peak_scratch_bytes(), sess.training_state_bytes());
     Ok(())
+}
+
+/// Continuous-batching TCP inference: compile (optionally pre-train), shed
+/// training state into a KV-cached decode session, serve `PXF1` frames.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = CompiledOpts::from_args(args, "gpt2-s");
+    let port = args.usize_or("port", 7878);
+    let max_batch = args.usize_or("max-batch", 8);
+    let queue_depth = args.usize_or("queue-depth", 64);
+    let steps = args.usize_or("steps", 0);
+    let mut model = opts.compile()?;
+    if steps > 0 {
+        let report = model.train(steps, args.f32_or("lr", 1e-2),
+                                 args.f32_or("momentum", 0.9), opts.seed);
+        println!("{}", report.summary_line());
+    }
+    let sess = model.into_decode(max_batch)?;
+    println!(
+        "decode session: {} params, {} KV slots x {} positions ({:.1} KiB cache), \
+         training state shed to {}B",
+        sess.param_count(), sess.max_slots(), sess.max_seq(),
+        sess.cache_bytes() as f64 / 1024.0, sess.training_state_bytes(),
+    );
+    let engine = ServeEngine::start(sess, EngineConfig { max_batch, queue_depth });
+    let server = TcpServer::start(&format!("0.0.0.0:{port}"), engine.handle())?;
+    println!("serving on {} (protocol PXF1; Ctrl-C to stop)", server.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let m = engine.metrics();
+        if m.requests > 0 {
+            println!("{m}");
+        }
+    }
 }
 
 fn parse_lra_task(s: &str) -> Result<LraTask> {

@@ -18,6 +18,7 @@ use crate::sparse::dense::{transpose_into, Matrix};
 use crate::sparse::exec::{self, Activation, Workspace};
 use crate::util::Rng;
 
+use super::decode::DecodeCtx;
 use super::{ensure_shape, DenseLinear, Module, PhaseFlops};
 
 /// The paper's §3.2 pixelfly layer as a module: `y = act(x·(B_flat + U·V)
@@ -131,6 +132,24 @@ impl Module for LowRankResidual {
         // backward peak: t + dyv + the low-rank dX term (2r + in per
         // row) — report a bound covering both
         rows * (2 * self.rank() + self.in_dim().max(self.out_dim()))
+    }
+
+    fn shed_training_state(&mut self) {
+        self.grads.d_flat = Vec::new();
+        self.grads.du = Matrix::zeros(0, 0);
+        self.grads.dv = Matrix::zeros(0, 0);
+        self.m_flat = Vec::new();
+        self.m_u = Vec::new();
+        self.m_v = Vec::new();
+        self.db = Vec::new();
+        self.mb = Vec::new();
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        4 * (self.grads.d_flat.capacity() + self.grads.du.data.capacity()
+             + self.grads.dv.data.capacity() + self.m_flat.capacity()
+             + self.m_u.capacity() + self.m_v.capacity() + self.db.capacity()
+             + self.mb.capacity())
     }
 }
 
@@ -336,6 +355,68 @@ impl Module for PixelflyAttention {
             .unwrap_or(0);
         kernel + proj
     }
+
+    fn decode_capable(&self) -> bool {
+        // the single-query cache path replays causal masking; a
+        // non-causal block would need future keys that don't exist yet
+        self.plan.causal() && self.wq.decode_capable() && self.wk.decode_capable()
+            && self.wv.decode_capable() && self.wo.decode_capable()
+    }
+
+    fn decode_into(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut DecodeCtx,
+                   ws: &mut Workspace) {
+        let n = x.rows;
+        let d = self.d_head();
+        ensure_shape(&mut self.q, n, d);
+        ensure_shape(&mut self.k, n, d);
+        ensure_shape(&mut self.v, n, d);
+        ensure_shape(&mut self.o, n, d);
+        self.wq.decode_into(x, &mut self.q, ctx, ws);
+        self.wk.decode_into(x, &mut self.k, ctx, ws);
+        self.wv.decode_into(x, &mut self.v, ctx, ws);
+        let b = ctx.max_seq() / self.plan.grid_blocks();
+        let mut scores = ws.take(b);
+        {
+            let (layer, slots, positions) = ctx.claim(d);
+            // append this step's K/V rows FIRST so position p reads the
+            // row written at p (self-attention includes the new token)
+            for i in 0..n {
+                layer.store(slots[i], positions[i], self.k.row(i), self.v.row(i));
+            }
+            for i in 0..n {
+                let (kc, vc) = layer.slot(slots[i]);
+                self.plan.decode_query(self.q.row(i), kc, vc, positions[i],
+                                       self.o.row_mut(i), &mut scores);
+            }
+        }
+        ws.give(scores);
+        self.wo.decode_into(&self.o, y, ctx, ws);
+        if self.residual {
+            for (yv, xv) in y.data.iter_mut().zip(&x.data) {
+                *yv += xv;
+            }
+        }
+    }
+
+    fn shed_training_state(&mut self) {
+        for m in [&mut self.dq, &mut self.dk, &mut self.dv, &mut self.d_o,
+                  &mut self.dtmp, &mut self.dres] {
+            *m = Matrix::zeros(0, 0);
+        }
+        self.wq.shed_training_state();
+        self.wk.shed_training_state();
+        self.wv.shed_training_state();
+        self.wo.shed_training_state();
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        4 * [&self.dq, &self.dk, &self.dv, &self.d_o, &self.dtmp, &self.dres]
+            .iter()
+            .map(|m| m.data.capacity())
+            .sum::<usize>()
+            + self.wq.training_state_bytes() + self.wk.training_state_bytes()
+            + self.wv.training_state_bytes() + self.wo.training_state_bytes()
+    }
 }
 
 /// Two-layer MLP (expand + activation, contract) with an optional
@@ -432,6 +513,36 @@ impl Module for MlpBlock {
 
     fn scratch_elems(&self, rows: usize) -> usize {
         self.up.scratch_elems(rows).max(self.down.scratch_elems(rows))
+    }
+
+    fn decode_capable(&self) -> bool {
+        self.up.decode_capable() && self.down.decode_capable()
+    }
+
+    fn decode_into(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut DecodeCtx,
+                   ws: &mut Workspace) {
+        // same dataflow as forward_into minus the backward stash (decode
+        // sessions never run a backward pass)
+        ensure_shape(&mut self.hidden, x.rows, self.up.out_dim());
+        self.up.decode_into(x, &mut self.hidden, ctx, ws);
+        self.down.decode_into(&self.hidden, y, ctx, ws);
+        if self.residual {
+            for (yv, xv) in y.data.iter_mut().zip(&x.data) {
+                *yv += xv;
+            }
+        }
+    }
+
+    fn shed_training_state(&mut self) {
+        self.dhidden = Matrix::zeros(0, 0);
+        self.dres = Matrix::zeros(0, 0);
+        self.up.shed_training_state();
+        self.down.shed_training_state();
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        4 * (self.dhidden.data.capacity() + self.dres.data.capacity())
+            + self.up.training_state_bytes() + self.down.training_state_bytes()
     }
 }
 
@@ -533,6 +644,27 @@ impl Module for MixerBlock {
             .scratch_elems(self.channel.in_dim())
             .max(self.channel.scratch_elems(rows))
     }
+
+    fn decode_capable(&self) -> bool {
+        // token mixing is a GEMM across the WHOLE sequence axis — there
+        // is no incremental per-position form to cache
+        false
+    }
+
+    fn shed_training_state(&mut self) {
+        self.dmid = Matrix::zeros(0, 0);
+        self.dyt = Matrix::zeros(0, 0);
+        self.dxt = Matrix::zeros(0, 0);
+        self.token.shed_training_state();
+        self.channel.shed_training_state();
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        4 * (self.dmid.data.capacity() + self.dyt.data.capacity()
+             + self.dxt.data.capacity())
+            + self.token.training_state_bytes()
+            + self.channel.training_state_bytes()
+    }
 }
 
 /// Input embedding, kept dense per the paper (§3.3 step 1 sparsifies
@@ -576,6 +708,14 @@ impl Module for Embedding {
     fn flops(&self, rows: usize) -> PhaseFlops {
         self.0.flops(rows)
     }
+
+    fn shed_training_state(&mut self) {
+        self.0.shed_training_state()
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        self.0.training_state_bytes()
+    }
 }
 
 /// Classifier / LM head, kept dense per the paper — the other dense-kept
@@ -617,6 +757,14 @@ impl Module for ClassifierHead {
 
     fn flops(&self, rows: usize) -> PhaseFlops {
         self.0.flops(rows)
+    }
+
+    fn shed_training_state(&mut self) {
+        self.0.shed_training_state()
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        self.0.training_state_bytes()
     }
 }
 

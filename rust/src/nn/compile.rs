@@ -23,6 +23,7 @@ use crate::util::Rng;
 
 use super::blocks::{ClassifierHead, Embedding, LowRankResidual, MixerBlock, MlpBlock,
                     PixelflyAttention};
+use super::decode::{DecodeSession, SessionError};
 use super::{drive_substrate_training, ensure_shape, mse_loss_grad, Module,
             PhaseFlops, Sequential, StepTimer, StepTimings};
 
@@ -320,35 +321,70 @@ impl Model {
     /// the session gets a FRESH workspace so its scratch metering
     /// (`peak_scratch_bytes`) reports the serving footprint alone, not
     /// the training high-water mark, and the training-sized scratch pool
-    /// is released. (Module-owned gradient/momentum buffers remain
-    /// inside the tree — shedding them is future work.) The first `run`
-    /// is the warmup pass; `run` hard-asserts zero allocations from the
-    /// second pass on.
-    pub fn into_inference(self) -> InferenceSession {
+    /// is released. Module-owned gradient/momentum buffers are shed at
+    /// freeze, so a frozen session holds weights + forward scratch only
+    /// (`training_state_bytes()` reports 0 afterwards). The first `run`
+    /// at the largest batch so far is a warmup pass; from then on `run`
+    /// returns `Err(SessionError::SteadyStateAlloc)` — or panics under
+    /// `strict()` — if a steady-state pass allocates.
+    pub fn into_inference(mut self) -> InferenceSession {
+        self.body.shed_training_state();
         InferenceSession {
             body: self.body,
             ws: Workspace::new(),
             y: self.y,
-            last_shape: None,
+            warmed_rows: 0,
             warm_allocs: None,
+            strict: false,
         }
+    }
+
+    /// Freeze into a KV-cached autoregressive decode session with
+    /// `max_slots` concurrent cache slots (see [`DecodeSession`]).
+    /// Training state is shed exactly as in [`Model::into_inference`].
+    /// Fails for model families with no incremental form: token-mixing
+    /// blocks and non-causal attention are bound to whole sequences.
+    pub fn into_decode(mut self, max_slots: usize) -> Result<DecodeSession> {
+        if !self.body.decode_capable() {
+            bail!(
+                "model '{}' has no incremental decode path: KV-cached decode \
+                 requires causal attention end to end (token-mixing and \
+                 non-causal blocks recompute the whole sequence)",
+                self.name
+            );
+        }
+        self.body.shed_training_state();
+        Ok(DecodeSession::new(self.body, self.seq, max_slots))
     }
 }
 
-/// Forward-only serving session over a compiled model with a hard
-/// zero-alloc steady-state contract: after the first pass at a given
-/// input shape, `run` ASSERTS that the workspace never touches the
-/// allocator again (`alloc_events` metered) — the contract is enforced,
-/// not aspirational.
+/// Forward-only serving session over a compiled model with a metered
+/// zero-alloc steady-state contract over a ROWS ENVELOPE: the largest
+/// batch seen so far sets the envelope, and any later pass at or under
+/// it must not touch the allocator (`alloc_events` metered). Growing the
+/// batch past the envelope is a legitimate fresh warmup, not a
+/// violation. Violations surface as [`SessionError::SteadyStateAlloc`]
+/// by default; [`InferenceSession::strict`] upgrades them to panics for
+/// tests and benches that want the old hard-assert behaviour.
 pub struct InferenceSession {
     body: Sequential,
     ws: Workspace,
     y: Matrix,
-    last_shape: Option<(usize, usize)>,
+    /// largest row count run so far — the top of the alloc-free envelope
+    warmed_rows: usize,
     warm_allocs: Option<usize>,
+    strict: bool,
 }
 
 impl InferenceSession {
+    /// Upgrade steady-state contract violations from typed `Err` to
+    /// panic. Serving keeps the default (an overloaded replica should
+    /// shed a request, not die); tests and benches opt in.
+    pub fn strict(mut self) -> Self {
+        self.strict = true;
+        self
+    }
+
     pub fn in_dim(&self) -> usize {
         self.body.in_dim()
     }
@@ -369,29 +405,67 @@ impl InferenceSession {
         self.ws.peak_bytes()
     }
 
+    /// Bytes still held by module-owned gradient/momentum buffers —
+    /// zero after `into_inference` (shed at freeze); exposed so benches
+    /// can assert the serving memory story.
+    pub fn training_state_bytes(&self) -> usize {
+        self.body.training_state_bytes()
+    }
+
     /// One forward pass; the returned reference lives in the session's
-    /// output buffer. Panics if a steady-state pass (same input shape as
-    /// the previous one, post-warmup) allocates. Runs as one whole-step
-    /// dispatch region, so serving latency pays the pool's doorbell once
-    /// per layer batch, never a thread spawn.
-    pub fn run(&mut self, x: &Matrix) -> &Matrix {
-        let shape = (x.rows, x.cols);
-        if self.last_shape != Some(shape) {
-            // new shape: the next pass is a fresh warmup
-            self.last_shape = Some(shape);
-            self.warm_allocs = None;
+    /// output buffer. Runs as one whole-step dispatch region, so serving
+    /// latency pays the pool's doorbell once per layer batch, never a
+    /// thread spawn.
+    ///
+    /// Errors: wrong input width is [`SessionError::Shape`]; an
+    /// allocation on a pass inside the warmed rows envelope is
+    /// [`SessionError::SteadyStateAlloc`] (panic under [`strict`]). After
+    /// an alloc violation the watermark re-arms, so a caller may treat
+    /// the error as a degraded-but-correct result: the output buffer IS
+    /// valid.
+    ///
+    /// [`strict`]: InferenceSession::strict
+    pub fn run(&mut self, x: &Matrix) -> Result<&Matrix, SessionError> {
+        if x.cols != self.body.in_dim() {
+            return Err(SessionError::Shape {
+                what: "input cols",
+                expected: self.body.in_dim(),
+                got: x.cols,
+            });
         }
+        let grew = x.rows > self.warmed_rows;
         ensure_shape(&mut self.y, x.rows, self.body.out_dim());
         let InferenceSession { body, ws, y, .. } = self;
         exec::step_scope(|| body.forward_into(x, y, ws));
-        match self.warm_allocs {
-            None => self.warm_allocs = Some(self.ws.alloc_events()),
-            Some(w) => assert_eq!(
-                self.ws.alloc_events(), w,
-                "InferenceSession steady state must not allocate"
-            ),
+        if grew {
+            // a larger batch legitimately sizes fresh buffers: extend the
+            // envelope and take a new warm watermark
+            self.warmed_rows = x.rows;
+            self.warm_allocs = Some(self.ws.alloc_events());
+        } else {
+            match self.warm_allocs {
+                None => self.warm_allocs = Some(self.ws.alloc_events()),
+                Some(warm) => {
+                    let now = self.ws.alloc_events();
+                    if now != warm {
+                        if self.strict {
+                            panic!(
+                                "InferenceSession steady state must not \
+                                 allocate (warm {warm} -> {now} at {} rows)",
+                                x.rows
+                            );
+                        }
+                        self.warm_allocs = Some(now);
+                        return Err(SessionError::SteadyStateAlloc {
+                            warm,
+                            now,
+                            rows: x.rows,
+                        });
+                    }
+                }
+            }
         }
-        &self.y
+        Ok(&self.y)
     }
 }
 

@@ -1,0 +1,388 @@
+//! KV-cached autoregressive decode over a frozen module tree.
+//!
+//! [`DecodeSession`] is the serving-side counterpart of
+//! [`InferenceSession`](super::InferenceSession): instead of re-running
+//! the whole prefix per generated token (O(seq²) per token), each causal
+//! attention layer appends the step's K/V rows into a per-slot cache
+//! ([`KvLayer`]) and answers a single-query attention against it
+//! (O(seq) per token). A session owns `max_slots` independent cache
+//! slots so a serving engine can coalesce concurrent requests into one
+//! micro-batch per decode step, with requests joining and leaving
+//! between steps (continuous batching).
+//!
+//! The cache is laid out `[max_slots, max_seq, d]` per attention layer
+//! and slots are reused WITHOUT clearing: decode at position `p` only
+//! reads cache rows `<= p`, and every request fills its slot
+//! monotonically from position 0, so stale rows from a previous
+//! occupant (or from warmup) are unreachable before they are
+//! overwritten.
+//!
+//! Per-row numerics are row-count independent everywhere in the decode
+//! path (each row's reduction order is fixed by the plan, never by the
+//! batch), so a token decoded in a 7-row micro-batch is bit-identical
+//! to the same token decoded alone — the property that lets the serving
+//! tests compare continuously-batched output against a serial oracle
+//! with exact equality.
+
+use crate::sparse::dense::Matrix;
+use crate::sparse::exec::{self, Workspace};
+
+use super::{ensure_shape, Module, Sequential};
+
+/// Per-attention-layer K/V cache: `[max_slots, max_seq, d]` for each of
+/// K and V, flat. Rows are written by [`KvLayer::store`] as decode
+/// advances and read back as one contiguous `[max_seq, d]` slab per
+/// slot by the single-query attention kernel.
+pub struct KvLayer {
+    d: usize,
+    max_seq: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvLayer {
+    fn new(d: usize, max_slots: usize, max_seq: usize) -> Self {
+        KvLayer {
+            d,
+            max_seq,
+            k: vec![0.0; max_slots * max_seq * d],
+            v: vec![0.0; max_slots * max_seq * d],
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Write this step's K/V rows for `slot` at sequence position `pos`.
+    pub fn store(&mut self, slot: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        assert_eq!(krow.len(), self.d);
+        assert_eq!(vrow.len(), self.d);
+        let o = (slot * self.max_seq + pos) * self.d;
+        self.k[o..o + self.d].copy_from_slice(krow);
+        self.v[o..o + self.d].copy_from_slice(vrow);
+    }
+
+    /// The full `[max_seq, d]` K and V slabs of one slot (rows beyond
+    /// the slot's current position hold unspecified stale data — the
+    /// causal single-query kernel never reads past its position).
+    pub fn slot(&self, slot: usize) -> (&[f32], &[f32]) {
+        let o = slot * self.max_seq * self.d;
+        let len = self.max_seq * self.d;
+        (&self.k[o..o + len], &self.v[o..o + len])
+    }
+}
+
+/// Step context threaded through [`Module::decode_into`]: the KV cache
+/// stack plus this step's slot/position assignment. Attention layers
+/// claim their cache layer in tree order each step (the cursor resets
+/// in [`DecodeCtx::begin_step`]), so the module tree itself needs no
+/// per-layer cache wiring.
+pub struct DecodeCtx {
+    max_slots: usize,
+    max_seq: usize,
+    layers: Vec<KvLayer>,
+    /// next cache layer to hand out this step (tree-order claim)
+    cursor: usize,
+    /// this step's slot per batch row
+    slots: Vec<usize>,
+    /// this step's sequence position per batch row
+    positions: Vec<usize>,
+}
+
+impl DecodeCtx {
+    pub fn new(max_slots: usize, max_seq: usize) -> Self {
+        assert!(max_slots > 0 && max_seq > 0);
+        DecodeCtx {
+            max_slots,
+            max_seq,
+            layers: Vec::new(),
+            cursor: 0,
+            slots: Vec::new(),
+            positions: Vec::new(),
+        }
+    }
+
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Arm the context for one decode step: batch row `i` belongs to
+    /// `slots[i]` and sits at sequence position `positions[i]`.
+    pub fn begin_step(&mut self, slots: &[usize], positions: &[usize]) {
+        assert_eq!(slots.len(), positions.len());
+        self.cursor = 0;
+        self.slots.clear();
+        self.slots.extend_from_slice(slots);
+        self.positions.clear();
+        self.positions.extend_from_slice(positions);
+    }
+
+    /// Claim the next cache layer in tree order (creating it with head
+    /// dim `d` on the first step) together with this step's
+    /// slot/position assignment — split borrows so the caller can write
+    /// the cache while indexing by slot/position.
+    pub fn claim(&mut self, d: usize) -> (&mut KvLayer, &[usize], &[usize]) {
+        let i = self.cursor;
+        self.cursor += 1;
+        if self.layers.len() == i {
+            self.layers.push(KvLayer::new(d, self.max_slots, self.max_seq));
+        }
+        let layer = &mut self.layers[i];
+        assert_eq!(layer.d, d, "cache layer {i} claimed with head dim {d}, built \
+                                with {}", layer.d);
+        (layer, &self.slots, &self.positions)
+    }
+
+    /// Cache bytes held by every layer (serving-memory accounting).
+    pub fn cache_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| 4 * (l.k.capacity() + l.v.capacity()))
+            .sum()
+    }
+}
+
+/// Typed error surface of the frozen sessions (serving must not panic
+/// the process; the hard assert lives behind `strict()` for tests and
+/// benches).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SessionError {
+    /// A steady-state pass touched the allocator (the zero-alloc
+    /// contract): `warm` was the armed count, `now` what the pass left.
+    SteadyStateAlloc { warm: usize, now: usize, rows: usize },
+    /// An input dimension disagreed with the frozen model.
+    Shape { what: &'static str, expected: usize, got: usize },
+    /// A slot/position/batch value exceeded the session's declared caps.
+    Bounds { what: &'static str, got: usize, max: usize },
+    /// The same cache slot appeared twice in one micro-batch.
+    DuplicateSlot { slot: usize },
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::SteadyStateAlloc { warm, now, rows } => {
+                write!(f, "steady-state pass allocated (warm {warm} -> {now} \
+                           alloc events at {rows} rows)")
+            }
+            SessionError::Shape { what, expected, got } => {
+                write!(f, "shape mismatch: {what} must be {expected}, got {got}")
+            }
+            SessionError::Bounds { what, got, max } => {
+                write!(f, "{what} {got} out of bounds (max {max})")
+            }
+            SessionError::DuplicateSlot { slot } => {
+                write!(f, "slot {slot} appears twice in one micro-batch")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// Frozen decode session: a shed module tree plus the KV cache stack,
+/// stepped one token per active slot at a time. Built via
+/// [`Model::into_decode`](super::Model::into_decode), which warms every
+/// buffer at the worst-case batch; from then on `step` is zero-alloc
+/// and returns a typed error (or panics under `strict`) if that
+/// contract breaks.
+pub struct DecodeSession {
+    body: Sequential,
+    ctx: DecodeCtx,
+    ws: Workspace,
+    y: Matrix,
+    warm_allocs: Option<usize>,
+    strict: bool,
+}
+
+impl DecodeSession {
+    pub(crate) fn new(body: Sequential, max_seq: usize, max_slots: usize) -> Self {
+        let mut s = DecodeSession {
+            ctx: DecodeCtx::new(max_slots, max_seq),
+            ws: Workspace::new(),
+            y: Matrix::zeros(0, 0),
+            warm_allocs: None,
+            strict: false,
+            body,
+        };
+        s.warmup();
+        s
+    }
+
+    /// Warm every member buffer and the workspace free list at the
+    /// worst case — a full `max_slots` batch at the last position, so
+    /// every later step (fewer rows, earlier positions) is served from
+    /// the free list. The garbage this writes into the caches' last row
+    /// is unreachable: a real request overwrites position `p` before
+    /// its decode reads it.
+    fn warmup(&mut self) {
+        let n = self.ctx.max_slots;
+        let x = Matrix::zeros(n, self.body.in_dim());
+        let slots: Vec<usize> = (0..n).collect();
+        let positions = vec![self.ctx.max_seq - 1; n];
+        self.step(&x, &slots, &positions)
+            .expect("decode warmup cannot hit the steady-state contract");
+    }
+
+    /// Arm the hard-assert mode: a steady-state allocation panics
+    /// instead of returning `Err` (tests and benches want the loud
+    /// failure; serving wants the typed one).
+    pub fn strict(mut self) -> Self {
+        self.strict = true;
+        self
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.body.in_dim()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.body.out_dim()
+    }
+
+    pub fn max_slots(&self) -> usize {
+        self.ctx.max_slots
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.ctx.max_seq
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.body.param_count()
+    }
+
+    pub fn alloc_events(&self) -> usize {
+        self.ws.alloc_events()
+    }
+
+    pub fn peak_scratch_bytes(&self) -> usize {
+        self.ws.peak_bytes()
+    }
+
+    /// KV cache footprint in bytes across every attention layer.
+    pub fn cache_bytes(&self) -> usize {
+        self.ctx.cache_bytes()
+    }
+
+    /// Gradient/momentum bytes still held by the tree (0 after the
+    /// freeze-time shed — the serving-memory assertion in the e2e
+    /// bench).
+    pub fn training_state_bytes(&self) -> usize {
+        self.body.training_state_bytes()
+    }
+
+    /// One decode step: batch row `i` feeds slot `slots[i]` at sequence
+    /// position `positions[i]`; the returned `[n, out_dim]` rows are
+    /// each slot's next-token output. Positions within a slot must be
+    /// fed monotonically from 0 (prefill is decode too: feed the prompt
+    /// rows one position at a time).
+    pub fn step(&mut self, x: &Matrix, slots: &[usize],
+                positions: &[usize]) -> Result<&Matrix, SessionError> {
+        let n = x.rows;
+        if x.cols != self.body.in_dim() {
+            return Err(SessionError::Shape {
+                what: "input cols",
+                expected: self.body.in_dim(),
+                got: x.cols,
+            });
+        }
+        if slots.len() != n {
+            return Err(SessionError::Shape { what: "slots len", expected: n,
+                                             got: slots.len() });
+        }
+        if positions.len() != n {
+            return Err(SessionError::Shape { what: "positions len", expected: n,
+                                             got: positions.len() });
+        }
+        if n == 0 || n > self.ctx.max_slots {
+            return Err(SessionError::Bounds { what: "batch rows", got: n,
+                                              max: self.ctx.max_slots });
+        }
+        for (i, &s) in slots.iter().enumerate() {
+            if s >= self.ctx.max_slots {
+                return Err(SessionError::Bounds { what: "slot", got: s,
+                                                  max: self.ctx.max_slots - 1 });
+            }
+            if slots[..i].contains(&s) {
+                return Err(SessionError::DuplicateSlot { slot: s });
+            }
+        }
+        for &p in positions {
+            if p >= self.ctx.max_seq {
+                return Err(SessionError::Bounds { what: "position", got: p,
+                                                  max: self.ctx.max_seq - 1 });
+            }
+        }
+        self.ctx.begin_step(slots, positions);
+        ensure_shape(&mut self.y, n, self.body.out_dim());
+        let DecodeSession { body, ctx, ws, y, .. } = self;
+        exec::step_scope(|| body.decode_into(x, y, ctx, ws));
+        match self.warm_allocs {
+            None => self.warm_allocs = Some(self.ws.alloc_events()),
+            Some(warm) => {
+                let now = self.ws.alloc_events();
+                if now != warm {
+                    if self.strict {
+                        panic!("DecodeSession steady state must not allocate \
+                                (warm {warm} -> {now} at {n} rows)");
+                    }
+                    // re-arm so one violation reports once, not forever
+                    self.warm_allocs = Some(now);
+                    return Err(SessionError::SteadyStateAlloc { warm, now, rows: n });
+                }
+            }
+        }
+        Ok(&self.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_layer_roundtrips_rows() {
+        let mut l = KvLayer::new(4, 2, 8);
+        l.store(1, 3, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        let (k, v) = l.slot(1);
+        assert_eq!(&k[12..16], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&v[12..16], &[5.0, 6.0, 7.0, 8.0]);
+        let (k0, _) = l.slot(0);
+        assert!(k0.iter().all(|&x| x == 0.0), "slots must not alias");
+    }
+
+    #[test]
+    fn ctx_claims_layers_in_tree_order() {
+        let mut ctx = DecodeCtx::new(2, 8);
+        ctx.begin_step(&[0, 1], &[3, 5]);
+        {
+            let (l, slots, positions) = ctx.claim(4);
+            l.store(slots[0], positions[0], &[1.0; 4], &[2.0; 4]);
+            assert_eq!(positions, &[3, 5]);
+        }
+        let _ = ctx.claim(4); // second layer
+        assert_eq!(ctx.layers.len(), 2);
+        // next step re-claims the SAME layers
+        ctx.begin_step(&[1], &[6]);
+        {
+            let (l, _, _) = ctx.claim(4);
+            let (k, _) = l.slot(0);
+            assert_eq!(k[3 * 4], 1.0, "layer 0 state persists across steps");
+        }
+        assert!(ctx.cache_bytes() >= 2 * 2 * (2 * 8 * 4) * 4);
+    }
+
+    #[test]
+    fn session_error_displays() {
+        let e = SessionError::Bounds { what: "slot", got: 9, max: 3 };
+        assert!(e.to_string().contains("slot 9"));
+        let e = SessionError::SteadyStateAlloc { warm: 1, now: 2, rows: 4 };
+        assert!(e.to_string().contains("warm 1 -> 2"));
+    }
+}

@@ -105,6 +105,18 @@ impl Module for SparseLinear {
             * (self.w.block * self.w.block) as f64;
         PhaseFlops { fwd, bwd: 2.0 * fwd, update: 4.0 * self.param_count() as f64 }
     }
+
+    fn shed_training_state(&mut self) {
+        self.dw = Vec::new();
+        self.db = Vec::new();
+        self.mw = Vec::new();
+        self.mb = Vec::new();
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        4 * (self.dw.capacity() + self.db.capacity() + self.mw.capacity()
+             + self.mb.capacity())
+    }
 }
 
 /// Dense twin of [`SparseLinear`] — the baseline the fig1 bench compares
@@ -189,6 +201,18 @@ impl Module for DenseLinear {
     fn flops(&self, rows: usize) -> PhaseFlops {
         let fwd = 2.0 * (rows * self.w.rows) as f64 * self.w.cols as f64;
         PhaseFlops { fwd, bwd: 2.0 * fwd, update: 4.0 * self.param_count() as f64 }
+    }
+
+    fn shed_training_state(&mut self) {
+        self.dw = Matrix::zeros(0, 0);
+        self.db = Vec::new();
+        self.mw = Vec::new();
+        self.mb = Vec::new();
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        4 * (self.dw.data.capacity() + self.db.capacity() + self.mw.capacity()
+             + self.mb.capacity())
     }
 }
 
@@ -287,6 +311,20 @@ impl Module for Linear {
         match self {
             Linear::Sparse(l) => l.flops(rows),
             Linear::Dense(l) => l.flops(rows),
+        }
+    }
+
+    fn shed_training_state(&mut self) {
+        match self {
+            Linear::Sparse(l) => l.shed_training_state(),
+            Linear::Dense(l) => l.shed_training_state(),
+        }
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        match self {
+            Linear::Sparse(l) => l.training_state_bytes(),
+            Linear::Dense(l) => l.training_state_bytes(),
         }
     }
 }

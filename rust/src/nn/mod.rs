@@ -26,11 +26,13 @@
 
 pub mod blocks;
 pub mod compile;
+pub mod decode;
 pub mod linear;
 
 pub use blocks::{ClassifierHead, Embedding, LowRankResidual, MixerBlock, MlpBlock,
                  PixelflyAttention};
 pub use compile::{compile, CompileStats, InferenceSession, Model};
+pub use decode::{DecodeCtx, DecodeSession, KvLayer, SessionError};
 pub use linear::{DenseLinear, Linear, SparseLinear};
 
 use std::time::{Duration, Instant};
@@ -75,7 +77,11 @@ impl std::iter::Sum for PhaseFlops {
 
 /// A trainable operator `[rows, in_dim] -> [rows, out_dim]` on the
 /// substrate. See the module docs for the ownership contract.
-pub trait Module {
+///
+/// `Send` is a supertrait so frozen module trees can move into a
+/// serving engine thread; every implementor owns plain buffers (and
+/// `Arc`-shared immutable plans), so the bound costs nothing.
+pub trait Module: Send {
     /// Input feature dimension (columns of `x`).
     fn in_dim(&self) -> usize;
 
@@ -110,6 +116,41 @@ pub trait Module {
     /// at `rows` input rows (0 = the module never touches the workspace).
     fn scratch_elems(&self, rows: usize) -> usize {
         let _ = rows;
+        0
+    }
+
+    /// Whether this module supports the incremental decode path
+    /// (`decode_into`). Position-independent modules are decode-capable
+    /// by default; modules bound to whole sequences (token mixing,
+    /// non-causal attention) override to `false`, and composites AND
+    /// their children.
+    fn decode_capable(&self) -> bool {
+        true
+    }
+
+    /// Incremental forward for autoregressive decode: row `i` of `x` is
+    /// ONE token of cache slot `ctx.slots[i]` at sequence position
+    /// `ctx.positions[i]`. Position-independent modules (the default)
+    /// just forward; causal attention overrides to append K/V into its
+    /// claimed [`decode::KvLayer`] and run a single-query pass against
+    /// the cache. Only meaningful when [`Module::decode_capable`].
+    fn decode_into(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut decode::DecodeCtx,
+                   ws: &mut Workspace) {
+        let _ = ctx;
+        self.forward_into(x, y, ws);
+    }
+
+    /// Drop gradient/momentum (and backward-only stash) buffers at
+    /// freeze time — inference sessions never call `backward_into` /
+    /// `update` again. Calling either afterwards is a contract
+    /// violation (it may panic on emptied buffers). Default: nothing
+    /// held, nothing to shed.
+    fn shed_training_state(&mut self) {}
+
+    /// Bytes still held by gradient/momentum/backward-stash buffers
+    /// ([`Module::shed_training_state`] drives this to 0) — the
+    /// serving-memory meter the e2e bench asserts on.
+    fn training_state_bytes(&self) -> usize {
         0
     }
 }
@@ -390,6 +431,42 @@ impl Module for Sequential {
         // stages run one after another and give their scratch back, so
         // the footprint is the widest single stage, not the sum
         self.mods.iter().map(|m| m.scratch_elems(rows)).max().unwrap_or(0)
+    }
+
+    fn decode_capable(&self) -> bool {
+        self.mods.iter().all(|m| m.decode_capable())
+    }
+
+    fn decode_into(&mut self, x: &Matrix, y: &mut Matrix, ctx: &mut decode::DecodeCtx,
+                   ws: &mut Workspace) {
+        let n = self.mods.len();
+        for i in 0..n - 1 {
+            let cols = self.mods[i].out_dim();
+            ensure_shape(&mut self.acts[i], x.rows, cols);
+        }
+        for i in 0..n {
+            let (done, rest) = self.acts.split_at_mut(i);
+            let input: &Matrix = if i == 0 { x } else { &done[i - 1] };
+            if i + 1 == n {
+                self.mods[i].decode_into(input, y, ctx, ws);
+            } else {
+                self.mods[i].decode_into(input, &mut rest[0], ctx, ws);
+            }
+        }
+    }
+
+    fn shed_training_state(&mut self) {
+        for g in &mut self.grads {
+            *g = Matrix::zeros(0, 0);
+        }
+        for m in &mut self.mods {
+            m.shed_training_state();
+        }
+    }
+
+    fn training_state_bytes(&self) -> usize {
+        4 * self.grads.iter().map(|g| g.data.capacity()).sum::<usize>()
+            + self.mods.iter().map(|m| m.training_state_bytes()).sum::<usize>()
     }
 }
 

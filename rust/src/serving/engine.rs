@@ -1,0 +1,424 @@
+//! Continuous-batching engine: one thread owns a [`DecodeSession`] and a
+//! slot table; concurrent requests coalesce into padded micro-batches and
+//! new requests join BETWEEN decode steps, never waiting for the current
+//! batch to finish (continuous batching, not static batching).
+//!
+//! Shape of the loop:
+//!
+//! ```text
+//! handles ── generate() ──► bounded queue ──► admit into free slots ─┐
+//!                                                                    ▼
+//!            deliver ◄── finished requests ◄── one decode step over every
+//!                                              active slot (1 row each)
+//! ```
+//!
+//! Prompts are fed through the same decode path one row per step
+//! (incremental prefill), so a freshly admitted request's prefill rows
+//! ride along with other requests' decode rows in the same micro-batch.
+//! Per-row numerics are batch-composition-independent (see
+//! `AttnPlan::decode_query`), so a request's output is bit-identical
+//! whatever it was batched with — the concurrency test exploits this.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::nn::DecodeSession;
+use crate::sparse::dense::Matrix;
+
+use super::metrics::{MetricsSnapshot, Recorder};
+
+/// Engine sizing. `max_batch` is clamped to the session's slot count.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// concurrent requests decoded per step (KV slots used)
+    pub max_batch: usize,
+    /// admission queue bound; producers block (backpressure) when full
+    pub queue_depth: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_batch: 8, queue_depth: 64 }
+    }
+}
+
+/// Why a request was rejected or abandoned. Validation errors are
+/// returned before the request ever queues; `EngineDown` reaches
+/// everything in flight when the engine stops.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestError {
+    /// prompt + generation would overflow the KV cache
+    TooLong { prompt: usize, gen: usize, max_seq: usize },
+    /// wrong width / empty prompt / zero generation
+    BadShape { what: &'static str, expected: usize, got: usize },
+    EngineDown(String),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::TooLong { prompt, gen, max_seq } => write!(
+                f,
+                "request needs {prompt} prompt + {gen} generated rows but the \
+                 KV cache holds max_seq={max_seq}"
+            ),
+            RequestError::BadShape { what, expected, got } => {
+                write!(f, "bad request shape: {what} expected {expected}, got {got}")
+            }
+            RequestError::EngineDown(m) => write!(f, "engine down: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// One-shot rendezvous between a blocked client thread and the engine.
+#[derive(Default)]
+struct ResponseCell {
+    slot: Mutex<Option<Result<Matrix, RequestError>>>,
+    cv: Condvar,
+}
+
+impl ResponseCell {
+    fn deliver(&self, r: Result<Matrix, RequestError>) {
+        *self.slot.lock().unwrap() = Some(r);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<Matrix, RequestError> {
+        let mut g = self.slot.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+struct Pending {
+    prompt: Matrix,
+    gen: usize,
+    cell: Arc<ResponseCell>,
+    enqueued: Instant,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    /// producers park here when the queue is at depth
+    space: Condvar,
+    /// the engine thread parks here when fully idle
+    work: Condvar,
+    shutdown: AtomicBool,
+    metrics: Mutex<Recorder>,
+}
+
+/// Cloneable client endpoint; `generate` blocks until the engine delivers.
+#[derive(Clone)]
+pub struct EngineHandle {
+    shared: Arc<Shared>,
+    d: usize,
+    max_seq: usize,
+    queue_depth: usize,
+}
+
+impl EngineHandle {
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Submit one request and block until its `gen × d` output is ready.
+    /// Row `i` of the result is the model's prediction following the
+    /// prompt plus `i` already-generated rows (greedy continuous
+    /// autoregression in embedding space). Backpressure: blocks while the
+    /// admission queue is full.
+    pub fn generate(&self, prompt: Matrix, gen: usize) -> Result<Matrix, RequestError> {
+        if prompt.cols != self.d {
+            return Err(RequestError::BadShape {
+                what: "prompt cols",
+                expected: self.d,
+                got: prompt.cols,
+            });
+        }
+        if prompt.rows == 0 {
+            return Err(RequestError::BadShape { what: "prompt rows", expected: 1, got: 0 });
+        }
+        if gen == 0 {
+            return Err(RequestError::BadShape { what: "gen rows", expected: 1, got: 0 });
+        }
+        if prompt.rows + gen > self.max_seq {
+            return Err(RequestError::TooLong {
+                prompt: prompt.rows,
+                gen,
+                max_seq: self.max_seq,
+            });
+        }
+        let cell = Arc::new(ResponseCell::default());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            loop {
+                if self.shared.shutdown.load(Ordering::SeqCst) {
+                    return Err(RequestError::EngineDown("engine is shut down".into()));
+                }
+                if q.len() < self.queue_depth {
+                    break;
+                }
+                q = self.shared.space.wait(q).unwrap();
+            }
+            q.push_back(Pending {
+                prompt,
+                gen,
+                cell: cell.clone(),
+                enqueued: Instant::now(),
+            });
+            self.shared.work.notify_one();
+        }
+        cell.wait()
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.lock().unwrap().snapshot()
+    }
+}
+
+/// A request resident in a KV slot.
+struct Active {
+    cell: Arc<ResponseCell>,
+    prompt: Matrix,
+    gen: usize,
+    /// next cache position to feed = rows already fed
+    pos: usize,
+    out: Matrix,
+    produced: usize,
+    /// last generated row, fed back as the next decode input
+    last: Vec<f32>,
+    enqueued: Instant,
+}
+
+impl Active {
+    fn new(p: Pending, d_out: usize) -> Self {
+        Active {
+            cell: p.cell,
+            out: Matrix::zeros(p.gen, d_out),
+            prompt: p.prompt,
+            gen: p.gen,
+            pos: 0,
+            produced: 0,
+            last: vec![0.0; d_out],
+            enqueued: p.enqueued,
+        }
+    }
+}
+
+fn fail_all(slots: &mut [Option<Active>], q: &mut VecDeque<Pending>, msg: &str) {
+    for s in slots.iter_mut() {
+        if let Some(a) = s.take() {
+            a.cell.deliver(Err(RequestError::EngineDown(msg.into())));
+        }
+    }
+    for p in q.drain(..) {
+        p.cell.deliver(Err(RequestError::EngineDown(msg.into())));
+    }
+}
+
+fn engine_loop(mut sess: DecodeSession, shared: Arc<Shared>, max_batch: usize) {
+    let d = sess.in_dim();
+    let d_out = sess.out_dim();
+    let mut slots: Vec<Option<Active>> = (0..max_batch).map(|_| None).collect();
+    let mut x = Matrix::zeros(max_batch, d);
+    let mut batch_slots: Vec<usize> = Vec::with_capacity(max_batch);
+    let mut batch_pos: Vec<usize> = Vec::with_capacity(max_batch);
+    loop {
+        // ---- admit: move queued requests into free KV slots ----
+        {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    fail_all(&mut slots, &mut q, "engine is shut down");
+                    shared.space.notify_all();
+                    return;
+                }
+                let mut admitted = false;
+                while let Some(free) = slots.iter().position(Option::is_none) {
+                    match q.pop_front() {
+                        Some(p) => {
+                            slots[free] = Some(Active::new(p, d_out));
+                            admitted = true;
+                        }
+                        None => break,
+                    }
+                }
+                if admitted {
+                    shared.space.notify_all();
+                }
+                if slots.iter().any(Option::is_some) {
+                    break;
+                }
+                // fully idle: park until a request lands (timeout so a
+                // shutdown flag flip is never missed)
+                q = shared.work.wait_timeout(q, Duration::from_millis(20)).unwrap().0;
+            }
+        }
+        // ---- one decode step: 1 input row per active slot ----
+        batch_slots.clear();
+        batch_pos.clear();
+        for (si, s) in slots.iter().enumerate() {
+            if let Some(a) = s {
+                batch_slots.push(si);
+                batch_pos.push(a.pos);
+            }
+        }
+        let n = batch_slots.len();
+        x.rows = n;
+        x.data.resize(n * d, 0.0);
+        for (i, &si) in batch_slots.iter().enumerate() {
+            let a = slots[si].as_ref().unwrap();
+            let src: &[f32] =
+                if a.pos < a.prompt.rows { a.prompt.row(a.pos) } else { &a.last };
+            x.row_mut(i).copy_from_slice(src);
+        }
+        let t0 = Instant::now();
+        let y = match sess.step(&x, &batch_slots, &batch_pos) {
+            Ok(y) => y,
+            Err(e) => {
+                let msg = format!("decode step failed: {e}");
+                let mut q = shared.queue.lock().unwrap();
+                shared.shutdown.store(true, Ordering::SeqCst);
+                fail_all(&mut slots, &mut q, &msg);
+                shared.space.notify_all();
+                return;
+            }
+        };
+        let step_ns = t0.elapsed().as_nanos() as u64;
+        // ---- absorb outputs; prompts in prefill produce nothing yet ----
+        let mut generated = 0usize;
+        for (i, &si) in batch_slots.iter().enumerate() {
+            let a = slots[si].as_mut().unwrap();
+            let fed = a.pos;
+            a.pos += 1;
+            if fed + 1 >= a.prompt.rows {
+                // the output row following input row `fed` is the next
+                // generated token
+                let row = y.row(i);
+                a.out.row_mut(a.produced).copy_from_slice(row);
+                a.last.clear();
+                a.last.extend_from_slice(row);
+                a.produced += 1;
+                generated += 1;
+            }
+        }
+        let mut m = shared.metrics.lock().unwrap();
+        m.record_step(step_ns, n, generated);
+        for &si in &batch_slots {
+            if slots[si].as_ref().map_or(false, |a| a.produced == a.gen) {
+                let a = slots[si].take().unwrap();
+                m.record_request(a.enqueued.elapsed().as_nanos() as u64);
+                a.cell.deliver(Ok(a.out));
+            }
+        }
+    }
+}
+
+/// Owns the engine thread; dropping (or `shutdown()`) stops it and fails
+/// everything in flight with [`RequestError::EngineDown`].
+pub struct ServeEngine {
+    shared: Arc<Shared>,
+    thread: Option<thread::JoinHandle<()>>,
+    d: usize,
+    max_seq: usize,
+    queue_depth: usize,
+}
+
+impl ServeEngine {
+    /// Spawn the engine thread around a frozen decode session.
+    pub fn start(sess: DecodeSession, cfg: EngineConfig) -> ServeEngine {
+        let max_batch = cfg.max_batch.clamp(1, sess.max_slots());
+        let d = sess.in_dim();
+        let max_seq = sess.max_seq();
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            space: Condvar::new(),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            metrics: Mutex::new(Recorder::new()),
+        });
+        let s2 = Arc::clone(&shared);
+        let thread = thread::Builder::new()
+            .name("pixelfly-serve".into())
+            .spawn(move || engine_loop(sess, s2, max_batch))
+            .expect("spawn serve engine thread");
+        ServeEngine {
+            shared,
+            thread: Some(thread),
+            d,
+            max_seq,
+            queue_depth: cfg.queue_depth.max(1),
+        }
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        EngineHandle {
+            shared: Arc::clone(&self.shared),
+            d: self.d,
+            max_seq: self.max_seq,
+            queue_depth: self.queue_depth,
+        }
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.lock().unwrap().snapshot()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work.notify_all();
+        self.shared.space.notify_all();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        // the engine drains on its way out; catch anything enqueued after
+        let mut q = self.shared.queue.lock().unwrap();
+        for p in q.drain(..) {
+            p.cell.deliver(Err(RequestError::EngineDown("engine is shut down".into())));
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        if self.thread.is_some() {
+            self.stop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_errors_display() {
+        let e = RequestError::TooLong { prompt: 100, gen: 64, max_seq: 128 };
+        assert!(e.to_string().contains("max_seq=128"));
+        let e = RequestError::BadShape { what: "prompt cols", expected: 128, got: 64 };
+        assert!(e.to_string().contains("prompt cols"));
+        assert!(RequestError::EngineDown("x".into()).to_string().contains("x"));
+    }
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let c = EngineConfig::default();
+        assert!(c.max_batch >= 1 && c.queue_depth >= c.max_batch);
+    }
+}

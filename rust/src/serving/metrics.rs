@@ -1,0 +1,170 @@
+//! Serving metrics: a bounded latency recorder and the percentile math
+//! the front end reports (p50/p90/p99).
+//!
+//! [`util::stats::Summary`](crate::util::stats::Summary) stops at p95 and
+//! keeps every sample; serving wants tail percentiles over an unbounded
+//! request stream, so the [`Recorder`] keeps a fixed-size ring of the most
+//! recent request latencies (old requests age out, counters never do) and
+//! snapshots compute nearest-rank percentiles over that window.
+
+use std::time::Instant;
+
+/// Most recent request latencies retained for percentile estimation.
+const MAX_SAMPLES: usize = 4096;
+
+/// Nearest-rank percentile over an ascending-sorted slice, matching the
+/// convention in `util::stats`. `p` is a fraction in `[0, 1]`; an empty
+/// slice reports 0.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p) as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Accumulates engine-side counters plus a latency ring. Owned by the
+/// engine's shared state behind a mutex; the engine thread records, any
+/// handle snapshots.
+pub struct Recorder {
+    started: Instant,
+    /// ring buffer of the most recent completed-request latencies (ns)
+    latencies_ns: Vec<f64>,
+    next: usize,
+    requests: u64,
+    generated_tokens: u64,
+    steps: u64,
+    step_ns: u64,
+    step_rows: u64,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder {
+            started: Instant::now(),
+            latencies_ns: Vec::new(),
+            next: 0,
+            requests: 0,
+            generated_tokens: 0,
+            steps: 0,
+            step_ns: 0,
+            step_rows: 0,
+        }
+    }
+
+    /// One completed request: end-to-end latency from enqueue to delivery.
+    pub fn record_request(&mut self, latency_ns: u64) {
+        self.requests += 1;
+        let v = latency_ns as f64;
+        if self.latencies_ns.len() < MAX_SAMPLES {
+            self.latencies_ns.push(v);
+        } else {
+            self.latencies_ns[self.next] = v;
+            self.next = (self.next + 1) % MAX_SAMPLES;
+        }
+    }
+
+    /// One decode step: wall time, batch occupancy, tokens emitted.
+    pub fn record_step(&mut self, ns: u64, rows: usize, generated: usize) {
+        self.steps += 1;
+        self.step_ns += ns;
+        self.step_rows += rows as u64;
+        self.generated_tokens += generated as u64;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut sorted = self.latencies_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let elapsed_s = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            requests: self.requests,
+            generated_tokens: self.generated_tokens,
+            steps: self.steps,
+            elapsed_s,
+            tokens_per_s: self.generated_tokens as f64 / elapsed_s,
+            mean_batch_rows: self.step_rows as f64 / (self.steps.max(1)) as f64,
+            mean_step_ms: self.step_ns as f64 / (self.steps.max(1)) as f64 / 1e6,
+            p50_ms: percentile(&sorted, 0.50) / 1e6,
+            p90_ms: percentile(&sorted, 0.90) / 1e6,
+            p99_ms: percentile(&sorted, 0.99) / 1e6,
+        }
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Point-in-time view of the engine's counters, cheap to copy around.
+#[derive(Clone, Copy, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub generated_tokens: u64,
+    pub steps: u64,
+    pub elapsed_s: f64,
+    pub tokens_per_s: f64,
+    /// mean rows per decode step — continuous-batching occupancy
+    pub mean_batch_rows: f64,
+    pub mean_step_ms: f64,
+    /// request-latency percentiles over the recent window
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "reqs={} tokens={} tok/s={:.1} batch={:.2} step={:.3}ms \
+             p50={:.2}ms p90={:.2}ms p99={:.2}ms",
+            self.requests, self.generated_tokens, self.tokens_per_s,
+            self.mean_batch_rows, self.mean_step_ms, self.p50_ms, self.p90_ms,
+            self.p99_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn recorder_ring_ages_out_old_samples() {
+        let mut r = Recorder::new();
+        for _ in 0..MAX_SAMPLES {
+            r.record_request(1_000_000); // 1ms
+        }
+        assert_eq!(r.snapshot().p99_ms, 1.0);
+        for _ in 0..MAX_SAMPLES {
+            r.record_request(2_000_000); // 2ms pushes the 1ms era out
+        }
+        let s = r.snapshot();
+        assert_eq!(s.p50_ms, 2.0);
+        assert_eq!(s.requests, 2 * MAX_SAMPLES as u64);
+    }
+
+    #[test]
+    fn recorder_counts_steps_and_tokens() {
+        let mut r = Recorder::new();
+        r.record_step(2_000_000, 4, 3);
+        r.record_step(4_000_000, 2, 2);
+        let s = r.snapshot();
+        assert_eq!(s.steps, 2);
+        assert_eq!(s.generated_tokens, 5);
+        assert!((s.mean_batch_rows - 3.0).abs() < 1e-12);
+        assert!((s.mean_step_ms - 3.0).abs() < 1e-12);
+    }
+}

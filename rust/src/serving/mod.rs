@@ -1,0 +1,20 @@
+//! Serving runtime: continuous batching + KV-cached decode behind a TCP
+//! front end (DESIGN.md "Serving runtime").
+//!
+//! Three small layers, each usable on its own:
+//! - [`engine`]  the continuous-batching loop around a
+//!   [`DecodeSession`](crate::nn::DecodeSession): bounded admission queue,
+//!   per-slot KV cache, one token per active request per step
+//! - [`tcp`]     thread-per-connection front end speaking the `PXF1` frame
+//! - [`metrics`] tokens/s + p50/p90/p99 request-latency accounting
+//!
+//! Everything is std-only: threads, mutexes, condvars, `TcpListener` —
+//! no async runtime, matching the crate's zero-dependency substrate.
+
+pub mod engine;
+pub mod metrics;
+pub mod tcp;
+
+pub use engine::{EngineConfig, EngineHandle, RequestError, ServeEngine};
+pub use metrics::{percentile, MetricsSnapshot, Recorder};
+pub use tcp::{client_request, TcpServer};

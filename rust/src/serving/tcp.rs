@@ -1,0 +1,221 @@
+//! Thread-per-connection TCP front end over an [`EngineHandle`].
+//!
+//! Wire protocol `PXF1` (little-endian, f32 payloads — the models are
+//! continuous-embedding autoregressors, so a "token" is a d-dim row):
+//!
+//! ```text
+//! request:  "PXF1" | u32 prompt_rows | u32 d | u32 gen | prompt_rows·d f32
+//! response: u8 status
+//!           status 0: u32 rows | u32 d | rows·d f32   (generated rows)
+//!           status 1: u32 len  | len utf-8 bytes      (error message)
+//! ```
+//!
+//! Connections are keep-alive: a client may pipeline any number of
+//! requests and the handler answers in order, one engine call each.
+//! Every connection gets its own OS thread (requests block on the engine
+//! anyway), and the engine interleaves all of them into micro-batches.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use crate::sparse::dense::Matrix;
+
+use super::engine::EngineHandle;
+
+const MAGIC: &[u8; 4] = b"PXF1";
+/// Per-dimension sanity bound: rejects garbage headers before they turn
+/// into multi-GiB allocations.
+const MAX_DIM: u32 = 1 << 20;
+
+/// Listening front end; `stop()` (or drop) halts the accept loop.
+/// In-flight connection handlers finish their current request and exit
+/// when their client hangs up or the engine goes down.
+pub struct TcpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port —
+    /// read it back from [`TcpServer::addr`]) and start accepting.
+    pub fn start(addr: &str, handle: EngineHandle) -> io::Result<TcpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = thread::Builder::new()
+            .name("pixelfly-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let h = handle.clone();
+                    let _ = thread::Builder::new()
+                        .name("pixelfly-conn".into())
+                        .spawn(move || {
+                            let _ = handle_connection(stream, &h);
+                        });
+                }
+            })?;
+        Ok(TcpServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.halt();
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, handle: &EngineHandle) -> io::Result<()> {
+    loop {
+        let mut magic = [0u8; 4];
+        match stream.read_exact(&mut magic) {
+            Ok(()) => {}
+            // clean EOF between requests = client done
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e),
+        }
+        if &magic != MAGIC {
+            write_err(&mut stream, "bad magic (want PXF1)")?;
+            return Ok(()); // framing is lost; drop the connection
+        }
+        let rows = read_u32(&mut stream)?;
+        let d = read_u32(&mut stream)?;
+        let gen = read_u32(&mut stream)?;
+        if rows == 0 || rows > MAX_DIM || d == 0 || d > MAX_DIM || gen > MAX_DIM {
+            write_err(&mut stream, "header out of range")?;
+            return Ok(());
+        }
+        let mut prompt = Matrix::zeros(rows as usize, d as usize);
+        read_f32s(&mut stream, &mut prompt.data)?;
+        match handle.generate(prompt, gen as usize) {
+            Ok(out) => {
+                let mut buf = Vec::with_capacity(9 + out.data.len() * 4);
+                buf.push(0u8);
+                buf.extend_from_slice(&(out.rows as u32).to_le_bytes());
+                buf.extend_from_slice(&(out.cols as u32).to_le_bytes());
+                for v in &out.data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+                stream.write_all(&buf)?;
+            }
+            Err(e) => write_err(&mut stream, &e.to_string())?,
+        }
+    }
+}
+
+fn write_err(stream: &mut TcpStream, msg: &str) -> io::Result<()> {
+    let bytes = msg.as_bytes();
+    let mut buf = Vec::with_capacity(5 + bytes.len());
+    buf.push(1u8);
+    buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(bytes);
+    stream.write_all(&buf)
+}
+
+fn read_u32(stream: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    stream.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32s(stream: &mut impl Read, out: &mut [f32]) -> io::Result<()> {
+    // bounded chunks so one request never holds a payload-sized byte
+    // buffer alongside the float buffer
+    let mut bytes = [0u8; 4096];
+    let mut i = 0;
+    while i < out.len() {
+        let take = (out.len() - i).min(bytes.len() / 4) * 4;
+        stream.read_exact(&mut bytes[..take])?;
+        for c in bytes[..take].chunks_exact(4) {
+            out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            i += 1;
+        }
+    }
+    Ok(())
+}
+
+/// Client side of one `PXF1` round trip on an open connection. Returns
+/// `Ok(Ok(matrix))` for generated rows, `Ok(Err(msg))` for a server-side
+/// rejection, `Err(_)` for transport failures.
+pub fn client_request(
+    stream: &mut TcpStream,
+    prompt: &Matrix,
+    gen: usize,
+) -> io::Result<Result<Matrix, String>> {
+    let mut buf = Vec::with_capacity(16 + prompt.data.len() * 4);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(prompt.rows as u32).to_le_bytes());
+    buf.extend_from_slice(&(prompt.cols as u32).to_le_bytes());
+    buf.extend_from_slice(&(gen as u32).to_le_bytes());
+    for v in &prompt.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    stream.write_all(&buf)?;
+    let mut status = [0u8; 1];
+    stream.read_exact(&mut status)?;
+    match status[0] {
+        0 => {
+            let rows = read_u32(stream)? as usize;
+            let d = read_u32(stream)? as usize;
+            let mut out = Matrix::zeros(rows, d);
+            read_f32s(stream, &mut out.data)?;
+            Ok(Ok(out))
+        }
+        1 => {
+            let len = read_u32(stream)? as usize;
+            let mut msg = vec![0u8; len.min(1 << 16)];
+            stream.read_exact(&mut msg)?;
+            Ok(Err(String::from_utf8_lossy(&msg).into_owned()))
+        }
+        s => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("bad response status {s}"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip_through_byte_chunks() {
+        // encode → decode through the same helpers the wire path uses
+        let vals: Vec<f32> = (0..1500).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut out = vec![0.0f32; vals.len()];
+        read_f32s(&mut &bytes[..], &mut out).unwrap();
+        assert_eq!(vals, out);
+    }
+}

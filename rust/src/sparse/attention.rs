@@ -378,6 +378,87 @@ impl AttnPlan {
         }
     }
 
+    /// The visible key blocks of query block row `qb` (causal-filtered
+    /// at plan-build time) — the incremental decode path streams exactly
+    /// this list.
+    pub fn visible_key_blocks(&self, qb: usize) -> &[u32] {
+        &self.kbs[self.row_ptr[qb]..self.row_ptr[qb + 1]]
+    }
+
+    /// Single-query fused attention against cached K/V slabs — the
+    /// incremental decode counterpart of [`Self::execute`]. Replays
+    /// `fused_block_row` (same visible-block order, same diagonal
+    /// masking, same online-softmax update sequence) for ONE query row
+    /// at sequence position `pos`, so a token decoded against the cache
+    /// is bit-identical to the same row of a full prefill — O(visible
+    /// keys · d) instead of O(seq² · d) per generated token.
+    ///
+    /// `kcache`/`vcache` are `[max_seq, d]` row-major slabs of one cache
+    /// slot; rows at positions `> pos` are never read (stale data there
+    /// is fine), because the plan is causal and the diagonal block masks
+    /// `ki > qi` before the reduction. `out` doubles as the accumulator;
+    /// `scores` is caller scratch of at least `max_seq / grid_blocks`
+    /// floats.
+    pub fn decode_query(&self, q: &[f32], kcache: &[f32], vcache: &[f32],
+                        pos: usize, out: &mut [f32], scores: &mut [f32]) {
+        assert!(self.causal, "incremental decode requires a causal plan");
+        let d = q.len();
+        assert_eq!(out.len(), d);
+        assert_eq!(kcache.len(), vcache.len());
+        assert_eq!(kcache.len() % d, 0);
+        let max_seq = kcache.len() / d;
+        assert_eq!(max_seq % self.nb, 0, "cache rows must be divisible by the \
+                                          mask grid");
+        let b = max_seq / self.nb;
+        assert!(pos < max_seq);
+        assert!(scores.len() >= b, "need one score per key row of a block");
+        let scale = 1.0 / (d as f32).sqrt();
+        let tier = simd::active_tier();
+        let qb = pos / b;
+        let qi = pos - qb * b;
+        let mut m = f32::NEG_INFINITY;
+        let mut l = 0.0f32;
+        out.fill(0.0);
+        for &kb in &self.kbs[self.row_ptr[qb]..self.row_ptr[qb + 1]] {
+            let kb = kb as usize;
+            let srow = &mut scores[..b];
+            for (ki, s) in srow.iter_mut().enumerate() {
+                let krow = &kcache[(kb * b + ki) * d..(kb * b + ki + 1) * d];
+                *s = simd::dot_with(tier, q, krow) * scale;
+            }
+            if kb == qb {
+                // inside the diagonal block, kpos > pos ⇔ ki > qi
+                for s in srow[qi + 1..].iter_mut() {
+                    *s = f32::NEG_INFINITY;
+                }
+            }
+            let row_max = srow.iter().fold(f32::NEG_INFINITY, |a, &s| a.max(s));
+            if row_max == f32::NEG_INFINITY {
+                continue;
+            }
+            let m_new = m.max(row_max);
+            let alpha = (m - m_new).exp();
+            l *= alpha;
+            if alpha != 1.0 {
+                simd::scale_with(tier, out, alpha);
+            }
+            for (ki, &s) in srow.iter().enumerate() {
+                if s == f32::NEG_INFINITY {
+                    continue;
+                }
+                let p = (s - m_new).exp();
+                l += p;
+                let vrow = &vcache[(kb * b + ki) * d..(kb * b + ki + 1) * d];
+                simd::axpy_with(tier, p, vrow, out);
+            }
+            m = m_new;
+        }
+        let inv = 1.0 / l.max(1e-30);
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
     /// The pre-fusion two-pass kernel: per query row, materialise a
     /// `seq`-length score buffer over the visible blocks, then softmax,
     /// then the weighted V pass. Kept as the memory-traffic baseline the
@@ -1060,6 +1141,56 @@ mod tests {
         // D row — nothing anywhere near seq×seq
         assert!(ws.peak_bytes() < 128 * 128 * 4,
                 "peak {} suggests a seq×seq buffer", ws.peak_bytes());
+    }
+
+    #[test]
+    fn decode_query_matches_fused_prefill_bitwise() {
+        // the serving-path guarantee: a token decoded against the cache
+        // is BIT-identical to the same row of a full causal prefill
+        // (same block order, same masking, same accumulation sequence)
+        let (seq, d) = (64usize, 8usize);
+        let (q, k, v) = qkv(seq, d, 21);
+        let mask = baselines::pixelfly_attention_mask(8, 4, 1);
+        let plan = AttnPlan::new(&mask, true, 1);
+        let mut ws = Workspace::new();
+        let mut full = Matrix::zeros(seq, d);
+        plan.execute(&q, &k, &v, &mut full, &mut ws);
+        let b = seq / plan.grid_blocks();
+        let mut out = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; b];
+        for pos in 0..seq {
+            plan.decode_query(q.row(pos), &k.data, &v.data, pos, &mut out,
+                              &mut scores);
+            for (t, (&a, &w)) in out.iter().zip(full.row(pos)).enumerate() {
+                assert_eq!(a.to_bits(), w.to_bits(),
+                           "pos {pos} dim {t}: decode {a} vs prefill {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_query_ignores_stale_rows_past_pos() {
+        // rows beyond pos hold garbage in a reused cache slot; the
+        // causal single-query kernel must never read them
+        let (seq, d) = (32usize, 8usize);
+        let (q, k, v) = qkv(seq, d, 22);
+        let mask = crate::patterns::BlockMask::ones(4, 4);
+        let plan = AttnPlan::new(&mask, true, 1);
+        let pos = 9; // mid second block: diagonal masking + stale tail
+        let mut clean = vec![0.0f32; d];
+        let mut scores = vec![0.0f32; seq / 4];
+        plan.decode_query(q.row(pos), &k.data, &v.data, pos, &mut clean,
+                          &mut scores);
+        let (mut ks, mut vs) = (k.clone(), v.clone());
+        for m in [&mut ks, &mut vs] {
+            for r in pos + 1..seq {
+                m.row_mut(r).fill(1e30); // poison everything past pos
+            }
+        }
+        let mut dirty = vec![0.0f32; d];
+        plan.decode_query(q.row(pos), &ks.data, &vs.data, pos, &mut dirty,
+                          &mut scores);
+        assert_eq!(clean, dirty, "stale cache rows past pos leaked in");
     }
 
     #[test]

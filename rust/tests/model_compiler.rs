@@ -178,16 +178,64 @@ fn inference_session_steady_state_is_zero_alloc_and_deterministic() {
     let (seq, in_dim) = (model.seq, model.in_dim());
     let mut rng = Rng::new(8);
     let x = Matrix::randn(seq, in_dim, 1.0, &mut rng);
-    let mut sess = model.into_inference();
-    let y1 = sess.run(&x).clone();
+    // strict() restores the hard-assert contract for this test; freezing
+    // must also shed every module-owned gradient/momentum buffer
+    let mut sess = model.into_inference().strict();
+    assert_eq!(sess.training_state_bytes(), 0);
+    let y1 = sess.run(&x).unwrap().clone();
     let warm = sess.alloc_events();
     for _ in 0..3 {
-        // run() itself hard-asserts the steady state never allocates
-        let y = sess.run(&x);
+        // under strict(), run() panics if the steady state allocates
+        let y = sess.run(&x).unwrap();
         assert!(y.max_abs_diff(&y1) < 1e-6, "frozen plans must be deterministic");
     }
     assert_eq!(sess.alloc_events(), warm);
     assert!(y1.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn inference_session_is_batch_shape_flexible() {
+    // the rows envelope: after warming at the full sequence, any SMALLER
+    // row count (grid-aligned) must run alloc-free and error-free, and
+    // growing back to the envelope top stays warm too
+    let model = compile_preset("gpt2-s", 0.2, 21);
+    let (seq, in_dim) = (model.seq, model.in_dim());
+    let mut rng = Rng::new(10);
+    let x_full = Matrix::randn(seq, in_dim, 1.0, &mut rng);
+    let x_half = Matrix::randn(seq / 2, in_dim, 1.0, &mut rng);
+    let mut sess = model.into_inference().strict();
+    sess.run(&x_full).unwrap(); // warm at the envelope top
+    let warm = sess.alloc_events();
+    sess.run(&x_half).unwrap(); // shrink: strict() would panic on an alloc
+    sess.run(&x_full).unwrap(); // grow back within the envelope
+    assert_eq!(sess.alloc_events(), warm,
+               "runs at or under the warmed row count must not allocate");
+}
+
+#[test]
+fn inference_session_rejects_wrong_width_with_typed_error() {
+    use pixelfly::nn::SessionError;
+    let model = compile_preset("vit-s", 0.2, 25);
+    let (seq, in_dim) = (model.seq, model.in_dim());
+    let mut sess = model.into_inference();
+    let bad = Matrix::zeros(seq, in_dim + 1);
+    match sess.run(&bad) {
+        Err(SessionError::Shape { what, expected, got }) => {
+            assert_eq!(what, "input cols");
+            assert_eq!((expected, got), (in_dim, in_dim + 1));
+        }
+        other => panic!("expected Shape error, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn into_decode_rejects_non_causal_models() {
+    // mixer-s has a token-mixing block (whole-sequence GEMM) and vit-s a
+    // non-causal attention plan: neither has an incremental decode form
+    for name in ["mixer-s", "vit-s"] {
+        let model = compile_preset(name, 0.2, 27);
+        assert!(model.into_decode(2).is_err(), "{name} must refuse into_decode");
+    }
 }
 
 #[test]

@@ -1,0 +1,215 @@
+//! Integration tests for the serving runtime (PR 6): KV-cached decode
+//! parity against full-sequence prefill, continuous batching bit-parity
+//! against a serial oracle through the TCP front end, the typed request
+//! error surface, and the decode session's zero-alloc steady state.
+
+use std::net::TcpStream;
+use std::thread;
+
+use pixelfly::coordinator::budget::rule_of_thumb;
+use pixelfly::costmodel::Device;
+use pixelfly::models::preset;
+use pixelfly::nn::{compile, DecodeSession, Model};
+use pixelfly::serving::{client_request, EngineConfig, RequestError, ServeEngine,
+                        TcpServer};
+use pixelfly::sparse::Matrix;
+use pixelfly::util::Rng;
+
+const BLOCK: usize = 16;
+
+/// Same-seed compiles produce identical weights: the foundation of every
+/// oracle comparison below.
+fn compile_gpt2s(seed: u64) -> Model {
+    let schema = preset("gpt2-s", 1).unwrap();
+    let dev = Device::with_block(BLOCK);
+    let alloc = rule_of_thumb(&schema, 0.2, &dev);
+    compile(&schema, &alloc, BLOCK, seed).unwrap()
+}
+
+/// Serial batch-1 greedy generation on a decode session — the oracle the
+/// continuous-batching engine must bit-match.
+fn generate_reference(sess: &mut DecodeSession, prompt: &Matrix, gen: usize) -> Matrix {
+    let d = sess.out_dim();
+    let mut out = Matrix::zeros(gen, d);
+    let mut x = Matrix::zeros(1, d);
+    let mut last = vec![0.0f32; d];
+    let mut produced = 0;
+    for pos in 0..prompt.rows + gen - 1 {
+        let src: &[f32] = if pos < prompt.rows { prompt.row(pos) } else { &last };
+        x.row_mut(0).copy_from_slice(src);
+        let y = sess.step(&x, &[0], &[pos]).expect("oracle step");
+        if pos + 1 >= prompt.rows {
+            out.row_mut(produced).copy_from_slice(y.row(0));
+            last.copy_from_slice(y.row(0));
+            produced += 1;
+        }
+    }
+    assert_eq!(produced, gen);
+    out
+}
+
+#[test]
+fn kv_decode_matches_full_prefill_teacher_forced() {
+    // Oracle: the SAME weights run as one whole-sequence forward. The
+    // causal mask makes output row p depend only on input rows 0..=p, so
+    // feeding x row-at-a-time through the KV path (teacher forcing) must
+    // reproduce every row of the full forward.
+    let mut oracle = compile_gpt2s(31);
+    let (seq, d) = (oracle.seq, oracle.in_dim());
+    let mut rng = Rng::new(77);
+    let x_full = Matrix::randn(seq, d, 1.0, &mut rng);
+    let y_full = oracle.forward(&x_full).clone();
+
+    let mut sess = compile_gpt2s(31).into_decode(2).unwrap();
+    // Slot 0 starts alone; slot 1 joins LAG steps later (continuous
+    // batching: mixed positions in one micro-batch) fed the same rows.
+    const LAG: usize = 3;
+    let mut got0: Vec<Vec<f32>> = Vec::new();
+    let mut got1: Vec<Vec<f32>> = Vec::new();
+    let mut x1 = Matrix::zeros(1, d);
+    let mut x2 = Matrix::zeros(2, d);
+    for p in 0..LAG {
+        x1.row_mut(0).copy_from_slice(x_full.row(p));
+        let y = sess.step(&x1, &[0], &[p]).unwrap();
+        got0.push(y.row(0).to_vec());
+    }
+    for p in LAG..seq {
+        x2.row_mut(0).copy_from_slice(x_full.row(p));
+        x2.row_mut(1).copy_from_slice(x_full.row(p - LAG));
+        let y = sess.step(&x2, &[0, 1], &[p, p - LAG]).unwrap();
+        got0.push(y.row(0).to_vec());
+        got1.push(y.row(1).to_vec());
+    }
+    for p in seq - LAG..seq {
+        x1.row_mut(0).copy_from_slice(x_full.row(p));
+        let y = sess.step(&x1, &[1], &[p]).unwrap();
+        got1.push(y.row(0).to_vec());
+    }
+    for (name, got) in [("slot0", &got0), ("slot1", &got1)] {
+        assert_eq!(got.len(), seq);
+        for p in 0..seq {
+            let want = y_full.row(p);
+            let err = got[p]
+                .iter()
+                .zip(want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(err < 1e-5,
+                    "{name} row {p}: KV decode diverges from prefill by {err}");
+        }
+    }
+}
+
+#[test]
+fn concurrent_tcp_clients_bit_match_serial_oracle() {
+    // Per-row decode numerics are batch-composition-independent, so every
+    // response must be BIT-identical to a serial batch-1 generation with
+    // the same weights, no matter how requests interleave in the engine.
+    const CLIENTS: usize = 4;
+    const REQS: usize = 2;
+    const PROMPT_ROWS: usize = 8;
+    const GEN: usize = 8;
+
+    let mut oracle = compile_gpt2s(33).into_decode(1).unwrap();
+    let d = oracle.in_dim();
+    let mut prompts: Vec<Vec<Matrix>> = Vec::new();
+    let mut expected: Vec<Vec<Matrix>> = Vec::new();
+    for c in 0..CLIENTS {
+        let (mut ps, mut es) = (Vec::new(), Vec::new());
+        for r in 0..REQS {
+            let mut rng = Rng::new(1000 + (c * REQS + r) as u64);
+            let p = Matrix::randn(PROMPT_ROWS, d, 1.0, &mut rng);
+            es.push(generate_reference(&mut oracle, &p, GEN));
+            ps.push(p);
+        }
+        prompts.push(ps);
+        expected.push(es);
+    }
+
+    let sess = compile_gpt2s(33).into_decode(CLIENTS).unwrap();
+    let engine = ServeEngine::start(
+        sess,
+        EngineConfig { max_batch: CLIENTS, queue_depth: 16 },
+    );
+    let server = TcpServer::start("127.0.0.1:0", engine.handle()).unwrap();
+    let addr = server.addr();
+
+    let workers: Vec<_> = prompts
+        .into_iter()
+        .zip(expected)
+        .enumerate()
+        .map(|(c, (ps, es))| {
+            thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                for (r, (p, want)) in ps.iter().zip(&es).enumerate() {
+                    let got = client_request(&mut stream, p, GEN)
+                        .expect("transport")
+                        .expect("server accepted");
+                    assert_eq!((got.rows, got.cols), (GEN, d), "client {c} req {r}");
+                    for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "client {c} req {r} elem {i}: {a} vs {b}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("client thread");
+    }
+
+    let m = engine.metrics();
+    assert_eq!(m.requests, (CLIENTS * REQS) as u64);
+    assert_eq!(m.generated_tokens, (CLIENTS * REQS * GEN) as u64);
+    server.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn request_validation_and_shutdown_error_surface() {
+    let sess = compile_gpt2s(35).into_decode(1).unwrap();
+    let max_seq = sess.max_seq();
+    let d = sess.in_dim();
+    let engine = ServeEngine::start(sess, EngineConfig { max_batch: 1, queue_depth: 4 });
+    let h = engine.handle();
+
+    // prompt + gen overflowing the KV cache is rejected before queueing
+    let long = Matrix::zeros(max_seq, d);
+    assert!(matches!(h.generate(long, 1), Err(RequestError::TooLong { .. })));
+    // wrong width / empty prompt / zero gen
+    assert!(matches!(h.generate(Matrix::zeros(4, d + 1), 1),
+                     Err(RequestError::BadShape { what: "prompt cols", .. })));
+    assert!(matches!(h.generate(Matrix::zeros(0, d), 1),
+                     Err(RequestError::BadShape { what: "prompt rows", .. })));
+    assert!(matches!(h.generate(Matrix::zeros(4, d), 0),
+                     Err(RequestError::BadShape { what: "gen rows", .. })));
+    // a valid request round-trips
+    let out = h.generate(Matrix::zeros(4, d), 2).unwrap();
+    assert_eq!((out.rows, out.cols), (2, d));
+
+    engine.shutdown();
+    assert!(matches!(h.generate(Matrix::zeros(4, d), 2),
+                     Err(RequestError::EngineDown(_))));
+}
+
+#[test]
+fn decode_session_steady_state_is_zero_alloc_across_batch_shapes() {
+    // The constructor warms at the full slot batch; every later step —
+    // any batch size, any positions — must stay allocation-free.
+    let mut sess = compile_gpt2s(37).into_decode(4).unwrap().strict();
+    let d = sess.in_dim();
+    let warm = sess.alloc_events();
+    let mut rng = Rng::new(5);
+    let x1 = Matrix::randn(1, d, 1.0, &mut rng);
+    let x3 = Matrix::randn(3, d, 1.0, &mut rng);
+    let x4 = Matrix::randn(4, d, 1.0, &mut rng);
+    sess.step(&x1, &[2], &[0]).unwrap();
+    sess.step(&x3, &[0, 2, 3], &[0, 1, 0]).unwrap();
+    sess.step(&x4, &[0, 1, 2, 3], &[1, 0, 2, 1]).unwrap();
+    sess.step(&x1, &[1], &[1]).unwrap();
+    assert_eq!(sess.alloc_events(), warm,
+               "decode steps inside the warmed envelope must not allocate");
+    assert_eq!(sess.training_state_bytes(), 0,
+               "into_decode must shed gradient/momentum buffers");
+    assert!(sess.cache_bytes() > 0);
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Advisory bench-regression check.
+"""Bench-regression check (advisory by default, hard-fail opt-in).
 
 Compares fresh BENCH_*.json files (written by the in-crate bench harness,
 rust/src/bench.rs) against the committed baseline under
@@ -7,10 +7,12 @@ benchmarks/baseline/. The primary metric is GFLOP/s (higher is better);
 benches without a flop count fall back to mean_ms (lower is better).
 
 Regressions beyond the threshold emit GitHub Actions `::warning::`
-annotations so they are visible on the run, but the script ALWAYS exits 0
-— this step is advisory and must never fail the gate (CI runners are too
-noisy for a hard perf gate; the trajectory lives in the uploaded
-artifacts).
+annotations and the script exits 0 — advisory, because CI runners are too
+noisy for a blanket hard perf gate. Files named via `--hard-fail BASENAME`
+(repeatable) opt into enforcement: their regressions emit `::error::` and
+the script exits 1. An empty or missing baseline for a hard-fail file
+produces no comparisons, so the gate stays dormant until a trusted
+baseline is committed.
 
 Refreshing the baseline: download the bench artifacts from a trusted CI
 run and commit them into benchmarks/baseline/ (same file names), or run
@@ -76,13 +78,19 @@ def main():
                     help="after diffing, copy each fresh JSON over the "
                          "committed baseline (commit the result to arm "
                          "future diffs)")
+    ap.add_argument("--hard-fail", action="append", default=[],
+                    metavar="BASENAME",
+                    help="fresh-file basename whose regressions fail the "
+                         "gate (exit 1) instead of warning; repeatable")
     ap.add_argument("fresh", nargs="+", help="fresh BENCH_*.json files")
     args = ap.parse_args()
 
     warned = 0
+    failed = 0
     for path in args.fresh:
         name = os.path.basename(path)
-        print(f"== {name}")
+        hard = name in args.hard_fail
+        print(f"== {name}{' [hard-fail]' if hard else ''}")
         fresh = load(path)
         if fresh is None:
             continue
@@ -95,8 +103,12 @@ def main():
         if base is None:
             continue
         for bench, metric, bv, nv, rel in compare(base, fresh, args.threshold):
-            warned += 1
-            print(f"::warning title=bench regression::{name}:{bench} {metric} "
+            level = "error" if hard else "warning"
+            if hard:
+                failed += 1
+            else:
+                warned += 1
+            print(f"::{level} title=bench regression::{name}:{bench} {metric} "
                   f"regressed {rel * 100.0:.1f}% (baseline {bv:.3f}, now {nv:.3f})")
 
     if args.update_baseline:
@@ -108,6 +120,9 @@ def main():
             shutil.copyfile(path, dst)
             print(f"baseline updated: {dst}")
 
+    if failed:
+        print(f"\n{failed} hard-fail regression(s); failing the gate.")
+        return 1
     if warned:
         print(f"\n{warned} advisory regression warning(s); not failing the gate.")
     else:
