@@ -1,0 +1,165 @@
+//! Fault injection for the checkpoint I/O chokepoints.
+//!
+//! Every byte the checkpoint layer moves goes through [`write_file`] /
+//! [`read_file`], so a single armed fault can simulate the three failure
+//! classes the durability story must survive:
+//!
+//! - `kill-write@K` — the process "crashes" after K bytes of a write: the
+//!   truncated file stays on disk (fsynced, like a real power cut mid
+//!   `write(2)`) and the call errors, so the atomic-rename protocol is
+//!   exercised exactly where it matters (the `.tmp` never gets renamed).
+//! - `short-read@K` — a read returns only the first K bytes (torn page,
+//!   truncated copy).
+//! - `bit-flip@K` — bit `K mod total_bits` of the read buffer flips
+//!   (silent media corruption) — the CRC layer must catch it.
+//!
+//! Arming is test-first (`arm(spec, tag)`) with a PATH TAG: the fault
+//! fires only on paths containing `tag` and disarms after firing, so
+//! parallel tests with distinct temp dirs never contaminate each other.
+//! The `PIXELFLY_CKPT_FAULT` env var (same shape, tag-free, e.g.
+//! `PIXELFLY_CKPT_FAULT=bit-flip@100`) arms one fault at process start
+//! for CLI-level experiments, mirroring the `PIXELFLY_POOL` convention.
+
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::{Mutex, Once};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    KillWrite,
+    ShortRead,
+    BitFlip,
+}
+
+#[derive(Debug)]
+struct Armed {
+    kind: Kind,
+    at: usize,
+    /// fault fires only on paths containing this substring ("" = any)
+    tag: String,
+}
+
+static ARMED: Mutex<Vec<Armed>> = Mutex::new(Vec::new());
+static ENV_ONCE: Once = Once::new();
+
+fn parse(spec: &str) -> Option<(Kind, usize)> {
+    let (name, at) = spec.split_once('@')?;
+    let at: usize = at.trim().parse().ok()?;
+    let kind = match name.trim() {
+        "kill-write" => Kind::KillWrite,
+        "short-read" => Kind::ShortRead,
+        "bit-flip" => Kind::BitFlip,
+        _ => return None,
+    };
+    Some((kind, at))
+}
+
+/// Arm one fault (`"kill-write@123"`, `"short-read@64"`, `"bit-flip@7"`)
+/// scoped to paths containing `tag`. One-shot: the fault disarms when it
+/// fires. Returns false on an unparseable spec.
+pub fn arm(spec: &str, tag: &str) -> bool {
+    match parse(spec) {
+        Some((kind, at)) => {
+            ARMED.lock().unwrap().push(Armed { kind, at, tag: tag.to_string() });
+            true
+        }
+        None => false,
+    }
+}
+
+/// Drop every armed fault scoped to `tag` (test cleanup).
+pub fn disarm(tag: &str) {
+    ARMED.lock().unwrap().retain(|a| a.tag != tag);
+}
+
+fn fire(path: &Path, kind: Kind) -> Option<usize> {
+    ENV_ONCE.call_once(|| {
+        if let Ok(spec) = std::env::var("PIXELFLY_CKPT_FAULT") {
+            if !spec.is_empty() && !arm(&spec, "") {
+                eprintln!("PIXELFLY_CKPT_FAULT: ignoring unparseable spec {spec:?} \
+                           (want kill-write@K | short-read@K | bit-flip@K)");
+            }
+        }
+    });
+    let p = path.to_string_lossy();
+    let mut g = ARMED.lock().unwrap();
+    let i = g.iter().position(|a| a.kind == kind && p.contains(a.tag.as_str()))?;
+    Some(g.remove(i).at)
+}
+
+/// Create `path` and durably write `bytes` (the writer's one file-write
+/// chokepoint). An armed `kill-write` persists only the first K bytes
+/// and errors — simulating a crash mid-write.
+pub fn write_file(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let kill = fire(path, Kind::KillWrite);
+    let mut f = std::fs::File::create(path)?;
+    match kill {
+        Some(k) => {
+            let k = k.min(bytes.len());
+            f.write_all(&bytes[..k])?;
+            f.sync_all()?;
+            Err(io::Error::new(
+                io::ErrorKind::Other,
+                format!("injected write kill after {k} bytes"),
+            ))
+        }
+        None => {
+            f.write_all(bytes)?;
+            f.sync_all()
+        }
+    }
+}
+
+/// Read the whole file (the loader's one read chokepoint), with armed
+/// short-read / bit-flip faults applied to the returned buffer.
+pub fn read_file(path: &Path) -> io::Result<Vec<u8>> {
+    let mut buf = std::fs::read(path)?;
+    if let Some(k) = fire(path, Kind::ShortRead) {
+        buf.truncate(k.min(buf.len()));
+    }
+    if let Some(k) = fire(path, Kind::BitFlip) {
+        if !buf.is_empty() {
+            let bit = k % (buf.len() * 8);
+            buf[bit / 8] ^= 1 << (bit % 8);
+        }
+    }
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_bad_specs_do_not() {
+        assert!(parse("kill-write@10").is_some());
+        assert!(parse("short-read@0").is_some());
+        assert!(parse("bit-flip@ 7").is_some());
+        assert!(parse("explode@3").is_none());
+        assert!(parse("bit-flip").is_none());
+        assert!(parse("bit-flip@x").is_none());
+    }
+
+    #[test]
+    fn faults_are_tag_scoped_and_one_shot() {
+        let dir = std::env::temp_dir().join("pxck-faults-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tagged = dir.join("fault-unit-tagged.bin");
+        let other = dir.join("fault-unit-other.bin");
+        write_file(&other, b"hello").unwrap();
+        write_file(&tagged, b"hello").unwrap();
+
+        assert!(arm("short-read@2", "fault-unit-tagged"));
+        // wrong path: untouched
+        assert_eq!(read_file(&other).unwrap(), b"hello");
+        // tagged path: truncated once…
+        assert_eq!(read_file(&tagged).unwrap(), b"he");
+        // …and the fault is consumed
+        assert_eq!(read_file(&tagged).unwrap(), b"hello");
+
+        assert!(arm("kill-write@3", "fault-unit-tagged"));
+        assert!(write_file(&tagged, b"world!").is_err());
+        assert_eq!(std::fs::read(&tagged).unwrap(), b"wor", "partial write persisted");
+        disarm("fault-unit-tagged");
+    }
+}

@@ -1,0 +1,267 @@
+//! The `PXCK` on-disk weight format: header/entry layout, CRC32, schema
+//! fingerprint, typed load errors.
+//!
+//! Layout (little-endian throughout; see DESIGN.md "Checkpoint & weight
+//! format" for the byte diagram):
+//!
+//! ```text
+//! "PXCK" | u32 version | u64 fingerprint | u64 step
+//! u32 meta_len | meta (utf-8)
+//! u32 n_entries
+//! per entry: u16 name_len | name | u8 kind | u64 offset | u64 len | u32 crc
+//! u32 header_crc          (over every byte above)
+//! payload                 (entries' raw bytes, offsets relative to here)
+//! ```
+//!
+//! Every byte of the file is covered by a checksum: the header (magic
+//! through the entry table) by `header_crc`, each payload section by its
+//! entry's `crc`. A flipped bit anywhere surfaces as [`CkptError::BadCrc`]
+//! — never as silently wrong weights.
+
+use std::fmt;
+
+use super::TensorData;
+
+pub const MAGIC: &[u8; 4] = b"PXCK";
+pub const VERSION: u32 = 1;
+
+/// Sanity bound on the entry count so a corrupt header can't drive a
+/// multi-GiB table allocation before the CRC check rejects it.
+pub const MAX_ENTRIES: u32 = 1 << 20;
+
+/// Typed checkpoint error surface: every failure mode of save/load is a
+/// variant, so callers (and the fault-injection suite) can assert the
+/// loader REJECTS corruption instead of panicking or silently loading
+/// wrong weights.
+#[derive(Debug)]
+pub enum CkptError {
+    Io(std::io::Error),
+    /// the file does not start with `PXCK`
+    BadMagic,
+    /// written by a newer format revision than this binary understands
+    FutureVersion { found: u32 },
+    /// the file ends before a section it promises
+    Truncated { what: &'static str, needed: usize, have: usize },
+    /// a checksum mismatch in the named section (header or a tensor)
+    BadCrc { section: String },
+    /// the checkpoint does not describe this model (architecture, budget,
+    /// block size or sparsity pattern differ)
+    SchemaMismatch { detail: String },
+    /// a tensor the model expects is absent
+    MissingTensor { name: String },
+    /// a tensor exists but with the wrong element count
+    WrongLen { name: String, want: usize, got: usize },
+    /// a tensor exists but with the wrong element type
+    WrongKind { name: String },
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint i/o: {e}"),
+            CkptError::BadMagic => write!(f, "not a PXCK checkpoint (bad magic)"),
+            CkptError::FutureVersion { found } => {
+                write!(f, "checkpoint format v{found} is newer than this binary \
+                           (supports v{VERSION})")
+            }
+            CkptError::Truncated { what, needed, have } => {
+                write!(f, "checkpoint truncated in {what}: need {needed} bytes, \
+                           have {have}")
+            }
+            CkptError::BadCrc { section } => {
+                write!(f, "checkpoint corrupt: CRC mismatch in {section}")
+            }
+            CkptError::SchemaMismatch { detail } => {
+                write!(f, "checkpoint schema mismatch: {detail}")
+            }
+            CkptError::MissingTensor { name } => {
+                write!(f, "checkpoint is missing tensor {name:?}")
+            }
+            CkptError::WrongLen { name, want, got } => {
+                write!(f, "tensor {name:?} has {got} elements, model wants {want}")
+            }
+            CkptError::WrongKind { name } => {
+                write!(f, "tensor {name:?} has the wrong element type")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> Self {
+        CkptError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE 802.3 polynomial, table-driven) — std has no checksum and
+// the crate policy is no external deps, so the 8-line classic lives here.
+// ---------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// FNV-1a schema fingerprint
+// ---------------------------------------------------------------------
+
+/// Incremental FNV-1a (64-bit) — the header fingerprint hashes the state
+/// schema (every tensor's name, kind and length, in enumeration order),
+/// so a checkpoint of a differently-planned model is rejected up front.
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xCBF2_9CE4_8422_2325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fold one tensor's schema (name, kind tag, element count) into `h` —
+/// the ONE definition both the writer (over a snapshot's tensors) and
+/// the loader (over a live model's enumeration) share, so the two
+/// fingerprints can never drift.
+pub fn fp_tensor(h: &mut Fnv, name: &str, kind: u8, len: usize) {
+    h.write(name.as_bytes());
+    h.write(&[0, kind]);
+    h.write(&(len as u64).to_le_bytes());
+}
+
+/// Schema fingerprint of an owned tensor list (the writer side).
+pub fn fingerprint_of(tensors: &[(String, TensorData)]) -> u64 {
+    let mut h = Fnv::new();
+    for (name, t) in tensors {
+        fp_tensor(&mut h, name, t.kind(), t.len());
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------
+// Encode
+// ---------------------------------------------------------------------
+
+/// Serialize a snapshot into one `PXCK` byte buffer (the writer then
+/// lands it atomically). Payload sections follow enumeration order;
+/// offsets are relative to the payload region so the header encodes
+/// first.
+pub fn encode(step: u64, meta: &str, tensors: &[(String, TensorData)]) -> Vec<u8> {
+    let payload_len: usize = tensors.iter().map(|(_, t)| t.byte_len()).sum();
+    let mut head = Vec::with_capacity(64 + tensors.len() * 48 + meta.len());
+    head.extend_from_slice(MAGIC);
+    head.extend_from_slice(&VERSION.to_le_bytes());
+    head.extend_from_slice(&fingerprint_of(tensors).to_le_bytes());
+    head.extend_from_slice(&step.to_le_bytes());
+    head.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+    head.extend_from_slice(meta.as_bytes());
+    head.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+
+    let mut payload = Vec::with_capacity(payload_len);
+    for (name, t) in tensors {
+        let offset = payload.len() as u64;
+        let start = payload.len();
+        t.extend_bytes(&mut payload);
+        let crc = crc32(&payload[start..]);
+        head.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        head.extend_from_slice(name.as_bytes());
+        head.push(t.kind());
+        head.extend_from_slice(&offset.to_le_bytes());
+        head.extend_from_slice(&(t.len() as u64).to_le_bytes());
+        head.extend_from_slice(&crc.to_le_bytes());
+    }
+    let hcrc = crc32(&head);
+    head.extend_from_slice(&hcrc.to_le_bytes());
+    head.extend_from_slice(&payload);
+    head
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC32 check values (the classic "123456789" vector)
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_shape_sensitive() {
+        let a = vec![("w".to_string(), TensorData::F32(vec![0.0; 4])),
+                     ("b".to_string(), TensorData::F32(vec![0.0; 2]))];
+        let mut b = a.clone();
+        b.swap(0, 1);
+        assert_ne!(fingerprint_of(&a), fingerprint_of(&b), "order matters");
+        let c = vec![("w".to_string(), TensorData::F32(vec![0.0; 5])),
+                     ("b".to_string(), TensorData::F32(vec![0.0; 2]))];
+        assert_ne!(fingerprint_of(&a), fingerprint_of(&c), "length matters");
+        let d = vec![("w".to_string(), TensorData::U32(vec![0; 4])),
+                     ("b".to_string(), TensorData::F32(vec![0.0; 2]))];
+        assert_ne!(fingerprint_of(&a), fingerprint_of(&d), "kind matters");
+        // values do NOT matter: the fingerprint pins the schema, not data
+        let e = vec![("w".to_string(), TensorData::F32(vec![9.0; 4])),
+                     ("b".to_string(), TensorData::F32(vec![7.0; 2]))];
+        assert_eq!(fingerprint_of(&a), fingerprint_of(&e));
+    }
+
+    #[test]
+    fn encode_covers_every_byte_with_a_checksum() {
+        let tensors = vec![("w".to_string(), TensorData::F32(vec![1.5, -2.0])),
+                           ("idx".to_string(), TensorData::U32(vec![3, 4, 5]))];
+        let bytes = encode(7, "m", &tensors);
+        // header CRC sits right before the payload; recompute both halves
+        let payload_len = 2 * 4 + 3 * 4;
+        let hcrc_at = bytes.len() - payload_len - 4;
+        let hcrc = u32::from_le_bytes(bytes[hcrc_at..hcrc_at + 4].try_into().unwrap());
+        assert_eq!(hcrc, crc32(&bytes[..hcrc_at]));
+        assert_eq!(&bytes[..4], MAGIC);
+    }
+}

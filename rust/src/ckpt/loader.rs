@@ -1,0 +1,321 @@
+//! Corruption-checked checkpoint loader: one read, then validate
+//! everything before a single weight reaches the model.
+//!
+//! The loader is deliberately paranoid — every failure mode is a typed
+//! [`CkptError`], never a panic and never silently wrong weights:
+//!
+//! - wrong magic → `BadMagic`; newer format → `FutureVersion`
+//! - file ends early anywhere → `Truncated` naming the section
+//! - any flipped bit → `BadCrc` (header CRC covers the entry table,
+//!   per-entry CRCs cover the payload; there are no unchecked bytes)
+//! - entry table lies about the payload (offset/len out of bounds,
+//!   duplicate names, absurd counts) → `Truncated` / `SchemaMismatch`
+//!
+//! Tensor payloads stay as one contiguous byte buffer after parse; f32
+//! values are decoded straight into the model's own buffers via the
+//! [`StateSource`] impl, so load cost is the single `read` plus one
+//! pass over the weights.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::faults;
+use super::format::{self, CkptError, MAGIC, MAX_ENTRIES, VERSION};
+use super::StateSource;
+
+struct Entry {
+    kind: u8,
+    offset: usize,
+    len: usize,
+}
+
+/// A parsed, fully CRC-verified checkpoint, ready to feed a model via
+/// [`StateSource`].
+pub struct Ckpt {
+    pub step: u64,
+    pub meta: String,
+    /// schema fingerprint from the header — compare against the live
+    /// model's before loading anything
+    pub fingerprint: u64,
+    entries: HashMap<String, Entry>,
+    payload: Vec<u8>,
+}
+
+/// Read and validate the checkpoint at `path` (single read through the
+/// fault-injection chokepoint).
+pub fn load(path: &Path) -> Result<Ckpt, CkptError> {
+    Ckpt::parse(faults::read_file(path)?)
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], CkptError> {
+        if self.buf.len() - self.pos < n {
+            return Err(CkptError::Truncated {
+                what,
+                needed: self.pos + n,
+                have: self.buf.len(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, CkptError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, CkptError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, CkptError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+}
+
+impl Ckpt {
+    /// Parse and validate one `PXCK` buffer. Order matters: cheap
+    /// structural checks bound every allocation BEFORE the header CRC
+    /// proves the entry table honest, and the entry table is proven
+    /// honest before any payload CRC work.
+    pub fn parse(bytes: Vec<u8>) -> Result<Ckpt, CkptError> {
+        let mut c = Cursor { buf: &bytes, pos: 0 };
+        if c.take(4, "magic")? != MAGIC {
+            return Err(CkptError::BadMagic);
+        }
+        let version = c.u32("version")?;
+        if version > VERSION {
+            return Err(CkptError::FutureVersion { found: version });
+        }
+        let fingerprint = c.u64("fingerprint")?;
+        let step = c.u64("step")?;
+        let meta_len = c.u32("meta length")? as usize;
+        let meta = String::from_utf8_lossy(c.take(meta_len, "meta")?).into_owned();
+        let n_entries = c.u32("entry count")?;
+        if n_entries > MAX_ENTRIES {
+            return Err(CkptError::SchemaMismatch {
+                detail: format!("entry count {n_entries} exceeds limit {MAX_ENTRIES}"),
+            });
+        }
+
+        let mut raw = Vec::with_capacity(n_entries as usize);
+        for _ in 0..n_entries {
+            let name_len = c.u16("entry name length")? as usize;
+            let name = String::from_utf8_lossy(c.take(name_len, "entry name")?)
+                .into_owned();
+            let kind = c.take(1, "entry kind")?[0];
+            let offset = c.u64("entry offset")? as usize;
+            let len = c.u64("entry length")? as usize;
+            let crc = c.u32("entry crc")?;
+            raw.push((name, kind, offset, len, crc));
+        }
+
+        // header CRC covers magic through the entry table — verify it
+        // before trusting any offset/len the table claims
+        let header_end = c.pos;
+        let stored_hcrc = c.u32("header crc")?;
+        if format::crc32(&bytes[..header_end]) != stored_hcrc {
+            return Err(CkptError::BadCrc { section: "header".into() });
+        }
+
+        let payload = bytes[c.pos..].to_vec();
+        let mut entries = HashMap::with_capacity(raw.len());
+        for (name, kind, offset, len, crc) in raw {
+            if kind > 1 {
+                return Err(CkptError::WrongKind { name });
+            }
+            let byte_len = len
+                .checked_mul(4)
+                .filter(|&b| offset.checked_add(b).is_some_and(|end| end <= payload.len()))
+                .ok_or(CkptError::Truncated {
+                    what: "tensor payload",
+                    needed: offset.saturating_add(len.saturating_mul(4)),
+                    have: payload.len(),
+                })?;
+            if format::crc32(&payload[offset..offset + byte_len]) != crc {
+                return Err(CkptError::BadCrc { section: format!("tensor {name:?}") });
+            }
+            if entries.insert(name.clone(), Entry { kind, offset, len }).is_some() {
+                return Err(CkptError::SchemaMismatch {
+                    detail: format!("duplicate tensor name {name:?}"),
+                });
+            }
+        }
+
+        Ok(Ckpt { step, meta, fingerprint, entries, payload })
+    }
+
+    /// Recompute the schema fingerprint from the live model's tensor
+    /// enumeration and compare with the header's. `walk` must call the
+    /// visitor exactly as `Module::state_tensors` does.
+    pub fn matches_schema(&self, live_fingerprint: u64) -> Result<(), CkptError> {
+        if self.fingerprint != live_fingerprint {
+            return Err(CkptError::SchemaMismatch {
+                detail: format!(
+                    "checkpoint schema {:#018x} != model schema {:#018x} \
+                     (meta: {})",
+                    self.fingerprint, live_fingerprint, self.meta
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    fn entry(&self, name: &str, kind: u8) -> Result<&Entry, CkptError> {
+        let e = self.entries.get(name).ok_or_else(|| CkptError::MissingTensor {
+            name: name.to_string(),
+        })?;
+        if e.kind != kind {
+            return Err(CkptError::WrongKind { name: name.to_string() });
+        }
+        Ok(e)
+    }
+}
+
+impl StateSource for Ckpt {
+    fn load_f32(&mut self, name: &str, dst: &mut [f32]) -> Result<(), CkptError> {
+        let e = self.entry(name, 0)?;
+        if e.len != dst.len() {
+            return Err(CkptError::WrongLen {
+                name: name.to_string(),
+                want: dst.len(),
+                got: e.len,
+            });
+        }
+        let bytes = &self.payload[e.offset..e.offset + 4 * e.len];
+        for (d, ch) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+            *d = f32::from_le_bytes(ch.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    fn expect_u32(&mut self, name: &str, want: &[u32]) -> Result<(), CkptError> {
+        let e = self.entry(name, 1)?;
+        if e.len != want.len() {
+            return Err(CkptError::WrongLen {
+                name: name.to_string(),
+                want: want.len(),
+                got: e.len,
+            });
+        }
+        let bytes = &self.payload[e.offset..e.offset + 4 * e.len];
+        for (i, (w, ch)) in want.iter().zip(bytes.chunks_exact(4)).enumerate() {
+            if *w != u32::from_le_bytes(ch.try_into().unwrap()) {
+                return Err(CkptError::SchemaMismatch {
+                    detail: format!(
+                        "structure tensor {name:?} differs at element {i} — \
+                         checkpoint was written for a different sparsity plan"
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::TensorData;
+
+    fn sample() -> Vec<u8> {
+        format::encode(
+            42,
+            "model=test",
+            &[
+                ("w".to_string(), TensorData::F32(vec![1.0, -0.5, 3.25])),
+                ("idx".to_string(), TensorData::U32(vec![7, 8])),
+            ],
+        )
+    }
+
+    #[test]
+    fn parse_round_trips_header_and_tensors() {
+        let mut ck = Ckpt::parse(sample()).unwrap();
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.meta, "model=test");
+        let mut w = [0.0f32; 3];
+        ck.load_f32("w", &mut w).unwrap();
+        assert_eq!(w, [1.0, -0.5, 3.25]);
+        ck.expect_u32("idx", &[7, 8]).unwrap();
+        assert!(matches!(ck.expect_u32("idx", &[7, 9]),
+                         Err(CkptError::SchemaMismatch { .. })));
+        assert!(matches!(ck.load_f32("nope", &mut w),
+                         Err(CkptError::MissingTensor { .. })));
+        assert!(matches!(ck.load_f32("idx", &mut [0.0; 2]),
+                         Err(CkptError::WrongKind { .. })));
+        assert!(matches!(ck.load_f32("w", &mut [0.0; 2]),
+                         Err(CkptError::WrongLen { .. })));
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_rejected() {
+        let good = sample();
+        // flip one bit at a spread of positions across header and payload;
+        // every one must surface as a typed error, never a silent load
+        for pos in (0..good.len()).step_by(3) {
+            let mut bad = good.clone();
+            bad[pos] ^= 0x10;
+            match Ckpt::parse(bad) {
+                Ok(mut ck) => {
+                    // every byte sits under the header CRC or a payload
+                    // CRC, so parse should always reject; if a future
+                    // format change ever leaves a gap, the flip must
+                    // still fail loudly at tensor access time
+                    let mut w = [0.0f32; 3];
+                    assert!(
+                        ck.load_f32("w", &mut w).is_err(),
+                        "bit flip at byte {pos} loaded silently"
+                    );
+                }
+                Err(e) => {
+                    // typed rejection is the expected path
+                    let _ = format!("{e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncations_are_rejected_at_every_length() {
+        let good = sample();
+        for keep in 0..good.len() {
+            let mut bad = good.clone();
+            bad.truncate(keep);
+            assert!(Ckpt::parse(bad).is_err(), "truncation to {keep} bytes passed");
+        }
+    }
+
+    #[test]
+    fn future_version_and_bad_magic_are_typed() {
+        let mut v2 = sample();
+        v2[4] = 99; // version byte
+        // header CRC now mismatches too; accept either typed error but
+        // prefer checking FutureVersion fires when the CRC is fixed up
+        let hcrc_at = {
+            let payload_len = 3 * 4 + 2 * 4;
+            v2.len() - payload_len - 4
+        };
+        let crc = format::crc32(&v2[..hcrc_at]).to_le_bytes();
+        v2[hcrc_at..hcrc_at + 4].copy_from_slice(&crc);
+        assert!(matches!(Ckpt::parse(v2), Err(CkptError::FutureVersion { found: 99 })));
+
+        let mut junk = sample();
+        junk[0] = b'X';
+        assert!(matches!(Ckpt::parse(junk), Err(CkptError::BadMagic)));
+    }
+
+    #[test]
+    fn schema_fingerprint_gates_loading() {
+        let ck = Ckpt::parse(sample()).unwrap();
+        ck.matches_schema(ck.fingerprint).unwrap();
+        assert!(matches!(ck.matches_schema(ck.fingerprint ^ 1),
+                         Err(CkptError::SchemaMismatch { .. })));
+    }
+}

@@ -1,0 +1,155 @@
+//! Crash-safe checkpoint & weight-format layer (DESIGN.md "Checkpoint &
+//! weight format").
+//!
+//! Three durability layers over one versioned binary format (`PXCK`):
+//!
+//! - **Atomic snapshots** ([`writer`]): serialize into `<path>.tmp`,
+//!   fsync, rename, fsync the parent directory. A background
+//!   [`Snapshotter`] thread (fed through the pool's `Doorbell` primitive,
+//!   latest-wins, double-buffered) takes the file I/O off the training
+//!   step entirely.
+//! - **Corruption-checked fast load** ([`loader`]): one read, then
+//!   magic/version/fingerprint/CRC validation with typed [`CkptError`]s —
+//!   a damaged file is rejected loudly, never loaded silently wrong.
+//! - **Fault injection** ([`faults`]): env-gated write-kill / short-read /
+//!   bit-flip hooks on the loader/writer chokepoints, so tests prove the
+//!   recover-or-reject story instead of asserting it.
+//!
+//! The paper's fixed flat-block-butterfly + low-rank pattern makes the
+//! format simple: masks never change during training, so a block-sparse
+//! weight is its CSR block index (written once, verified on load) plus
+//! the raw block payload. Modules expose their state through the
+//! [`crate::nn::Module`] visitor methods (`state_tensors` / `load_state`);
+//! this module never reaches into layer internals.
+
+pub mod faults;
+pub mod format;
+pub mod loader;
+pub mod writer;
+
+pub use format::{crc32, CkptError};
+pub use loader::{load, Ckpt};
+pub use writer::{write_atomic, SnapReport, Snapshot, Snapshotter};
+
+use crate::sparse::bsr::BsrMatrix;
+
+/// One owned state tensor inside a [`Snapshot`] — f32 payloads (weights,
+/// biases, momentum) or u32 structure tensors (CSR block indices).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+}
+
+impl TensorData {
+    /// Entry-table kind tag (0 = f32, 1 = u32).
+    pub fn kind(&self) -> u8 {
+        match self {
+            TensorData::F32(_) => 0,
+            TensorData::U32(_) => 1,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        4 * self.len()
+    }
+
+    /// Append the little-endian payload bytes to `out`.
+    pub fn extend_bytes(&self, out: &mut Vec<u8>) {
+        match self {
+            TensorData::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::U32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// A borrowed view of one state tensor during save — what
+/// `Module::state_tensors` hands its visitor. f32 tensors are borrowed
+/// straight out of the module; u32 structure tensors (CSR indices) are
+/// materialised on the fly, so they arrive owned.
+pub enum StateItem<'a> {
+    F32(&'a [f32]),
+    U32(Vec<u32>),
+}
+
+impl StateItem<'_> {
+    pub fn kind(&self) -> u8 {
+        match self {
+            StateItem::F32(_) => 0,
+            StateItem::U32(_) => 1,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            StateItem::F32(s) => s.len(),
+            StateItem::U32(v) => v.len(),
+        }
+    }
+}
+
+/// What `Module::load_state` restores from: f32 tensors are copied into
+/// the module's buffers, u32 structure tensors are VERIFIED against the
+/// freshly-compiled skeleton (a checkpoint never mutates a model's
+/// sparsity structure — a pattern difference is a schema mismatch).
+pub trait StateSource {
+    /// Copy tensor `name` into `dst`; typed error if absent, the wrong
+    /// kind, or the wrong length.
+    fn load_f32(&mut self, name: &str, dst: &mut [f32]) -> Result<(), CkptError>;
+
+    /// Check that the stored u32 tensor `name` equals `want` exactly;
+    /// a difference is a [`CkptError::SchemaMismatch`].
+    fn expect_u32(&mut self, name: &str, want: &[u32]) -> Result<(), CkptError>;
+}
+
+/// Flatten a BSR weight's structure into its checkpoint index tensor:
+/// `[nbr, nbc, block, row_ptr.., cols..]`. Written once per weight and
+/// byte-compared on load, so a checkpoint can never be applied across a
+/// different mask plan.
+pub fn csr_index_tensor(w: &BsrMatrix) -> Vec<u32> {
+    let mut out = Vec::with_capacity(3 + w.row_ptr.len() + w.cols.len());
+    out.push(w.nbr as u32);
+    out.push(w.nbc as u32);
+    out.push(w.block as u32);
+    out.extend(w.row_ptr.iter().map(|&v| v as u32));
+    out.extend(w.cols.iter().map(|&v| v as u32));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::patterns::BlockMask;
+    use crate::util::Rng;
+
+    #[test]
+    fn csr_tensor_round_trips_structure() {
+        let mask = BlockMask::ones(3, 2);
+        let w = BsrMatrix::random(&mask, 4, 0.1, &mut Rng::new(1));
+        let t = csr_index_tensor(&w);
+        assert_eq!(&t[..3], &[3, 2, 4]);
+        assert_eq!(t.len(), 3 + w.row_ptr.len() + w.cols.len());
+        // same structure → same tensor; different structure → different
+        let w2 = BsrMatrix::random(&mask, 4, 0.9, &mut Rng::new(7));
+        assert_eq!(t, csr_index_tensor(&w2), "values must not affect structure");
+    }
+}

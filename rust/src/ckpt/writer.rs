@@ -1,0 +1,306 @@
+//! Atomic snapshot writer: crash-safe single-file writes plus the
+//! background [`Snapshotter`] thread that takes checkpoint I/O off the
+//! training step.
+//!
+//! Atomicity protocol (the Strata-style write-then-rename):
+//!
+//! 1. serialize into `<path>.tmp`
+//! 2. fsync the tmp file (bytes durable)
+//! 3. `rename(tmp, path)` (POSIX rename is atomic: readers see the old
+//!    file or the new one, never a half-written hybrid)
+//! 4. fsync the parent directory (the rename itself durable)
+//!
+//! A crash at any step leaves either the previous checkpoint intact or a
+//! stray `.tmp` the loader never looks at.
+//!
+//! The [`Snapshotter`] is fed through the same `Doorbell` primitive the
+//! worker pool and prefetcher park on: the training thread fills a
+//! recycled [`Snapshot`] buffer (a memcpy of the params — no file I/O)
+//! and rings the bell; the writer thread encodes, writes atomically and
+//! rotates retained files. The pending slot is latest-wins, so a slow
+//! disk can never make snapshots back up behind the training loop.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::thread;
+
+use crate::sparse::exec::pool::Doorbell;
+
+use super::faults;
+use super::format::{self, CkptError};
+use super::TensorData;
+
+/// An owned copy of one model's full training state, detached from the
+/// live module tree — what crosses from the training thread to the
+/// writer thread. Buffers are recycled between snapshots (double
+/// buffering), so the steady-state cost of a snapshot on the training
+/// thread is one memcpy of the parameters.
+#[derive(Default)]
+pub struct Snapshot {
+    pub step: u64,
+    pub meta: String,
+    pub tensors: Vec<(String, TensorData)>,
+}
+
+impl Snapshot {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serialize to `PXCK` bytes (see [`format::encode`]).
+    pub fn encode(&self) -> Vec<u8> {
+        format::encode(self.step, &self.meta, &self.tensors)
+    }
+
+    /// Schema fingerprint of this snapshot's tensor layout.
+    pub fn fingerprint(&self) -> u64 {
+        format::fingerprint_of(&self.tensors)
+    }
+}
+
+/// Write `bytes` to `path` through the full atomicity protocol
+/// (tmp → fsync → rename → fsync dir). On error the destination is
+/// untouched: either the old file survives or nothing was there.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), CkptError> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    faults::write_file(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
+    sync_parent_dir(path)?;
+    Ok(())
+}
+
+/// fsync the directory holding `path` so the rename itself is durable.
+/// Directory handles can't be fsynced off unix; the rename is still
+/// atomic there, just not power-cut durable.
+fn sync_parent_dir(path: &Path) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::File::open(dir)?.sync_all()?;
+            }
+        }
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
+}
+
+/// Checkpoint filename for a training step — zero-padded so lexical
+/// order is step order (rotation and "latest" both ride on it).
+pub fn step_filename(step: u64) -> String {
+    format!("ckpt-{step:010}.pxck")
+}
+
+/// Newest `ckpt-*.pxck` in `dir` (what `serve --weights <dir>` resolves).
+pub fn latest_in(dir: &Path) -> Option<PathBuf> {
+    let mut names: Vec<String> = list_checkpoints(dir).ok()?;
+    names.sort();
+    names.pop().map(|n| dir.join(n))
+}
+
+fn list_checkpoints(dir: &Path) -> std::io::Result<Vec<String>> {
+    let mut out = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        let name = e?.file_name().to_string_lossy().into_owned();
+        if name.starts_with("ckpt-") && name.ends_with(".pxck") {
+            out.push(name);
+        }
+    }
+    Ok(out)
+}
+
+/// Delete all but the newest `retain` checkpoints in `dir`. Stray `.tmp`
+/// files (from a killed write) are swept too — they are garbage by
+/// definition, the loader never reads them.
+fn rotate(dir: &Path, retain: usize, errors: &mut Vec<String>) {
+    let Ok(mut names) = list_checkpoints(dir) else { return };
+    names.sort();
+    let cut = names.len().saturating_sub(retain.max(1));
+    for n in &names[..cut] {
+        if let Err(e) = std::fs::remove_file(dir.join(n)) {
+            errors.push(format!("rotate {n}: {e}"));
+        }
+    }
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".pxck.tmp") {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+}
+
+/// What one [`Snapshotter`] run did — surfaced at `finish()` so snapshot
+/// failures are loud even though they never block training.
+#[derive(Debug, Default)]
+pub struct SnapReport {
+    /// checkpoints durably written
+    pub written: u64,
+    /// snapshots superseded in the pending slot before the writer got to
+    /// them (latest-wins backpressure)
+    pub dropped: u64,
+    pub last_path: Option<PathBuf>,
+    pub errors: Vec<String>,
+}
+
+struct SnapShared {
+    pending: Option<Snapshot>,
+    free: Vec<Snapshot>,
+    shutdown: bool,
+    report: SnapReport,
+}
+
+/// Background snapshot thread over a checkpoint directory. `offer()` is
+/// the training-loop entry point: it never does file I/O and never
+/// blocks on the disk.
+pub struct Snapshotter {
+    bell: Arc<Doorbell<SnapShared>>,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+impl Snapshotter {
+    /// Create `dir` and start the writer thread; keep the newest
+    /// `retain` checkpoints (minimum 1).
+    pub fn start(dir: &Path, retain: usize) -> Result<Snapshotter, CkptError> {
+        std::fs::create_dir_all(dir)?;
+        let dir = dir.to_path_buf();
+        let bell = Arc::new(Doorbell::new(SnapShared {
+            pending: None,
+            free: Vec::new(),
+            shutdown: false,
+            report: SnapReport::default(),
+        }));
+        let bell2 = Arc::clone(&bell);
+        let worker = thread::Builder::new()
+            .name("pixelfly-ckpt".into())
+            .spawn(move || {
+                loop {
+                    // drain pending BEFORE honouring shutdown, so the
+                    // final offered snapshot always lands
+                    let job = bell2.wait_until(|s| match s.pending.take() {
+                        Some(p) => Some(Some(p)),
+                        None if s.shutdown => Some(None),
+                        None => None,
+                    });
+                    let Some(snap) = job else { break };
+                    let path = dir.join(step_filename(snap.step));
+                    let bytes = snap.encode();
+                    let outcome = write_atomic(&path, &bytes);
+                    bell2.update(|s| {
+                        match outcome {
+                            Ok(()) => {
+                                s.report.written += 1;
+                                s.report.last_path = Some(path.clone());
+                                rotate(&dir, retain, &mut s.report.errors);
+                            }
+                            Err(e) => s.report.errors.push(format!(
+                                "snapshot step {}: {e}", snap.step)),
+                        }
+                        s.free.push(snap);
+                    });
+                }
+            })?;
+        Ok(Snapshotter { bell, worker: Some(worker) })
+    }
+
+    /// Offer a snapshot without blocking on the disk: `fill` runs on the
+    /// calling thread into a recycled buffer (one param memcpy), then the
+    /// buffer replaces any still-unwritten pending snapshot
+    /// (latest-wins — the superseded one is recycled and counted).
+    pub fn offer(&self, fill: impl FnOnce(&mut Snapshot)) {
+        let mut snap = self.bell.update(|s| s.free.pop()).unwrap_or_default();
+        fill(&mut snap);
+        self.bell.update(|s| {
+            if let Some(prev) = s.pending.replace(snap) {
+                s.report.dropped += 1;
+                s.free.push(prev);
+            }
+        });
+    }
+
+    /// Drain the pending snapshot, stop the writer thread, and surface
+    /// what happened (writes, latest-wins drops, errors).
+    pub fn finish(mut self) -> SnapReport {
+        self.bell.update(|s| s.shutdown = true);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.bell.update(|s| std::mem::take(&mut s.report))
+    }
+}
+
+impl Drop for Snapshotter {
+    fn drop(&mut self) {
+        self.bell.update(|s| s.shutdown = true);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("pxck-writer-{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn snap(step: u64) -> Snapshot {
+        Snapshot {
+            step,
+            meta: "test".into(),
+            tensors: vec![("w".into(), TensorData::F32(vec![step as f32; 8]))],
+        }
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_tmp() {
+        let dir = tdir("atomic");
+        let p = dir.join(step_filename(3));
+        write_atomic(&p, &snap(3).encode()).unwrap();
+        assert!(p.exists());
+        let entries: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(entries.len(), 1, "no .tmp residue after a clean write");
+    }
+
+    #[test]
+    fn snapshotter_writes_rotates_and_reports() {
+        let dir = tdir("rotate");
+        let s = Snapshotter::start(&dir, 2).unwrap();
+        for step in 1..=5u64 {
+            s.offer(|b| *b = snap(step));
+            // serialize offers so none are dropped (latest-wins is
+            // exercised separately); the writer is faster than this loop
+            while !dir.join(step_filename(step)).exists() {
+                thread::yield_now();
+            }
+        }
+        let rep = s.finish();
+        assert_eq!(rep.written, 5);
+        assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+        assert_eq!(rep.last_path, Some(dir.join(step_filename(5))));
+        let mut names = list_checkpoints(&dir).unwrap();
+        names.sort();
+        assert_eq!(names, vec![step_filename(4), step_filename(5)],
+                   "retain-last-2 rotation");
+        assert_eq!(latest_in(&dir), Some(dir.join(step_filename(5))));
+    }
+
+    #[test]
+    fn finish_drains_the_pending_snapshot() {
+        let dir = tdir("drain");
+        let s = Snapshotter::start(&dir, 3).unwrap();
+        s.offer(|b| *b = snap(9));
+        let rep = s.finish();
+        assert_eq!(rep.written, 1);
+        assert!(dir.join(step_filename(9)).exists());
+    }
+}

@@ -26,10 +26,13 @@
 //! - [`rigl`]       RigL dynamic-sparsity baseline (Fig 6)
 //! - [`serving`]    continuous-batching serving runtime: KV-cached decode,
 //!   admission queue, TCP front end, latency metrics
+//! - [`ckpt`]       crash-safe checkpoint layer: PXCK weight format, atomic
+//!   background snapshots, corruption-checked load, fault injection
 //! - [`util`]       PRNG, timers, stats, CLI & property-test helpers
 //! - [`bench`]      in-crate micro-benchmark harness (criterion substitute)
 
 pub mod bench;
+pub mod ckpt;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;

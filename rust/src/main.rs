@@ -11,8 +11,11 @@
 //!   flatbench    Fig 11: flat vs product butterfly multiply
 //!   list         list artifacts in the manifest
 
+use std::path::{Path, PathBuf};
+
 use anyhow::Result;
 
+use pixelfly::ckpt::{writer, Snapshotter};
 use pixelfly::coordinator::{budget, planner, TrainConfig, Trainer};
 use pixelfly::costmodel::Device;
 use pixelfly::data::lra::LraTask;
@@ -22,7 +25,7 @@ use pixelfly::ntk;
 use pixelfly::patterns::{baselines, flat_butterfly_mask, BlockMask};
 use pixelfly::runtime::engine::Literal;
 use pixelfly::runtime::{artifacts_dir, Engine};
-use pixelfly::serving::{EngineConfig, ServeEngine, TcpServer};
+use pixelfly::serving::{EngineConfig, ServeEngine, TcpConfig, TcpServer};
 use pixelfly::sparse::{butterfly_mm::ButterflyProduct, exec, BsrMatrix, Matrix};
 use pixelfly::util::{stats::time_it, Args, Rng};
 
@@ -70,11 +73,18 @@ fn print_help() {
          USAGE: pixelfly <cmd> [--flags]\n\n\
          train        --preset gpt2_s_pixelfly --steps 100 --lr 1e-3 [--lra-task text]\n\
          train        --model vit-s --budget 0.1 [--block 16 --steps 20]\n\
-                      (compiled substrate path: preset -> budget -> compile -> train)\n\
+                      [--snapshot-every K --out DIR --retain N --resume CKPT]\n\
+                      (compiled substrate path: preset -> budget -> compile -> train;\n\
+                      --snapshot-every K checkpoints every K steps from a background\n\
+                      thread into --out, keeping the newest --retain; --resume\n\
+                      restores params+momentum+step from a .pxck checkpoint)\n\
          serve        --model gpt2-s --budget 0.2 [--port 7878 --max-batch 8\n\
-                      --queue-depth 64 --steps 0]\n\
+                      --queue-depth 64 --steps 0 --weights CKPT --io-timeout-ms N]\n\
                       (continuous-batching TCP inference, KV-cached decode;\n\
-                      --steps N trains before freezing; protocol: PXF1)\n\
+                      --steps N trains before freezing; --weights warm-starts from\n\
+                      a .pxck file or snapshot dir instead of training from seed;\n\
+                      --io-timeout-ms bounds stalled clients, 0 disables;\n\
+                      protocol: PXF1)\n\
          compare      --presets mixer_s_dense,mixer_s_pixelfly --steps 50\n\
          ntk-compare  [--batches 2]           (Fig 4, uses ntk_* artifacts)\n\
          ntk-search   [--nb 16 --budget 96]   (Appendix K, analytic NTK)\n\
@@ -164,6 +174,14 @@ impl CompiledOpts {
         }
     }
 
+    /// Checkpoint meta line: the compile inputs that must match for a
+    /// checkpoint to be loadable (human-readable provenance; the binary
+    /// gate is the schema fingerprint).
+    fn ckpt_meta(&self) -> String {
+        format!("model={};budget={};block={};seed={}",
+                self.model, self.budget, self.block, self.seed)
+    }
+
     /// `models::preset` → §3.3 budget rule → `nn::compile`, with the
     /// one-line compile summary both subcommands print.
     fn compile(&self) -> Result<Model> {
@@ -196,8 +214,50 @@ fn cmd_train_compiled(args: &Args) -> Result<()> {
     let lr = args.f32_or("lr", 1e-2);
     let momentum = args.f32_or("momentum", 0.9);
     let mut model = opts.compile()?;
-    let report = model.train(steps, lr, momentum, opts.seed);
+    let mut start_step = 0u64;
+    if let Some(path) = args.get("resume") {
+        let info = model.load_checkpoint(Path::new(path))?;
+        start_step = info.step;
+        println!("resumed {path} at step {} ({})", info.step, info.meta);
+    }
+    let out = args.get("out").map(PathBuf::from);
+    let snapshot_every = args.usize_or("snapshot-every", 0);
+    let retain = args.usize_or("retain", 3);
+    let meta = opts.ckpt_meta();
+    let snapper = match &out {
+        Some(dir) if snapshot_every > 0 => Some(Snapshotter::start(dir, retain)?),
+        _ => {
+            if snapshot_every > 0 {
+                anyhow::bail!("--snapshot-every needs --out <dir>");
+            }
+            None
+        }
+    };
+    let report = model.train_resumable(
+        steps, lr, momentum, opts.seed, start_step,
+        snapper.as_ref().map(|s| (s, snapshot_every, meta.as_str())),
+    );
     println!("{}", report.summary_line());
+    if let Some(s) = snapper {
+        let rep = s.finish();
+        println!("snapshots: {} written, {} superseded{}", rep.written, rep.dropped,
+                 rep.last_path
+                     .as_ref()
+                     .map(|p| format!(", latest {}", p.display()))
+                     .unwrap_or_default());
+        for e in &rep.errors {
+            eprintln!("snapshot error: {e}");
+        }
+    }
+    if let Some(dir) = &out {
+        // final synchronous checkpoint so `train --out` always leaves a
+        // complete latest state for `serve --weights` / `--resume`
+        std::fs::create_dir_all(dir)?;
+        let final_step = start_step + steps as u64;
+        let path = dir.join(writer::step_filename(final_step));
+        model.save_checkpoint(&path, final_step, &meta)?;
+        println!("checkpoint -> {}", path.display());
+    }
     if args.bool("curve") {
         println!("{}", report.curve_tsv());
     }
@@ -224,7 +284,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.usize_or("max-batch", 8);
     let queue_depth = args.usize_or("queue-depth", 64);
     let steps = args.usize_or("steps", 0);
+    let io_timeout_ms = args.u64_or("io-timeout-ms", 30_000);
     let mut model = opts.compile()?;
+    if let Some(w) = args.get("weights") {
+        // warm-start: a .pxck file, or a snapshot dir (newest wins) —
+        // straight into the frozen session, no recompile-train
+        let p = Path::new(w);
+        let file = if p.is_dir() {
+            writer::latest_in(p)
+                .ok_or_else(|| anyhow::anyhow!("no ckpt-*.pxck in {w:?}"))?
+        } else {
+            p.to_path_buf()
+        };
+        let t0 = std::time::Instant::now();
+        let info = model.load_checkpoint(&file)?;
+        println!("warm-start {} (step {}, {}) in {:.1}ms", file.display(),
+                 info.step, info.meta, t0.elapsed().as_secs_f64() * 1e3);
+    }
     if steps > 0 {
         let report = model.train(steps, args.f32_or("lr", 1e-2),
                                  args.f32_or("momentum", 0.9), opts.seed);
@@ -238,7 +314,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sess.cache_bytes() as f64 / 1024.0, sess.training_state_bytes(),
     );
     let engine = ServeEngine::start(sess, EngineConfig { max_batch, queue_depth });
-    let server = TcpServer::start(&format!("0.0.0.0:{port}"), engine.handle())?;
+    let tcp_cfg = TcpConfig {
+        io_timeout: (io_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(io_timeout_ms)),
+    };
+    let server = TcpServer::start_with(&format!("0.0.0.0:{port}"), engine.handle(),
+                                       tcp_cfg)?;
     println!("serving on {} (protocol PXF1; Ctrl-C to stop)", server.addr());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));

@@ -18,8 +18,10 @@ use crate::sparse::dense::{transpose_into, Matrix};
 use crate::sparse::exec::{self, Activation, Workspace};
 use crate::util::Rng;
 
+use crate::ckpt::{csr_index_tensor, CkptError, StateItem, StateSource};
+
 use super::decode::DecodeCtx;
-use super::{ensure_shape, DenseLinear, Module, PhaseFlops};
+use super::{ensure_shape, state_name, DenseLinear, Module, PhaseFlops};
 
 /// The paper's §3.2 pixelfly layer as a module: `y = act(x·(B_flat + U·V)
 /// + bias)`. Both terms ride the cached-plan engine paths
@@ -150,6 +152,34 @@ impl Module for LowRankResidual {
              + self.grads.dv.data.capacity() + self.m_flat.capacity()
              + self.m_u.capacity() + self.m_v.capacity() + self.db.capacity()
              + self.mb.capacity())
+    }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        visit(&state_name(prefix, "flat.csr"),
+              StateItem::U32(csr_index_tensor(&self.flr.flat)));
+        visit(&state_name(prefix, "flat"), StateItem::F32(&self.flr.flat.blocks));
+        visit(&state_name(prefix, "u"), StateItem::F32(&self.flr.u.data));
+        visit(&state_name(prefix, "v"), StateItem::F32(&self.flr.v.data));
+        visit(&state_name(prefix, "b"), StateItem::F32(&self.bias));
+        visit(&state_name(prefix, "m_flat"), StateItem::F32(&self.m_flat));
+        visit(&state_name(prefix, "m_u"), StateItem::F32(&self.m_u));
+        visit(&state_name(prefix, "m_v"), StateItem::F32(&self.m_v));
+        visit(&state_name(prefix, "mb"), StateItem::F32(&self.mb));
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        src.expect_u32(&state_name(prefix, "flat.csr"),
+                       &csr_index_tensor(&self.flr.flat))?;
+        src.load_f32(&state_name(prefix, "flat"), &mut self.flr.flat.blocks)?;
+        src.load_f32(&state_name(prefix, "u"), &mut self.flr.u.data)?;
+        src.load_f32(&state_name(prefix, "v"), &mut self.flr.v.data)?;
+        src.load_f32(&state_name(prefix, "b"), &mut self.bias)?;
+        src.load_f32(&state_name(prefix, "m_flat"), &mut self.m_flat)?;
+        src.load_f32(&state_name(prefix, "m_u"), &mut self.m_u)?;
+        src.load_f32(&state_name(prefix, "m_v"), &mut self.m_v)?;
+        src.load_f32(&state_name(prefix, "mb"), &mut self.mb)?;
+        Ok(())
     }
 }
 
@@ -417,6 +447,22 @@ impl Module for PixelflyAttention {
             + self.wq.training_state_bytes() + self.wk.training_state_bytes()
             + self.wv.training_state_bytes() + self.wo.training_state_bytes()
     }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        self.wq.state_tensors(&state_name(prefix, "wq"), visit);
+        self.wk.state_tensors(&state_name(prefix, "wk"), visit);
+        self.wv.state_tensors(&state_name(prefix, "wv"), visit);
+        self.wo.state_tensors(&state_name(prefix, "wo"), visit);
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        self.wq.load_state(&state_name(prefix, "wq"), src)?;
+        self.wk.load_state(&state_name(prefix, "wk"), src)?;
+        self.wv.load_state(&state_name(prefix, "wv"), src)?;
+        self.wo.load_state(&state_name(prefix, "wo"), src)?;
+        Ok(())
+    }
 }
 
 /// Two-layer MLP (expand + activation, contract) with an optional
@@ -544,6 +590,18 @@ impl Module for MlpBlock {
         4 * (self.dhidden.data.capacity() + self.dres.data.capacity())
             + self.up.training_state_bytes() + self.down.training_state_bytes()
     }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        self.up.state_tensors(&state_name(prefix, "up"), visit);
+        self.down.state_tensors(&state_name(prefix, "down"), visit);
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        self.up.load_state(&state_name(prefix, "up"), src)?;
+        self.down.load_state(&state_name(prefix, "down"), src)?;
+        Ok(())
+    }
 }
 
 /// MLP-Mixer block: token-mixing MLP applied across the sequence (on the
@@ -665,6 +723,18 @@ impl Module for MixerBlock {
             + self.token.training_state_bytes()
             + self.channel.training_state_bytes()
     }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        self.token.state_tensors(&state_name(prefix, "token"), visit);
+        self.channel.state_tensors(&state_name(prefix, "channel"), visit);
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        self.token.load_state(&state_name(prefix, "token"), src)?;
+        self.channel.load_state(&state_name(prefix, "channel"), src)?;
+        Ok(())
+    }
 }
 
 /// Input embedding, kept dense per the paper (§3.3 step 1 sparsifies
@@ -716,6 +786,15 @@ impl Module for Embedding {
     fn training_state_bytes(&self) -> usize {
         self.0.training_state_bytes()
     }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        self.0.state_tensors(prefix, visit)
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        self.0.load_state(prefix, src)
+    }
 }
 
 /// Classifier / LM head, kept dense per the paper — the other dense-kept
@@ -765,6 +844,15 @@ impl Module for ClassifierHead {
 
     fn training_state_bytes(&self) -> usize {
         self.0.training_state_bytes()
+    }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        self.0.state_tensors(prefix, visit)
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        self.0.load_state(prefix, src)
     }
 }
 

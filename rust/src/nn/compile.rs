@@ -10,8 +10,12 @@
 //! `train` and a forward-only [`InferenceSession`] with frozen plans and
 //! a metered zero-alloc steady state.
 
+use std::path::Path;
+
 use anyhow::{anyhow, bail, Result};
 
+use crate::ckpt::format::{fp_tensor, Fnv};
+use crate::ckpt::{self, CkptError, Snapshot, Snapshotter, StateItem, TensorData};
 use crate::coordinator::budget::Allocation;
 use crate::coordinator::metrics::TrainReport;
 use crate::coordinator::planner::{plan_model, LayerPlan, ModelPlan};
@@ -186,6 +190,15 @@ pub fn compile(schema: &ModelSchema, alloc: &Allocation, block: usize,
     })
 }
 
+/// What a loaded checkpoint restored besides the tensors: the global
+/// step counter to resume from and the writer's meta line (model /
+/// budget / block / seed provenance).
+#[derive(Clone, Debug)]
+pub struct CkptInfo {
+    pub step: u64,
+    pub meta: String,
+}
+
 /// An executable compiled model: one module tree, one workspace, member
 /// loss/gradient buffers sized once — `train_step` is zero-alloc after
 /// the first step and every phase is timed.
@@ -306,15 +319,116 @@ impl Model {
     /// report driver.
     pub fn train(&mut self, steps: usize, lr: f32, momentum: f32, seed: u64)
                  -> TrainReport {
+        self.train_resumable(steps, lr, momentum, seed, 0, None)
+    }
+
+    /// [`Model::train`] with a checkpoint story: start the global step
+    /// counter at `start_step` (what a resumed run restores) and, when
+    /// `snap = Some((snapshotter, every, meta))`, offer a background
+    /// snapshot every `every` global steps. The training batch depends
+    /// only on `seed` — never on the step — so a resumed run sees the
+    /// same data and its loss curve continues where the checkpoint left
+    /// off.
+    pub fn train_resumable(&mut self, steps: usize, lr: f32, momentum: f32,
+                           seed: u64, start_step: u64,
+                           snap: Option<(&Snapshotter, usize, &str)>)
+                           -> TrainReport {
         let mut rng = Rng::new(seed ^ 0x5EED_C0DE);
         let x = Matrix::randn(self.seq, self.in_dim(), 1.0, &mut rng);
         let target = Matrix::randn(self.seq, self.out_dim(), 0.5, &mut rng);
         let preset = format!("{}_compiled", self.name);
         let params = self.param_count();
         let units = self.seq;
-        drive_substrate_training(&preset, steps, params, units, 10, |_s| {
-            self.train_step(&x, &target, lr, momentum)
+        drive_substrate_training(&preset, steps, params, units, 10, |s| {
+            let out = self.train_step(&x, &target, lr, momentum);
+            if let Some((snapper, every, meta)) = snap {
+                let global = start_step + s as u64 + 1;
+                if every > 0 && global % every as u64 == 0 {
+                    snapper.offer(|b| self.snapshot_into(b, global, meta));
+                }
+            }
+            out
         })
+    }
+
+    /// FNV-1a fingerprint of the model's state SCHEMA (every tensor's
+    /// name, kind and length in enumeration order) — the up-front gate
+    /// that keeps a checkpoint from loading into a differently-planned
+    /// model. Deterministic compilation makes it stable across processes
+    /// for the same (preset, budget, block, seed).
+    pub fn state_fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        self.body.state_tensors("", &mut |name, item| {
+            fp_tensor(&mut h, name, item.kind(), item.len());
+        });
+        h.finish()
+    }
+
+    /// Fill `snap` with a full copy of the training state. When the
+    /// buffer already has this model's layout (the recycled-buffer steady
+    /// state of a [`Snapshotter`]), tensors are copied in place — no
+    /// allocation, just the param memcpy; otherwise the tensor list is
+    /// rebuilt.
+    pub fn snapshot_into(&self, snap: &mut Snapshot, step: u64, meta: &str) {
+        snap.step = step;
+        snap.meta.clear();
+        snap.meta.push_str(meta);
+        let mut i = 0usize;
+        let mut fits = true;
+        {
+            let tensors = &mut snap.tensors;
+            self.body.state_tensors("", &mut |name, item| {
+                if !fits {
+                    return;
+                }
+                match tensors.get_mut(i) {
+                    Some((n, data)) if n == name && data.kind() == item.kind()
+                                       && data.len() == item.len() => {
+                        match (data, item) {
+                            (TensorData::F32(dst), StateItem::F32(src)) => {
+                                dst.copy_from_slice(src);
+                            }
+                            (TensorData::U32(dst), StateItem::U32(src)) => {
+                                dst.copy_from_slice(&src);
+                            }
+                            _ => unreachable!("kind tags matched above"),
+                        }
+                        i += 1;
+                    }
+                    _ => fits = false,
+                }
+            });
+        }
+        if !fits || i != snap.tensors.len() {
+            snap.tensors.clear();
+            self.body.state_tensors("", &mut |name, item| {
+                let data = match item {
+                    StateItem::F32(s) => TensorData::F32(s.to_vec()),
+                    StateItem::U32(v) => TensorData::U32(v),
+                };
+                snap.tensors.push((name.to_string(), data));
+            });
+        }
+    }
+
+    /// Synchronously write a checkpoint of the current state to `path`
+    /// through the atomic write protocol.
+    pub fn save_checkpoint(&self, path: &Path, step: u64, meta: &str)
+                           -> Result<(), CkptError> {
+        let mut snap = Snapshot::new();
+        self.snapshot_into(&mut snap, step, meta);
+        ckpt::write_atomic(path, &snap.encode())
+    }
+
+    /// Restore params + momentum (+ the step counter, returned) from a
+    /// checkpoint. The schema fingerprint is checked BEFORE any tensor is
+    /// touched, so a mismatched checkpoint leaves the model exactly as
+    /// compiled; sparsity structure tensors are verified, never applied.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<CkptInfo, CkptError> {
+        let mut ck = ckpt::load(path)?;
+        ck.matches_schema(self.state_fingerprint())?;
+        self.body.load_state("", &mut ck)?;
+        Ok(CkptInfo { step: ck.step, meta: ck.meta })
     }
 
     /// Freeze into a forward-only serving session. Plans stay cached;

@@ -13,7 +13,9 @@ use crate::sparse::dense::{self, Matrix};
 use crate::sparse::exec::{self, Activation, Epilogue, Workspace};
 use crate::util::Rng;
 
-use super::{ensure_shape, Module, PhaseFlops};
+use crate::ckpt::{csr_index_tensor, CkptError, StateItem, StateSource};
+
+use super::{ensure_shape, state_name, Module, PhaseFlops};
 
 /// Block-sparse linear layer with a fused bias+activation epilogue and a
 /// pattern-frozen gradient: weights, gradient and momentum all live on
@@ -117,6 +119,26 @@ impl Module for SparseLinear {
         4 * (self.dw.capacity() + self.db.capacity() + self.mw.capacity()
              + self.mb.capacity())
     }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        // structure first: the loader verifies the sparsity plan before
+        // any weight of this layer is touched
+        visit(&state_name(prefix, "w.csr"), StateItem::U32(csr_index_tensor(&self.w)));
+        visit(&state_name(prefix, "w"), StateItem::F32(&self.w.blocks));
+        visit(&state_name(prefix, "b"), StateItem::F32(&self.bias));
+        visit(&state_name(prefix, "mw"), StateItem::F32(&self.mw));
+        visit(&state_name(prefix, "mb"), StateItem::F32(&self.mb));
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        src.expect_u32(&state_name(prefix, "w.csr"), &csr_index_tensor(&self.w))?;
+        src.load_f32(&state_name(prefix, "w"), &mut self.w.blocks)?;
+        src.load_f32(&state_name(prefix, "b"), &mut self.bias)?;
+        src.load_f32(&state_name(prefix, "mw"), &mut self.mw)?;
+        src.load_f32(&state_name(prefix, "mb"), &mut self.mb)?;
+        Ok(())
+    }
 }
 
 /// Dense twin of [`SparseLinear`] — the baseline the fig1 bench compares
@@ -213,6 +235,22 @@ impl Module for DenseLinear {
     fn training_state_bytes(&self) -> usize {
         4 * (self.dw.data.capacity() + self.db.capacity() + self.mw.capacity()
              + self.mb.capacity())
+    }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        visit(&state_name(prefix, "w"), StateItem::F32(&self.w.data));
+        visit(&state_name(prefix, "b"), StateItem::F32(&self.bias));
+        visit(&state_name(prefix, "mw"), StateItem::F32(&self.mw));
+        visit(&state_name(prefix, "mb"), StateItem::F32(&self.mb));
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        src.load_f32(&state_name(prefix, "w"), &mut self.w.data)?;
+        src.load_f32(&state_name(prefix, "b"), &mut self.bias)?;
+        src.load_f32(&state_name(prefix, "mw"), &mut self.mw)?;
+        src.load_f32(&state_name(prefix, "mb"), &mut self.mb)?;
+        Ok(())
     }
 }
 
@@ -325,6 +363,21 @@ impl Module for Linear {
         match self {
             Linear::Sparse(l) => l.training_state_bytes(),
             Linear::Dense(l) => l.training_state_bytes(),
+        }
+    }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        match self {
+            Linear::Sparse(l) => l.state_tensors(prefix, visit),
+            Linear::Dense(l) => l.state_tensors(prefix, visit),
+        }
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        match self {
+            Linear::Sparse(l) => l.load_state(prefix, src),
+            Linear::Dense(l) => l.load_state(prefix, src),
         }
     }
 }

@@ -31,12 +31,13 @@ pub mod linear;
 
 pub use blocks::{ClassifierHead, Embedding, LowRankResidual, MixerBlock, MlpBlock,
                  PixelflyAttention};
-pub use compile::{compile, CompileStats, InferenceSession, Model};
+pub use compile::{compile, CkptInfo, CompileStats, InferenceSession, Model};
 pub use decode::{DecodeCtx, DecodeSession, KvLayer, SessionError};
 pub use linear::{DenseLinear, Linear, SparseLinear};
 
 use std::time::{Duration, Instant};
 
+use crate::ckpt::{CkptError, StateItem, StateSource};
 use crate::coordinator::metrics::TrainReport;
 use crate::sparse::dense::Matrix;
 use crate::sparse::exec::{self, Activation, Workspace};
@@ -152,6 +153,33 @@ pub trait Module: Send {
     /// serving-memory meter the e2e bench asserts on.
     fn training_state_bytes(&self) -> usize {
         0
+    }
+
+    /// Enumerate every checkpointable state tensor under `prefix` —
+    /// parameters, biases, momentum, and (for block-sparse weights) the
+    /// u32 CSR structure tensor — in a FIXED order the loader replays.
+    /// Child names compose as `{prefix}.{leaf}` via [`state_name`].
+    /// Deliberately a required method: a module silently skipped here
+    /// would save and "load" fine while losing its weights, the exact
+    /// failure mode the checkpoint layer exists to rule out.
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem));
+
+    /// Restore state from `src` using the SAME names/order as
+    /// [`Module::state_tensors`]. Structure tensors are verified (a
+    /// checkpoint never mutates a model's sparsity plan — a pattern
+    /// difference is a [`CkptError::SchemaMismatch`]); f32 tensors are
+    /// copied into the module's buffers.
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError>;
+}
+
+/// Compose a checkpoint tensor name: the leaf alone at the root, else
+/// `{prefix}.{leaf}` (so `Sequential` children land as `0.w`, `1.up.b`…).
+pub fn state_name(prefix: &str, leaf: &str) -> String {
+    if prefix.is_empty() {
+        leaf.to_string()
+    } else {
+        format!("{prefix}.{leaf}")
     }
 }
 
@@ -467,6 +495,20 @@ impl Module for Sequential {
     fn training_state_bytes(&self) -> usize {
         4 * self.grads.iter().map(|g| g.data.capacity()).sum::<usize>()
             + self.mods.iter().map(|m| m.training_state_bytes()).sum::<usize>()
+    }
+
+    fn state_tensors(&self, prefix: &str, visit: &mut dyn FnMut(&str, StateItem)) {
+        for (i, m) in self.mods.iter().enumerate() {
+            m.state_tensors(&state_name(prefix, &i.to_string()), visit);
+        }
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
+                  -> Result<(), CkptError> {
+        for (i, m) in self.mods.iter_mut().enumerate() {
+            m.load_state(&state_name(prefix, &i.to_string()), src)?;
+        }
+        Ok(())
     }
 }
 

@@ -17,4 +17,4 @@ pub mod tcp;
 
 pub use engine::{EngineConfig, EngineHandle, RequestError, ServeEngine};
 pub use metrics::{percentile, MetricsSnapshot, Recorder};
-pub use tcp::{client_request, TcpServer};
+pub use tcp::{client_request, TcpConfig, TcpServer};

@@ -20,6 +20,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread;
+use std::time::Duration;
 
 use crate::sparse::dense::Matrix;
 
@@ -30,9 +31,32 @@ const MAGIC: &[u8; 4] = b"PXF1";
 /// into multi-GiB allocations.
 const MAX_DIM: u32 = 1 << 20;
 
+/// Front-end knobs. `io_timeout` bounds every socket read/write so a
+/// stalled client can't pin a connection thread forever: a timeout while
+/// idle between requests closes the connection quietly; a timeout
+/// mid-frame sends the client a typed `timeout:` error first. `None`
+/// disables timeouts (blocking reads, the pre-timeout behaviour).
+#[derive(Clone, Copy, Debug)]
+pub struct TcpConfig {
+    pub io_timeout: Option<Duration>,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig { io_timeout: Some(Duration::from_secs(30)) }
+    }
+}
+
+/// A socket timeout surfaces as `WouldBlock` (unix) or `TimedOut`
+/// (windows); the handler treats both as "the client stalled".
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
 /// Listening front end; `stop()` (or drop) halts the accept loop.
 /// In-flight connection handlers finish their current request and exit
-/// when their client hangs up or the engine goes down.
+/// when their client hangs up, stalls past the i/o timeout, or the
+/// engine goes down.
 pub struct TcpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -41,8 +65,15 @@ pub struct TcpServer {
 
 impl TcpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port —
-    /// read it back from [`TcpServer::addr`]) and start accepting.
+    /// read it back from [`TcpServer::addr`]) and start accepting with
+    /// the default config (30s i/o timeout).
     pub fn start(addr: &str, handle: EngineHandle) -> io::Result<TcpServer> {
+        Self::start_with(addr, handle, TcpConfig::default())
+    }
+
+    /// [`TcpServer::start`] with explicit [`TcpConfig`].
+    pub fn start_with(addr: &str, handle: EngineHandle, cfg: TcpConfig)
+                      -> io::Result<TcpServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -59,7 +90,7 @@ impl TcpServer {
                     let _ = thread::Builder::new()
                         .name("pixelfly-conn".into())
                         .spawn(move || {
-                            let _ = handle_connection(stream, &h);
+                            let _ = handle_connection(stream, &h, cfg);
                         });
                 }
             })?;
@@ -93,28 +124,52 @@ impl Drop for TcpServer {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, handle: &EngineHandle) -> io::Result<()> {
+fn handle_connection(mut stream: TcpStream, handle: &EngineHandle, cfg: TcpConfig)
+                     -> io::Result<()> {
+    stream.set_read_timeout(cfg.io_timeout)?;
+    stream.set_write_timeout(cfg.io_timeout)?;
     loop {
         let mut magic = [0u8; 4];
         match stream.read_exact(&mut magic) {
             Ok(()) => {}
             // clean EOF between requests = client done
             Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
+            // idle timeout BETWEEN requests: nothing owed, close quietly
+            Err(e) if is_timeout(&e) => return Ok(()),
             Err(e) => return Err(e),
         }
         if &magic != MAGIC {
             write_err(&mut stream, "bad magic (want PXF1)")?;
             return Ok(()); // framing is lost; drop the connection
         }
-        let rows = read_u32(&mut stream)?;
-        let d = read_u32(&mut stream)?;
-        let gen = read_u32(&mut stream)?;
-        if rows == 0 || rows > MAX_DIM || d == 0 || d > MAX_DIM || gen > MAX_DIM {
-            write_err(&mut stream, "header out of range")?;
-            return Ok(());
-        }
-        let mut prompt = Matrix::zeros(rows as usize, d as usize);
-        read_f32s(&mut stream, &mut prompt.data)?;
+        // mid-frame from here on: the client owes header + payload bytes,
+        // so a stall gets a typed error back before the drop
+        let parsed: io::Result<(Matrix, u32)> = (|| {
+            let rows = read_u32(&mut stream)?;
+            let d = read_u32(&mut stream)?;
+            let gen = read_u32(&mut stream)?;
+            if rows == 0 || rows > MAX_DIM || d == 0 || d > MAX_DIM || gen > MAX_DIM {
+                return Err(io::Error::new(io::ErrorKind::InvalidData,
+                                          "header out of range"));
+            }
+            let mut prompt = Matrix::zeros(rows as usize, d as usize);
+            read_f32s(&mut stream, &mut prompt.data)?;
+            Ok((prompt, gen))
+        })();
+        let (prompt, gen) = match parsed {
+            Ok(v) => v,
+            Err(e) if is_timeout(&e) => {
+                // best effort: the write has its own timeout and the
+                // connection is being dropped either way
+                let _ = write_err(&mut stream, "timeout: client stalled mid-request");
+                return Ok(());
+            }
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                write_err(&mut stream, &e.to_string())?;
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
         match handle.generate(prompt, gen as usize) {
             Ok(out) => {
                 let mut buf = Vec::with_capacity(9 + out.data.len() * 4);
@@ -207,7 +262,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn f32_round_trip_through_byte_chunks() {
+    fn f32_round_trip_through_byte_chunks() -> io::Result<()> {
         // encode → decode through the same helpers the wire path uses
         let vals: Vec<f32> = (0..1500).map(|i| i as f32 * 0.5 - 3.0).collect();
         let mut bytes = Vec::new();
@@ -215,7 +270,20 @@ mod tests {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
         let mut out = vec![0.0f32; vals.len()];
-        read_f32s(&mut &bytes[..], &mut out).unwrap();
+        read_f32s(&mut &bytes[..], &mut out)?;
         assert_eq!(vals, out);
+        Ok(())
+    }
+
+    #[test]
+    fn short_frame_is_a_typed_error_not_a_panic() {
+        // a frame that ends mid-payload must surface as UnexpectedEof
+        // through the io::Result path, never a panic
+        let bytes = 1.5f32.to_le_bytes();
+        let mut out = vec![0.0f32; 3];
+        match read_f32s(&mut &bytes[..], &mut out) {
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof),
+            Ok(()) => panic!("short frame must error"),
+        }
     }
 }

@@ -1,0 +1,236 @@
+//! Integration tests for the crash-safe checkpoint layer (PR 7):
+//! save → load bit-identical forward across every preset family,
+//! resume-continues-the-loss-curve against an uninterrupted oracle run,
+//! cross-model schema gating, and the recover-or-reject story under
+//! injected write-kill / short-read / bit-flip / truncation faults —
+//! zero panics, zero silent corrupt loads.
+
+use std::path::PathBuf;
+
+use pixelfly::ckpt::{self, faults, writer, CkptError, Snapshotter};
+use pixelfly::coordinator::budget::rule_of_thumb;
+use pixelfly::costmodel::Device;
+use pixelfly::models::preset;
+use pixelfly::nn::{compile, Model};
+use pixelfly::sparse::Matrix;
+use pixelfly::util::Rng;
+
+const BLOCK: usize = 16;
+const LR: f32 = 0.02;
+const MOM: f32 = 0.9;
+
+/// Deterministic compile: same (preset, budget, block, seed) → identical
+/// weights AND an identical state fingerprint across processes.
+fn compile_preset(name: &str, seed: u64) -> Model {
+    let schema = preset(name, 1).unwrap();
+    let dev = Device::with_block(BLOCK);
+    let alloc = rule_of_thumb(&schema, 0.2, &dev);
+    compile(&schema, &alloc, BLOCK, seed).unwrap()
+}
+
+/// Fresh temp dir per test; the tag doubles as the fault-injection path
+/// scope so parallel tests never trip each other's armed faults.
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pxck-it-{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn probe(model: &Model, seed: u64) -> Matrix {
+    Matrix::randn(model.seq, model.in_dim(), 1.0, &mut Rng::new(seed))
+}
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn roundtrip_is_bit_identical_across_all_presets() {
+    // save from a trained model, load into a DIFFERENTLY-seeded compile of
+    // the same preset (same plan, different random init): the forward pass
+    // must bit-match the source model, proving every weight was restored.
+    for name in ["vit-s", "mixer-s", "gpt2-s"] {
+        let dir = tdir(&format!("rt-{name}"));
+        let mut src = compile_preset(name, 11);
+        src.train(2, LR, MOM, 11);
+        let x = probe(&src, 500);
+        let want = src.forward(&x).clone();
+
+        let path = dir.join(writer::step_filename(2));
+        src.save_checkpoint(&path, 2, "meta").unwrap();
+
+        let mut dst = compile_preset(name, 99);
+        let before = dst.forward(&x).clone();
+        assert!(
+            before.data.iter().zip(&want.data).any(|(a, b)| a.to_bits() != b.to_bits()),
+            "{name}: differently-seeded init must differ or the test proves nothing"
+        );
+        let info = dst.load_checkpoint(&path).unwrap();
+        assert_eq!(info.step, 2, "{name}");
+        let got = dst.forward(&x).clone();
+        assert_bits_eq(&got, &want, name);
+    }
+}
+
+#[test]
+fn resume_continues_the_loss_curve_bit_exactly() {
+    // Oracle: 10 uninterrupted steps. Candidate: 5 steps, checkpoint, a
+    // FRESH differently-seeded compile, load, 5 more steps. The training
+    // batch depends only on the data seed (never the step), and the
+    // checkpoint restores params + momentum, so the candidate's weights —
+    // hence its forward output — must be bit-identical to the oracle's.
+    let mut oracle = compile_preset("gpt2-s", 40);
+    oracle.train(10, LR, MOM, 40);
+    let x = probe(&oracle, 700);
+    let want = oracle.forward(&x).clone();
+
+    let dir = tdir("resume");
+    let mut first = compile_preset("gpt2-s", 40);
+    first.train(5, LR, MOM, 40);
+    let path = dir.join(writer::step_filename(5));
+    first.save_checkpoint(&path, 5, "model=gpt2-s;seed=40").unwrap();
+
+    let mut resumed = compile_preset("gpt2-s", 1234);
+    let info = resumed.load_checkpoint(&path).unwrap();
+    assert_eq!(info.step, 5);
+    assert_eq!(info.meta, "model=gpt2-s;seed=40");
+    resumed.train_resumable(5, LR, MOM, 40, info.step, None);
+    let got = resumed.forward(&x).clone();
+    assert_bits_eq(&got, &want, "resumed-vs-uninterrupted");
+}
+
+#[test]
+fn cross_preset_load_is_a_schema_mismatch_and_leaves_the_model_intact() {
+    let dir = tdir("xpreset");
+    let gpt = compile_preset("gpt2-s", 21);
+    let path = dir.join(writer::step_filename(1));
+    gpt.save_checkpoint(&path, 1, "meta").unwrap();
+
+    let mut mixer = compile_preset("mixer-s", 21);
+    let x = probe(&mixer, 900);
+    let before = mixer.forward(&x).clone();
+    match mixer.load_checkpoint(&path) {
+        Err(CkptError::SchemaMismatch { .. }) => {}
+        other => panic!("cross-preset load must be SchemaMismatch, got {other:?}"),
+    }
+    // fingerprint gating rejects BEFORE any tensor is touched
+    let after = mixer.forward(&x).clone();
+    assert_bits_eq(&after, &before, "model untouched after rejected load");
+}
+
+#[test]
+fn corruption_is_rejected_never_loaded_silently() {
+    // truncation, bit flips, short reads, and a bumped version: every one
+    // must surface as a typed CkptError — no panics, no quiet wrong loads.
+    let dir = tdir("corrupt");
+    let mut model = compile_preset("gpt2-s", 31);
+    model.train(1, LR, MOM, 31);
+    let path = dir.join(writer::step_filename(1));
+    model.save_checkpoint(&path, 1, "meta").unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // clean save leaves no .tmp residue
+    for e in std::fs::read_dir(&dir).unwrap() {
+        let n = e.unwrap().file_name().to_string_lossy().into_owned();
+        assert!(!n.ends_with(".tmp"), "stray {n} after a clean save");
+    }
+
+    // truncations at the magic, mid-header, and one-byte-short
+    let cut_path = dir.join("pxck-it-corrupt-cut.pxck");
+    for cut in [0, 3, 16, good.len() / 2, good.len() - 1] {
+        std::fs::write(&cut_path, &good[..cut]).unwrap();
+        match ckpt::load(&cut_path) {
+            Err(CkptError::Truncated { .. }) | Err(CkptError::BadCrc { .. })
+            | Err(CkptError::BadMagic) => {}
+            other => panic!("truncation at {cut} must be typed, got {other:?}"),
+        }
+    }
+
+    // bit flips across the whole file via the injected read fault
+    let total_bits = good.len() * 8;
+    for bit in [0, 37, total_bits / 3, total_bits / 2, total_bits - 1] {
+        assert!(faults::arm(&format!("bit-flip@{bit}"), "pxck-it-corrupt"));
+        match model.load_checkpoint(&path) {
+            Err(_) => {}
+            Ok(_) => panic!("bit flip at {bit} loaded silently"),
+        }
+    }
+
+    // short reads (torn page / truncated copy at the syscall layer)
+    for k in [0, 8, good.len() - 4] {
+        assert!(faults::arm(&format!("short-read@{k}"), "pxck-it-corrupt"));
+        assert!(model.load_checkpoint(&path).is_err(), "short read at {k}");
+    }
+
+    // a future format version is refused up front
+    let mut future = good.clone();
+    future[4] += 1;
+    std::fs::write(&cut_path, &future).unwrap();
+    match ckpt::load(&cut_path) {
+        Err(CkptError::FutureVersion { found }) => assert_eq!(found, 2),
+        other => panic!("future version must be typed, got {other:?}"),
+    }
+
+    // with no fault armed the original still loads fine
+    faults::disarm("pxck-it-corrupt");
+    model.load_checkpoint(&path).unwrap();
+}
+
+#[test]
+fn killed_write_preserves_the_previous_checkpoint() {
+    // the recover half of recover-or-reject: a write that dies mid-file
+    // must leave the previous snapshot loadable and the destination free
+    // of a half-written hybrid (the .tmp never gets renamed).
+    let dir = tdir("killwrite");
+    let mut model = compile_preset("gpt2-s", 51);
+    let p1 = dir.join(writer::step_filename(1));
+    model.save_checkpoint(&p1, 1, "meta").unwrap();
+
+    model.train(1, LR, MOM, 51);
+    let p2 = dir.join(writer::step_filename(2));
+    assert!(faults::arm("kill-write@64", "pxck-it-killwrite"));
+    match model.save_checkpoint(&p2, 2, "meta") {
+        Err(CkptError::Io(_)) => {}
+        other => panic!("killed write must surface as Io, got {other:?}"),
+    }
+    assert!(!p2.exists(), "a killed write must never materialise the target");
+    let mut tmp = p2.as_os_str().to_owned();
+    tmp.push(".tmp");
+    assert!(PathBuf::from(tmp).exists(), "crash evidence: the fsynced .tmp stays");
+
+    // recovery: the previous checkpoint is intact and loads
+    let mut fresh = compile_preset("gpt2-s", 52);
+    let info = fresh.load_checkpoint(&p1).unwrap();
+    assert_eq!(info.step, 1);
+    faults::disarm("pxck-it-killwrite");
+}
+
+#[test]
+fn background_snapshotter_rides_the_training_loop() {
+    // end to end: train with --snapshot-every semantics, then warm-start a
+    // decode session from the latest snapshot — the serve path.
+    let dir = tdir("snaptrain");
+    let mut model = compile_preset("gpt2-s", 61);
+    let snapper = Snapshotter::start(&dir, 2).unwrap();
+    model.train_resumable(6, LR, MOM, 61, 0, Some((&snapper, 2, "meta=snap")));
+    let rep = snapper.finish();
+    assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+    assert!(rep.written >= 1, "6 steps at every-2 must land at least one");
+    assert!(rep.written + rep.dropped >= 3, "3 offers at steps 2, 4, 6");
+
+    let latest = writer::latest_in(&dir).expect("a checkpoint on disk");
+    let mut fresh = compile_preset("gpt2-s", 62);
+    let info = fresh.load_checkpoint(&latest).unwrap();
+    assert!(info.step >= 2 && info.step % 2 == 0, "step {}", info.step);
+    assert_eq!(info.meta, "meta=snap");
+
+    // the serve warm-start path: load THEN freeze into decode
+    let mut sess = fresh.into_decode(1).unwrap();
+    let d = sess.in_dim();
+    let x = Matrix::randn(1, d, 1.0, &mut Rng::new(3));
+    sess.step(&x, &[0], &[0]).unwrap();
+}

@@ -3,15 +3,17 @@
 //! against a serial oracle through the TCP front end, the typed request
 //! error surface, and the decode session's zero-alloc steady state.
 
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::thread;
+use std::time::Duration;
 
 use pixelfly::coordinator::budget::rule_of_thumb;
 use pixelfly::costmodel::Device;
 use pixelfly::models::preset;
 use pixelfly::nn::{compile, DecodeSession, Model};
 use pixelfly::serving::{client_request, EngineConfig, RequestError, ServeEngine,
-                        TcpServer};
+                        TcpConfig, TcpServer};
 use pixelfly::sparse::Matrix;
 use pixelfly::util::Rng;
 
@@ -190,6 +192,56 @@ fn request_validation_and_shutdown_error_surface() {
     engine.shutdown();
     assert!(matches!(h.generate(Matrix::zeros(4, d), 2),
                      Err(RequestError::EngineDown(_))));
+}
+
+#[test]
+fn slow_client_gets_a_typed_timeout_error_and_idle_clients_close_quietly() {
+    // A client that stalls MID-FRAME owes the server bytes: it must get a
+    // typed `timeout:` error frame back before the drop, so the failure
+    // is diagnosable client-side. An IDLE client (between requests) owes
+    // nothing: the connection closes quietly with no error frame.
+    let sess = compile_gpt2s(39).into_decode(1).unwrap();
+    let engine = ServeEngine::start(sess, EngineConfig { max_batch: 1, queue_depth: 4 });
+    let server = TcpServer::start_with(
+        "127.0.0.1:0",
+        engine.handle(),
+        TcpConfig { io_timeout: Some(Duration::from_millis(100)) },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    // stall mid-frame: magic plus a third of the header, then silence
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(b"PXF1").unwrap();
+    stream.write_all(&8u32.to_le_bytes()).unwrap();
+    let mut status = [0u8; 1];
+    stream.read_exact(&mut status).unwrap();
+    assert_eq!(status[0], 1, "a mid-frame stall must get the error frame");
+    let mut lenb = [0u8; 4];
+    stream.read_exact(&mut lenb).unwrap();
+    let mut msg = vec![0u8; u32::from_le_bytes(lenb) as usize];
+    stream.read_exact(&mut msg).unwrap();
+    let msg = String::from_utf8_lossy(&msg);
+    assert!(msg.contains("timeout"), "want a timeout error, got {msg:?}");
+
+    // idle connection: EOF with no error frame, and the server thread is
+    // released rather than pinned forever by a silent client
+    let mut idle = TcpStream::connect(addr).unwrap();
+    let mut b = [0u8; 1];
+    assert_eq!(idle.read(&mut b).unwrap(), 0, "idle timeout closes without a frame");
+
+    // the server stays healthy for well-behaved clients afterwards
+    let d = {
+        let mut probe = TcpStream::connect(addr).unwrap();
+        let prompt = Matrix::zeros(4, engine.handle().d());
+        let out = client_request(&mut probe, &prompt, 2)
+            .expect("transport")
+            .expect("server accepted");
+        out.cols
+    };
+    assert!(d > 0);
+    server.stop();
+    engine.shutdown();
 }
 
 #[test]
