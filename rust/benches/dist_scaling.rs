@@ -1,0 +1,101 @@
+//! Distributed-training scaling bench (PR 8): whole localhost fleets at
+//! ranks {1, 2, 4}, measuring per-round step time and end-to-end
+//! samples/s through the full PXD1 path — compile, admission, chunked
+//! CRC'd gradient exchange, rank-ordered averaging, broadcast.
+//!
+//! The substrate pool is pinned to one thread per dispatch so rank
+//! count IS the parallelism: on a multi-core host the 2-rank fleet must
+//! beat the 1-rank fleet on samples/s (hard assert — data parallelism
+//! that loses to a single process is a bug, not a tuning issue). The
+//! 4-rank row is reported for the scaling curve but not asserted: CI
+//! boxes routinely have 2 cores.
+
+use std::time::Instant;
+
+use pixelfly::bench::{BenchResult, BenchSuite};
+use pixelfly::coordinator::budget::rule_of_thumb;
+use pixelfly::costmodel::Device;
+use pixelfly::dist::{self, DistConfig, WorkerConfig};
+use pixelfly::models::preset;
+use pixelfly::nn::{compile, Model};
+use pixelfly::sparse::exec;
+use pixelfly::util::stats::Summary;
+
+const BLOCK: usize = 16;
+const SEED: u64 = 42;
+
+fn compile_gpt2s() -> Model {
+    let schema = preset("gpt2-s", 1).expect("gpt2-s preset");
+    let dev = Device::with_block(BLOCK);
+    let alloc = rule_of_thumb(&schema, 0.2, &dev);
+    compile(&schema, &alloc, BLOCK, SEED).expect("compile gpt2-s")
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("dist_scaling");
+    // one pool thread per dispatch: each worker thread computes serially,
+    // so fleet size is the only parallelism being measured
+    exec::set_threads(1);
+    let rounds: u64 = if suite.quick { 5 } else { 15 };
+    let rows = compile_gpt2s().seq;
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+
+    let mut samples_per_s: Vec<(u32, f64)> = Vec::new();
+    for nranks in [1u32, 2, 4] {
+        let dist = DistConfig::new(nranks, rounds);
+        let fleet: Vec<(Model, WorkerConfig)> = (0..nranks)
+            .map(|i| {
+                (compile_gpt2s(),
+                 WorkerConfig::new("", &format!("bench-dist-r{nranks}-w{i}")))
+            })
+            .collect();
+        let t0 = Instant::now();
+        let (coord, workers) = dist::run_local(dist, fleet).expect("fleet run");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(coord.rounds, rounds, "{nranks} ranks: all rounds complete");
+        assert!(coord.excluded.is_empty(), "{nranks} ranks: no exclusions");
+        for w in workers {
+            let w = w.expect("worker");
+            assert_eq!(w.losses.len(), rounds as usize);
+            assert!(w.losses.iter().all(|l| l.is_finite()));
+        }
+
+        let samples = (rounds * u64::from(nranks) * rows as u64) as f64;
+        let sps = samples / wall;
+        let step_ms = wall * 1e3 / rounds as f64;
+        samples_per_s.push((nranks, sps));
+        let mut ns = vec![wall * 1e9 / rounds as f64];
+        suite.results.push(BenchResult {
+            name: format!("step_time_ranks{nranks}"),
+            summary: Summary::from_ns(&mut ns),
+            gflops: None,
+            scratch_bytes: None,
+            phases: None,
+            note: format!("{rounds} rounds, {rows} rows/rank/round, \
+                           {sps:.0} samples/s, pool=1 thread"),
+        });
+        println!("ranks={nranks}: {step_ms:.2} ms/round, {sps:.0} samples/s \
+                  ({rounds} rounds, global batch {} rows)",
+                 rows * nranks as usize);
+    }
+
+    let sps1 = samples_per_s[0].1;
+    let sps2 = samples_per_s[1].1;
+    println!("scaling: ranks2/ranks1 = {:.2}x (host has {cores} cores)",
+             sps2 / sps1);
+    if cores >= 2 {
+        // the acceptance test for the whole subsystem: adding a worker
+        // must add throughput, allreduce overhead included
+        assert!(sps2 > sps1,
+                "2-rank fleet must out-throughput 1 rank on a {cores}-core \
+                 host ({sps2:.0} vs {sps1:.0} samples/s)");
+    } else {
+        println!("single-core host: skipping the ranks2 > ranks1 assert");
+    }
+
+    suite.report();
+    match suite.write_json_default() {
+        Ok(p) => println!("json -> {}", p.display()),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+}

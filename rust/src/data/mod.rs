@@ -14,6 +14,7 @@
 pub mod corpus;
 pub mod lra;
 pub mod prefetch;
+pub mod shard;
 pub mod vision;
 
 /// A batch of f32 features [batch, seq, dim] + integer labels.

@@ -1,0 +1,606 @@
+//! The fleet coordinator: admission, the per-round contribution
+//! barrier, rank-ordered averaging, death detection, and elastic
+//! replacement.
+//!
+//! Threading mirrors the serving server: one acceptor thread performs
+//! handshakes, one reader thread per admitted worker assembles its
+//! chunked streams, and the MAIN LOOP OWNS EVERY WRITE — readers and
+//! the acceptor only push [`Event`]s through a [`Doorbell`], so no
+//! socket is ever written from two threads and the barrier state
+//! machine lives in exactly one place.
+//!
+//! The barrier state machine per round:
+//!
+//! 1. collect one contribution per *contributing* rank (alive, and
+//!    `first_round <= round`);
+//! 2. at the round deadline, a missing rank with stale heartbeats is
+//!    excluded (connection closed, average rescaled over survivors); a
+//!    missing rank that still heartbeats gets until the 3× hard cap;
+//! 3. when all contributions are in, average IN RANK ORDER with the
+//!    exact f32 arithmetic [`super::simulate_grad_allreduce`] uses and
+//!    broadcast the result (cached for one round of resend requests).
+//!
+//! Replacement admission pauses step 3 ("the barrier pauses"): the
+//! newcomer is welcomed under the dead rank with
+//! `first_round = round + 1`, a donor (lowest contributing rank) is
+//! asked to upload its full param view — stamped `round`, since the
+//! donor cannot apply this round's result while the barrier holds —
+//! and the upload is forwarded before the round's result is broadcast.
+//! The replacement therefore sees params(start of `round`), then
+//! result(`round`), and enters the barrier at `round + 1` bit-exact
+//! with the fleet.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::nn::{Model, TrainTensors};
+use crate::sparse::exec::pool::Doorbell;
+
+use super::proto::{self, is_timeout, read_msg, send_flat, write_msg, Assembly, Msg,
+                   ProtoError};
+use super::{DistConfig, DistError, Mode};
+
+/// The model identity every joining worker must prove (same gate a
+/// checkpoint load uses) plus the flat-view lengths that bound every
+/// stream buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetSpec {
+    pub fingerprint: u64,
+    pub grads_len: usize,
+    pub params_len: usize,
+}
+
+impl FleetSpec {
+    pub fn of(model: &mut Model) -> FleetSpec {
+        FleetSpec {
+            fingerprint: model.state_fingerprint(),
+            grads_len: model.train_flat_len(TrainTensors::Grads),
+            params_len: model.train_flat_len(TrainTensors::Params),
+        }
+    }
+}
+
+/// What a completed (or failed-over) run did.
+#[derive(Clone, Debug)]
+pub struct CoordReport {
+    /// rank-averaged loss per completed round
+    pub losses: Vec<f64>,
+    /// every rank ever excluded (death or stall), in exclusion order
+    pub excluded: Vec<u32>,
+    /// replacement workers admitted mid-run
+    pub replacements: u32,
+    pub rounds: u64,
+}
+
+struct HelloInfo {
+    fingerprint: u64,
+    grads_len: u64,
+    params_len: u64,
+}
+
+enum Event {
+    Join { conn: TcpStream, hello: HelloInfo },
+    Contrib { rank: u32, round: u64, loss: f64, data: Vec<f32> },
+    ContribIncomplete { rank: u32, round: u64 },
+    ParamsUp { stamp: u64, data: Vec<f32> },
+    ResendRequest { rank: u32, round: u64 },
+    Dead { rank: u32 },
+}
+
+struct Shared {
+    events: Vec<Event>,
+    done: bool,
+}
+
+struct Slot {
+    /// write half — only the main loop touches it
+    conn: TcpStream,
+    alive: bool,
+    first_round: u64,
+    last_seen: Arc<Mutex<Instant>>,
+    /// buffered contributions (current round, possibly next round from
+    /// a fast worker) — bounded at 2
+    contribs: Vec<(u64, f64, Vec<f32>)>,
+    needs_params: bool,
+    /// last params forward, kept for one resend request
+    sent_params: Option<(u64, Vec<f32>)>,
+}
+
+pub struct Coordinator {
+    listener: TcpListener,
+    dist: DistConfig,
+    spec: FleetSpec,
+}
+
+impl Coordinator {
+    pub fn bind(addr: &str, dist: DistConfig, spec: FleetSpec)
+                -> Result<Coordinator, DistError> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Coordinator { listener, dist, spec })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr, DistError> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Drive the fleet to `dist.rounds` completed rounds (or a typed
+    /// failure), then tear every thread and socket down.
+    pub fn run(self) -> Result<CoordReport, DistError> {
+        let Coordinator { listener, dist, spec } = self;
+        let local = listener.local_addr()?;
+        let bell: Arc<Doorbell<Shared>> =
+            Arc::new(Doorbell::new(Shared { events: Vec::new(), done: false }));
+        let ab = bell.clone();
+        let acceptor = thread::Builder::new()
+            .name("pxd-accept".into())
+            .spawn(move || accept_loop(listener, ab))?;
+
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut readers: Vec<JoinHandle<()>> = Vec::new();
+        let outcome = drive(&dist, &spec, &bell, &mut slots, &mut readers);
+
+        bell.update(|s| s.done = true);
+        for s in slots.iter() {
+            let _ = s.conn.shutdown(Shutdown::Both);
+        }
+        // unblock the acceptor exactly like `TcpServer::halt`
+        let _ = TcpStream::connect(local);
+        for r in readers {
+            let _ = r.join();
+        }
+        let _ = acceptor.join();
+        outcome
+    }
+}
+
+fn accept_loop(listener: TcpListener, bell: Arc<Doorbell<Shared>>) {
+    loop {
+        let mut conn = match listener.accept() {
+            Ok((c, _)) => c,
+            Err(_) => {
+                if bell.update(|s| s.done) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if bell.update(|s| s.done) {
+            return;
+        }
+        let _ = conn.set_nodelay(true);
+        let _ = conn.set_read_timeout(Some(Duration::from_secs(2)));
+        let _ = conn.set_write_timeout(Some(Duration::from_secs(5)));
+        match read_msg(&mut conn) {
+            Ok(Msg::Hello { proto_version, fingerprint, grads_len, params_len, .. }) => {
+                if proto_version != proto::PROTO_VERSION {
+                    let _ = write_msg(&mut conn, &Msg::Error {
+                        msg: format!("protocol version {proto_version} unsupported \
+                                      (coordinator speaks {})", proto::PROTO_VERSION),
+                    });
+                    continue;
+                }
+                bell.update(|s| {
+                    s.events.push(Event::Join {
+                        conn,
+                        hello: HelloInfo { fingerprint, grads_len, params_len },
+                    });
+                });
+            }
+            // anything else — garbage, timeout, wrong first frame — is
+            // not a worker; drop the connection
+            _ => {}
+        }
+    }
+}
+
+/// Per-worker reader: assembles chunked streams off the read half and
+/// reports completed contributions / uploads / liveness as events.
+/// Transient frame corruption (bad CRC, unknown kind) drops the frame;
+/// only a dead socket ends the loop.
+fn reader_loop(conn: TcpStream, rank: u32, contrib_len: usize, params_len: usize,
+               last_seen: Arc<Mutex<Instant>>, bell: Arc<Doorbell<Shared>>) {
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(200)));
+    let patience = Duration::from_secs(10);
+    let mut contrib = Assembly::new(contrib_len);
+    let mut contrib_round = u64::MAX;
+    let mut params = Assembly::new(params_len);
+    loop {
+        if bell.update(|s| s.done) {
+            return;
+        }
+        let msg = match proto::read_frame_socket(&conn, false, patience) {
+            Err(e) if is_timeout(&e) => continue,
+            Err(ProtoError::BadCrc { .. }) | Err(ProtoError::BadKind(_))
+            | Err(ProtoError::Truncated { .. }) | Err(ProtoError::TooLarge { .. }) => {
+                continue;
+            }
+            Err(_) => {
+                bell.update(|s| s.events.push(Event::Dead { rank }));
+                return;
+            }
+            Ok(m) => m,
+        };
+        *last_seen.lock().unwrap() = Instant::now();
+        match msg {
+            Msg::Chunk { stream, round, offset, data } => {
+                if stream == proto::STREAM_CONTRIB {
+                    if round != contrib_round {
+                        contrib.reset();
+                        contrib_round = round;
+                    }
+                    let _ = contrib.absorb(offset, &data);
+                } else if stream == proto::STREAM_PARAMS_UP {
+                    let _ = params.absorb(offset, &data);
+                }
+            }
+            Msg::End { stream, round, loss, .. } => {
+                if stream == proto::STREAM_CONTRIB {
+                    let ev = if round == contrib_round && contrib.complete() {
+                        Event::Contrib { rank, round, loss, data: contrib.buf.clone() }
+                    } else {
+                        Event::ContribIncomplete { rank, round }
+                    };
+                    bell.update(|s| s.events.push(ev));
+                    contrib.reset();
+                    contrib_round = u64::MAX;
+                } else if stream == proto::STREAM_PARAMS_UP {
+                    if params.complete() {
+                        let ev = Event::ParamsUp { stamp: round, data: params.buf.clone() };
+                        bell.update(|s| s.events.push(ev));
+                    }
+                    // incomplete upload: the main loop re-requests on its
+                    // params deadline, no resend needed here
+                    params.reset();
+                }
+            }
+            Msg::Resend { round } => {
+                bell.update(|s| s.events.push(Event::ResendRequest { rank, round }));
+            }
+            // Heartbeat (and anything unexpected) only refreshes last_seen
+            _ => {}
+        }
+    }
+}
+
+fn kill_slot(slots: &mut [Slot], i: usize, excluded: &mut Vec<u32>) {
+    let s = &mut slots[i];
+    if !s.alive {
+        return;
+    }
+    s.alive = false;
+    s.needs_params = false;
+    s.contribs.clear();
+    s.sent_params = None;
+    let _ = s.conn.shutdown(Shutdown::Both);
+    excluded.push(i as u32);
+}
+
+/// Lowest contributing rank — the donor for replacement catch-up.
+fn donor_index(slots: &[Slot], round: u64) -> Option<usize> {
+    (0..slots.len()).find(|&i| slots[i].alive && slots[i].first_round <= round)
+}
+
+fn drive(dist: &DistConfig, spec: &FleetSpec, bell: &Arc<Doorbell<Shared>>,
+         slots: &mut Vec<Slot>, readers: &mut Vec<JoinHandle<()>>)
+         -> Result<CoordReport, DistError> {
+    let nranks = dist.nranks as usize;
+    let contrib_len = match dist.mode {
+        Mode::Grad => spec.grads_len,
+        Mode::Fedavg => spec.params_len,
+    };
+    let mut started = false;
+    let admit_deadline = Instant::now() + dist.admit_timeout;
+    let mut round: u64 = 0;
+    let mut round_start = Instant::now();
+    let mut losses: Vec<f64> = Vec::new();
+    let mut excluded: Vec<u32> = Vec::new();
+    let mut replacements: u32 = 0;
+    let mut last_result: Option<(u64, Vec<f32>, f64, u32)> = None;
+    // replacement params transfer bookkeeping
+    let mut params_req_at: Option<Instant> = None;
+    let mut params_give_up: Option<Instant> = None;
+
+    loop {
+        let events = bell
+            .wait_timeout_until(Duration::from_millis(50), |s| {
+                if s.events.is_empty() {
+                    None
+                } else {
+                    Some(std::mem::take(&mut s.events))
+                }
+            })
+            .unwrap_or_default();
+
+        for ev in events {
+            match ev {
+                Event::Join { mut conn, hello } => {
+                    if hello.fingerprint != spec.fingerprint
+                        || hello.grads_len != spec.grads_len as u64
+                        || hello.params_len != spec.params_len as u64
+                    {
+                        let _ = write_msg(&mut conn, &Msg::Error {
+                            msg: format!(
+                                "model mismatch: fleet fingerprint {:016x} \
+                                 ({} grad / {} param elems), worker {:016x} \
+                                 ({} / {})",
+                                spec.fingerprint, spec.grads_len, spec.params_len,
+                                hello.fingerprint, hello.grads_len, hello.params_len
+                            ),
+                        });
+                        continue;
+                    }
+                    let assign: Option<(usize, u64)> = if !started {
+                        if slots.len() < nranks {
+                            Some((slots.len(), 0))
+                        } else {
+                            None
+                        }
+                    } else if slots.iter().any(|s| s.alive && s.needs_params) {
+                        // one replacement catch-up in flight at a time
+                        None
+                    } else {
+                        slots.iter().position(|s| !s.alive).map(|i| (i, round + 1))
+                    };
+                    let (i, first_round) = match assign {
+                        None => {
+                            let _ = write_msg(&mut conn, &Msg::Retry { backoff_ms: 100 });
+                            continue;
+                        }
+                        Some(a) => a,
+                    };
+                    let welcome = Msg::Welcome {
+                        rank: i as u32,
+                        nranks: dist.nranks,
+                        first_round,
+                        total_rounds: dist.rounds,
+                        mode: dist.mode.wire(),
+                        sync_every: dist.sync_every.max(1),
+                        lr: dist.lr,
+                        momentum: dist.momentum,
+                        data_seed: dist.data_seed,
+                    };
+                    if write_msg(&mut conn, &welcome).is_err() {
+                        continue;
+                    }
+                    let reader_conn = match conn.try_clone() {
+                        Ok(c) => c,
+                        Err(_) => continue,
+                    };
+                    let last_seen = Arc::new(Mutex::new(Instant::now()));
+                    let (ls, rb) = (last_seen.clone(), bell.clone());
+                    let plen = spec.params_len;
+                    let handle = thread::Builder::new()
+                        .name(format!("pxd-read-{i}"))
+                        .spawn(move || reader_loop(reader_conn, i as u32, contrib_len,
+                                                   plen, ls, rb));
+                    let handle = match handle {
+                        Ok(h) => h,
+                        Err(_) => continue,
+                    };
+                    readers.push(handle);
+                    let slot = Slot {
+                        conn,
+                        alive: true,
+                        first_round,
+                        last_seen,
+                        contribs: Vec::new(),
+                        needs_params: started,
+                        sent_params: None,
+                    };
+                    if i == slots.len() {
+                        slots.push(slot);
+                    } else {
+                        slots[i] = slot;
+                    }
+                    if started {
+                        replacements += 1;
+                        // force an immediate donor request below
+                        params_req_at = None;
+                        params_give_up = None;
+                    }
+                }
+                Event::Contrib { rank, round: r, loss, data } => {
+                    let i = rank as usize;
+                    if i >= slots.len() || !slots[i].alive {
+                        continue;
+                    }
+                    // current round, or one round ahead from a fast
+                    // worker racing the barrier — anything else is stale
+                    if r >= round && r <= round + 1 {
+                        let slot = &mut slots[i];
+                        slot.contribs.retain(|c| c.0 != r);
+                        slot.contribs.push((r, loss, data));
+                        if slot.contribs.len() > 2 {
+                            slot.contribs.remove(0);
+                        }
+                    }
+                }
+                Event::ContribIncomplete { rank, round: r } => {
+                    let i = rank as usize;
+                    if i < slots.len() && slots[i].alive && r >= round {
+                        if write_msg(&mut slots[i].conn, &Msg::Resend { round: r })
+                            .is_err()
+                        {
+                            kill_slot(slots, i, &mut excluded);
+                        }
+                    }
+                }
+                Event::ParamsUp { stamp, data } => {
+                    if let Some(i) = slots.iter().position(|s| s.alive && s.needs_params) {
+                        if send_flat(&mut slots[i].conn, proto::STREAM_PARAMS_DOWN,
+                                     stamp, &data, 0.0, 0)
+                            .is_ok()
+                        {
+                            let slot = &mut slots[i];
+                            slot.needs_params = false;
+                            slot.sent_params = Some((stamp, data));
+                        } else {
+                            kill_slot(slots, i, &mut excluded);
+                        }
+                        params_req_at = None;
+                        params_give_up = None;
+                    }
+                }
+                Event::ResendRequest { rank, round: r } => {
+                    let i = rank as usize;
+                    if i >= slots.len() || !slots[i].alive {
+                        continue;
+                    }
+                    let resent = match &last_result {
+                        Some((lr, data, loss, k)) if *lr == r => {
+                            send_flat(&mut slots[i].conn, proto::STREAM_RESULT, r,
+                                      data, *loss, *k)
+                                .is_ok()
+                        }
+                        _ => {
+                            let Slot { conn, sent_params, .. } = &mut slots[i];
+                            match sent_params {
+                                Some((stamp, data)) if *stamp == r => {
+                                    send_flat(conn, proto::STREAM_PARAMS_DOWN, r,
+                                              data, 0.0, 0)
+                                        .is_ok()
+                                }
+                                _ => true, // nothing cached for that round: ignore
+                            }
+                        }
+                    };
+                    if !resent {
+                        kill_slot(slots, i, &mut excluded);
+                    }
+                }
+                Event::Dead { rank } => {
+                    let i = rank as usize;
+                    if i < slots.len() {
+                        kill_slot(slots, i, &mut excluded);
+                    }
+                }
+            }
+        }
+
+        // initial admission barrier
+        if !started {
+            if slots.len() == nranks && slots.iter().all(|s| s.alive) {
+                started = true;
+                round_start = Instant::now();
+            } else if Instant::now() > admit_deadline {
+                return Err(DistError::Handshake(format!(
+                    "only {} of {nranks} workers joined within {:?}",
+                    slots.iter().filter(|s| s.alive).count(),
+                    dist.admit_timeout
+                )));
+            } else {
+                continue;
+            }
+        }
+
+        // a replacement catch-up in flight pauses the round barrier
+        if slots.iter().any(|s| s.alive && s.needs_params) {
+            let now = Instant::now();
+            let give_up = *params_give_up.get_or_insert(now + dist.round_timeout * 3);
+            if now > give_up {
+                // the transfer never completed: drop the replacement so
+                // the fleet can move again
+                if let Some(i) = slots.iter().position(|s| s.alive && s.needs_params) {
+                    kill_slot(slots, i, &mut excluded);
+                }
+                params_req_at = None;
+                params_give_up = None;
+            } else {
+                let due = match params_req_at {
+                    None => true,
+                    Some(t) => now > t + dist.round_timeout,
+                };
+                if due {
+                    match donor_index(slots, round) {
+                        Some(d) => {
+                            if write_msg(&mut slots[d].conn, &Msg::ParamsRequest)
+                                .is_err()
+                            {
+                                kill_slot(slots, d, &mut excluded);
+                            }
+                            params_req_at = Some(now);
+                        }
+                        None => {
+                            // nobody left to donate: the un-synced
+                            // replacement cannot be saved
+                            if let Some(i) =
+                                slots.iter().position(|s| s.alive && s.needs_params)
+                            {
+                                kill_slot(slots, i, &mut excluded);
+                            }
+                            params_req_at = None;
+                            params_give_up = None;
+                        }
+                    }
+                }
+                continue;
+            }
+        }
+
+        // round barrier: completion, then deadline-driven exclusion
+        let contributing: Vec<usize> = (0..slots.len())
+            .filter(|&i| slots[i].alive && slots[i].first_round <= round)
+            .collect();
+        if contributing.is_empty() {
+            return Err(DistError::FleetLost);
+        }
+        let have_all = contributing
+            .iter()
+            .all(|&i| slots[i].contribs.iter().any(|c| c.0 == round));
+        if have_all {
+            let k = contributing.len() as u32;
+            let mut acc = vec![0f32; contrib_len];
+            let mut loss_sum = 0f64;
+            // rank order — the exact arithmetic of the sim oracle
+            for &i in &contributing {
+                let c = slots[i].contribs.iter().find(|c| c.0 == round).unwrap();
+                loss_sum += c.1;
+                for (a, v) in acc.iter_mut().zip(&c.2) {
+                    *a += v;
+                }
+            }
+            let inv = 1.0 / k as f32;
+            for a in acc.iter_mut() {
+                *a *= inv;
+            }
+            let avg_loss = loss_sum / k as f64;
+            losses.push(avg_loss);
+            for i in 0..slots.len() {
+                if !slots[i].alive {
+                    continue;
+                }
+                if send_flat(&mut slots[i].conn, proto::STREAM_RESULT, round, &acc,
+                             avg_loss, k)
+                    .is_err()
+                {
+                    kill_slot(slots, i, &mut excluded);
+                }
+            }
+            last_result = Some((round, acc, avg_loss, k));
+            for s in slots.iter_mut() {
+                s.contribs.retain(|c| c.0 > round);
+            }
+            round += 1;
+            round_start = Instant::now();
+            if round == dist.rounds {
+                return Ok(CoordReport { losses, excluded, replacements, rounds: round });
+            }
+        } else if round_start.elapsed() > dist.round_timeout {
+            let hard = round_start.elapsed() > dist.round_timeout * 3;
+            let missing: Vec<usize> = contributing
+                .iter()
+                .copied()
+                .filter(|&i| !slots[i].contribs.iter().any(|c| c.0 == round))
+                .collect();
+            for i in missing {
+                let fresh =
+                    slots[i].last_seen.lock().unwrap().elapsed() < dist.round_timeout;
+                if hard || !fresh {
+                    kill_slot(slots, i, &mut excluded);
+                }
+            }
+        }
+    }
+}

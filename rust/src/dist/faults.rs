@@ -1,0 +1,120 @@
+//! Fault injection for the distributed-training chokepoints, mirroring
+//! `ckpt/faults.rs`: arm one-shot faults test-first (`arm(spec, tag)`)
+//! with a WORKER TAG so parallel tests never contaminate each other, or
+//! arm one tag-free fault at process start via `PIXELFLY_DIST_FAULT`.
+//!
+//! Three failure classes, each fired at allreduce round `K` by the
+//! worker whose tag matches:
+//!
+//! - `kill-conn@K` — the worker drops its connection and exits with a
+//!   typed error, simulating a process crash: the coordinator must
+//!   detect the death, exclude the rank, and keep the fleet training.
+//! - `stall@K` — the worker sleeps past the coordinator's round
+//!   deadline, simulating a wedged host: it must be excluded exactly
+//!   like a dead one (heartbeats stop too).
+//! - `garble-frame@K` — one bit of the next received frame flips before
+//!   the CRC check, simulating wire corruption: the frame is rejected
+//!   and the chunked-stream resend protocol must recover bit-exactly.
+
+use std::sync::{Mutex, Once};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    KillConn,
+    Stall,
+    GarbleFrame,
+}
+
+#[derive(Debug)]
+struct Armed {
+    kind: Kind,
+    at: u64,
+    /// fault fires only for workers whose tag contains this ("" = any)
+    tag: String,
+}
+
+static ARMED: Mutex<Vec<Armed>> = Mutex::new(Vec::new());
+static ENV_ONCE: Once = Once::new();
+
+fn parse(spec: &str) -> Option<(Kind, u64)> {
+    let (name, at) = spec.split_once('@')?;
+    let at: u64 = at.trim().parse().ok()?;
+    let kind = match name.trim() {
+        "kill-conn" => Kind::KillConn,
+        "stall" => Kind::Stall,
+        "garble-frame" => Kind::GarbleFrame,
+        _ => return None,
+    };
+    Some((kind, at))
+}
+
+/// Arm one fault (`"kill-conn@3"`, `"stall@2"`, `"garble-frame@1"`)
+/// scoped to worker tags containing `tag`. One-shot: the fault disarms
+/// when it fires. Returns false on an unparseable spec.
+pub fn arm(spec: &str, tag: &str) -> bool {
+    match parse(spec) {
+        Some((kind, at)) => {
+            ARMED.lock().unwrap().push(Armed { kind, at, tag: tag.to_string() });
+            true
+        }
+        None => false,
+    }
+}
+
+/// Drop every armed fault scoped to `tag` (test cleanup).
+pub fn disarm(tag: &str) {
+    ARMED.lock().unwrap().retain(|a| a.tag != tag);
+}
+
+/// Consume a matching armed fault: fires once when worker `worker_tag`
+/// reaches round `round` with `kind` armed at that round.
+pub fn take(kind: Kind, round: u64, worker_tag: &str) -> bool {
+    ENV_ONCE.call_once(|| {
+        if let Ok(spec) = std::env::var("PIXELFLY_DIST_FAULT") {
+            if !spec.is_empty() && !arm(&spec, "") {
+                eprintln!("PIXELFLY_DIST_FAULT: ignoring unparseable spec {spec:?} \
+                           (want kill-conn@K | stall@K | garble-frame@K)");
+            }
+        }
+    });
+    let mut g = ARMED.lock().unwrap();
+    match g.iter().position(|a| a.kind == kind && a.at == round
+                            && worker_tag.contains(a.tag.as_str())) {
+        Some(i) => {
+            g.remove(i);
+            true
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_parse_and_bad_specs_do_not() {
+        assert!(parse("kill-conn@3").is_some());
+        assert!(parse("stall@0").is_some());
+        assert!(parse("garble-frame@ 7").is_some());
+        assert!(parse("explode@3").is_none());
+        assert!(parse("kill-conn").is_none());
+        assert!(parse("stall@x").is_none());
+    }
+
+    #[test]
+    fn faults_are_tag_and_round_scoped_and_one_shot() {
+        assert!(arm("kill-conn@5", "dist-fault-unit-w1"));
+        // wrong round: not consumed
+        assert!(!take(Kind::KillConn, 4, "dist-fault-unit-w1"));
+        // wrong worker: not consumed
+        assert!(!take(Kind::KillConn, 5, "dist-fault-unit-w2"));
+        // wrong kind: not consumed
+        assert!(!take(Kind::Stall, 5, "dist-fault-unit-w1"));
+        // exact match fires once…
+        assert!(take(Kind::KillConn, 5, "dist-fault-unit-w1"));
+        // …and is consumed
+        assert!(!take(Kind::KillConn, 5, "dist-fault-unit-w1"));
+        disarm("dist-fault-unit-w1");
+    }
+}

@@ -1,0 +1,588 @@
+//! `PXD1` — the distributed-training wire protocol.
+//!
+//! Framed like serving's `PXF1`: 4-byte magic, a kind byte, a u32
+//! length, the payload, then a CRC32 over kind+length+payload (same
+//! polynomial table as the PXCK checkpoint format). Every receive path
+//! verifies the CRC before parsing, bounds the payload, and surfaces a
+//! typed [`ProtoError`] — a garbled or truncated frame can never panic
+//! or be half-applied.
+//!
+//! Gradient/parameter vectors travel as a stream of [`Msg::Chunk`]
+//! frames (bounded at [`CHUNK_ELEMS`] f32 each) terminated by one
+//! [`Msg::End`], so no single frame ever needs an unbounded buffer and
+//! a corrupt chunk costs one round-trip ([`Msg::Resend`]), not the run.
+
+use std::io::{self, Read, Write};
+
+use crate::ckpt::crc32;
+
+pub const MAGIC: &[u8; 4] = b"PXD1";
+pub const PROTO_VERSION: u32 = 1;
+
+/// f32 elements per chunk frame (256 KiB of payload).
+pub const CHUNK_ELEMS: usize = 1 << 16;
+/// Largest accepted frame payload: a full chunk plus its header fields,
+/// rounded up. Anything larger is rejected before allocation.
+pub const MAX_PAYLOAD: usize = CHUNK_ELEMS * 4 + 64;
+
+/// Chunked vector streams multiplexed over one connection.
+pub const STREAM_CONTRIB: u8 = 0; // worker → coordinator, per-round gradients/weights
+pub const STREAM_RESULT: u8 = 1; // coordinator → worker, averaged result
+pub const STREAM_PARAMS_UP: u8 = 2; // donor worker → coordinator, full param state
+pub const STREAM_PARAMS_DOWN: u8 = 3; // coordinator → replacement worker
+
+/// Aggregation mode, carried in [`Msg::Welcome`].
+pub const MODE_GRAD: u8 = 0;
+pub const MODE_FEDAVG: u8 = 1;
+
+#[derive(Debug)]
+pub enum ProtoError {
+    Io(io::Error),
+    /// clean EOF on a frame boundary (peer closed)
+    Eof,
+    BadMagic([u8; 4]),
+    BadCrc { kind: u8 },
+    BadKind(u8),
+    /// payload shorter than its kind's fixed fields claim
+    Truncated { kind: u8 },
+    TooLarge { len: usize },
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "i/o error: {e}"),
+            ProtoError::Eof => write!(f, "connection closed"),
+            ProtoError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            ProtoError::BadCrc { kind } => write!(f, "crc mismatch on frame kind {kind}"),
+            ProtoError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            ProtoError::Truncated { kind } => {
+                write!(f, "truncated payload for frame kind {kind}")
+            }
+            ProtoError::TooLarge { len } => {
+                write!(f, "frame payload {len} exceeds bound {MAX_PAYLOAD}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ProtoError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for ProtoError {
+    fn from(e: io::Error) -> Self {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            ProtoError::Eof
+        } else {
+            ProtoError::Io(e)
+        }
+    }
+}
+
+/// True for the read-timeout errno family (the poll idiom `PXF1` uses:
+/// timeouts are a tick, not a failure).
+pub fn is_timeout(e: &ProtoError) -> bool {
+    matches!(e, ProtoError::Io(io) if io.kind() == io::ErrorKind::WouldBlock
+                                      || io.kind() == io::ErrorKind::TimedOut)
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// worker → coordinator on connect: prove protocol + model identity
+    Hello {
+        proto_version: u32,
+        /// `Model::state_fingerprint` — same gate a checkpoint load uses
+        fingerprint: u64,
+        grads_len: u64,
+        params_len: u64,
+        /// step counter the worker warm-started from (0 = fresh)
+        start_step: u64,
+    },
+    /// coordinator → worker: admission + the run's shared hyperparams
+    Welcome {
+        rank: u32,
+        nranks: u32,
+        /// first round this worker contributes to (>0 for replacements)
+        first_round: u64,
+        total_rounds: u64,
+        mode: u8,
+        sync_every: u32,
+        lr: f32,
+        momentum: f32,
+        data_seed: u64,
+    },
+    /// coordinator → worker: not admitted now, retry after a backoff
+    Retry { backoff_ms: u32 },
+    /// one slice of a chunked vector stream
+    Chunk { stream: u8, round: u64, offset: u64, data: Vec<f32> },
+    /// stream terminator; `loss`/`contributors` ride on RESULT and
+    /// CONTRIB ends (zeroed elsewhere); for params streams `round` is
+    /// the step stamp of the uploaded state
+    End { stream: u8, round: u64, loss: f64, contributors: u32 },
+    /// coordinator → donor worker: upload your full param state
+    ParamsRequest,
+    /// receiver → sender: a stream arrived incomplete, send it again
+    Resend { round: u64 },
+    /// worker → coordinator liveness signal between contributions
+    Heartbeat,
+    /// fatal, human-readable refusal (fingerprint mismatch, …)
+    Error { msg: String },
+}
+
+impl Msg {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::Welcome { .. } => 2,
+            Msg::Retry { .. } => 3,
+            Msg::Chunk { .. } => 4,
+            Msg::End { .. } => 5,
+            Msg::ParamsRequest => 6,
+            Msg::Resend { .. } => 7,
+            Msg::Heartbeat => 8,
+            Msg::Error { .. } => 9,
+        }
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// A bounds-checked little-endian payload reader; every shortage is a
+/// typed `Truncated`, never a slice panic.
+struct Take<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    kind: u8,
+}
+
+impl<'a> Take<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.pos + n > self.buf.len() {
+            return Err(ProtoError::Truncated { kind: self.kind });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, ProtoError> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+}
+
+fn encode_payload(msg: &Msg, buf: &mut Vec<u8>) {
+    match msg {
+        Msg::Hello { proto_version, fingerprint, grads_len, params_len, start_step } => {
+            push_u32(buf, *proto_version);
+            push_u64(buf, *fingerprint);
+            push_u64(buf, *grads_len);
+            push_u64(buf, *params_len);
+            push_u64(buf, *start_step);
+        }
+        Msg::Welcome { rank, nranks, first_round, total_rounds, mode, sync_every,
+                       lr, momentum, data_seed } => {
+            push_u32(buf, *rank);
+            push_u32(buf, *nranks);
+            push_u64(buf, *first_round);
+            push_u64(buf, *total_rounds);
+            buf.push(*mode);
+            push_u32(buf, *sync_every);
+            push_u32(buf, lr.to_bits());
+            push_u32(buf, momentum.to_bits());
+            push_u64(buf, *data_seed);
+        }
+        Msg::Retry { backoff_ms } => push_u32(buf, *backoff_ms),
+        Msg::Chunk { stream, round, offset, data } => {
+            buf.push(*stream);
+            push_u64(buf, *round);
+            push_u64(buf, *offset);
+            push_u32(buf, data.len() as u32);
+            for v in data {
+                push_u32(buf, v.to_bits());
+            }
+        }
+        Msg::End { stream, round, loss, contributors } => {
+            buf.push(*stream);
+            push_u64(buf, *round);
+            push_u64(buf, loss.to_bits());
+            push_u32(buf, *contributors);
+        }
+        Msg::ParamsRequest | Msg::Heartbeat => {}
+        Msg::Resend { round } => push_u64(buf, *round),
+        Msg::Error { msg } => buf.extend_from_slice(msg.as_bytes()),
+    }
+}
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
+    let mut t = Take { buf: payload, pos: 0, kind };
+    Ok(match kind {
+        1 => Msg::Hello {
+            proto_version: t.u32()?,
+            fingerprint: t.u64()?,
+            grads_len: t.u64()?,
+            params_len: t.u64()?,
+            start_step: t.u64()?,
+        },
+        2 => Msg::Welcome {
+            rank: t.u32()?,
+            nranks: t.u32()?,
+            first_round: t.u64()?,
+            total_rounds: t.u64()?,
+            mode: t.u8()?,
+            sync_every: t.u32()?,
+            lr: f32::from_bits(t.u32()?),
+            momentum: f32::from_bits(t.u32()?),
+            data_seed: t.u64()?,
+        },
+        3 => Msg::Retry { backoff_ms: t.u32()? },
+        4 => {
+            let stream = t.u8()?;
+            let round = t.u64()?;
+            let offset = t.u64()?;
+            let n = t.u32()? as usize;
+            if n > CHUNK_ELEMS {
+                return Err(ProtoError::TooLarge { len: n * 4 });
+            }
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(t.f32()?);
+            }
+            Msg::Chunk { stream, round, offset, data }
+        }
+        5 => Msg::End {
+            stream: t.u8()?,
+            round: t.u64()?,
+            loss: t.f64()?,
+            contributors: t.u32()?,
+        },
+        6 => Msg::ParamsRequest,
+        7 => Msg::Resend { round: t.u64()? },
+        8 => Msg::Heartbeat,
+        9 => Msg::Error { msg: String::from_utf8_lossy(payload).into_owned() },
+        k => return Err(ProtoError::BadKind(k)),
+    })
+}
+
+/// Write one frame: magic, then kind+len+payload, then the CRC of those
+/// three (the magic is framing, not content).
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<(), ProtoError> {
+    let mut payload = Vec::new();
+    encode_payload(msg, &mut payload);
+    debug_assert!(payload.len() <= MAX_PAYLOAD, "oversized frame built locally");
+    let mut body = Vec::with_capacity(5 + payload.len());
+    body.push(msg.kind());
+    push_u32(&mut body, payload.len() as u32);
+    body.extend_from_slice(&payload);
+    let crc = crc32(&body);
+    w.write_all(MAGIC)?;
+    w.write_all(&body)?;
+    w.write_all(&crc.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_exact(r: &mut impl Read, buf: &mut [u8]) -> Result<(), ProtoError> {
+    r.read_exact(buf).map_err(ProtoError::from)
+}
+
+/// Read one frame. `garble` flips one payload bit BEFORE the CRC check —
+/// the fault-injection hook proving the CRC layer catches wire
+/// corruption ([`crate::dist::faults`] drives it).
+pub fn read_msg_garbled(r: &mut impl Read, garble: bool) -> Result<Msg, ProtoError> {
+    let mut magic = [0u8; 4];
+    read_exact(r, &mut magic)?;
+    if &magic != MAGIC {
+        return Err(ProtoError::BadMagic(magic));
+    }
+    let mut head = [0u8; 5];
+    read_exact(r, &mut head)?;
+    let kind = head[0];
+    let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
+    if len > MAX_PAYLOAD {
+        return Err(ProtoError::TooLarge { len });
+    }
+    let mut body = vec![0u8; 5 + len];
+    body[..5].copy_from_slice(&head);
+    read_exact(r, &mut body[5..])?;
+    let mut crc_bytes = [0u8; 4];
+    read_exact(r, &mut crc_bytes)?;
+    if garble && len > 0 {
+        body[5] ^= 0x10; // first payload byte, one bit
+    }
+    if crc32(&body) != u32::from_le_bytes(crc_bytes) {
+        return Err(ProtoError::BadCrc { kind });
+    }
+    decode_payload(kind, &body[5..])
+}
+
+pub fn read_msg(r: &mut impl Read) -> Result<Msg, ProtoError> {
+    read_msg_garbled(r, false)
+}
+
+/// Read one frame off a socket whose read timeout is used as a POLL
+/// TICK: if no byte of a new frame arrives within the socket timeout,
+/// the timeout surfaces (so the caller's loop can check liveness /
+/// shutdown), but once the first byte lands, short reads retry until
+/// `patience` runs out — a tick can therefore never split a frame and
+/// desync the stream. Exhausted patience mid-frame IS desync, so it
+/// surfaces as a non-timeout `Io` error (treat the peer as dead).
+pub fn read_frame_socket(conn: &std::net::TcpStream, garble: bool,
+                         patience: std::time::Duration)
+                         -> Result<Msg, ProtoError> {
+    use std::time::Instant;
+    struct Patient<'a> {
+        conn: &'a std::net::TcpStream,
+        deadline: Option<Instant>,
+        patience: std::time::Duration,
+    }
+    impl Read for Patient<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            loop {
+                match Read::read(&mut self.conn, buf) {
+                    Ok(0) => return Ok(0),
+                    Ok(n) => {
+                        if self.deadline.is_none() {
+                            self.deadline = Some(Instant::now() + self.patience);
+                        }
+                        return Ok(n);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock
+                              || e.kind() == io::ErrorKind::TimedOut => {
+                        match self.deadline {
+                            // nothing consumed yet: surface the tick
+                            None => return Err(e),
+                            Some(d) if Instant::now() > d => {
+                                return Err(io::Error::new(
+                                    io::ErrorKind::Other,
+                                    "peer stalled mid-frame (stream desynced)",
+                                ));
+                            }
+                            Some(_) => {} // mid-frame: keep waiting
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+    }
+    let mut p = Patient { conn, deadline: None, patience };
+    read_msg_garbled(&mut p, garble)
+}
+
+/// Send a flat f32 vector as a chunked stream + its `End` frame.
+pub fn send_flat(w: &mut impl Write, stream: u8, round: u64, data: &[f32],
+                 loss: f64, contributors: u32) -> Result<(), ProtoError> {
+    let mut off = 0usize;
+    while off < data.len() {
+        let n = CHUNK_ELEMS.min(data.len() - off);
+        write_msg(w, &Msg::Chunk {
+            stream,
+            round,
+            offset: off as u64,
+            data: data[off..off + n].to_vec(),
+        })?;
+        off += n;
+    }
+    write_msg(w, &Msg::End { stream, round, loss, contributors })
+}
+
+/// Reassembly buffer for one chunked stream: fixed length, received
+/// element count for completeness (TCP never duplicates in-order bytes,
+/// and every resend restarts the count via [`Assembly::reset`]).
+pub struct Assembly {
+    pub buf: Vec<f32>,
+    received: usize,
+}
+
+impl Assembly {
+    pub fn new(len: usize) -> Self {
+        Assembly { buf: vec![0.0; len], received: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.received = 0;
+    }
+
+    /// Absorb one chunk; false = out-of-bounds (corrupt offset survived
+    /// no-CRC odds, or peer speaks a different layout) — drop the frame.
+    pub fn absorb(&mut self, offset: u64, data: &[f32]) -> bool {
+        let off = offset as usize;
+        if off.checked_add(data.len()).map_or(true, |end| end > self.buf.len()) {
+            return false;
+        }
+        self.buf[off..off + data.len()].copy_from_slice(data);
+        self.received += data.len();
+        true
+    }
+
+    pub fn complete(&self) -> bool {
+        self.received >= self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let got = read_msg(&mut &buf[..]).unwrap();
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn every_message_kind_roundtrips() {
+        roundtrip(Msg::Hello { proto_version: 1, fingerprint: 0xDEAD_BEEF,
+                               grads_len: 10, params_len: 20, start_step: 3 });
+        roundtrip(Msg::Welcome { rank: 1, nranks: 4, first_round: 7,
+                                 total_rounds: 100, mode: MODE_FEDAVG,
+                                 sync_every: 5, lr: 1e-2, momentum: 0.9,
+                                 data_seed: 42 });
+        roundtrip(Msg::Retry { backoff_ms: 250 });
+        roundtrip(Msg::Chunk { stream: STREAM_CONTRIB, round: 9, offset: 128,
+                               data: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE] });
+        roundtrip(Msg::End { stream: STREAM_RESULT, round: 9, loss: 0.125,
+                             contributors: 3 });
+        roundtrip(Msg::ParamsRequest);
+        roundtrip(Msg::Resend { round: 4 });
+        roundtrip(Msg::Heartbeat);
+        roundtrip(Msg::Error { msg: "fingerprint mismatch".into() });
+    }
+
+    #[test]
+    fn garbled_frame_is_a_typed_crc_error() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Resend { round: 11 }).unwrap();
+        let err = read_msg_garbled(&mut &buf[..], true).unwrap_err();
+        assert!(matches!(err, ProtoError::BadCrc { kind: 7 }), "{err}");
+    }
+
+    #[test]
+    fn corrupt_bytes_never_panic() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Chunk { stream: 0, round: 1, offset: 0,
+                                          data: vec![1.0; 16] }).unwrap();
+        // bad magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(read_msg(&mut &bad[..]), Err(ProtoError::BadMagic(_))));
+        // every truncation point is Eof, not a panic
+        for cut in 0..buf.len() {
+            let err = read_msg(&mut &buf[..cut]).unwrap_err();
+            assert!(matches!(err, ProtoError::Eof | ProtoError::BadMagic(_)),
+                    "cut {cut}: {err}");
+        }
+        // oversized length field is rejected before allocation
+        let mut huge = buf.clone();
+        huge[5..9].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(read_msg(&mut &huge[..]), Err(ProtoError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn truncated_payload_is_typed() {
+        // a Resend frame whose payload claims 8 bytes but carries 2:
+        // rebuild the frame by hand with a valid CRC
+        let mut body = vec![7u8]; // kind
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&[1, 2]);
+        let crc = crc32(&body);
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&body);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        let err = read_msg(&mut &buf[..]).unwrap_err();
+        assert!(matches!(err, ProtoError::Truncated { kind: 7 }), "{err}");
+    }
+
+    #[test]
+    fn socket_reader_survives_mid_frame_timeouts() {
+        use std::net::{TcpListener, TcpStream};
+        use std::time::{Duration, Instant};
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.set_nodelay(true).unwrap();
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &Msg::Resend { round: 3 }).unwrap();
+            // dribble the frame byte by byte, slower than the reader's
+            // 2ms tick, so many timeouts fire mid-frame
+            for b in buf {
+                c.write_all(&[b]).unwrap();
+                c.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            c
+        });
+        let (conn, _) = l.accept().unwrap();
+        conn.set_read_timeout(Some(Duration::from_millis(2))).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let msg = loop {
+            match read_frame_socket(&conn, false, Duration::from_secs(10)) {
+                Ok(m) => break m,
+                Err(e) if is_timeout(&e) => {
+                    assert!(Instant::now() < deadline, "no frame within 30s");
+                }
+                Err(e) => panic!("fatal read error: {e}"),
+            }
+        };
+        assert_eq!(msg, Msg::Resend { round: 3 });
+        let _ = writer.join();
+    }
+
+    #[test]
+    fn send_flat_chunks_and_reassembles() {
+        let data: Vec<f32> = (0..(CHUNK_ELEMS + 100)).map(|i| i as f32).collect();
+        let mut buf = Vec::new();
+        send_flat(&mut buf, STREAM_CONTRIB, 2, &data, 0.5, 1).unwrap();
+        let mut asm = Assembly::new(data.len());
+        let mut r = &buf[..];
+        loop {
+            match read_msg(&mut r).unwrap() {
+                Msg::Chunk { stream, round, offset, data } => {
+                    assert_eq!((stream, round), (STREAM_CONTRIB, 2));
+                    assert!(asm.absorb(offset, &data));
+                }
+                Msg::End { round, loss, contributors, .. } => {
+                    assert_eq!((round, contributors), (2, 1));
+                    assert_eq!(loss, 0.5);
+                    break;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(asm.complete());
+        assert_eq!(asm.buf, data);
+        // an out-of-bounds chunk offset is dropped, not a panic
+        assert!(!asm.absorb(u64::MAX, &[1.0]));
+    }
+}

@@ -1,0 +1,394 @@
+//! The worker side of the fleet: connect-with-backoff, per-round
+//! contribution compute, result application, and the donor/replacement
+//! halves of elastic recovery.
+//!
+//! A worker is a plain synchronous loop — one socket, one thread. All
+//! waiting goes through [`proto::read_frame_socket`] with a short
+//! socket timeout as a poll tick, so every wait is bounded and every
+//! exit is a typed [`DistError`]: the fault suite's "zero hangs, zero
+//! panics" guarantee is enforced here, not hoped for.
+//!
+//! Faults ([`super::faults`]) are injected at the three chokepoints:
+//! `kill-conn@K` drops the socket before round K's compute,
+//! `stall@K` sleeps past the coordinator's deadline, and
+//! `garble-frame@K` flips a bit in the next received frame of round K
+//! (consumed by the first actual frame, so a poll tick can't waste it).
+
+use std::net::{Shutdown, TcpStream};
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::ckpt::Snapshotter;
+use crate::data::shard::{shard_batch, ShardSpec, ShardStream};
+use crate::nn::{Model, TrainTensors};
+
+use super::faults::{self, Kind};
+use super::proto::{self, is_timeout, read_msg, send_flat, write_msg, Assembly, Msg,
+                   ProtoError};
+use super::{DistError, Mode, SnapshotCfg};
+
+/// How often a waiting worker nudges the coordinator with a `Resend`
+/// for the stream it is missing (recovers a garbled `End` frame, and
+/// doubles as a liveness signal while parked at the barrier).
+const NUDGE_EVERY: Duration = Duration::from_millis(300);
+/// Mid-frame patience for [`proto::read_frame_socket`].
+const FRAME_PATIENCE: Duration = Duration::from_secs(10);
+
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    /// coordinator `host:port`
+    pub addr: String,
+    /// unique worker tag: names the thread, scopes injected faults
+    pub tag: String,
+    /// checkpoint file or directory to warm-start from before joining
+    pub warm_start: Option<PathBuf>,
+    /// background PXCK snapshotting (honored on rank 0 only)
+    pub snapshot: Option<SnapshotCfg>,
+    pub connect_attempts: u32,
+    pub handshake_timeout: Duration,
+    /// how long to wait for a round's result before declaring the
+    /// coordinator lost
+    pub result_wait: Duration,
+    /// how long an injected `stall@K` sleeps
+    pub stall: Duration,
+    /// shard prefetch depth (grad mode)
+    pub prefetch: usize,
+}
+
+impl WorkerConfig {
+    pub fn new(addr: &str, tag: &str) -> Self {
+        WorkerConfig {
+            addr: addr.to_string(),
+            tag: tag.to_string(),
+            warm_start: None,
+            snapshot: None,
+            connect_attempts: 60,
+            handshake_timeout: Duration::from_secs(10),
+            result_wait: Duration::from_secs(20),
+            stall: Duration::from_secs(1),
+            prefetch: 2,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkerReport {
+    pub rank: u32,
+    /// fleet-averaged loss per round this worker applied (a replacement
+    /// starts at its catch-up round, not round 0)
+    pub losses: Vec<f64>,
+    /// PXCK snapshots offered (rank 0 with snapshotting on)
+    pub snapshots: u64,
+}
+
+/// The run parameters `Welcome` carried back, decoded.
+struct Admission {
+    rank: u32,
+    nranks: u32,
+    first_round: u64,
+    total_rounds: u64,
+    mode: Mode,
+    sync_every: u32,
+    lr: f32,
+    momentum: f32,
+    data_seed: u64,
+}
+
+fn lost(e: ProtoError, what: &str) -> DistError {
+    match e {
+        ProtoError::Io(_) | ProtoError::Eof => {
+            DistError::CoordinatorLost(format!("{what}: {e}"))
+        }
+        other => DistError::Proto(other),
+    }
+}
+
+/// Connect + `Hello`/`Welcome` handshake with retry and exponential
+/// backoff; a `Retry` (fleet full, or a replacement already syncing)
+/// waits the coordinator's suggested backoff and tries again.
+fn connect(cfg: &WorkerConfig, model: &mut Model, start_step: u64)
+           -> Result<(TcpStream, Admission), DistError> {
+    let mut backoff = Duration::from_millis(50);
+    let mut last_err = String::from("never reached the coordinator");
+    let attempts = cfg.connect_attempts.max(1);
+    for _ in 0..attempts {
+        let conn = match TcpStream::connect(&cfg.addr) {
+            Ok(c) => c,
+            Err(e) => {
+                last_err = format!("connect: {e}");
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+                continue;
+            }
+        };
+        let _ = conn.set_nodelay(true);
+        let _ = conn.set_read_timeout(Some(cfg.handshake_timeout));
+        let _ = conn.set_write_timeout(Some(Duration::from_secs(5)));
+        let hello = Msg::Hello {
+            proto_version: proto::PROTO_VERSION,
+            fingerprint: model.state_fingerprint(),
+            grads_len: model.train_flat_len(TrainTensors::Grads) as u64,
+            params_len: model.train_flat_len(TrainTensors::Params) as u64,
+            start_step,
+        };
+        if let Err(e) = write_msg(&mut &conn, &hello) {
+            last_err = format!("sending hello: {e}");
+            thread::sleep(backoff);
+            backoff = (backoff * 2).min(Duration::from_secs(1));
+            continue;
+        }
+        match read_msg(&mut &conn) {
+            Ok(Msg::Welcome { rank, nranks, first_round, total_rounds, mode,
+                              sync_every, lr, momentum, data_seed }) => {
+                let mode = Mode::from_wire(mode).ok_or_else(|| {
+                    DistError::Handshake(format!("coordinator sent unknown mode {mode}"))
+                })?;
+                return Ok((conn, Admission {
+                    rank,
+                    nranks,
+                    first_round,
+                    total_rounds,
+                    mode,
+                    sync_every: sync_every.max(1),
+                    lr,
+                    momentum,
+                    data_seed,
+                }));
+            }
+            Ok(Msg::Retry { backoff_ms }) => {
+                let _ = conn.shutdown(Shutdown::Both);
+                last_err = "fleet full, told to retry".to_string();
+                thread::sleep(Duration::from_millis(u64::from(backoff_ms.max(10))));
+            }
+            Ok(Msg::Error { msg }) => return Err(DistError::Handshake(msg)),
+            Ok(other) => {
+                last_err = format!("unexpected frame kind {} during handshake",
+                                   other.kind());
+                let _ = conn.shutdown(Shutdown::Both);
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+            Err(e) => {
+                last_err = format!("reading welcome: {e}");
+                let _ = conn.shutdown(Shutdown::Both);
+                thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+        }
+    }
+    Err(DistError::Handshake(format!(
+        "could not join {} after {attempts} attempts (last: {last_err})", cfg.addr
+    )))
+}
+
+struct RoundResult {
+    data: Vec<f32>,
+    loss: f64,
+}
+
+/// Wait for one complete stream from the coordinator, servicing its
+/// requests while parked: donor params uploads (`ParamsRequest`),
+/// contribution resends, and recovery nudges when frames were lost to
+/// corruption. Bounded by `cfg.result_wait`; every exit is typed.
+fn recv_stream(conn: &TcpStream, cfg: &WorkerConfig, stream: u8, round: u64,
+               rlen: usize, resend: Option<(&[f32], f64)>, model: &mut Model)
+               -> Result<RoundResult, DistError> {
+    let mut asm = Assembly::new(rlen);
+    let deadline = Instant::now() + cfg.result_wait;
+    let mut next_nudge = Instant::now() + NUDGE_EVERY;
+    let mut params: Vec<f32> = Vec::new();
+    // one-shot: garble the next frame of this round if so armed
+    let mut garble = faults::take(Kind::GarbleFrame, round, &cfg.tag);
+    loop {
+        if Instant::now() > deadline {
+            return Err(DistError::CoordinatorLost(format!(
+                "no stream {stream} for round {round} within {:?}", cfg.result_wait
+            )));
+        }
+        let msg = match proto::read_frame_socket(conn, garble, FRAME_PATIENCE) {
+            Err(e) if is_timeout(&e) => {
+                // no frame consumed: an armed garble stays armed
+                if Instant::now() > next_nudge {
+                    write_msg(&mut &*conn, &Msg::Resend { round })
+                        .map_err(|e| lost(e, "nudging coordinator"))?;
+                    next_nudge = Instant::now() + NUDGE_EVERY;
+                    // a resend restarts the stream from scratch
+                    asm.reset();
+                }
+                continue;
+            }
+            Err(ProtoError::BadCrc { .. }) | Err(ProtoError::BadKind(_))
+            | Err(ProtoError::Truncated { .. }) | Err(ProtoError::TooLarge { .. }) => {
+                // a frame was consumed (and rejected): the garble fired
+                garble = false;
+                continue;
+            }
+            Err(e) => {
+                return Err(DistError::CoordinatorLost(format!(
+                    "reading stream {stream} for round {round}: {e}"
+                )));
+            }
+            Ok(m) => {
+                garble = false;
+                m
+            }
+        };
+        match msg {
+            Msg::Chunk { stream: s, round: r, offset, data }
+                if s == stream && r == round =>
+            {
+                let _ = asm.absorb(offset, &data);
+            }
+            Msg::End { stream: s, round: r, loss, .. } if s == stream && r == round => {
+                if asm.complete() {
+                    return Ok(RoundResult { data: std::mem::take(&mut asm.buf), loss });
+                }
+                // lost chunks (garble, corruption): ask for the stream again
+                write_msg(&mut &*conn, &Msg::Resend { round })
+                    .map_err(|e| lost(e, "requesting stream resend"))?;
+                asm = Assembly::new(rlen);
+                next_nudge = Instant::now() + NUDGE_EVERY;
+            }
+            Msg::ParamsRequest => {
+                // this rank is the donor for a replacement: upload the
+                // full param view, stamped with the round we're parked
+                // at (= the round whose result we have not yet applied)
+                model.read_train_flat(TrainTensors::Params, &mut params);
+                send_flat(&mut &*conn, proto::STREAM_PARAMS_UP, round, &params, 0.0, 0)
+                    .map_err(|e| lost(e, "uploading donor params"))?;
+            }
+            Msg::Resend { round: r } => {
+                if let Some((data, loss)) = resend {
+                    if r == round {
+                        send_flat(&mut &*conn, proto::STREAM_CONTRIB, round, data,
+                                  loss, 1)
+                            .map_err(|e| lost(e, "resending contribution"))?;
+                    }
+                }
+            }
+            Msg::Error { msg } => return Err(DistError::CoordinatorLost(msg)),
+            // stale chunks from a superseded round, heartbeat echoes, …
+            _ => {}
+        }
+    }
+}
+
+fn apply_result(model: &mut Model, mode: Mode, lr: f32, momentum: f32,
+                result: &RoundResult) {
+    match mode {
+        Mode::Grad => {
+            model.write_train_flat(TrainTensors::Grads, &result.data);
+            model.apply_update(lr, momentum);
+        }
+        Mode::Fedavg => {
+            model.write_train_flat(TrainTensors::Params, &result.data);
+        }
+    }
+}
+
+/// Join the fleet at `cfg.addr` and train to completion. Blocks; one
+/// call per worker process (or thread, via [`super::run_local`]).
+pub fn run(mut model: Model, cfg: WorkerConfig) -> Result<WorkerReport, DistError> {
+    // warm start before the handshake so Hello carries the right step
+    let mut start_step = 0u64;
+    if let Some(from) = &cfg.warm_start {
+        start_step = model.load_weights(from)?.step;
+    }
+    let (conn, adm) = connect(&cfg, &mut model, start_step)?;
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(100)));
+
+    let (rows, din, dout) = (model.seq, model.in_dim(), model.out_dim());
+    let glen = model.train_flat_len(TrainTensors::Grads);
+    let plen = model.train_flat_len(TrainTensors::Params);
+    let rlen = match adm.mode {
+        Mode::Grad => glen,
+        Mode::Fedavg => plen,
+    };
+    let spr = match adm.mode {
+        Mode::Grad => 1u64,
+        Mode::Fedavg => u64::from(adm.sync_every),
+    };
+    let spec = ShardSpec { rank: adm.rank, nranks: adm.nranks, seed: adm.data_seed };
+    let snap = match (&cfg.snapshot, adm.rank) {
+        (Some(sc), 0) => Some((Snapshotter::start(&sc.dir, sc.retain)?, sc.every)),
+        _ => None,
+    };
+
+    let mut losses: Vec<f64> = Vec::new();
+    let mut snapshots = 0u64;
+
+    // replacement catch-up: receive the donor's param view (stamped
+    // first_round - 1, i.e. the state every rank held entering that
+    // round), then that round's result, exactly as a rank that had
+    // been here all along would apply them
+    if adm.first_round > 0 {
+        let stamp = adm.first_round - 1;
+        let params = recv_stream(&conn, &cfg, proto::STREAM_PARAMS_DOWN, stamp, plen,
+                                 None, &mut model)?;
+        model.write_train_flat(TrainTensors::Params, &params.data);
+        let result = recv_stream(&conn, &cfg, proto::STREAM_RESULT, stamp, rlen,
+                                 None, &mut model)?;
+        apply_result(&mut model, adm.mode, adm.lr, adm.momentum, &result);
+        losses.push(result.loss);
+    }
+
+    // grad mode streams one batch per round off this rank's shard
+    let stream = match adm.mode {
+        Mode::Grad => Some(ShardStream::new(spec, adm.first_round, cfg.prefetch,
+                                            rows, din, dout)),
+        Mode::Fedavg => None,
+    };
+
+    let mut contrib: Vec<f32> = Vec::new();
+    for round in adm.first_round..adm.total_rounds {
+        if faults::take(Kind::KillConn, round, &cfg.tag) {
+            let _ = conn.shutdown(Shutdown::Both);
+            return Err(DistError::InjectedKill { round });
+        }
+        if faults::take(Kind::Stall, round, &cfg.tag) {
+            thread::sleep(cfg.stall);
+        }
+        let loss = match (&adm.mode, &stream) {
+            (Mode::Grad, Some(stream)) => {
+                let (x, t) = stream.next();
+                let loss = model.forward_backward(&x, &t);
+                model.read_train_flat(TrainTensors::Grads, &mut contrib);
+                loss
+            }
+            _ => {
+                let mut last = 0f64;
+                for j in 0..u64::from(adm.sync_every) {
+                    let step = round * u64::from(adm.sync_every) + j;
+                    let (x, t) = shard_batch(&spec, step, rows, din, dout);
+                    last = model.forward_backward(&x, &t);
+                    model.apply_update(adm.lr, adm.momentum);
+                    // liveness between fat local steps
+                    let _ = write_msg(&mut &conn, &Msg::Heartbeat);
+                }
+                model.read_train_flat(TrainTensors::Params, &mut contrib);
+                last
+            }
+        };
+        send_flat(&mut &conn, proto::STREAM_CONTRIB, round, &contrib, loss, 1)
+            .map_err(|e| lost(e, "sending contribution"))?;
+        let result = recv_stream(&conn, &cfg, proto::STREAM_RESULT, round, rlen,
+                                 Some((&contrib, loss)), &mut model)?;
+        apply_result(&mut model, adm.mode, adm.lr, adm.momentum, &result);
+        losses.push(result.loss);
+        if let Some((snapper, every)) = &snap {
+            let gstep = (round + 1) * spr;
+            if *every > 0 && gstep % every == 0 {
+                let meta = format!("dist rank {} round {round}", adm.rank);
+                snapper.offer(|b| model.snapshot_into(b, gstep, &meta));
+                snapshots += 1;
+            }
+        }
+    }
+
+    let _ = conn.shutdown(Shutdown::Both);
+    if let Some((snapper, _)) = snap {
+        snapper.finish();
+    }
+    Ok(WorkerReport { rank: adm.rank, losses, snapshots })
+}

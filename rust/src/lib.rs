@@ -28,6 +28,8 @@
 //!   admission queue, TCP front end, latency metrics
 //! - [`ckpt`]       crash-safe checkpoint layer: PXCK weight format, atomic
 //!   background snapshots, corruption-checked load, fault injection
+//! - [`dist`]       fault-tolerant data-parallel training: PXD1 TCP
+//!   allreduce, crash detection, checkpoint-based elastic recovery
 //! - [`util`]       PRNG, timers, stats, CLI & property-test helpers
 //! - [`bench`]      in-crate micro-benchmark harness (criterion substitute)
 
@@ -36,6 +38,7 @@ pub mod ckpt;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod dist;
 pub mod models;
 pub mod nn;
 pub mod ntk;

@@ -78,6 +78,16 @@ fn print_help() {
                       --snapshot-every K checkpoints every K steps from a background\n\
                       thread into --out, keeping the newest --retain; --resume\n\
                       restores params+momentum+step from a .pxck checkpoint)\n\
+         train        --dist coordinator --model vit-s --ranks 2 --rounds 40\n\
+                      [--addr 0.0.0.0:7979 --dist-mode grad|fedavg --sync-every 4\n\
+                      --round-timeout-ms 5000 --data-seed S]\n\
+         train        --dist worker --model vit-s --addr HOST:7979 [--tag w0\n\
+                      --warm-start CKPT|DIR --out DIR --snapshot-every K --retain N]\n\
+                      (fault-tolerant data-parallel training over PXD1 TCP:\n\
+                      the coordinator owns the round barrier and averages\n\
+                      contributions; workers shard the synthetic stream by rank;\n\
+                      dead or stalled ranks are excluded and replacements are\n\
+                      admitted mid-run, warm-started from the newest snapshot)\n\
          serve        --model gpt2-s --budget 0.2 [--port 7878 --max-batch 8\n\
                       --queue-depth 64 --steps 0 --weights CKPT --io-timeout-ms N]\n\
                       (continuous-batching TCP inference, KV-cached decode;\n\
@@ -125,6 +135,11 @@ fn cmd_list() -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    // `--dist coordinator|worker` routes to the distributed data-parallel
+    // path (compiled substrate over PXD1 TCP allreduce).
+    if args.get("dist").is_some() {
+        return cmd_train_dist(args);
+    }
     // `--model <preset>` routes to the pure-Rust compiled path:
     // preset → budget → compile → train, no artifacts needed.
     if args.get("model").is_some() {
@@ -276,6 +291,81 @@ fn cmd_train_compiled(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Fault-tolerant multi-worker data-parallel training over PXD1 TCP:
+/// one coordinator process owns the round barrier, N worker processes
+/// each train a shard of the synthetic stream and allreduce gradients
+/// (or federated-average weights) through it. Workers can die and be
+/// replaced mid-run; replacements warm-start from `--warm-start` and
+/// are brought bit-exact by a donor-params transfer.
+fn cmd_train_dist(args: &Args) -> Result<()> {
+    use pixelfly::dist::{self, DistConfig, Mode, SnapshotCfg, WorkerConfig};
+    let role = args.str_or("dist", "coordinator");
+    let opts = CompiledOpts::from_args(args, "vit-s");
+    match role.as_str() {
+        "coordinator" => {
+            let mut model = opts.compile()?;
+            let mut cfg = DistConfig::new(
+                args.usize_or("ranks", 2) as u32,
+                args.usize_or("rounds", args.usize_or("steps", 20)) as u64,
+            );
+            cfg.mode = match args.str_or("dist-mode", "grad").as_str() {
+                "grad" => Mode::Grad,
+                "fedavg" => Mode::Fedavg,
+                other => anyhow::bail!("--dist-mode expects grad|fedavg, got {other:?}"),
+            };
+            cfg.sync_every = args.usize_or("sync-every", 4) as u32;
+            cfg.lr = args.f32_or("lr", 1e-2);
+            cfg.momentum = args.f32_or("momentum", 0.9);
+            cfg.data_seed = args.u64_or("data-seed", cfg.data_seed);
+            cfg.round_timeout = std::time::Duration::from_millis(
+                args.u64_or("round-timeout-ms", 5000));
+            cfg.admit_timeout = std::time::Duration::from_millis(
+                args.u64_or("admit-timeout-ms", 30_000));
+            let spec = dist::coordinator::FleetSpec::of(&mut model);
+            let addr = args.str_or("addr", "0.0.0.0:7979");
+            let coord = dist::Coordinator::bind(&addr, cfg.clone(), spec)?;
+            println!("coordinator on {} waiting for {} workers \
+                      (protocol PXD1, {:?} mode, {} rounds)",
+                     coord.local_addr()?, cfg.nranks, cfg.mode, cfg.rounds);
+            let report = coord.run()?;
+            println!("fleet done: {} rounds, final loss {:.6}, \
+                      {} rank(s) excluded {:?}, {} replacement(s) admitted",
+                     report.rounds,
+                     report.losses.last().copied().unwrap_or(f64::NAN),
+                     report.excluded.len(), report.excluded, report.replacements);
+        }
+        "worker" => {
+            let model = opts.compile()?;
+            let addr = args.str_or("addr", "127.0.0.1:7979");
+            let tag = args.str_or("tag", "worker");
+            let mut wc = WorkerConfig::new(&addr, &tag);
+            if let Some(w) = args.get("warm-start") {
+                wc.warm_start = Some(PathBuf::from(w));
+            }
+            let every = args.u64_or("snapshot-every", 0);
+            match (args.get("out"), every) {
+                (Some(out), e) if e > 0 => {
+                    wc.snapshot = Some(SnapshotCfg {
+                        dir: PathBuf::from(out),
+                        every: e,
+                        retain: args.usize_or("retain", 3),
+                    });
+                }
+                (None, e) if e > 0 => anyhow::bail!("--snapshot-every needs --out <dir>"),
+                _ => {}
+            }
+            let report = dist::worker::run(model, wc)?;
+            println!("rank {} done: {} rounds applied, final loss {:.6}, \
+                      {} snapshot(s) offered",
+                     report.rank, report.losses.len(),
+                     report.losses.last().copied().unwrap_or(f64::NAN),
+                     report.snapshots);
+        }
+        other => anyhow::bail!("--dist expects coordinator|worker, got {other:?}"),
+    }
+    Ok(())
+}
+
 /// Continuous-batching TCP inference: compile (optionally pre-train), shed
 /// training state into a KV-cached decode session, serve `PXF1` frames.
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -288,17 +378,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut model = opts.compile()?;
     if let Some(w) = args.get("weights") {
         // warm-start: a .pxck file, or a snapshot dir (newest wins) —
-        // straight into the frozen session, no recompile-train
-        let p = Path::new(w);
-        let file = if p.is_dir() {
-            writer::latest_in(p)
-                .ok_or_else(|| anyhow::anyhow!("no ckpt-*.pxck in {w:?}"))?
-        } else {
-            p.to_path_buf()
-        };
+        // straight into the frozen session, no recompile-train. A corrupt
+        // or missing checkpoint is a typed error naming the file — never
+        // a panic, never a silent fall-through to seed weights.
         let t0 = std::time::Instant::now();
-        let info = model.load_checkpoint(&file)?;
-        println!("warm-start {} (step {}, {}) in {:.1}ms", file.display(),
+        let info = model.load_weights(Path::new(w))?;
+        println!("warm-start {w} (step {}, {}) in {:.1}ms",
                  info.step, info.meta, t0.elapsed().as_secs_f64() * 1e3);
     }
     if steps > 0 {

@@ -181,6 +181,30 @@ impl Module for LowRankResidual {
         src.load_f32(&state_name(prefix, "mb"), &mut self.mb)?;
         Ok(())
     }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        match which {
+            // visit order pins the flat wire layout; u/v buffers are
+            // visited even at rank 0 (they are empty, not absent)
+            super::TrainTensors::Grads => {
+                visit(&mut self.grads.d_flat);
+                visit(&mut self.grads.du.data);
+                visit(&mut self.grads.dv.data);
+                visit(&mut self.db);
+            }
+            super::TrainTensors::Params => {
+                visit(&mut self.flr.flat.blocks);
+                visit(&mut self.flr.u.data);
+                visit(&mut self.flr.v.data);
+                visit(&mut self.bias);
+                visit(&mut self.m_flat);
+                visit(&mut self.m_u);
+                visit(&mut self.m_v);
+                visit(&mut self.mb);
+            }
+        }
+    }
 }
 
 /// Attention block: q/k/v projections, fused streaming block-sparse
@@ -463,6 +487,14 @@ impl Module for PixelflyAttention {
         self.wo.load_state(&state_name(prefix, "wo"), src)?;
         Ok(())
     }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        self.wq.visit_train_f32(which, visit);
+        self.wk.visit_train_f32(which, visit);
+        self.wv.visit_train_f32(which, visit);
+        self.wo.visit_train_f32(which, visit);
+    }
 }
 
 /// Two-layer MLP (expand + activation, contract) with an optional
@@ -602,6 +634,12 @@ impl Module for MlpBlock {
         self.down.load_state(&state_name(prefix, "down"), src)?;
         Ok(())
     }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        self.up.visit_train_f32(which, visit);
+        self.down.visit_train_f32(which, visit);
+    }
 }
 
 /// MLP-Mixer block: token-mixing MLP applied across the sequence (on the
@@ -735,6 +773,12 @@ impl Module for MixerBlock {
         self.channel.load_state(&state_name(prefix, "channel"), src)?;
         Ok(())
     }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        self.token.visit_train_f32(which, visit);
+        self.channel.visit_train_f32(which, visit);
+    }
 }
 
 /// Input embedding, kept dense per the paper (§3.3 step 1 sparsifies
@@ -795,6 +839,11 @@ impl Module for Embedding {
                   -> Result<(), CkptError> {
         self.0.load_state(prefix, src)
     }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        self.0.visit_train_f32(which, visit)
+    }
 }
 
 /// Classifier / LM head, kept dense per the paper — the other dense-kept
@@ -853,6 +902,11 @@ impl Module for ClassifierHead {
     fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
                   -> Result<(), CkptError> {
         self.0.load_state(prefix, src)
+    }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        self.0.visit_train_f32(which, visit)
     }
 }
 

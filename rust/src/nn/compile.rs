@@ -10,7 +10,7 @@
 //! `train` and a forward-only [`InferenceSession`] with frozen plans and
 //! a metered zero-alloc steady state.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -29,7 +29,7 @@ use super::blocks::{ClassifierHead, Embedding, LowRankResidual, MixerBlock, MlpB
                     PixelflyAttention};
 use super::decode::{DecodeSession, SessionError};
 use super::{drive_substrate_training, ensure_shape, mse_loss_grad, Module,
-            PhaseFlops, Sequential, StepTimer, StepTimings};
+            PhaseFlops, Sequential, StepTimer, StepTimings, TrainTensors};
 
 /// Parameter accounting of one compiled model, split the way the paper's
 /// sparsification story needs it: what was sparsified, what stayed dense
@@ -197,6 +197,40 @@ pub fn compile(schema: &ModelSchema, alloc: &Allocation, block: usize,
 pub struct CkptInfo {
     pub step: u64,
     pub meta: String,
+}
+
+/// Why `--weights PATH` resolution failed: either the directory holds no
+/// checkpoints at all, or the file that newest-wins resolution picked
+/// would not load. The failing file is always named — callers must not
+/// silently fall back to an older snapshot the operator didn't ask for.
+#[derive(Debug)]
+pub enum WeightsError {
+    /// the directory exists but contains no `ckpt-*.pxck` files
+    NoCheckpoints { dir: PathBuf },
+    /// the resolved checkpoint file failed to load
+    Load { file: PathBuf, source: CkptError },
+}
+
+impl std::fmt::Display for WeightsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WeightsError::NoCheckpoints { dir } => {
+                write!(f, "no checkpoints found in {}", dir.display())
+            }
+            WeightsError::Load { file, source } => {
+                write!(f, "failed to load checkpoint {}: {source}", file.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for WeightsError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WeightsError::NoCheckpoints { .. } => None,
+            WeightsError::Load { source, .. } => Some(source),
+        }
+    }
 }
 
 /// An executable compiled model: one module tree, one workspace, member
@@ -431,6 +465,73 @@ impl Model {
         Ok(CkptInfo { step: ck.step, meta: ck.meta })
     }
 
+    /// Restore weights from `path`, which may be a checkpoint file or a
+    /// directory (newest checkpoint wins, by step-ordered filename). A
+    /// corrupt newest checkpoint is a typed [`WeightsError::Load`] naming
+    /// the file — never a panic, never a silent fallback to an older one.
+    pub fn load_weights(&mut self, path: &Path) -> Result<CkptInfo, WeightsError> {
+        let file = if path.is_dir() {
+            ckpt::writer::latest_in(path).ok_or_else(|| WeightsError::NoCheckpoints {
+                dir: path.to_path_buf(),
+            })?
+        } else {
+            path.to_path_buf()
+        };
+        self.load_checkpoint(&file)
+            .map_err(|source| WeightsError::Load { file, source })
+    }
+
+    /// Forward + backward WITHOUT the optimizer update, leaving the
+    /// gradient buffers filled — the data-parallel half-step: workers
+    /// compute local gradients here, exchange them through the flat
+    /// views, then [`Model::apply_update`] with the averaged result.
+    pub fn forward_backward(&mut self, x: &Matrix, target: &Matrix) -> f64 {
+        exec::step_scope(|| {
+            self.forward_only(x);
+            ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
+            let Model { body, ws, y, gy, .. } = self;
+            let loss = mse_loss_grad(y, target, gy);
+            body.backward_into(x, y, gy, None, ws);
+            loss
+        })
+    }
+
+    /// The optimizer half of [`Model::train_step`]: consume whatever the
+    /// gradient buffers currently hold. Splitting the phases this way
+    /// keeps the distributed step arithmetic identical to the fused one —
+    /// same update kernel, same dispatch region.
+    pub fn apply_update(&mut self, lr: f32, momentum: f32) {
+        exec::step_scope(|| self.body.update(lr, momentum));
+    }
+
+    /// Total f32 element count of the flat view `which` enumerates.
+    pub fn train_flat_len(&mut self, which: TrainTensors) -> usize {
+        let mut n = 0usize;
+        self.body.visit_train_f32(which, &mut |s| n += s.len());
+        n
+    }
+
+    /// Serialize the selected training tensors into one flat vector, in
+    /// module enumeration order (the same order `state_tensors` walks) —
+    /// the wire layout of the distributed gradient exchange.
+    pub fn read_train_flat(&mut self, which: TrainTensors, out: &mut Vec<f32>) {
+        out.clear();
+        self.body.visit_train_f32(which, &mut |s| out.extend_from_slice(s));
+    }
+
+    /// Scatter a flat vector produced by [`Model::read_train_flat`] (on
+    /// this or an identically-compiled model) back into the underlying
+    /// buffers. `src` must cover the layout exactly.
+    pub fn write_train_flat(&mut self, which: TrainTensors, src: &[f32]) {
+        let mut off = 0usize;
+        self.body.visit_train_f32(which, &mut |s| {
+            s.copy_from_slice(&src[off..off + s.len()]);
+            off += s.len();
+        });
+        assert_eq!(off, src.len(), "flat {which:?} write: buffer layout covers \
+                                    {off} elems, caller sent {}", src.len());
+    }
+
     /// Freeze into a forward-only serving session. Plans stay cached;
     /// the session gets a FRESH workspace so its scratch metering
     /// (`peak_scratch_bytes`) reports the serving footprint alone, not
@@ -606,6 +707,62 @@ mod tests {
         let dev = Device::with_block(16);
         let alloc = rule_of_thumb(&schema, 0.2, &dev);
         assert!(compile(&schema, &alloc, 16, 0).is_err());
+    }
+
+    #[test]
+    fn params_flat_view_matches_state_tensor_order() {
+        // the wire contract: the Params flat view is exactly the F32
+        // state tensors concatenated in enumeration order, so a params
+        // stream and a checkpoint describe the same bytes
+        let schema = transformer_schema("t", 128, 1, 64, 2, 1);
+        let dev = Device::with_block(16);
+        let alloc = rule_of_thumb(&schema, 0.25, &dev);
+        let mut model = compile(&schema, &alloc, 16, 3).unwrap();
+        let mut flat = Vec::new();
+        model.read_train_flat(TrainTensors::Params, &mut flat);
+        assert_eq!(flat.len(), model.train_flat_len(TrainTensors::Params));
+        let mut want: Vec<f32> = Vec::new();
+        model.body.state_tensors("", &mut |_, item| {
+            if let StateItem::F32(s) = item {
+                want.extend_from_slice(s);
+            }
+        });
+        assert_eq!(flat.len(), want.len());
+        assert!(flat.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // write-back roundtrip is bit-exact
+        let scaled: Vec<f32> = flat.iter().map(|v| v * 0.5).collect();
+        model.write_train_flat(TrainTensors::Params, &scaled);
+        let mut back = Vec::new();
+        model.read_train_flat(TrainTensors::Params, &mut back);
+        assert!(back.iter().zip(&scaled).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn split_step_with_flat_grad_roundtrip_matches_fused_train_step() {
+        // forward_backward → read/write the Grads flat view → apply_update
+        // must be bit-identical to train_step: the distributed step with a
+        // no-op allreduce IS the single-process step
+        let schema = transformer_schema("t", 128, 1, 64, 2, 1);
+        let dev = Device::with_block(16);
+        let alloc = rule_of_thumb(&schema, 0.25, &dev);
+        let mut a = compile(&schema, &alloc, 16, 4).unwrap();
+        let mut b = compile(&schema, &alloc, 16, 4).unwrap();
+        let mut rng = Rng::new(11);
+        let x = Matrix::randn(64, a.in_dim(), 1.0, &mut rng);
+        let t = Matrix::randn(64, a.out_dim(), 0.5, &mut rng);
+        let (l1, _) = a.train_step(&x, &t, 1e-2, 0.9);
+        let l2 = b.forward_backward(&x, &t);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        let mut g = Vec::new();
+        b.read_train_flat(TrainTensors::Grads, &mut g);
+        b.write_train_flat(TrainTensors::Grads, &g);
+        b.apply_update(1e-2, 0.9);
+        let mut pa = Vec::new();
+        let mut pb = Vec::new();
+        a.read_train_flat(TrainTensors::Params, &mut pa);
+        b.read_train_flat(TrainTensors::Params, &mut pb);
+        assert_eq!(pa.len(), pb.len());
+        assert!(pa.iter().zip(&pb).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -139,6 +139,22 @@ impl Module for SparseLinear {
         src.load_f32(&state_name(prefix, "mb"), &mut self.mb)?;
         Ok(())
     }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        match which {
+            super::TrainTensors::Grads => {
+                visit(&mut self.dw);
+                visit(&mut self.db);
+            }
+            super::TrainTensors::Params => {
+                visit(&mut self.w.blocks);
+                visit(&mut self.bias);
+                visit(&mut self.mw);
+                visit(&mut self.mb);
+            }
+        }
+    }
 }
 
 /// Dense twin of [`SparseLinear`] — the baseline the fig1 bench compares
@@ -251,6 +267,22 @@ impl Module for DenseLinear {
         src.load_f32(&state_name(prefix, "mw"), &mut self.mw)?;
         src.load_f32(&state_name(prefix, "mb"), &mut self.mb)?;
         Ok(())
+    }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        match which {
+            super::TrainTensors::Grads => {
+                visit(&mut self.dw.data);
+                visit(&mut self.db);
+            }
+            super::TrainTensors::Params => {
+                visit(&mut self.w.data);
+                visit(&mut self.bias);
+                visit(&mut self.mw);
+                visit(&mut self.mb);
+            }
+        }
     }
 }
 
@@ -378,6 +410,14 @@ impl Module for Linear {
         match self {
             Linear::Sparse(l) => l.load_state(prefix, src),
             Linear::Dense(l) => l.load_state(prefix, src),
+        }
+    }
+
+    fn visit_train_f32(&mut self, which: super::TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        match self {
+            Linear::Sparse(l) => l.visit_train_f32(which, visit),
+            Linear::Dense(l) => l.visit_train_f32(which, visit),
         }
     }
 }

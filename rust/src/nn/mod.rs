@@ -76,6 +76,23 @@ impl std::iter::Sum for PhaseFlops {
     }
 }
 
+/// Which family of module-owned f32 training buffers a
+/// [`Module::visit_train_f32`] walk exposes. Data-parallel training
+/// flattens either family over the wire: gradient allreduce ships
+/// `Grads` every step; federated averaging ships `Params` every K steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainTensors {
+    /// The gradient buffers `backward_into` filled and `update` will
+    /// consume (dw/db and friends) — overwriting them between the two
+    /// calls redirects the next update, which is exactly how an averaged
+    /// gradient is applied.
+    Grads,
+    /// Parameters + biases + momentum: every f32 tensor
+    /// [`Module::state_tensors`] enumerates, in the same order (the u32
+    /// structure tensors are plan-frozen and skipped).
+    Params,
+}
+
 /// A trainable operator `[rows, in_dim] -> [rows, out_dim]` on the
 /// substrate. See the module docs for the ownership contract.
 ///
@@ -171,6 +188,18 @@ pub trait Module: Send {
     /// copied into the module's buffers.
     fn load_state(&mut self, prefix: &str, src: &mut dyn StateSource)
                   -> Result<(), CkptError>;
+
+    /// Visit every mutable f32 training buffer of the given family in a
+    /// FIXED order (the distributed runtime flattens these slices over
+    /// the wire, so save order and restore order must agree the way
+    /// `state_tensors`/`load_state` do). `Params` follows the
+    /// `state_tensors` enumeration minus u32 structure tensors; `Grads`
+    /// walks the gradient buffers in the parallel order. Required, not
+    /// defaulted, for the same reason `state_tensors` is: a module
+    /// silently skipped here would train on averaged gradients that are
+    /// missing one layer — divergence with no error.
+    fn visit_train_f32(&mut self, which: TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32]));
 }
 
 /// Compose a checkpoint tensor name: the leaf alone at the root, else
@@ -509,6 +538,13 @@ impl Module for Sequential {
             m.load_state(&state_name(prefix, &i.to_string()), src)?;
         }
         Ok(())
+    }
+
+    fn visit_train_f32(&mut self, which: TrainTensors,
+                       visit: &mut dyn FnMut(&mut [f32])) {
+        for m in &mut self.mods {
+            m.visit_train_f32(which, visit);
+        }
     }
 }
 

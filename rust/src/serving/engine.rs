@@ -20,8 +20,8 @@
 //! whatever it was batched with — the concurrency test exploits this.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -116,6 +116,41 @@ struct Shared {
     metrics: Mutex<Recorder>,
 }
 
+/// Lock that shrugs off poisoning: if the engine thread panicked while
+/// holding a lock, clients must still get their typed `EngineDown`, not
+/// a cascading poison panic.
+fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Test hook proving panic containment: the engine thread panics after
+/// this many more decode steps (0 = on the next one; negative =
+/// disarmed, the resting state).
+static PANIC_AFTER: AtomicI64 = AtomicI64::new(-1);
+
+/// Arm [`PANIC_AFTER`]: the engine thread will panic just before decode
+/// step `steps` from now. The fault is one-shot; clients of the downed
+/// engine must observe [`RequestError::EngineDown`], never a hang.
+pub fn arm_engine_panic(steps: u64) {
+    PANIC_AFTER.store(steps as i64, Ordering::SeqCst);
+}
+
+fn take_injected_panic() -> bool {
+    let armed = PANIC_AFTER.load(Ordering::SeqCst);
+    if armed < 0 {
+        return false;
+    }
+    PANIC_AFTER.store(armed - 1, Ordering::SeqCst);
+    armed == 0
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
 /// Cloneable client endpoint; `generate` blocks until the engine delivers.
 #[derive(Clone)]
 pub struct EngineHandle {
@@ -162,7 +197,7 @@ impl EngineHandle {
         }
         let cell = Arc::new(ResponseCell::default());
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock(&self.shared.queue);
             loop {
                 if self.shared.shutdown.load(Ordering::SeqCst) {
                     return Err(RequestError::EngineDown("engine is shut down".into()));
@@ -170,7 +205,7 @@ impl EngineHandle {
                 if q.len() < self.queue_depth {
                     break;
                 }
-                q = self.shared.space.wait(q).unwrap();
+                q = self.shared.space.wait(q).unwrap_or_else(PoisonError::into_inner);
             }
             q.push_back(Pending {
                 prompt,
@@ -184,7 +219,7 @@ impl EngineHandle {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.lock().unwrap().snapshot()
+        lock(&self.shared.metrics).snapshot()
     }
 }
 
@@ -228,20 +263,41 @@ fn fail_all(slots: &mut [Option<Active>], q: &mut VecDeque<Pending>, msg: &str) 
     }
 }
 
+/// The engine thread: runs the decode loop under `catch_unwind`, with
+/// the slot table owned OUTSIDE the unwind boundary, so a panic
+/// anywhere in the loop — a kernel assert, an injected
+/// [`arm_engine_panic`], a bug — downs the engine cleanly: shutdown
+/// flips, every resident and queued request gets a typed
+/// [`RequestError::EngineDown`] naming the panic, and blocked producers
+/// are woken. Clients can never hang on a dead engine thread.
 fn engine_loop(mut sess: DecodeSession, shared: Arc<Shared>, max_batch: usize) {
+    let mut slots: Vec<Option<Active>> = (0..max_batch).map(|_| None).collect();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine_iterations(&mut sess, &shared, &mut slots, max_batch);
+    }));
+    if let Err(payload) = caught {
+        let msg = format!("engine thread panicked: {}", panic_message(&*payload));
+        shared.shutdown.store(true, Ordering::SeqCst);
+        let mut q = lock(&shared.queue);
+        fail_all(&mut slots, &mut q, &msg);
+        shared.space.notify_all();
+    }
+}
+
+fn engine_iterations(sess: &mut DecodeSession, shared: &Shared,
+                     slots: &mut Vec<Option<Active>>, max_batch: usize) {
     let d = sess.in_dim();
     let d_out = sess.out_dim();
-    let mut slots: Vec<Option<Active>> = (0..max_batch).map(|_| None).collect();
     let mut x = Matrix::zeros(max_batch, d);
     let mut batch_slots: Vec<usize> = Vec::with_capacity(max_batch);
     let mut batch_pos: Vec<usize> = Vec::with_capacity(max_batch);
     loop {
         // ---- admit: move queued requests into free KV slots ----
         {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock(&shared.queue);
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
-                    fail_all(&mut slots, &mut q, "engine is shut down");
+                    fail_all(slots, &mut q, "engine is shut down");
                     shared.space.notify_all();
                     return;
                 }
@@ -263,7 +319,11 @@ fn engine_loop(mut sess: DecodeSession, shared: Arc<Shared>, max_batch: usize) {
                 }
                 // fully idle: park until a request lands (timeout so a
                 // shutdown flag flip is never missed)
-                q = shared.work.wait_timeout(q, Duration::from_millis(20)).unwrap().0;
+                q = shared
+                    .work
+                    .wait_timeout(q, Duration::from_millis(20))
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .0;
             }
         }
         // ---- one decode step: 1 input row per active slot ----
@@ -284,14 +344,17 @@ fn engine_loop(mut sess: DecodeSession, shared: Arc<Shared>, max_batch: usize) {
                 if a.pos < a.prompt.rows { a.prompt.row(a.pos) } else { &a.last };
             x.row_mut(i).copy_from_slice(src);
         }
+        if take_injected_panic() {
+            panic!("injected engine panic (arm_engine_panic)");
+        }
         let t0 = Instant::now();
         let y = match sess.step(&x, &batch_slots, &batch_pos) {
             Ok(y) => y,
             Err(e) => {
                 let msg = format!("decode step failed: {e}");
-                let mut q = shared.queue.lock().unwrap();
+                let mut q = lock(&shared.queue);
                 shared.shutdown.store(true, Ordering::SeqCst);
-                fail_all(&mut slots, &mut q, &msg);
+                fail_all(slots, &mut q, &msg);
                 shared.space.notify_all();
                 return;
             }
@@ -314,7 +377,7 @@ fn engine_loop(mut sess: DecodeSession, shared: Arc<Shared>, max_batch: usize) {
                 generated += 1;
             }
         }
-        let mut m = shared.metrics.lock().unwrap();
+        let mut m = lock(&shared.metrics);
         m.record_step(step_ns, n, generated);
         for &si in &batch_slots {
             if slots[si].as_ref().map_or(false, |a| a.produced == a.gen) {
@@ -388,7 +451,7 @@ impl ServeEngine {
             let _ = t.join();
         }
         // the engine drains on its way out; catch anything enqueued after
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = lock(&self.shared.queue);
         for p in q.drain(..) {
             p.cell.deliver(Err(RequestError::EngineDown("engine is shut down".into())));
         }

@@ -74,7 +74,10 @@ impl Recorder {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut sorted = self.latencies_ns.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (impossible today, but this is a panic
+        // path inside the engine's metrics lock) must never abort the
+        // snapshot
+        sorted.sort_by(f64::total_cmp);
         let elapsed_s = self.started.elapsed().as_secs_f64().max(1e-9);
         MetricsSnapshot {
             requests: self.requests,

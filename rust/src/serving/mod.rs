@@ -15,6 +15,7 @@ pub mod engine;
 pub mod metrics;
 pub mod tcp;
 
-pub use engine::{EngineConfig, EngineHandle, RequestError, ServeEngine};
+pub use engine::{arm_engine_panic, EngineConfig, EngineHandle, RequestError,
+                 ServeEngine};
 pub use metrics::{percentile, MetricsSnapshot, Recorder};
 pub use tcp::{client_request, TcpConfig, TcpServer};

@@ -98,6 +98,31 @@ impl<T> Doorbell<T> {
             g = self.bell.wait(g).unwrap();
         }
     }
+
+    /// [`Doorbell::wait_until`] with a deadline: parks until `f` yields a
+    /// value or `timeout` elapses, whichever comes first. `None` on
+    /// timeout — the caller re-checks its world (liveness deadlines,
+    /// shutdown flags) and decides whether to wait again. This is what
+    /// keeps every barrier built on a doorbell hang-free: a peer that
+    /// dies without ringing can only cost one timeout tick, not forever.
+    pub fn wait_timeout_until<R>(&self, timeout: std::time::Duration,
+                                 mut f: impl FnMut(&mut T) -> Option<R>)
+                                 -> Option<R> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = f(&mut g) {
+                drop(g);
+                self.bell.notify_all();
+                return Some(r);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            g = self.bell.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -904,5 +929,25 @@ mod tests {
         let r = weighted_ranges(&[0, 0, 0, 0], 2);
         let covered: usize = r.iter().map(|r| r.len()).sum();
         assert_eq!(covered, 4);
+    }
+
+    #[test]
+    fn wait_timeout_until_times_out_and_delivers() {
+        use std::time::Duration;
+        let bell = std::sync::Arc::new(Doorbell::new(0usize));
+        // nobody rings: must return None, not hang
+        let r = bell.wait_timeout_until(Duration::from_millis(20),
+                                        |v| (*v > 0).then_some(*v));
+        assert_eq!(r, None);
+        // a peer rings within the window: must deliver the value
+        let b2 = std::sync::Arc::clone(&bell);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            b2.update(|v| *v = 7);
+        });
+        let r = bell.wait_timeout_until(Duration::from_secs(5),
+                                        |v| (*v > 0).then_some(*v));
+        assert_eq!(r, Some(7));
+        t.join().unwrap();
     }
 }

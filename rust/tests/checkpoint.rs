@@ -210,6 +210,62 @@ fn killed_write_preserves_the_previous_checkpoint() {
 }
 
 #[test]
+fn serve_weights_dir_with_corrupt_newest_is_a_typed_error_naming_the_file() {
+    // `serve --weights DIR` resolves newest-wins via `load_weights`. When
+    // the newest checkpoint is corrupt the call must return a typed
+    // WeightsError::Load naming THAT file — no panic, and crucially no
+    // silent fallback to the older (stale) checkpoint, which would serve
+    // outdated weights while looking healthy.
+    use pixelfly::nn::compile::WeightsError;
+
+    let dir = tdir("weights-newest");
+    let mut model = compile_preset("gpt2-s", 71);
+    model.train(1, LR, MOM, 71);
+    let p1 = dir.join(writer::step_filename(1));
+    model.save_checkpoint(&p1, 1, "meta").unwrap();
+    model.train(1, LR, MOM, 72);
+    let p2 = dir.join(writer::step_filename(2));
+    model.save_checkpoint(&p2, 2, "meta").unwrap();
+
+    // sanity: newest-wins resolution picks step 2
+    assert_eq!(writer::latest_in(&dir).unwrap(), p2);
+
+    // corrupt the newest file's reads via the injected bit-flip; the fault
+    // is path-scoped to this test's dir so it hits p2 (and would hit p1
+    // too — but a correct implementation must never read p1 at all)
+    assert!(faults::arm("bit-flip@4099", "pxck-it-weights-newest"));
+    let mut fresh = compile_preset("gpt2-s", 73);
+    match fresh.load_weights(&dir) {
+        Err(WeightsError::Load { file, .. }) => {
+            assert_eq!(file, p2, "error must name the newest checkpoint");
+        }
+        Err(other) => panic!("expected Load, got {other:?}"),
+        Ok(info) => panic!(
+            "corrupt newest loaded silently (step {} — fell back to stale?)",
+            info.step
+        ),
+    }
+    // the error Display names the offending file for the operator
+    let err = fresh.load_weights(&dir).unwrap_err();
+    assert!(
+        err.to_string().contains(&writer::step_filename(2)),
+        "Display must name the file: {err}"
+    );
+
+    // an empty directory is typed too, naming the directory
+    let empty = tdir("weights-newest-empty");
+    match fresh.load_weights(&empty) {
+        Err(WeightsError::NoCheckpoints { dir: d }) => assert_eq!(d, empty),
+        other => panic!("empty dir must be NoCheckpoints, got {other:?}"),
+    }
+
+    // disarm: the same call now warm-starts cleanly from step 2
+    faults::disarm("pxck-it-weights-newest");
+    let info = fresh.load_weights(&dir).unwrap();
+    assert_eq!(info.step, 2);
+}
+
+#[test]
 fn background_snapshotter_rides_the_training_loop() {
     // end to end: train with --snapshot-every semantics, then warm-start a
     // decode session from the latest snapshot — the serve path.

@@ -245,6 +245,43 @@ fn slow_client_gets_a_typed_timeout_error_and_idle_clients_close_quietly() {
 }
 
 #[test]
+fn engine_thread_panic_fails_clients_with_typed_error_not_a_hang() {
+    // PR 8 robustness: a panic on the engine thread (kernel assert, bug,
+    // or the injected fault here) must down the engine CLEANLY — every
+    // in-flight and queued request gets a typed `EngineDown` naming the
+    // panic, later requests are refused at the door, and nobody hangs on
+    // a dead thread.
+    let sess = compile_gpt2s(41).into_decode(2).unwrap();
+    let engine = ServeEngine::start(sess, EngineConfig { max_batch: 2, queue_depth: 4 });
+    let h = engine.handle();
+    let d = h.d();
+
+    // healthy round-trip first: the hook is disarmed by default
+    let out = h.generate(Matrix::zeros(4, d), 2).unwrap();
+    assert_eq!((out.rows, out.cols), (2, d));
+
+    // arm: the engine thread panics on its next decode step, which the
+    // next request triggers — that client must get the panic message
+    pixelfly::serving::arm_engine_panic(0);
+    let h2 = h.clone();
+    let victim = thread::spawn(move || h2.generate(Matrix::zeros(4, d), 4));
+    match victim.join().expect("client thread must return, not hang or panic") {
+        Err(RequestError::EngineDown(msg)) => {
+            assert!(msg.contains("panic"), "want the panic surfaced, got {msg:?}");
+        }
+        other => panic!("expected EngineDown after engine panic, got {other:?}"),
+    }
+
+    // the engine is down for good: new requests get a typed refusal…
+    assert!(matches!(h.generate(Matrix::zeros(4, d), 1),
+                     Err(RequestError::EngineDown(_))));
+    // …and the metrics surface still answers (no poisoned-lock cascade)
+    let m = engine.metrics();
+    assert!(m.requests >= 1);
+    engine.shutdown();
+}
+
+#[test]
 fn decode_session_steady_state_is_zero_alloc_across_batch_shapes() {
     // The constructor warms at the full slot batch; every later step —
     // any batch size, any positions — must stay allocation-free.
