@@ -29,15 +29,26 @@ use pixelfly::bench::BenchSuite;
 use pixelfly::coordinator::{AttnTrainStep, DenseLinear, Linear, SparseLinear, TrainStep};
 use pixelfly::patterns::{baselines, BlockMask};
 use pixelfly::sparse::exec;
-use pixelfly::sparse::{Activation, AttnPlan, Matrix};
+use pixelfly::sparse::{Activation, AttnPlan, BsrMatrix, Matrix};
 use pixelfly::util::Rng;
+
+/// Relative L2 error of `got` against the reference `want`.
+fn rel_err(want: &[f32], got: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in want.iter().zip(got) {
+        num += ((a - b) as f64).powi(2);
+        den += (*a as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
 
 /// Bench one TrainStep, accumulating the phase split over exactly the
 /// TIMED iterations (warmup invocations are skipped, so the fwd/bwd/upd
 /// columns describe the same samples as the row's mean_ms) and attaching
 /// it plus per-phase GFLOP/s to the suite row.
 fn bench_mlp(suite: &mut BenchSuite, name: &str, note: &str, ts: &mut TrainStep,
-             x: &Matrix, target: &Matrix) {
+             weight_elems: f64, x: &Matrix, target: &Matrix) {
     let (ff, bf, uf) = ts.phase_flops();
     // time_it invokes the closure (warmup + iters) times; fold phases
     // over the timed tail only
@@ -62,6 +73,12 @@ fn bench_mlp(suite: &mut BenchSuite, name: &str, note: &str, ts: &mut TrainStep,
     // buffers + scratch-free BSR backward engine — there is no workspace
     // to meter, hence the honest 0 here (attention rows meter theirs)
     suite.set_scratch_bytes(0);
+    // first-order traffic model for the GB/s column: the weights are
+    // streamed ~8x per step (fwd, dX, dW write, optimizer read w/g/m +
+    // write w/m) and each activation panel crosses memory ~6x across
+    // fwd+bwd; all f32 on this tier
+    let acts = (x.rows * x.cols) as f64;
+    suite.set_bytes_moved(4.0 * (8.0 * weight_elems + 6.0 * acts));
 }
 
 fn main() {
@@ -104,10 +121,12 @@ fn main() {
         let note = format!("n={n} b={b} batch={batch} density={:.0}% \
                             threads={threads} {kernel}",
                            100.0 * density);
-        bench_mlp(&mut suite, &format!("mlp_sparse_n{n}"), &note, &mut sparse, &x,
-                  &target);
-        bench_mlp(&mut suite, &format!("mlp_dense_n{n}"), &note, &mut dense, &x,
-                  &target);
+        let sparse_welems = ((mask1.nnz() + mask2.nnz()) * b * b) as f64;
+        let dense_welems = (2 * n * n) as f64;
+        bench_mlp(&mut suite, &format!("mlp_sparse_n{n}"), &note, &mut sparse,
+                  sparse_welems, &x, &target);
+        bench_mlp(&mut suite, &format!("mlp_dense_n{n}"), &note, &mut dense,
+                  dense_welems, &x, &target);
         let sp = suite.mean_ms_of(&format!("mlp_sparse_n{n}")).unwrap();
         let de = suite.mean_ms_of(&format!("mlp_dense_n{n}")).unwrap();
         mlp_means.push((n, sp, de));
@@ -176,6 +195,93 @@ fn main() {
         let sp = suite.mean_ms_of(&format!("attn_sparse_seq{seq}")).unwrap();
         let de = suite.mean_ms_of(&format!("attn_dense_seq{seq}")).unwrap();
         attn_means.push((seq, sp, de, sparse_mask.density()));
+    }
+
+    // --- precision tiers: bf16 executor sweeps vs the f32 plan ---------
+    // Same plan, same three schedules (forward / dX / dW); weights and
+    // activation panels stream as bf16 with f32 accumulate. Hard-asserts
+    // pin the reduced-storage tier within the documented error bound
+    // against the f32 sweeps it rides alongside; the GB/s column uses
+    // exact streamed-byte counts, so the table shows the traffic the
+    // tier saves, not just the latency.
+    {
+        let n = sizes[0];
+        let nb = n / b;
+        let batch = if suite.quick { 64 } else { 128 };
+        let mut rng = Rng::new(300);
+        let mask = baselines::random_mask(nb, nb, 0.10, &mut rng);
+        let mut w = BsrMatrix::random(&mask, b, 0.1, &mut rng);
+        let plan = w.plan(threads);
+        let x = Matrix::randn(batch, n, 1.0, &mut rng);
+        let dy = Matrix::randn(batch, n, 1.0, &mut rng);
+        let mut y = Matrix::zeros(batch, n);
+        let mut dx = Matrix::zeros(batch, n);
+        let mut dw = vec![0.0f32; w.blocks.len()];
+        let welems = w.blocks.len() as f64;
+        let acts = (batch * n) as f64;
+        let note = format!("n={n} b={b} batch={batch} threads={threads} {kernel}");
+
+        // f32 reference sweeps (captured before the tier engages)
+        plan.execute(&w, &x, &mut y);
+        let y_ref = y.data.clone();
+        plan.execute_dx(&w, &dy, &mut dx);
+        let dx_ref = dx.data.clone();
+        for v in dw.iter_mut() {
+            *v = 0.0;
+        }
+        plan.execute_dw(&w, &x, &dy, &mut dw);
+        let dw_ref = dw.clone();
+
+        // streamed bytes per sweep. f32: weights + both panels at 4B.
+        // bf16: weights at 2B; each packed panel costs 4B read + 2B
+        // write (caller-side pack) + 2B kernel read; f32 outputs stay 4B.
+        let f32_sweep = 4.0 * welems + 8.0 * acts;
+        suite.bench(&format!("prec_fwd_f32_n{n}"), &note,
+                    || plan.execute(&w, &x, &mut y));
+        suite.set_bytes_moved(f32_sweep);
+        suite.bench(&format!("prec_dx_f32_n{n}"), &note,
+                    || plan.execute_dx(&w, &dy, &mut dx));
+        suite.set_bytes_moved(f32_sweep);
+        suite.bench(&format!("prec_dw_f32_n{n}"), &note,
+                    || plan.execute_dw(&w, &x, &dy, &mut dw));
+        suite.set_bytes_moved(f32_sweep);
+
+        // engage the reduced-storage training tier on this matrix
+        exec::set_precision(exec::Precision::Bf16);
+        w.refresh_bf16();
+        assert!(w.blocks_bf16.is_some(), "bf16 shadow must engage under the tier");
+
+        plan.execute(&w, &x, &mut y);
+        let e_fwd = rel_err(&y_ref, &y.data);
+        plan.execute_dx(&w, &dy, &mut dx);
+        let e_dx = rel_err(&dx_ref, &dx.data);
+        for v in dw.iter_mut() {
+            *v = 0.0;
+        }
+        plan.execute_dw(&w, &x, &dy, &mut dw);
+        let e_dw = rel_err(&dw_ref, &dw);
+        // the pinned training-tier bound: bf16 storage with f32
+        // accumulate stays within 1e-2 relative error of the f32 sweeps
+        assert!(e_fwd <= 1e-2, "bf16 forward rel error {e_fwd:.2e} > 1e-2");
+        assert!(e_dx <= 1e-2, "bf16 dX rel error {e_dx:.2e} > 1e-2");
+        assert!(e_dw <= 1e-2, "bf16 dW rel error {e_dw:.2e} > 1e-2");
+
+        suite.bench(&format!("prec_fwd_bf16_n{n}"),
+                    &format!("{note} rel_err={e_fwd:.1e}"),
+                    || plan.execute(&w, &x, &mut y));
+        suite.set_bytes_moved(2.0 * welems + 12.0 * acts);
+        suite.bench(&format!("prec_dx_bf16_n{n}"),
+                    &format!("{note} rel_err={e_dx:.1e}"),
+                    || plan.execute_dx(&w, &dy, &mut dx));
+        suite.set_bytes_moved(2.0 * welems + 12.0 * acts);
+        suite.bench(&format!("prec_dw_bf16_n{n}"),
+                    &format!("{note} rel_err={e_dw:.1e}"),
+                    || plan.execute_dw(&w, &x, &dy, &mut dw));
+        suite.set_bytes_moved(4.0 * welems + 16.0 * acts);
+
+        // restore the global default so nothing leaks past this section
+        exec::set_precision(exec::Precision::F32);
+        w.drop_precision_shadows();
     }
 
     suite.report();

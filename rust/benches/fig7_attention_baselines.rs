@@ -111,6 +111,13 @@ fn main() {
                 assert!(ws.peak_bytes() < seq * seq * 4,
                         "fused attention must never materialize a seq x seq buffer");
                 fs.set_scratch_bytes(ws.peak_bytes());
+                // streamed-byte model for the GB/s column: each visited
+                // block pair streams a q, k and v tile (b·d f32 each);
+                // the pair-visit count falls out of the plan's flop count
+                // (4·b²·d flops per visit), plus one output panel write
+                let visits = flops / (4.0 * (b * b * d) as f64);
+                fs.set_bytes_moved(visits * (3 * b * d * 4) as f64
+                                   + (seq * d * 4) as f64);
 
                 // materializing two-pass baseline (per-row seq-length scores)
                 let mut ws2 = Workspace::new();
@@ -151,6 +158,26 @@ fn main() {
                 let diff = got.max_abs_diff(&want);
                 assert!(diff < 1e-4, "fused vs dense oracle max-abs-diff {diff}");
                 println!("fused vs dense oracle (full mask, seq={seq}): max|diff|={diff:.2e}");
+
+                // bf16 training-tier bound: under the reduced-storage
+                // tier the attention projections hand the kernel
+                // bf16-rounded panels while softmax/accumulate stay f32
+                // (by design — see DESIGN.md "Precision tiers"). Pin the
+                // end-to-end effect: fused attention on bf16-rounded
+                // Q/K/V stays within 1e-2 max-abs of the f32 oracle.
+                let round = |m: &Matrix| Matrix {
+                    rows: m.rows,
+                    cols: m.cols,
+                    data: m.data.iter().map(|&x| exec::quant::bf16_round(x)).collect(),
+                };
+                let (qb, kb, vb) = (round(&q), round(&k), round(&v));
+                let got16 = attention::block_sparse_attention(&qb, &kb, &vb, &ones,
+                                                             false);
+                let diff16 = got16.max_abs_diff(&want);
+                assert!(diff16 < 1e-2,
+                        "bf16-rounded attention max-abs-diff {diff16} > 1e-2");
+                println!("bf16-rounded vs f32 oracle (full mask, seq={seq}): \
+                          max|diff|={diff16:.2e}");
             }
         }
         fs.report();

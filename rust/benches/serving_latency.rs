@@ -95,7 +95,9 @@ fn main() {
     let mut rng = Rng::new(SEED ^ 0xBE);
 
     // ---- Part A: single-request decode ---------------------------------
-    let mut sess = compile_gpt2s().into_decode(1).expect("gpt2-s decodes").strict();
+    let model = compile_gpt2s();
+    let stats = model.stats;
+    let mut sess = model.into_decode(1).expect("gpt2-s decodes").strict();
     let (d, seq) = (sess.in_dim(), sess.max_seq());
     let prompt = Matrix::randn(PROMPT_ROWS, d, 1.0, &mut rng);
     let note = format!("seq={seq} d={d} prompt={PROMPT_ROWS} gen={gen} \
@@ -118,6 +120,11 @@ fn main() {
         std::hint::black_box(kv_generate(&mut sess, &prompt, gen, None));
     });
     suite.set_scratch_bytes(sess.peak_scratch_bytes());
+    // weight-traffic model for the GB/s column: every decode step streams
+    // the full parameter set once; f32 stores every weight at 4B
+    let steps_per_gen = (PROMPT_ROWS + gen - 1) as f64;
+    let f32_weight_bytes = 4.0 * stats.total_params() as f64;
+    suite.set_bytes_moved(steps_per_gen * f32_weight_bytes);
     let kv_ms = suite.last_mean_ms();
 
     let mut full = compile_gpt2s().into_inference().strict();
@@ -131,6 +138,37 @@ fn main() {
             "KV-cached decode must beat re-prefill generation \
              ({kv_ms:.2}ms vs {reprefill_ms:.2}ms for {gen} tokens)");
     drop(sess);
+
+    // ---- Part A2: int8 quantized decode vs the f32 tier ----------------
+    // `serve --precision int8` end to end: compile fresh under the int8
+    // tier (quantize-at-freeze converts every block-sparse weight to
+    // per-block int8 + scale inside into_decode) and run the SAME
+    // generation. strict() keeps the zero-alloc steady-state contract a
+    // hard assert on this tier too — quantized execution must not
+    // introduce allocations. Batch-1 decode is memory-bound, so the 4x
+    // smaller sparsified weight stream must not lose throughput.
+    exec::set_precision(exec::Precision::Int8);
+    let mut q_sess = compile_gpt2s().into_decode(1).expect("int8 decode").strict();
+    std::hint::black_box(kv_generate(&mut q_sess, &prompt, gen, None)); // warm
+    suite.bench("kv_decode_gen_int8", &format!("{note} precision=int8"), || {
+        std::hint::black_box(kv_generate(&mut q_sess, &prompt, gen, None));
+    });
+    suite.set_scratch_bytes(q_sess.peak_scratch_bytes());
+    // int8 streams sparsified weights at 1B (+ one f32 scale per b² block);
+    // dense-kept embedding/head/bias weights stay f32
+    let int8_weight_bytes = stats.sparsified_weight_params as f64
+        * (1.0 + 4.0 / (BLOCK * BLOCK) as f64)
+        + 4.0 * (stats.total_params() - stats.sparsified_weight_params) as f64;
+    suite.set_bytes_moved(steps_per_gen * int8_weight_bytes);
+    let int8_ms = suite.last_mean_ms();
+    drop(q_sess);
+    exec::set_precision(exec::Precision::F32);
+    let tokens = (PROMPT_ROWS + gen - 1) as f64;
+    let (f32_tps, int8_tps) = (tokens / (kv_ms / 1e3), tokens / (int8_ms / 1e3));
+    println!("decode tokens/s: f32 {f32_tps:.1}, int8 {int8_tps:.1}");
+    assert!(int8_tps >= f32_tps,
+            "int8 decode tokens/s must be >= f32 decode tokens/s \
+             ({int8_tps:.1} vs {f32_tps:.1})");
 
     // ---- Part B: continuous batching vs concurrency --------------------
     let reqs_per_client = if suite.quick { 2 } else { 4 };
@@ -178,6 +216,7 @@ fn main() {
             gflops: None,
             scratch_bytes: None,
             phases: None,
+            bytes_moved: None,
             note: format!(
                 "tokens/s={:.1} p50={:.2}ms p90={:.2}ms p99={:.2}ms reqs={reqs} \
                  gen={BGEN} threads={threads}",

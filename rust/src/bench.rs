@@ -40,8 +40,24 @@ pub struct BenchResult {
     pub scratch_bytes: Option<usize>,
     /// fwd/bwd/update split, when the bench measured one
     pub phases: Option<PhaseCols>,
+    /// bytes one invocation reads + writes, when the bench registered it
+    /// — the memory-traffic twin of the flop count; the report derives
+    /// an achieved-GB/s column from it (what reduced-precision tiers are
+    /// supposed to move, so fig1/fig7/serving make the storage win
+    /// visible, not just the latency)
+    pub bytes_moved: Option<f64>,
     /// optional user metric (e.g. speedup baseline id)
     pub note: String,
+}
+
+impl BenchResult {
+    /// Achieved GB/s (`bytes_moved` over mean time), when registered.
+    /// bytes/ns ≡ GB/s, so no unit factor appears.
+    pub fn gbps(&self) -> Option<f64> {
+        self.bytes_moved
+            .filter(|_| self.summary.mean_ns > 0.0)
+            .map(|b| b / self.summary.mean_ns)
+    }
 }
 
 pub struct BenchSuite {
@@ -78,6 +94,7 @@ impl BenchSuite {
             gflops: None,
             scratch_bytes: None,
             phases: None,
+            bytes_moved: None,
             note: note.to_string(),
         });
         &self.results.last().unwrap().summary
@@ -88,6 +105,16 @@ impl BenchSuite {
     pub fn set_scratch_bytes(&mut self, bytes: usize) {
         if let Some(r) = self.results.last_mut() {
             r.scratch_bytes = Some(bytes);
+        }
+    }
+
+    /// Attach the bytes one invocation reads + writes to the most recent
+    /// result; table/TSV/JSON gain an achieved-GB/s column derived from
+    /// it. One shared column definition serves every suite that wants a
+    /// bandwidth story (fig1, fig7, serving_latency).
+    pub fn set_bytes_moved(&mut self, bytes: f64) {
+        if let Some(r) = self.results.last_mut() {
+            r.bytes_moved = Some(bytes);
         }
     }
 
@@ -138,6 +165,7 @@ impl BenchSuite {
     /// so phase-free suites keep their existing layout.
     pub fn report(&self) -> String {
         let has_phases = self.results.iter().any(|r| r.phases.is_some());
+        let has_bw = self.results.iter().any(|r| r.bytes_moved.is_some());
         let mut out = String::new();
         out.push_str(&format!("\n=== {} (warmup={} iters={}) ===\n",
                               self.title, self.warmup, self.iters));
@@ -146,8 +174,14 @@ impl BenchSuite {
         } else {
             String::new()
         };
-        out.push_str(&format!("{:<44} {:>12} {:>12} {:>12} {:>9} {:>11}{phase_hdr}  note\n",
-                              "benchmark", "mean", "p50", "p95", "gflops", "scratch"));
+        let bw_hdr = if has_bw {
+            format!(" {:>8}", "GB/s")
+        } else {
+            String::new()
+        };
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>9} {:>11}{phase_hdr}{bw_hdr}  note\n",
+            "benchmark", "mean", "p50", "p95", "gflops", "scratch"));
         for r in &self.results {
             let gf = r.gflops.map(|g| format!("{g:>9.2}")).unwrap_or_else(|| " ".repeat(9));
             let sb = r
@@ -163,8 +197,16 @@ impl BenchSuite {
             } else {
                 String::new()
             };
+            let bw = if has_bw {
+                match r.gbps() {
+                    Some(g) => format!(" {g:>8.2}"),
+                    None => " ".repeat(9),
+                }
+            } else {
+                String::new()
+            };
             out.push_str(&format!(
-                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms {gf} {sb}{ph}  {}\n",
+                "{:<44} {:>10.3}ms {:>10.3}ms {:>10.3}ms {gf} {sb}{ph}{bw}  {}\n",
                 r.name,
                 r.summary.mean_ms(),
                 r.summary.p50_ns / 1e6,
@@ -174,16 +216,17 @@ impl BenchSuite {
         }
         // machine-readable lines (new columns appended last so existing
         // TSV consumers keep their column positions: ..., scratch, fwd,
-        // bwd, upd)
+        // bwd, upd, gbps)
         for r in &self.results {
             let sb = r.scratch_bytes.map(|b| b.to_string()).unwrap_or_default();
             let ph = r
                 .phases
                 .map(|p| format!("\t{:.6}\t{:.6}\t{:.6}", p.fwd_ms, p.bwd_ms, p.update_ms))
                 .unwrap_or_default();
-            out.push_str(&format!("TSV\t{}\t{}\t{:.6}\t{:.6}\t{}\t{}{}\n",
+            let bw = r.gbps().map(|g| format!("\t{g:.4}")).unwrap_or_default();
+            out.push_str(&format!("TSV\t{}\t{}\t{:.6}\t{:.6}\t{}\t{}{}{}\n",
                                   self.title, r.name, r.summary.mean_ms(),
-                                  r.summary.p50_ns / 1e6, r.note, sb, ph));
+                                  r.summary.p50_ns / 1e6, r.note, sb, ph, bw));
         }
         print!("{out}");
         out
@@ -216,9 +259,15 @@ impl BenchSuite {
                 ),
                 None => String::new(),
             };
+            let bw = r
+                .bytes_moved
+                .map(|b| format!("{b:.0}"))
+                .unwrap_or_else(|| "null".into());
+            let gbps = r.gbps().map(|g| format!("{g:.4}")).unwrap_or_else(|| "null".into());
             out.push_str(&format!(
                 "    {{\"name\": \"{}\", \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \
-                 \"p95_ms\": {:.6}, \"gflops\": {}, \"scratch_bytes\": {}{ph}, \
+                 \"p95_ms\": {:.6}, \"gflops\": {}, \"scratch_bytes\": {}, \
+                 \"bytes_moved\": {}, \"gbps\": {}{ph}, \
                  \"note\": \"{}\"}}{}\n",
                 escape(&r.name),
                 r.summary.mean_ms(),
@@ -226,6 +275,8 @@ impl BenchSuite {
                 r.summary.p95_ns / 1e6,
                 gf,
                 sb,
+                bw,
+                gbps,
                 escape(&r.note),
                 if i + 1 < self.results.len() { "," } else { "" }
             ));
@@ -329,5 +380,29 @@ mod tests {
         assert!(s.json().contains("\"scratch_bytes\": 12544"));
         let rep = s.report();
         assert!(rep.contains("12544"));
+    }
+
+    #[test]
+    fn bytes_moved_column_flows_to_table_json_and_tsv() {
+        let mut s = suite();
+        s.bench("plain", "", || {});
+        s.bench("sweep", "bf16", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        s.set_bytes_moved(1e6);
+        let r = &s.results[1];
+        assert_eq!(r.bytes_moved, Some(1e6));
+        let g = r.gbps().unwrap();
+        assert!((g - 1e6 / r.summary.mean_ns).abs() < 1e-9);
+        let rep = s.report();
+        assert!(rep.contains("GB/s"), "{rep}");
+        // TSV: gbps appended after scratch (and phases, when present)
+        assert!(rep.contains(&format!("\t{g:.4}\n")), "{rep}");
+        let j = s.json();
+        assert!(j.contains("\"bytes_moved\": 1000000"), "{j}");
+        assert!(j.contains(&format!("\"gbps\": {g:.4}")), "{j}");
+        // the unregistered result stays null
+        assert!(j.contains("\"bytes_moved\": null"), "{j}");
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 }

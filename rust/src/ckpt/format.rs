@@ -23,7 +23,26 @@ use std::fmt;
 use super::TensorData;
 
 pub const MAGIC: &[u8; 4] = b"PXCK";
+/// Baseline format revision: tensor kinds 0 (f32) and 1 (u32).
 pub const VERSION: u32 = 1;
+/// Revision that introduced the quantized tensor kind 2 (i8, 1 byte per
+/// element). The encoder stays at [`VERSION`] unless a kind-2 tensor is
+/// present, so checkpoints that don't use quantization remain readable
+/// by older binaries; the loader accepts kind 2 only from version-2
+/// files (a kind-2 entry in a v1 file is [`CkptError::WrongKind`]).
+pub const VERSION_QUANT: u32 = 2;
+/// Newest revision this binary reads and writes.
+pub const MAX_VERSION: u32 = VERSION_QUANT;
+
+/// Payload bytes per element for an entry-table kind tag. Unknown kinds
+/// are the loader's problem (typed [`CkptError::WrongKind`]) — this maps
+/// only the kinds the format defines.
+pub fn kind_byte_width(kind: u8) -> usize {
+    match kind {
+        2 => 1,
+        _ => 4,
+    }
+}
 
 /// Sanity bound on the entry count so a corrupt header can't drive a
 /// multi-GiB table allocation before the CRC check rejects it.
@@ -62,7 +81,7 @@ impl fmt::Display for CkptError {
             CkptError::BadMagic => write!(f, "not a PXCK checkpoint (bad magic)"),
             CkptError::FutureVersion { found } => {
                 write!(f, "checkpoint format v{found} is newer than this binary \
-                           (supports v{VERSION})")
+                           (supports up to v{MAX_VERSION})")
             }
             CkptError::Truncated { what, needed, have } => {
                 write!(f, "checkpoint truncated in {what}: need {needed} bytes, \
@@ -194,9 +213,16 @@ pub fn fingerprint_of(tensors: &[(String, TensorData)]) -> u64 {
 /// first.
 pub fn encode(step: u64, meta: &str, tensors: &[(String, TensorData)]) -> Vec<u8> {
     let payload_len: usize = tensors.iter().map(|(_, t)| t.byte_len()).sum();
+    // versioned forward compat: bump to v2 ONLY when a quantized tensor
+    // is present, so non-quantized checkpoints stay readable everywhere
+    let version = if tensors.iter().any(|(_, t)| t.kind() >= 2) {
+        VERSION_QUANT
+    } else {
+        VERSION
+    };
     let mut head = Vec::with_capacity(64 + tensors.len() * 48 + meta.len());
     head.extend_from_slice(MAGIC);
-    head.extend_from_slice(&VERSION.to_le_bytes());
+    head.extend_from_slice(&version.to_le_bytes());
     head.extend_from_slice(&fingerprint_of(tensors).to_le_bytes());
     head.extend_from_slice(&step.to_le_bytes());
     head.extend_from_slice(&(meta.len() as u32).to_le_bytes());

@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use super::faults;
-use super::format::{self, CkptError, MAGIC, MAX_ENTRIES, VERSION};
+use super::format::{self, CkptError, MAGIC, MAX_ENTRIES, MAX_VERSION, VERSION_QUANT};
 use super::StateSource;
 
 struct Entry {
@@ -90,7 +90,7 @@ impl Ckpt {
             return Err(CkptError::BadMagic);
         }
         let version = c.u32("version")?;
-        if version > VERSION {
+        if version > MAX_VERSION {
             return Err(CkptError::FutureVersion { found: version });
         }
         let fingerprint = c.u64("fingerprint")?;
@@ -125,17 +125,23 @@ impl Ckpt {
         }
 
         let payload = bytes[c.pos..].to_vec();
+        // per-version kind ceiling: v1 defined kinds 0 (f32) / 1 (u32),
+        // v2 added kind 2 (i8). A kind the writing version could not have
+        // produced is a typed WrongKind — the forward-compat pin that
+        // keeps an old binary from misreading a newer payload width.
+        let max_kind = if version >= VERSION_QUANT { 2 } else { 1 };
         let mut entries = HashMap::with_capacity(raw.len());
         for (name, kind, offset, len, crc) in raw {
-            if kind > 1 {
+            if kind > max_kind {
                 return Err(CkptError::WrongKind { name });
             }
+            let width = format::kind_byte_width(kind);
             let byte_len = len
-                .checked_mul(4)
+                .checked_mul(width)
                 .filter(|&b| offset.checked_add(b).is_some_and(|end| end <= payload.len()))
                 .ok_or(CkptError::Truncated {
                     what: "tensor payload",
-                    needed: offset.saturating_add(len.saturating_mul(4)),
+                    needed: offset.saturating_add(len.saturating_mul(width)),
                     have: payload.len(),
                 })?;
             if format::crc32(&payload[offset..offset + byte_len]) != crc {
@@ -175,6 +181,16 @@ impl Ckpt {
             return Err(CkptError::WrongKind { name: name.to_string() });
         }
         Ok(e)
+    }
+
+    /// Copy the quantized (kind 2) tensor `name` out of the payload —
+    /// per-block int8 weights written by quantize-at-freeze. Typed error
+    /// if absent or a different kind; the element count is the caller's
+    /// to check (scales travel as a separate f32 tensor of known shape).
+    pub fn load_i8(&self, name: &str) -> Result<Vec<i8>, CkptError> {
+        let e = self.entry(name, 2)?;
+        let bytes = &self.payload[e.offset..e.offset + e.len];
+        Ok(bytes.iter().map(|&b| b as i8).collect())
     }
 }
 
@@ -309,6 +325,62 @@ mod tests {
         let mut junk = sample();
         junk[0] = b'X';
         assert!(matches!(Ckpt::parse(junk), Err(CkptError::BadMagic)));
+    }
+
+    #[test]
+    fn quantized_kind_round_trips_under_version_2() {
+        let bytes = format::encode(
+            1,
+            "q",
+            &[
+                ("q".to_string(), TensorData::I8(vec![-128, -1, 0, 1, 127])),
+                ("scale".to_string(), TensorData::F32(vec![0.5])),
+            ],
+        );
+        // the presence of a kind-2 tensor bumps the file to v2
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+                   format::VERSION_QUANT);
+        let mut ck = Ckpt::parse(bytes).unwrap();
+        assert_eq!(ck.load_i8("q").unwrap(), vec![-128, -1, 0, 1, 127]);
+        assert!(matches!(ck.load_i8("scale"), Err(CkptError::WrongKind { .. })));
+        assert!(matches!(ck.load_i8("nope"), Err(CkptError::MissingTensor { .. })));
+        // mixed-kind file still serves its f32 entries normally
+        let mut s = [0.0f32; 1];
+        ck.load_f32("scale", &mut s).unwrap();
+        assert_eq!(s, [0.5]);
+    }
+
+    #[test]
+    fn v1_files_reject_the_quantized_kind() {
+        // a v1 header claiming a kind-2 entry is a forward-compat
+        // violation: v1 writers never produced it, so the loader must
+        // answer WrongKind — never misread 1-byte elements as f32
+        let mut bytes = format::encode(
+            1, "", &[("q".to_string(), TensorData::I8(vec![1, 2, 3, 4]))]);
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let hcrc_at = bytes.len() - 4 /* payload: 4 i8 */ - 4 /* crc */;
+        let crc = format::crc32(&bytes[..hcrc_at]).to_le_bytes();
+        bytes[hcrc_at..hcrc_at + 4].copy_from_slice(&crc);
+        assert!(matches!(Ckpt::parse(bytes), Err(CkptError::WrongKind { .. })));
+    }
+
+    #[test]
+    fn unknown_kind_byte_is_rejected_typed() {
+        // kind 7 exists in no revision — pinned BEFORE any kind 3 ships,
+        // so a new kind must be threaded through the version gate
+        // deliberately rather than slipping past an open-ended check
+        let mut bytes = sample();
+        // "w"'s kind byte: magic(4)+ver(4)+fp(8)+step(8)+meta_len(4)
+        // +meta("model=test")+n_entries(4)+name_len(2)+name("w")
+        let kind_at = 4 + 4 + 8 + 8 + 4 + "model=test".len() + 4 + 2 + 1;
+        assert_eq!(bytes[kind_at], 0, "kind byte location drifted");
+        bytes[kind_at] = 7;
+        let payload_len = 3 * 4 + 2 * 4;
+        let hcrc_at = bytes.len() - payload_len - 4;
+        let crc = format::crc32(&bytes[..hcrc_at]).to_le_bytes();
+        bytes[hcrc_at..hcrc_at + 4].copy_from_slice(&crc);
+        assert!(matches!(Ckpt::parse(bytes),
+                         Err(CkptError::WrongKind { name }) if name == "w"));
     }
 
     #[test]

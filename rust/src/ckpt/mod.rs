@@ -34,19 +34,25 @@ pub use writer::{write_atomic, SnapReport, Snapshot, Snapshotter};
 use crate::sparse::bsr::BsrMatrix;
 
 /// One owned state tensor inside a [`Snapshot`] — f32 payloads (weights,
-/// biases, momentum) or u32 structure tensors (CSR block indices).
+/// biases, momentum), u32 structure tensors (CSR block indices), or i8
+/// quantized payloads (per-block int8 weights from quantize-at-freeze;
+/// their f32 scales travel as a separate F32 tensor). The presence of any
+/// I8 tensor bumps the file to format version 2 — older binaries reject
+/// such files up front instead of misreading 1-byte payloads as f32.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TensorData {
     F32(Vec<f32>),
     U32(Vec<u32>),
+    I8(Vec<i8>),
 }
 
 impl TensorData {
-    /// Entry-table kind tag (0 = f32, 1 = u32).
+    /// Entry-table kind tag (0 = f32, 1 = u32, 2 = i8).
     pub fn kind(&self) -> u8 {
         match self {
             TensorData::F32(_) => 0,
             TensorData::U32(_) => 1,
+            TensorData::I8(_) => 2,
         }
     }
 
@@ -54,6 +60,7 @@ impl TensorData {
         match self {
             TensorData::F32(v) => v.len(),
             TensorData::U32(v) => v.len(),
+            TensorData::I8(v) => v.len(),
         }
     }
 
@@ -62,7 +69,7 @@ impl TensorData {
     }
 
     pub fn byte_len(&self) -> usize {
-        4 * self.len()
+        format::kind_byte_width(self.kind()) * self.len()
     }
 
     /// Append the little-endian payload bytes to `out`.
@@ -77,6 +84,9 @@ impl TensorData {
                 for x in v {
                     out.extend_from_slice(&x.to_le_bytes());
                 }
+            }
+            TensorData::I8(v) => {
+                out.extend(v.iter().map(|&x| x as u8));
             }
         }
     }

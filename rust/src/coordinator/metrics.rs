@@ -37,6 +37,10 @@ pub struct TrainReport {
     /// (`sparse::exec::kernel_name()`: "scalar" / "avx2" / "neon");
     /// empty when unrecorded
     pub kernel: String,
+    /// resolved precision tier of the substrate during the run
+    /// (`sparse::exec::precision_name()`: "f32" / "bf16" / "int8");
+    /// empty when unrecorded
+    pub precision: String,
     /// per-phase step-time split (forward / backward / optimizer update),
     /// recorded by drivers that run all three on the substrate
     /// (`TrainStep`); `None` for engine-path runs where the phases
@@ -101,6 +105,13 @@ impl TrainReport {
             thr
         } else {
             format!("{thr} kernel={}", self.kernel)
+        };
+        // precision tier: f32 is the default; only non-default tiers are
+        // worth a column in experiment tables
+        let thr = if self.precision.is_empty() || self.precision == "f32" {
+            thr
+        } else {
+            format!("{thr} prec={}", self.precision)
         };
         // calibrated cutover (finite ⇔ parallelism is ever worth it)
         let thr = if self.par_threshold_flops > 0.0 && self.par_threshold_flops.is_finite()
@@ -170,6 +181,18 @@ mod tests {
         // ...and shows up once recorded
         r.kernel = "avx2".into();
         assert!(r.summary_line().contains("kernel=avx2"));
+    }
+
+    #[test]
+    fn summary_line_shows_precision_only_when_reduced() {
+        let mut r = TrainReport::default();
+        r.preset = "p".into();
+        r.loss_curve = vec![(0, 1.0)];
+        assert!(!r.summary_line().contains("prec="), "unrecorded stays out");
+        r.precision = "f32".into();
+        assert!(!r.summary_line().contains("prec="), "default tier stays out");
+        r.precision = "bf16".into();
+        assert!(r.summary_line().contains("prec=bf16"), "{}", r.summary_line());
     }
 
     #[test]

@@ -238,6 +238,7 @@ impl<'e> Trainer<'e> {
             // are comparable across machines
             substrate_threads: exec::threads(),
             kernel: exec::kernel_name().to_string(),
+            precision: exec::precision_name().to_string(),
             par_threshold_flops: exec::calibration().par_threshold_flops,
             dispatch_ns: exec::calibration().dispatch_ns,
             ..Default::default()

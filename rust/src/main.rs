@@ -48,6 +48,13 @@ fn main() -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--pool expects resident|scoped, got {p:?}"))?;
         exec::set_pool_mode(Some(mode));
     }
+    // Precision tier: --precision beats PIXELFLY_PREC beats f32 default.
+    if let Some(p) = args.get("precision") {
+        let prec = exec::Precision::parse(p).ok_or_else(|| {
+            anyhow::anyhow!("--precision expects f32|bf16|int8, got {p:?}")
+        })?;
+        exec::set_precision(prec);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -94,7 +101,8 @@ fn print_help() {
                       --steps N trains before freezing; --weights warm-starts from\n\
                       a .pxck file or snapshot dir instead of training from seed;\n\
                       --io-timeout-ms bounds stalled clients, 0 disables;\n\
-                      protocol: PXF1)\n\
+                      --smoke sends itself one request and exits, the CI\n\
+                      end-to-end gate for `--precision int8`; protocol: PXF1)\n\
          compare      --presets mixer_s_dense,mixer_s_pixelfly --steps 50\n\
          ntk-compare  [--batches 2]           (Fig 4, uses ntk_* artifacts)\n\
          ntk-search   [--nb 16 --budget 96]   (Appendix K, analytic NTK)\n\
@@ -107,7 +115,10 @@ fn print_help() {
                  --kernel auto|scalar|simd (microkernel tier; also\n\
                  PIXELFLY_KERNEL; auto picks AVX2/NEON when available),\n\
                  --pool resident|scoped (worker runtime; also PIXELFLY_POOL;\n\
-                 resident = parked long-lived workers, the default).\n\
+                 resident = parked long-lived workers, the default),\n\
+                 --precision f32|bf16|int8 (storage tier; also PIXELFLY_PREC;\n\
+                 bf16 = reduced-storage training with f32 accumulate,\n\
+                 int8 = per-block quantize-at-freeze for serve/inference).\n\
                  PIXELFLY_PAR_FLOPS pins the calibrated serial-vs-parallel\n\
                  cutover (otherwise measured once at startup).\n\
          Commands that execute artifacts need a build with --features pjrt."
@@ -406,6 +417,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = TcpServer::start_with(&format!("0.0.0.0:{port}"), engine.handle(),
                                        tcp_cfg)?;
     println!("serving on {} (protocol PXF1; Ctrl-C to stop)", server.addr());
+    if args.bool("smoke") {
+        // CI gate: one real request through the full stack (compile →
+        // freeze under the active precision tier → engine → TCP →
+        // response), then exit 0. `serve --precision int8 --smoke` is
+        // the end-to-end quantized-serving check.
+        let d = engine.handle().d();
+        let mut rng = Rng::new(opts.seed ^ 0x51);
+        let prompt = Matrix::randn(8, d, 1.0, &mut rng);
+        let mut stream = std::net::TcpStream::connect(server.addr())?;
+        let out = pixelfly::serving::client_request(&mut stream, &prompt, 4)?
+            .map_err(|e| anyhow::anyhow!("smoke request refused: {e}"))?;
+        anyhow::ensure!(out.rows == 4 && out.cols == d, "smoke response shape");
+        anyhow::ensure!(out.data.iter().all(|v| v.is_finite()),
+                        "smoke response has non-finite values");
+        println!("serve smoke ok: {}x{} response, precision={}",
+                 out.rows, out.cols, exec::precision_name());
+        server.stop();
+        engine.shutdown();
+        return Ok(());
+    }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         let m = engine.metrics();

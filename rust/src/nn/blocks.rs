@@ -114,10 +114,22 @@ impl Module for LowRankResidual {
                                &mut self.m_v, lr, momentum);
         }
         exec::sgd_momentum(&mut self.bias, &self.db, &mut self.mb, lr, momentum);
+        // keep the engaged bf16 shadow of the flat term in sync with its
+        // f32 master (no-op when the tier is off); the low-rank factors
+        // ride the dense GEMM paths and stay f32
+        self.flr.flat.repack_bf16();
     }
 
     fn param_count(&self) -> usize {
         self.weight_param_count() + self.bias.len()
+    }
+
+    fn apply_precision(&mut self, p: exec::Precision) {
+        match p {
+            exec::Precision::Bf16 => self.flr.flat.refresh_bf16(),
+            exec::Precision::Int8 => self.flr.flat.quantize_int8(),
+            exec::Precision::F32 => self.flr.flat.drop_precision_shadows(),
+        }
     }
 
     fn flops(&self, rows: usize) -> PhaseFlops {
@@ -179,6 +191,8 @@ impl Module for LowRankResidual {
         src.load_f32(&state_name(prefix, "m_u"), &mut self.m_u)?;
         src.load_f32(&state_name(prefix, "m_v"), &mut self.m_v)?;
         src.load_f32(&state_name(prefix, "mb"), &mut self.mb)?;
+        // an engaged bf16 shadow must track the freshly loaded master
+        self.flr.flat.repack_bf16();
         Ok(())
     }
 
@@ -375,6 +389,15 @@ impl Module for PixelflyAttention {
         self.wk.update(lr, momentum);
         self.wv.update(lr, momentum);
         self.wo.update(lr, momentum);
+    }
+
+    fn apply_precision(&mut self, p: exec::Precision) {
+        // projections carry the block-sparse weights; the attention
+        // kernel itself (scores + softmax) stays f32 by design
+        self.wq.apply_precision(p);
+        self.wk.apply_precision(p);
+        self.wv.apply_precision(p);
+        self.wo.apply_precision(p);
     }
 
     fn param_count(&self) -> usize {
@@ -581,6 +604,11 @@ impl Module for MlpBlock {
         self.down.update(lr, momentum);
     }
 
+    fn apply_precision(&mut self, p: exec::Precision) {
+        self.up.apply_precision(p);
+        self.down.apply_precision(p);
+    }
+
     fn param_count(&self) -> usize {
         self.up.param_count() + self.down.param_count()
     }
@@ -723,6 +751,11 @@ impl Module for MixerBlock {
     fn update(&mut self, lr: f32, momentum: f32) {
         self.token.update(lr, momentum);
         self.channel.update(lr, momentum);
+    }
+
+    fn apply_precision(&mut self, p: exec::Precision) {
+        self.token.apply_precision(p);
+        self.channel.apply_precision(p);
     }
 
     fn param_count(&self) -> usize {

@@ -175,8 +175,16 @@ pub fn compile(schema: &ModelSchema, alloc: &Allocation, block: usize,
     stats.dense_weight_params += d * d;
     stats.bias_params += d;
 
-    let body = Sequential::new(mods);
+    let mut body = Sequential::new(mods);
     debug_assert_eq!(body.param_count(), stats.total_params());
+    // engage the bf16 training tier at compile when the global precision
+    // axis asks for it: every sparse weight packs a u16 shadow that the
+    // cached-plan executors will prefer from the first step. Int8 is an
+    // inference tier — it engages at freeze (`into_inference` /
+    // `into_decode`), never here, so training math stays f32-mastered.
+    if exec::precision() == exec::Precision::Bf16 {
+        body.apply_precision(exec::Precision::Bf16);
+    }
     Ok(Model {
         name: schema.name.clone(),
         seq,
@@ -544,6 +552,12 @@ impl Model {
     /// `strict()` — if a steady-state pass allocates.
     pub fn into_inference(mut self) -> InferenceSession {
         self.body.shed_training_state();
+        // quantize-at-freeze: under the int8 tier every sparse weight is
+        // converted ONCE to per-block int8 + scale; the frozen session's
+        // forward sweeps run the dequantize-free int8 kernels from then on
+        if exec::precision() == exec::Precision::Int8 {
+            self.body.apply_precision(exec::Precision::Int8);
+        }
         InferenceSession {
             body: self.body,
             ws: Workspace::new(),
@@ -569,6 +583,10 @@ impl Model {
             );
         }
         self.body.shed_training_state();
+        // same quantize-at-freeze protocol as `into_inference`
+        if exec::precision() == exec::Precision::Int8 {
+            self.body.apply_precision(exec::Precision::Int8);
+        }
         Ok(DecodeSession::new(self.body, self.seq, max_slots))
     }
 }

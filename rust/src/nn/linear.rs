@@ -96,10 +96,21 @@ impl Module for SparseLinear {
     fn update(&mut self, lr: f32, momentum: f32) {
         exec::sgd_momentum(&mut self.w.blocks, &self.dw, &mut self.mw, lr, momentum);
         exec::sgd_momentum(&mut self.bias, &self.db, &mut self.mb, lr, momentum);
+        // keep the engaged bf16 shadow in sync with the f32 master
+        // (no-op — not even a branch per element — when the tier is off)
+        self.w.repack_bf16();
     }
 
     fn param_count(&self) -> usize {
         self.w.blocks.len() + self.bias.len()
+    }
+
+    fn apply_precision(&mut self, p: exec::Precision) {
+        match p {
+            exec::Precision::Bf16 => self.w.refresh_bf16(),
+            exec::Precision::Int8 => self.w.quantize_int8(),
+            exec::Precision::F32 => self.w.drop_precision_shadows(),
+        }
     }
 
     fn flops(&self, rows: usize) -> PhaseFlops {
@@ -137,6 +148,8 @@ impl Module for SparseLinear {
         src.load_f32(&state_name(prefix, "b"), &mut self.bias)?;
         src.load_f32(&state_name(prefix, "mw"), &mut self.mw)?;
         src.load_f32(&state_name(prefix, "mb"), &mut self.mb)?;
+        // an engaged bf16 shadow must track the freshly loaded master
+        self.w.repack_bf16();
         Ok(())
     }
 
@@ -388,6 +401,13 @@ impl Module for Linear {
         match self {
             Linear::Sparse(l) => l.shed_training_state(),
             Linear::Dense(l) => l.shed_training_state(),
+        }
+    }
+
+    fn apply_precision(&mut self, p: exec::Precision) {
+        match self {
+            Linear::Sparse(l) => l.apply_precision(p),
+            Linear::Dense(l) => l.apply_precision(p),
         }
     }
 

@@ -165,6 +165,17 @@ pub trait Module: Send {
     /// held, nothing to shed.
     fn shed_training_state(&mut self) {}
 
+    /// Engage a reduced-precision tier for this module's parameters (see
+    /// [`exec::quant`]): `Bf16` packs bf16 weight shadows next to the f32
+    /// masters (training tier — the drivers call this at start and the
+    /// layers repack after each `update`), `Int8` quantizes block-sparse
+    /// weights at freeze time, `F32` drops every shadow. Composites
+    /// recurse; modules with no block-sparse parameters ignore it
+    /// (default).
+    fn apply_precision(&mut self, p: exec::Precision) {
+        let _ = p;
+    }
+
     /// Bytes still held by gradient/momentum/backward-stash buffers
     /// ([`Module::shed_training_state`] drives this to 0) — the
     /// serving-memory meter the e2e bench asserts on.
@@ -344,6 +355,7 @@ pub fn drive_substrate_training(
         param_count,
         substrate_threads: exec::threads(),
         kernel: exec::kernel_name().to_string(),
+        precision: exec::precision_name().to_string(),
         par_threshold_flops: exec::calibration().par_threshold_flops,
         dispatch_ns: exec::calibration().dispatch_ns,
         ..Default::default()
@@ -518,6 +530,12 @@ impl Module for Sequential {
         }
         for m in &mut self.mods {
             m.shed_training_state();
+        }
+    }
+
+    fn apply_precision(&mut self, p: exec::Precision) {
+        for m in &mut self.mods {
+            m.apply_precision(p);
         }
     }
 

@@ -10,6 +10,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::patterns::BlockMask;
 use crate::sparse::dense::{self, Matrix};
+use crate::sparse::exec::quant::{self, QuantBlocks};
 use crate::sparse::exec::{self, plan::structure_fingerprint, GemmPlan};
 use crate::util::Rng;
 
@@ -25,6 +26,14 @@ pub struct BsrMatrix {
     pub cols: Vec<usize>,
     /// stored blocks, each b*b row-major, concatenated
     pub blocks: Vec<f32>,
+    /// bf16 shadow of `blocks`, present only while the bf16 training tier
+    /// is engaged for THIS matrix (see [`Self::refresh_bf16`]); `blocks`
+    /// stays the f32 master the optimizer sweeps
+    pub blocks_bf16: Option<Vec<u16>>,
+    /// int8 quantized shadow + per-block scales, created once by
+    /// quantize-at-freeze ([`Self::quantize_int8`]); when present the
+    /// forward executor reads it instead of `blocks`
+    pub qblocks: Option<QuantBlocks>,
     /// lazily built engine schedule reused across `matmul_into` calls,
     /// refreshed whenever the effective thread count changes OR the
     /// structure fingerprint no longer matches — so mutating
@@ -43,6 +52,8 @@ impl Clone for BsrMatrix {
             row_ptr: self.row_ptr.clone(),
             cols: self.cols.clone(),
             blocks: self.blocks.clone(),
+            blocks_bf16: self.blocks_bf16.clone(),
+            qblocks: self.qblocks.clone(),
             // structure is identical, so the schedule stays valid
             plan_cache: Mutex::new(self.plan_cache.lock().unwrap().clone()),
         }
@@ -81,7 +92,17 @@ impl BsrMatrix {
             row_ptr.push(cols.len());
         }
         let blocks = rng.normal_vec(cols.len() * block * block, scale);
-        BsrMatrix { nbr, nbc, block, row_ptr, cols, blocks, plan_cache: Mutex::new(None) }
+        BsrMatrix {
+            nbr,
+            nbc,
+            block,
+            row_ptr,
+            cols,
+            blocks,
+            blocks_bf16: None,
+            qblocks: None,
+            plan_cache: Mutex::new(None),
+        }
     }
 
     /// Build from a dense matrix, keeping only blocks in the mask.
@@ -187,6 +208,44 @@ impl BsrMatrix {
     /// butterfly layer — fill-in cannot exist by construction).
     pub fn matmul_dw_into(&self, x: &Matrix, dy: &Matrix, dw: &mut [f32]) {
         self.cached_plan().execute_dw(self, x, dy, dw);
+    }
+
+    /// Engage (or refresh) the bf16 weight shadow IF the global precision
+    /// tier is bf16; otherwise drop it. The tier is opt-in per matrix:
+    /// a `BsrMatrix` that never sees this call runs bit-exact f32 even
+    /// under `PIXELFLY_PREC=bf16` — layers and the training driver call
+    /// it, raw kernel tests do not.
+    pub fn refresh_bf16(&mut self) {
+        if quant::precision() == quant::Precision::Bf16 {
+            let shadow = self.blocks_bf16.get_or_insert_with(Vec::new);
+            quant::pack_bf16_into(&self.blocks, shadow);
+        } else {
+            self.blocks_bf16 = None;
+        }
+    }
+
+    /// Repack the bf16 shadow from the f32 master ONLY when the shadow is
+    /// already engaged — the cheap per-step call sites (post-optimizer
+    /// sweeps) use this so matrices outside the tier pay nothing.
+    pub fn repack_bf16(&mut self) {
+        if let Some(shadow) = self.blocks_bf16.as_mut() {
+            quant::pack_bf16_into(&self.blocks, shadow);
+        }
+    }
+
+    /// Quantize-at-freeze: convert the stored blocks once to int8 + one
+    /// symmetric scale per block. The f32 master is retained (dX/dW and
+    /// any non-quantized path still read it); the forward executor
+    /// prefers the quantized payload whenever it is present.
+    pub fn quantize_int8(&mut self) {
+        self.qblocks = Some(quant::quantize_blocks(&self.blocks, self.block));
+    }
+
+    /// Drop every reduced-precision shadow, returning this matrix to the
+    /// pure-f32 path.
+    pub fn drop_precision_shadows(&mut self) {
+        self.blocks_bf16 = None;
+        self.qblocks = None;
     }
 
     /// Build a reusable execution plan for this matrix's structure.
@@ -331,6 +390,8 @@ impl BsrMatrix {
             row_ptr,
             cols,
             blocks,
+            blocks_bf16: None,
+            qblocks: None,
             plan_cache: Mutex::new(None),
         }
     }

@@ -24,6 +24,11 @@
 //! [`simd`]. [`workspace::Workspace`] is the scratch arena that keeps the
 //! steady-state hot paths allocation-free.
 //!
+//! A third axis, precision, resolves the same way: explicit
+//! [`set_precision`] (the CLI's `--precision`), then `PIXELFLY_PREC`,
+//! then f32 — see [`quant`] for the bf16 training tier and the per-block
+//! int8 inference tier it selects between.
+//!
 //! The training tier lives here too: [`Activation`] (the epilogue the
 //! GEMM plans can fuse into their output sweep), [`epilogue_backward`]
 //! (the matching dz = dy ⊙ act' pass with the bias gradient folded in),
@@ -32,11 +37,13 @@
 pub mod micro;
 pub mod plan;
 pub mod pool;
+pub mod quant;
 pub mod simd;
 pub mod workspace;
 
 pub use plan::{Epilogue, GemmPlan};
 pub use pool::{pool_mode, set_pool_mode, step_scope, worker_alloc_events, PoolMode};
+pub use quant::{precision, precision_name, set_precision, Precision};
 pub use simd::{kernel_choice, kernel_name, set_kernel, simd_available, KernelChoice};
 pub use workspace::Workspace;
 

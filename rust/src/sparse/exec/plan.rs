@@ -38,7 +38,7 @@ use std::ops::Range;
 use crate::sparse::bsr::BsrMatrix;
 use crate::sparse::dense::Matrix;
 
-use super::{micro, par_threshold_flops, pool, Activation};
+use super::{micro, par_threshold_flops, pool, quant, Activation};
 
 /// Batch rows per cache tile: at b=32 a tile holds an 8 KB y stripe and an
 /// 8 KB x panel next to the 4 KB weight block — comfortably L1-resident.
@@ -288,6 +288,30 @@ impl GemmPlan {
 
             let ybase = pool::SyncPtr(y.data.as_mut_ptr());
 
+            // Reduced-precision selection: a quantized payload (created
+            // only by quantize-at-freeze) always wins; otherwise an
+            // engaged bf16 weight shadow runs when the global tier is
+            // bf16. The activation panel for the bf16 path is packed once
+            // here on the caller thread into reused u16 scratch — the
+            // workers read the shared view.
+            let wq8 = w.qblocks.as_ref();
+            let wq16 = if wq8.is_none() && quant::precision() == quant::Precision::Bf16
+            {
+                w.blocks_bf16.as_deref()
+            } else {
+                None
+            };
+            let xq_buf = wq16.map(|_| {
+                let mut buf = quant::take_u16(x.data.len());
+                quant::pack_bf16_into(&x.data, &mut buf);
+                buf
+            });
+            let xq = xq_buf.as_ref().map(|buf| quant::Bf16Panel {
+                data: buf,
+                rows: x.rows,
+                cols: x.cols,
+            });
+
             pool::run_tasks(n_tasks, threads, |t| {
                 let chunk = &self.chunks[t % n_chunks];
                 let p = t / n_chunks;
@@ -301,7 +325,6 @@ impl GemmPlan {
                         let r1 = (r0 + TILE_ROWS).min(rows.end);
                         for &(i, s) in &ct.srcs {
                             let s = s as usize;
-                            let blk = &w.blocks[s * b * b..(s + 1) * b * b];
                             // Safety: tasks partition the batch-row ×
                             // block-column grid (each column belongs to
                             // exactly one chunk, each row to exactly one
@@ -309,17 +332,46 @@ impl GemmPlan {
                             // rows r0..r1 at columns jc..jc+b; bounds
                             // follow from the shape asserts. `pre` shares
                             // y's shape, so the same ownership covers it.
+                            // The reduced-precision twins share the exact
+                            // ownership contract of `micro::block_panel`.
                             unsafe {
-                                micro::block_panel(
-                                    b,
-                                    x,
-                                    i as usize * b,
-                                    r0..r1,
-                                    blk,
-                                    y.0,
-                                    ldy,
-                                    jc,
-                                );
+                                if let Some(q) = wq8 {
+                                    quant::block_panel_i8(
+                                        b,
+                                        x,
+                                        i as usize * b,
+                                        r0..r1,
+                                        &q.data[s * b * b..(s + 1) * b * b],
+                                        q.scales[s],
+                                        y.0,
+                                        ldy,
+                                        jc,
+                                    );
+                                } else if let (Some(w16), Some(xq)) = (wq16, &xq) {
+                                    quant::block_panel_bf16(
+                                        b,
+                                        xq,
+                                        i as usize * b,
+                                        r0..r1,
+                                        &w16[s * b * b..(s + 1) * b * b],
+                                        y.0,
+                                        ldy,
+                                        jc,
+                                    );
+                                } else {
+                                    let blk =
+                                        &w.blocks[s * b * b..(s + 1) * b * b];
+                                    micro::block_panel(
+                                        b,
+                                        x,
+                                        i as usize * b,
+                                        r0..r1,
+                                        blk,
+                                        y.0,
+                                        ldy,
+                                        jc,
+                                    );
+                                }
                             }
                         }
                         if let Some(e) = epi {
@@ -334,6 +386,10 @@ impl GemmPlan {
                     }
                 }
             });
+
+            if let Some(buf) = xq_buf {
+                quant::give_u16(buf);
+            }
         }
 
         // Columns with no stored blocks hold zeros; the fused epilogue
@@ -380,6 +436,25 @@ impl GemmPlan {
         let dxbase = pool::SyncPtr(dx.data.as_mut_ptr());
         let lddx = dx.cols;
 
+        // bf16 tier (training only — the quantized payload never feeds
+        // backward): run the reduced-storage twin when this matrix's bf16
+        // shadow is engaged. dY packs once on the caller thread.
+        let wq16 = if quant::precision() == quant::Precision::Bf16 {
+            w.blocks_bf16.as_deref()
+        } else {
+            None
+        };
+        let dyq_buf = wq16.map(|_| {
+            let mut buf = quant::take_u16(dy.data.len());
+            quant::pack_bf16_into(&dy.data, &mut buf);
+            buf
+        });
+        let dyq = dyq_buf.as_ref().map(|buf| quant::Bf16Panel {
+            data: buf,
+            rows: dy.rows,
+            cols: dy.cols,
+        });
+
         pool::run_tasks(n_tasks, threads, |t| {
             let chunk = &self.row_chunks[t % n_chunks];
             let p = t / n_chunks;
@@ -392,29 +467,46 @@ impl GemmPlan {
                     let r1 = (r0 + TILE_ROWS).min(rows.end);
                     for &(j, s) in &rt.srcs {
                         let s = s as usize;
-                        let blk = &w.blocks[s * b * b..(s + 1) * b * b];
                         // Safety: row chunks partition W's block rows and
                         // panels partition the batch, so this task
                         // exclusively owns dx rows r0..r1 at columns
                         // ic_out..ic_out+b; bounds follow from the shape
-                        // asserts.
+                        // asserts. The bf16 twin shares the contract.
                         unsafe {
-                            micro::block_panel_t(
-                                b,
-                                dy,
-                                j as usize * b,
-                                r0..r1,
-                                blk,
-                                dx.0,
-                                lddx,
-                                ic_out,
-                            );
+                            if let (Some(w16), Some(dyq)) = (wq16, &dyq) {
+                                quant::block_panel_t_bf16(
+                                    b,
+                                    dyq,
+                                    j as usize * b,
+                                    r0..r1,
+                                    &w16[s * b * b..(s + 1) * b * b],
+                                    dx.0,
+                                    lddx,
+                                    ic_out,
+                                );
+                            } else {
+                                let blk = &w.blocks[s * b * b..(s + 1) * b * b];
+                                micro::block_panel_t(
+                                    b,
+                                    dy,
+                                    j as usize * b,
+                                    r0..r1,
+                                    blk,
+                                    dx.0,
+                                    lddx,
+                                    ic_out,
+                                );
+                            }
                         }
                     }
                     r0 = r1;
                 }
             }
         });
+
+        if let Some(buf) = dyq_buf {
+            quant::give_u16(buf);
+        }
     }
 
     /// Execute `dw = xᵀ · dy` scatter-accumulated into exactly the stored
@@ -446,6 +538,27 @@ impl GemmPlan {
 
         let dwbase = pool::SyncPtr(dw.as_mut_ptr());
 
+        // bf16 tier: when this matrix's shadow is engaged, both operand
+        // panels run reduced-storage (the gradient block itself stays
+        // f32). Packed once on the caller thread into reused scratch.
+        let bufs = if quant::precision() == quant::Precision::Bf16
+            && w.blocks_bf16.is_some()
+        {
+            let mut xb = quant::take_u16(x.data.len());
+            quant::pack_bf16_into(&x.data, &mut xb);
+            let mut db = quant::take_u16(dy.data.len());
+            quant::pack_bf16_into(&dy.data, &mut db);
+            Some((xb, db))
+        } else {
+            None
+        };
+        let panels = bufs.as_ref().map(|(xb, db)| {
+            (
+                quant::Bf16Panel { data: xb, rows: x.rows, cols: x.cols },
+                quant::Bf16Panel { data: db, rows: dy.rows, cols: dy.cols },
+            )
+        });
+
         pool::run_tasks(n_chunks, threads, |t| {
             let dwb = &dwbase;
             for s in self.slot_chunks[t].clone() {
@@ -460,11 +573,29 @@ impl GemmPlan {
                 let mut r0 = 0usize;
                 while r0 < m {
                     let r1 = (r0 + TILE_ROWS).min(m);
-                    micro::scatter_block(b, x, i * b, dy, j * b, r0..r1, blk);
+                    match &panels {
+                        Some((xq, dq)) => quant::scatter_block_bf16(
+                            b,
+                            xq,
+                            i * b,
+                            dq,
+                            j * b,
+                            r0..r1,
+                            blk,
+                        ),
+                        None => {
+                            micro::scatter_block(b, x, i * b, dy, j * b, r0..r1, blk)
+                        }
+                    }
                     r0 = r1;
                 }
             }
         });
+
+        if let Some((xb, db)) = bufs {
+            quant::give_u16(xb);
+            quant::give_u16(db);
+        }
     }
 }
 

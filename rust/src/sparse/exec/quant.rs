@@ -1,0 +1,568 @@
+//! Reduced-precision subsystem: the storage tiers behind the precision
+//! dispatch axis (`--precision {f32,bf16,int8}` / `PIXELFLY_PREC`).
+//!
+//! Two tiers live under the f32 engine:
+//!
+//! - **bf16 training tier**: weight blocks and activation panels are
+//!   stored as bf16 (the top 16 bits of an f32, rounded to nearest-even)
+//!   and widened lane-wise in registers inside the panel kernels; every
+//!   accumulator stays f32. The BSR master weights remain f32 for the
+//!   optimizer sweep (`exec::sgd_momentum` semantics are unchanged) — a
+//!   packed u16 shadow rides alongside the payload and is repacked after
+//!   each update ([`crate::sparse::BsrMatrix::repack_bf16`]).
+//! - **int8 inference tier**: at freeze time (`into_inference` /
+//!   `into_decode`) each stored `b×b` block is quantized symmetrically to
+//!   int8 with one f32 scale per block (`scale = max|w| / 127`). The dot
+//!   kernels stream the int8 payload directly — lanes are widened in
+//!   registers, accumulated in f32, and multiplied by the block scale
+//!   once per block; no dequantized copy of `W` is ever materialised.
+//!
+//! Tier resolution mirrors the kernel/pool axes: explicit
+//! [`set_precision`] (the CLI's `--precision`), else `PIXELFLY_PREC`,
+//! else f32. The tier is *engaged* per matrix by packing its shadow
+//! (layer constructors and the training driver call
+//! `refresh_bf16`/`quantize_int8`); a matrix without a shadow always runs
+//! the bit-exact f32 path regardless of the global selection, which keeps
+//! every existing oracle test byte-identical when the tier is off.
+
+use std::cell::RefCell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::simd;
+use crate::sparse::dense::Matrix;
+
+/// User-facing precision selection (CLI `--precision` / `PIXELFLY_PREC`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 storage everywhere (the default; bit-exact legacy path).
+    F32,
+    /// bf16-stored weights + activation panels, f32 accumulate (training).
+    Bf16,
+    /// Per-block symmetric int8 weights, f32 accumulate (inference freeze).
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            "int8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// 0 = no override; 1..=3 encode `Precision`.
+static PREC_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// `PIXELFLY_PREC` resolved once (env reads off the hot path).
+static ENV_PREC: OnceLock<Precision> = OnceLock::new();
+
+/// Override the precision tier for this process (the CLI's
+/// `--precision`). Callers toggling temporarily (benches, tests) should
+/// snapshot [`precision`] first and restore it.
+pub fn set_precision(p: Precision) {
+    let v = match p {
+        Precision::F32 => 1,
+        Precision::Bf16 => 2,
+        Precision::Int8 => 3,
+    };
+    PREC_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Effective selection: `set_precision` override, else `PIXELFLY_PREC`,
+/// else f32.
+pub fn precision() -> Precision {
+    match PREC_OVERRIDE.load(Ordering::Relaxed) {
+        1 => Precision::F32,
+        2 => Precision::Bf16,
+        3 => Precision::Int8,
+        _ => *ENV_PREC.get_or_init(|| {
+            std::env::var("PIXELFLY_PREC")
+                .ok()
+                .and_then(|s| Precision::parse(&s))
+                .unwrap_or(Precision::F32)
+        }),
+    }
+}
+
+/// Active precision name for reports: `"f32"`, `"bf16"`, or `"int8"`.
+pub fn precision_name() -> &'static str {
+    precision().name()
+}
+
+// ---------------------------------------------------------------------
+// bf16 pack/unpack
+// ---------------------------------------------------------------------
+
+/// f32 → bf16 (top 16 bits) with round-to-nearest-even; NaN stays NaN.
+#[inline]
+pub fn bf16_from_f32(v: f32) -> u16 {
+    let x = v.to_bits();
+    if x & 0x7fff_ffff > 0x7f80_0000 {
+        // NaN: truncate but force a mantissa bit so it stays a NaN
+        return ((x >> 16) | 0x0040) as u16;
+    }
+    let round = 0x7fff + ((x >> 16) & 1);
+    (x.wrapping_add(round) >> 16) as u16
+}
+
+/// bf16 → f32: the stored bits are exactly the f32 top half.
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Pack `src` into `dst` as bf16, reusing `dst`'s capacity.
+pub fn pack_bf16_into(src: &[f32], dst: &mut Vec<u16>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| bf16_from_f32(v)));
+}
+
+/// Round-trip `v` through bf16 storage (tests and error-bound benches).
+#[inline]
+pub fn bf16_round(v: f32) -> f32 {
+    bf16_to_f32(bf16_from_f32(v))
+}
+
+// ---------------------------------------------------------------------
+// Thread-local u16 scratch (bf16 activation panels)
+// ---------------------------------------------------------------------
+
+/// Cap on retained scratch buffers per thread (mirrors the f32
+/// workspace's bounded free list).
+const MAX_FREE_U16: usize = 8;
+
+thread_local! {
+    static U16_POOL: RefCell<Vec<Vec<u16>>> = RefCell::new(Vec::new());
+}
+
+/// Check out a u16 buffer of length `len` from the thread-local pool.
+/// Steady state is allocation-free: a returned buffer whose capacity
+/// already covers `len` is resized in place.
+pub fn take_u16(len: usize) -> Vec<u16> {
+    U16_POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        // best fit: smallest capacity that covers the request
+        let mut best: Option<usize> = None;
+        for (i, b) in pool.iter().enumerate() {
+            if b.capacity() >= len
+                && best.map_or(true, |j| b.capacity() < pool[j].capacity())
+            {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut buf = pool.swap_remove(i);
+                buf.resize(len, 0);
+                buf
+            }
+            None => vec![0u16; len],
+        }
+    })
+}
+
+/// Return a buffer checked out with [`take_u16`].
+pub fn give_u16(buf: Vec<u16>) {
+    U16_POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        if pool.len() < MAX_FREE_U16 {
+            pool.push(buf);
+        }
+    });
+}
+
+/// Row-major bf16 matrix view over a packed u16 buffer (the activation
+/// panel operand of the bf16 kernels).
+#[derive(Clone, Copy)]
+pub struct Bf16Panel<'a> {
+    pub data: &'a [u16],
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl<'a> Bf16Panel<'a> {
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [u16] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+// ---------------------------------------------------------------------
+// bf16 panel kernel twins (scalar tier + SIMD dispatch)
+// ---------------------------------------------------------------------
+
+/// bf16 twin of [`super::micro::block_panel`]: `y[r, jc..jc+b] +=
+/// bf16(x)[r, ic..ic+b] · bf16(blk)` with f32 accumulation.
+///
+/// # Safety
+/// Same ownership/bounds contract as `micro::block_panel`; additionally
+/// `blk.len() == b * b` in u16 elements.
+pub unsafe fn block_panel_bf16(
+    b: usize,
+    x: &Bf16Panel,
+    ic: usize,
+    rows: Range<usize>,
+    blk: &[u16],
+    y: *mut f32,
+    ldy: usize,
+    jc: usize,
+) {
+    debug_assert_eq!(blk.len(), b * b);
+    debug_assert!(jc + b <= ldy && ic + b <= x.cols && rows.end <= x.rows);
+    if simd::try_block_panel_bf16(b, x, ic, rows.clone(), blk, y, ldy, jc) {
+        return;
+    }
+    for r in rows {
+        let xr = &x.row(r)[ic..ic + b];
+        let yr = std::slice::from_raw_parts_mut(y.add(r * ldy + jc), b);
+        for (k, wrow) in blk.chunks_exact(b).enumerate() {
+            let a = bf16_to_f32(xr[k]);
+            for (yc, &wc) in yr.iter_mut().zip(wrow) {
+                *yc += a * bf16_to_f32(wc);
+            }
+        }
+    }
+}
+
+/// bf16 twin of [`super::micro::block_panel_t`] (`dX = dY·Wᵀ`): the
+/// stored bf16 block rows are the dot operands, f32 accumulation.
+///
+/// # Safety
+/// Same contract as [`block_panel_bf16`].
+pub unsafe fn block_panel_t_bf16(
+    b: usize,
+    x: &Bf16Panel,
+    ic: usize,
+    rows: Range<usize>,
+    blk: &[u16],
+    y: *mut f32,
+    ldy: usize,
+    jc: usize,
+) {
+    debug_assert_eq!(blk.len(), b * b);
+    debug_assert!(jc + b <= ldy && ic + b <= x.cols && rows.end <= x.rows);
+    if simd::try_block_panel_t_bf16(b, x, ic, rows.clone(), blk, y, ldy, jc) {
+        return;
+    }
+    for r in rows {
+        let xr = &x.row(r)[ic..ic + b];
+        let yr = std::slice::from_raw_parts_mut(y.add(r * ldy + jc), b);
+        for (c, wrow) in blk.chunks_exact(b).enumerate() {
+            let mut acc = 0.0f32;
+            for (&xv, &wv) in xr.iter().zip(wrow) {
+                acc += bf16_to_f32(xv) * bf16_to_f32(wv);
+            }
+            yr[c] += acc;
+        }
+    }
+}
+
+/// bf16 twin of [`super::micro::scatter_block`] (`dW = Xᵀ·dY`): both
+/// operand panels are bf16, the gradient block accumulates in f32.
+pub fn scatter_block_bf16(
+    b: usize,
+    x: &Bf16Panel,
+    ic: usize,
+    dy: &Bf16Panel,
+    jc: usize,
+    rows: Range<usize>,
+    blk: &mut [f32],
+) {
+    assert_eq!(blk.len(), b * b);
+    assert!(ic + b <= x.cols && jc + b <= dy.cols);
+    assert!(rows.end <= x.rows && rows.end <= dy.rows);
+    // Safety: the asserts above establish the bounds contract.
+    if unsafe { simd::try_scatter_block_bf16(b, x, ic, dy, jc, rows.clone(), blk) } {
+        return;
+    }
+    for r in rows {
+        let xr = &x.row(r)[ic..ic + b];
+        let dr = &dy.row(r)[jc..jc + b];
+        for (k, wrow) in blk.chunks_exact_mut(b).enumerate() {
+            let a = bf16_to_f32(xr[k]);
+            for (wc, &dv) in wrow.iter_mut().zip(dr) {
+                *wc += a * bf16_to_f32(dv);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// int8 per-block symmetric quantization + dot kernel
+// ---------------------------------------------------------------------
+
+/// Per-block int8 quantized twin of a BSR payload: `data` mirrors the
+/// f32 `blocks` slot for slot (each `b*b` run is one block), `scales`
+/// holds one f32 per stored block (`w ≈ q · scale`).
+#[derive(Clone, Debug)]
+pub struct QuantBlocks {
+    pub block: usize,
+    pub data: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+/// Symmetric per-block quantization: `scale = max|w| / 127` per `b×b`
+/// block, `q = round(w / scale)` clamped to `[-127, 127]`. An all-zero
+/// block stores scale 0 and zeros (exact).
+pub fn quantize_blocks(blocks: &[f32], b: usize) -> QuantBlocks {
+    assert_eq!(blocks.len() % (b * b), 0);
+    let n_blocks = blocks.len() / (b * b);
+    let mut data = vec![0i8; blocks.len()];
+    let mut scales = vec![0.0f32; n_blocks];
+    for s in 0..n_blocks {
+        let blk = &blocks[s * b * b..(s + 1) * b * b];
+        let maxabs = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if maxabs == 0.0 {
+            continue;
+        }
+        let scale = maxabs / 127.0;
+        let inv = 1.0 / scale;
+        scales[s] = scale;
+        let q = &mut data[s * b * b..(s + 1) * b * b];
+        for (qi, &v) in q.iter_mut().zip(blk) {
+            *qi = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    QuantBlocks { block: b, data, scales }
+}
+
+/// Dequantize one stored block into `out` (tests / round-trip checks).
+pub fn dequantize_block(q: &QuantBlocks, s: usize, out: &mut [f32]) {
+    let bb = q.block * q.block;
+    assert_eq!(out.len(), bb);
+    let scale = q.scales[s];
+    for (o, &qi) in out.iter_mut().zip(&q.data[s * bb..(s + 1) * bb]) {
+        *o = qi as f32 * scale;
+    }
+}
+
+/// int8 forward panel kernel: `y[r, jc..jc+b] += scale · (x[r, ic..ic+b]
+/// · q)` — int8 lanes widened in registers, f32 accumulate, exactly one
+/// scale multiply per block per row strip.
+///
+/// # Safety
+/// Same ownership/bounds contract as `micro::block_panel`; `q.len() ==
+/// b * b`.
+pub unsafe fn block_panel_i8(
+    b: usize,
+    x: &Matrix,
+    ic: usize,
+    rows: Range<usize>,
+    q: &[i8],
+    scale: f32,
+    y: *mut f32,
+    ldy: usize,
+    jc: usize,
+) {
+    debug_assert_eq!(q.len(), b * b);
+    debug_assert!(jc + b <= ldy && ic + b <= x.cols && rows.end <= x.rows);
+    if scale == 0.0 {
+        return; // all-zero block: nothing to accumulate
+    }
+    if simd::try_block_panel_i8(b, x, ic, rows.clone(), q, scale, y, ldy, jc) {
+        return;
+    }
+    for r in rows {
+        let xr = &x.row(r)[ic..ic + b];
+        let yr = std::slice::from_raw_parts_mut(y.add(r * ldy + jc), b);
+        for c in 0..b {
+            let mut acc = 0.0f32;
+            for (k, &xv) in xr.iter().enumerate() {
+                acc += xv * q[k * b + c] as f32;
+            }
+            yr[c] += scale * acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn precision_parses() {
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse(" BF16 "), Some(Precision::Bf16));
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("fp16"), None);
+        assert_eq!(Precision::Bf16.name(), "bf16");
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_is_bounded() {
+        let mut rng = Rng::new(91);
+        for &v in rng.normal_vec(1000, 2.0).iter() {
+            let r = bf16_round(v);
+            // 8 explicit mantissa bits: relative error ≤ 2^-8 = 1/256
+            assert!((r - v).abs() <= v.abs() / 256.0 + 1e-30, "{v} -> {r}");
+        }
+        // exact values survive exactly
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0] {
+            assert_eq!(bf16_round(v), v);
+        }
+        assert!(bf16_to_f32(bf16_from_f32(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly halfway between bf16(1.0) and the next
+        // representable value; RNE picks the even mantissa (1.0)
+        let half_up = f32::from_bits(0x3f80_0100);
+        assert_eq!(bf16_round(half_up), 1.0);
+        // just above the midpoint rounds up
+        let above = f32::from_bits(0x3f80_0101);
+        assert_eq!(bf16_from_f32(above), 0x3f81);
+    }
+
+    #[test]
+    fn int8_roundtrip_is_within_half_a_step() {
+        let mut rng = Rng::new(92);
+        let b = 16usize;
+        let blocks = rng.normal_vec(3 * b * b, 1.5);
+        let q = quantize_blocks(&blocks, b);
+        let mut out = vec![0.0f32; b * b];
+        for s in 0..3 {
+            dequantize_block(&q, s, &mut out);
+            let blk = &blocks[s * b * b..(s + 1) * b * b];
+            let maxabs = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let bound = maxabs / 254.0 + 1e-6; // half a quantization step
+            for (got, want) in out.iter().zip(blk) {
+                assert!((got - want).abs() <= bound, "{got} vs {want} (±{bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_zero_block_is_exact() {
+        let q = quantize_blocks(&vec![0.0f32; 64], 8);
+        assert_eq!(q.scales[0], 0.0);
+        assert!(q.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn bf16_panel_kernel_matches_f32_within_storage_error() {
+        let mut rng = Rng::new(93);
+        for b in [8usize, 16, 32] {
+            let x = Matrix::randn(7, 3 * b, 1.0, &mut rng);
+            let blkf = rng.normal_vec(b * b, 0.5);
+            // f32 reference on bf16-rounded operands = exact expectation
+            let xr: Vec<f32> = x.data.iter().map(|&v| bf16_round(v)).collect();
+            let wr: Vec<f32> = blkf.iter().map(|&v| bf16_round(v)).collect();
+            let mut want = Matrix::zeros(7, 2 * b);
+            for r in 0..7 {
+                for k in 0..b {
+                    let a = xr[r * x.cols + b + k];
+                    for c in 0..b {
+                        let v = want.get(r, b + c) + a * wr[k * b + c];
+                        want.set(r, b + c, v);
+                    }
+                }
+            }
+            let mut xq = Vec::new();
+            pack_bf16_into(&x.data, &mut xq);
+            let xp = Bf16Panel { data: &xq, rows: x.rows, cols: x.cols };
+            let mut wq = Vec::new();
+            pack_bf16_into(&blkf, &mut wq);
+            let mut y = Matrix::zeros(7, 2 * b);
+            let ldy = y.cols;
+            unsafe {
+                block_panel_bf16(b, &xp, b, 0..7, &wq, y.data.as_mut_ptr(), ldy, b);
+            }
+            // f32 accumulation over bf16 operands: only tiny fp reassociation
+            assert!(y.max_abs_diff(&want) < 1e-3, "b={b}: {}", y.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn bf16_transpose_and_scatter_match_their_f32_twins_loosely() {
+        let mut rng = Rng::new(94);
+        let b = 16usize;
+        let x = Matrix::randn(7, 3 * b, 1.0, &mut rng);
+        let dy = Matrix::randn(7, 2 * b, 1.0, &mut rng);
+        let blkf = rng.normal_vec(b * b, 0.5);
+        let mut xq = Vec::new();
+        pack_bf16_into(&x.data, &mut xq);
+        let xp = Bf16Panel { data: &xq, rows: x.rows, cols: x.cols };
+        let mut dq = Vec::new();
+        pack_bf16_into(&dy.data, &mut dq);
+        let dp = Bf16Panel { data: &dq, rows: dy.rows, cols: dy.cols };
+        let mut wq = Vec::new();
+        pack_bf16_into(&blkf, &mut wq);
+        // transpose panel vs f32 twin: storage error only (≤ ~2^-8 rel)
+        let mut got = Matrix::zeros(7, 2 * b);
+        let mut want = Matrix::zeros(7, 2 * b);
+        let ld = got.cols;
+        unsafe {
+            block_panel_t_bf16(b, &xp, b, 0..7, &wq, got.data.as_mut_ptr(), ld, b);
+            super::super::micro::block_panel_t(
+                b, &x, b, 0..7, &blkf, want.data.as_mut_ptr(), ld, b,
+            );
+        }
+        assert!(got.max_abs_diff(&want) < 0.3, "{}", got.max_abs_diff(&want));
+        assert!(got.max_abs_diff(&want) > 0.0); // the tier actually engaged
+        // scatter vs f32 twin
+        let mut gblk = vec![0.0f32; b * b];
+        let mut wblk = vec![0.0f32; b * b];
+        scatter_block_bf16(b, &xp, b, &dp, b, 0..7, &mut gblk);
+        super::super::micro::scatter_block(b, &x, b, &dy, b, 0..7, &mut wblk);
+        let diff = gblk
+            .iter()
+            .zip(&wblk)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 0.3, "{diff}");
+    }
+
+    #[test]
+    fn int8_panel_kernel_matches_dequantized_reference() {
+        let mut rng = Rng::new(95);
+        for b in [8usize, 16, 32] {
+            let x = Matrix::randn(5, 3 * b, 1.0, &mut rng);
+            let blkf = rng.normal_vec(b * b, 0.5);
+            let q = quantize_blocks(&blkf, b);
+            let mut deq = vec![0.0f32; b * b];
+            dequantize_block(&q, 0, &mut deq);
+            // reference: f32 kernel over the dequantized block
+            let mut want = Matrix::zeros(5, 2 * b);
+            let ld = want.cols;
+            unsafe {
+                super::super::micro::block_panel(
+                    b, &x, b, 0..5, &deq, want.data.as_mut_ptr(), ld, b,
+                );
+            }
+            let mut y = Matrix::zeros(5, 2 * b);
+            unsafe {
+                block_panel_i8(
+                    b, &x, b, 0..5, &q.data[..b * b], q.scales[0],
+                    y.data.as_mut_ptr(), ld, b,
+                );
+            }
+            assert!(y.max_abs_diff(&want) < 1e-3, "b={b}: {}", y.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn u16_scratch_reuses_capacity() {
+        let a = take_u16(1024);
+        let cap = a.capacity();
+        give_u16(a);
+        let b = take_u16(512);
+        assert!(b.capacity() >= 512);
+        assert_eq!(b.capacity(), cap); // best-fit returned the same buffer
+        give_u16(b);
+    }
+}

@@ -32,6 +32,7 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 
+use super::quant::Bf16Panel;
 use crate::sparse::dense::Matrix;
 
 /// User-facing kernel selection (CLI `--kernel` / `PIXELFLY_KERNEL`).
@@ -242,6 +243,141 @@ pub unsafe fn try_scatter_block(
 }
 
 // ---------------------------------------------------------------------
+// Reduced-precision kernel twins (bf16 / int8) — see `super::quant` for
+// the storage formats and the scalar fallbacks these dispatch in front of
+// ---------------------------------------------------------------------
+
+/// Dispatch the bf16 forward panel kernel to the active SIMD tier.
+/// Returns `false` when no SIMD kernel applies (the caller runs the
+/// scalar twin in `quant`).
+///
+/// # Safety
+/// Same contract as [`super::quant::block_panel_bf16`].
+#[allow(clippy::too_many_arguments)]
+#[allow(unused_variables)]
+pub unsafe fn try_block_panel_bf16(
+    b: usize,
+    x: &Bf16Panel,
+    ic: usize,
+    rows: Range<usize>,
+    blk: &[u16],
+    y: *mut f32,
+    ldy: usize,
+    jc: usize,
+) -> bool {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if b % 8 == 0 => {
+            avx2::block_panel_bf16(b, x, ic, rows, blk, y, ldy, jc);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if b % 4 == 0 => {
+            neon::block_panel_bf16(b, x, ic, rows, blk, y, ldy, jc);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Dispatch the bf16 transpose panel kernel (`dX = dY·Wᵀ`) to the active
+/// SIMD tier. Returns `false` when no SIMD kernel applies.
+///
+/// # Safety
+/// Same contract as [`super::quant::block_panel_t_bf16`].
+#[allow(clippy::too_many_arguments)]
+#[allow(unused_variables)]
+pub unsafe fn try_block_panel_t_bf16(
+    b: usize,
+    x: &Bf16Panel,
+    ic: usize,
+    rows: Range<usize>,
+    blk: &[u16],
+    y: *mut f32,
+    ldy: usize,
+    jc: usize,
+) -> bool {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if b % 8 == 0 => {
+            avx2::block_panel_t_bf16(b, x, ic, rows, blk, y, ldy, jc);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if b % 4 == 0 => {
+            neon::block_panel_t_bf16(b, x, ic, rows, blk, y, ldy, jc);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Dispatch the bf16 dW scatter kernel to the active SIMD tier. Returns
+/// `false` when no SIMD kernel applies.
+///
+/// # Safety
+/// Same bounds contract as [`try_scatter_block`], with bf16 operand
+/// panels.
+#[allow(unused_variables)]
+pub unsafe fn try_scatter_block_bf16(
+    b: usize,
+    x: &Bf16Panel,
+    ic: usize,
+    dy: &Bf16Panel,
+    jc: usize,
+    rows: Range<usize>,
+    blk: &mut [f32],
+) -> bool {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if b % 8 == 0 => {
+            avx2::scatter_block_bf16(b, x, ic, dy, jc, rows, blk);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if b % 4 == 0 => {
+            neon::scatter_block_bf16(b, x, ic, dy, jc, rows, blk);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Dispatch the int8 forward panel kernel (weights int8 + one scale per
+/// block, f32 activations and accumulators) to the active SIMD tier.
+/// Returns `false` when no SIMD kernel applies.
+///
+/// # Safety
+/// Same contract as [`super::quant::block_panel_i8`].
+#[allow(clippy::too_many_arguments)]
+#[allow(unused_variables)]
+pub unsafe fn try_block_panel_i8(
+    b: usize,
+    x: &Matrix,
+    ic: usize,
+    rows: Range<usize>,
+    q: &[i8],
+    scale: f32,
+    y: *mut f32,
+    ldy: usize,
+    jc: usize,
+) -> bool {
+    match active_tier() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 if b % 8 == 0 => {
+            avx2::block_panel_i8(b, x, ic, rows, q, scale, y, ldy, jc);
+            true
+        }
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon if b % 8 == 0 => {
+            neon::block_panel_i8(b, x, ic, rows, q, scale, y, ldy, jc);
+            true
+        }
+        _ => false,
+    }
+}
+
+// ---------------------------------------------------------------------
 // Vector primitives (attention kernel building blocks)
 // ---------------------------------------------------------------------
 
@@ -376,6 +512,7 @@ pub mod avx2 {
     //! AVX2+FMA kernels. Every fn is `unsafe`: the caller must have
     //! verified `avx2` and `fma` at runtime (see [`super::simd_tier`]).
 
+    use super::super::quant::{bf16_to_f32, Bf16Panel};
     use super::Range;
     use crate::sparse::dense::Matrix;
     use std::arch::x86_64::*;
@@ -764,6 +901,196 @@ pub mod avx2 {
             i += 1;
         }
     }
+
+    // -----------------------------------------------------------------
+    // Reduced-precision twins: bf16 operands widen through a 16-bit left
+    // shift (bf16 IS the f32 top half), int8 weights sign-extend and
+    // convert — all in registers, every accumulator f32.
+    // -----------------------------------------------------------------
+
+    /// Widen 8 bf16 lanes to f32.
+    ///
+    /// # Safety
+    /// `p` valid for 8 u16 reads; AVX2 present.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_bf16_8(p: *const u16) -> __m256 {
+        let v = _mm_loadu_si128(p as *const __m128i);
+        _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(v)))
+    }
+
+    /// Widen 8 int8 lanes to f32.
+    ///
+    /// # Safety
+    /// `p` valid for 8 i8 reads; AVX2 present.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_i8_8(p: *const i8) -> __m256 {
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i)))
+    }
+
+    /// bf16 forward panel kernel (see `quant::block_panel_bf16`).
+    ///
+    /// # Safety
+    /// Same contract as `quant::block_panel_bf16`, plus `b % 8 == 0` and
+    /// AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel_bf16(
+        b: usize,
+        x: &Bf16Panel,
+        ic: usize,
+        rows: Range<usize>,
+        blk: &[u16],
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 8, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let wp = blk.as_ptr();
+        for r in rows {
+            let x0 = xp.add(r * ldx + ic);
+            let y0 = y.add(r * ldy + jc);
+            let mut c = 0usize;
+            while c + 8 <= b {
+                let mut acc = _mm256_loadu_ps(y0.add(c));
+                for k in 0..b {
+                    let s = _mm256_set1_ps(bf16_to_f32(*x0.add(k)));
+                    acc = _mm256_fmadd_ps(s, load_bf16_8(wp.add(k * b + c)), acc);
+                }
+                _mm256_storeu_ps(y0.add(c), acc);
+                c += 8;
+            }
+        }
+    }
+
+    /// bf16 transpose panel kernel (see `quant::block_panel_t_bf16`).
+    ///
+    /// # Safety
+    /// Same contract as `quant::block_panel_t_bf16`, plus `b % 8 == 0`
+    /// and AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel_t_bf16(
+        b: usize,
+        x: &Bf16Panel,
+        ic: usize,
+        rows: Range<usize>,
+        blk: &[u16],
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 8, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let wp = blk.as_ptr();
+        for r in rows {
+            let x0 = xp.add(r * ldx + ic);
+            let y0 = y.add(r * ldy + jc);
+            for c in 0..b {
+                let wrow = wp.add(c * b);
+                let mut acc = _mm256_setzero_ps();
+                let mut k = 0usize;
+                while k < b {
+                    acc = _mm256_fmadd_ps(
+                        load_bf16_8(x0.add(k)),
+                        load_bf16_8(wrow.add(k)),
+                        acc,
+                    );
+                    k += 8;
+                }
+                *y0.add(c) += hsum(acc);
+            }
+        }
+    }
+
+    /// bf16 dW scatter kernel: bf16 operand panels, f32 gradient block.
+    ///
+    /// # Safety
+    /// Same bounds contract as [`scatter_block`] with `b % 8 == 0`,
+    /// bf16 panels, AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scatter_block_bf16(
+        b: usize,
+        x: &Bf16Panel,
+        ic: usize,
+        dy: &Bf16Panel,
+        jc: usize,
+        rows: Range<usize>,
+        blk: &mut [f32],
+    ) {
+        debug_assert_eq!(b % 8, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let dp = dy.data.as_ptr();
+        let (ldx, ldd) = (x.cols, dy.cols);
+        let wp = blk.as_mut_ptr();
+        for r in rows {
+            let x0 = xp.add(r * ldx + ic);
+            let d0 = dp.add(r * ldd + jc);
+            for k in 0..b {
+                let wrow = wp.add(k * b);
+                let s0 = _mm256_set1_ps(bf16_to_f32(*x0.add(k)));
+                let mut c = 0usize;
+                while c < b {
+                    let acc = _mm256_fmadd_ps(
+                        s0,
+                        load_bf16_8(d0.add(c)),
+                        _mm256_loadu_ps(wrow.add(c)),
+                    );
+                    _mm256_storeu_ps(wrow.add(c), acc);
+                    c += 8;
+                }
+            }
+        }
+    }
+
+    /// int8 forward panel kernel: int8 weight lanes widen in registers,
+    /// f32 accumulate, one scale multiply per block per output strip.
+    ///
+    /// # Safety
+    /// Same contract as `quant::block_panel_i8`, plus `b % 8 == 0` and
+    /// AVX2+FMA present.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel_i8(
+        b: usize,
+        x: &Matrix,
+        ic: usize,
+        rows: Range<usize>,
+        q: &[i8],
+        scale: f32,
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 8, 0);
+        debug_assert_eq!(q.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let qp = q.as_ptr();
+        let vs = _mm256_set1_ps(scale);
+        for r in rows {
+            let x0 = xp.add(r * ldx + ic);
+            let y0 = y.add(r * ldy + jc);
+            let mut c = 0usize;
+            while c + 8 <= b {
+                let mut acc = _mm256_setzero_ps();
+                for k in 0..b {
+                    let s = _mm256_set1_ps(*x0.add(k));
+                    acc = _mm256_fmadd_ps(s, load_i8_8(qp.add(k * b + c)), acc);
+                }
+                let yv = _mm256_fmadd_ps(vs, acc, _mm256_loadu_ps(y0.add(c)));
+                _mm256_storeu_ps(y0.add(c), yv);
+                c += 8;
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -775,6 +1102,7 @@ pub mod neon {
     //! NEON kernels. Every fn is `unsafe`: the caller must have verified
     //! `neon` at runtime (see [`super::simd_tier`]).
 
+    use super::super::quant::{bf16_to_f32, Bf16Panel};
     use super::Range;
     use crate::sparse::dense::Matrix;
     use std::arch::aarch64::*;
@@ -1119,6 +1447,185 @@ pub mod neon {
             *mp.add(i) = mv;
             *wp.add(i) -= lr * mv;
             i += 1;
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Reduced-precision twins: bf16 widens through a 16-bit left shift
+    // (bf16 IS the f32 top half), int8 sign-extends through the vmovl
+    // chain — all in registers, every accumulator f32.
+    // -----------------------------------------------------------------
+
+    /// Widen 4 bf16 lanes to f32.
+    ///
+    /// # Safety
+    /// `p` valid for 4 u16 reads; NEON present.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn load_bf16_4(p: *const u16) -> float32x4_t {
+        vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vld1_u16(p))))
+    }
+
+    /// bf16 forward panel kernel (see `quant::block_panel_bf16`).
+    ///
+    /// # Safety
+    /// Same contract as `quant::block_panel_bf16`, plus `b % 4 == 0` and
+    /// NEON present.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel_bf16(
+        b: usize,
+        x: &Bf16Panel,
+        ic: usize,
+        rows: Range<usize>,
+        blk: &[u16],
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 4, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let wp = blk.as_ptr();
+        for r in rows {
+            let x0 = xp.add(r * ldx + ic);
+            let y0 = y.add(r * ldy + jc);
+            let mut c = 0usize;
+            while c + 4 <= b {
+                let mut acc = vld1q_f32(y0.add(c));
+                for k in 0..b {
+                    let s = bf16_to_f32(*x0.add(k));
+                    acc = vfmaq_n_f32(acc, load_bf16_4(wp.add(k * b + c)), s);
+                }
+                vst1q_f32(y0.add(c), acc);
+                c += 4;
+            }
+        }
+    }
+
+    /// bf16 transpose panel kernel (see `quant::block_panel_t_bf16`).
+    ///
+    /// # Safety
+    /// Same contract as `quant::block_panel_t_bf16`, plus `b % 4 == 0`
+    /// and NEON present.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel_t_bf16(
+        b: usize,
+        x: &Bf16Panel,
+        ic: usize,
+        rows: Range<usize>,
+        blk: &[u16],
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 4, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let wp = blk.as_ptr();
+        for r in rows {
+            let x0 = xp.add(r * ldx + ic);
+            let y0 = y.add(r * ldy + jc);
+            for c in 0..b {
+                let wrow = wp.add(c * b);
+                let mut acc = vdupq_n_f32(0.0);
+                let mut k = 0usize;
+                while k < b {
+                    acc = vfmaq_f32(acc, load_bf16_4(x0.add(k)), load_bf16_4(wrow.add(k)));
+                    k += 4;
+                }
+                *y0.add(c) += vaddvq_f32(acc);
+            }
+        }
+    }
+
+    /// bf16 dW scatter kernel: bf16 operand panels, f32 gradient block.
+    ///
+    /// # Safety
+    /// Same bounds contract as [`scatter_block`] with `b % 4 == 0`,
+    /// bf16 panels, NEON present.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scatter_block_bf16(
+        b: usize,
+        x: &Bf16Panel,
+        ic: usize,
+        dy: &Bf16Panel,
+        jc: usize,
+        rows: Range<usize>,
+        blk: &mut [f32],
+    ) {
+        debug_assert_eq!(b % 4, 0);
+        debug_assert_eq!(blk.len(), b * b);
+        let xp = x.data.as_ptr();
+        let dp = dy.data.as_ptr();
+        let (ldx, ldd) = (x.cols, dy.cols);
+        let wp = blk.as_mut_ptr();
+        for r in rows {
+            let x0 = xp.add(r * ldx + ic);
+            let d0 = dp.add(r * ldd + jc);
+            for k in 0..b {
+                let wrow = wp.add(k * b);
+                let s0 = bf16_to_f32(*x0.add(k));
+                let mut c = 0usize;
+                while c < b {
+                    let acc =
+                        vfmaq_n_f32(vld1q_f32(wrow.add(c)), load_bf16_4(d0.add(c)), s0);
+                    vst1q_f32(wrow.add(c), acc);
+                    c += 4;
+                }
+            }
+        }
+    }
+
+    /// int8 forward panel kernel: int8 weight lanes widen in registers,
+    /// f32 accumulate, one scale multiply per block per output strip.
+    ///
+    /// # Safety
+    /// Same contract as `quant::block_panel_i8`, plus `b % 8 == 0` and
+    /// NEON present.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn block_panel_i8(
+        b: usize,
+        x: &Matrix,
+        ic: usize,
+        rows: Range<usize>,
+        q: &[i8],
+        scale: f32,
+        y: *mut f32,
+        ldy: usize,
+        jc: usize,
+    ) {
+        debug_assert_eq!(b % 8, 0);
+        debug_assert_eq!(q.len(), b * b);
+        let xp = x.data.as_ptr();
+        let ldx = x.cols;
+        let qp = q.as_ptr();
+        for r in rows {
+            let x0 = xp.add(r * ldx + ic);
+            let y0 = y.add(r * ldy + jc);
+            let mut c = 0usize;
+            while c + 8 <= b {
+                let mut a0 = vdupq_n_f32(0.0);
+                let mut a1 = vdupq_n_f32(0.0);
+                for k in 0..b {
+                    let w16 = vmovl_s8(vld1_s8(qp.add(k * b + c)));
+                    let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16)));
+                    let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16)));
+                    let xv = *x0.add(k);
+                    a0 = vfmaq_n_f32(a0, lo, xv);
+                    a1 = vfmaq_n_f32(a1, hi, xv);
+                }
+                vst1q_f32(y0.add(c), vfmaq_n_f32(vld1q_f32(y0.add(c)), a0, scale));
+                vst1q_f32(
+                    y0.add(c + 4),
+                    vfmaq_n_f32(vld1q_f32(y0.add(c + 4)), a1, scale),
+                );
+                c += 8;
+            }
         }
     }
 }

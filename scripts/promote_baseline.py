@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Promote trusted CI bench artifacts into the committed baseline.
+
+Given one or more downloaded CI artifact directories (or individual
+BENCH_*.json files), validate each bench JSON and copy it into
+benchmarks/baseline/ under its own basename. This is the supported way to
+arm (or refresh) the regression gate described in
+benchmarks/baseline/README.md: download the bench artifacts from a
+trusted run on main, point this script at the download directory, review
+the printed diff, and commit the result.
+
+Validation is deliberately strict — a malformed file silently committed
+as baseline would disarm the hard-fail gate for that bench forever:
+
+  * the file must parse as JSON with a top-level {"results": [...]}
+  * every result needs a "name" and a positive "mean_ms"
+  * by default the basename must already exist in the baseline directory
+    (pass --allow-new to promote a brand-new bench file)
+  * an artifact with an EMPTY results list is refused unless --allow-empty
+    (promoting an empty file would silently disarm the gate)
+
+Exit status: 0 if every requested file promoted, 1 otherwise. With
+--dry-run nothing is written; the exit status still reflects validation.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+
+def find_bench_jsons(paths):
+    """Expand files/directories into BENCH_*.json paths (dirs recurse)."""
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in os.walk(p):
+                for f in sorted(files):
+                    if f.startswith("BENCH_") and f.endswith(".json"):
+                        out.append(os.path.join(root, f))
+        else:
+            out.append(p)
+    return out
+
+
+def validate(path, allow_empty):
+    """Return (doc, error): doc is the parsed JSON on success, else None."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return None, f"unreadable: {e}"
+    results = doc.get("results")
+    if not isinstance(results, list):
+        return None, 'missing top-level {"results": [...]}'
+    if not results and not allow_empty:
+        return None, "empty results list (would disarm the gate); " \
+                     "pass --allow-empty to promote anyway"
+    for i, r in enumerate(results):
+        if not isinstance(r, dict) or not r.get("name"):
+            return None, f"result {i} has no name"
+        mean = r.get("mean_ms")
+        if not isinstance(mean, (int, float)) or mean <= 0:
+            return None, f'result {r.get("name")!r} has no positive mean_ms'
+    return doc, None
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="copy trusted CI bench artifacts into the committed "
+                    "baseline directory")
+    ap.add_argument("sources", nargs="+",
+                    help="artifact directories (searched recursively for "
+                         "BENCH_*.json) and/or individual files")
+    ap.add_argument("--baseline", default="benchmarks/baseline",
+                    help="committed baseline directory (default: "
+                         "benchmarks/baseline)")
+    ap.add_argument("--allow-new", action="store_true",
+                    help="permit basenames with no existing baseline file")
+    ap.add_argument("--allow-empty", action="store_true",
+                    help="permit artifacts with an empty results list")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="validate and report, write nothing")
+    args = ap.parse_args()
+
+    files = find_bench_jsons(args.sources)
+    if not files:
+        print("error: no BENCH_*.json files found in the given sources",
+              file=sys.stderr)
+        return 1
+
+    failed = 0
+    promoted = 0
+    seen = {}
+    for path in files:
+        name = os.path.basename(path)
+        if name in seen:
+            print(f"error: {name} appears twice ({seen[name]} and {path}); "
+                  f"pass an unambiguous set", file=sys.stderr)
+            failed += 1
+            continue
+        seen[name] = path
+        doc, err = validate(path, args.allow_empty)
+        if err:
+            print(f"error: {path}: {err}", file=sys.stderr)
+            failed += 1
+            continue
+        dst = os.path.join(args.baseline, name)
+        if not os.path.exists(dst) and not args.allow_new:
+            print(f"error: {name} has no existing baseline at {dst}; "
+                  f"pass --allow-new if this bench is genuinely new",
+                  file=sys.stderr)
+            failed += 1
+            continue
+        n = len(doc.get("results", []))
+        verb = "would promote" if args.dry_run else "promoted"
+        if not args.dry_run:
+            os.makedirs(args.baseline, exist_ok=True)
+            shutil.copyfile(path, dst)
+        print(f"{verb}: {path} -> {dst} ({n} result(s))")
+        promoted += 1
+
+    print(f"\n{promoted} file(s) {'validated' if args.dry_run else 'promoted'}, "
+          f"{failed} rejected.")
+    return 1 if failed or not promoted else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
