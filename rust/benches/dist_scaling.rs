@@ -9,6 +9,12 @@
 //! that loses to a single process is a bug, not a tuning issue). The
 //! 4-rank row is reported for the scaling curve but not asserted: CI
 //! boxes routinely have 2 cores.
+//!
+//! A second section reruns the 2-rank fleet with the overlap scheduler
+//! pinned off and pinned to dw+comm and compares the workers' exposed
+//! upload time per round (`comm_exposed_ms`): per-bucket gradient
+//! streaming behind the backward pass must hide wire time the serial
+//! schedule pays in the open.
 
 use std::time::Instant;
 
@@ -71,12 +77,77 @@ fn main() {
             gflops: None,
             scratch_bytes: None,
             phases: None,
+            bytes_moved: None,
             note: format!("{rounds} rounds, {rows} rows/rank/round, \
                            {sps:.0} samples/s, pool=1 thread"),
         });
         println!("ranks={nranks}: {step_ms:.2} ms/round, {sps:.0} samples/s \
                   ({rounds} rounds, global batch {} rows)",
                  rows * nranks as usize);
+    }
+
+    // --- comm/compute overlap: exposed upload time at 2 ranks ----------
+    // The scaling loop above runs under the session default (dw+comm).
+    // Here the same 2-rank fleet is rerun with the overlap scheduler
+    // pinned off and pinned to dw+comm, and the workers' mean exposed
+    // upload time per round is compared: streaming gradient buckets
+    // behind the backward pass must hide most of the wire time that the
+    // serial schedule pays after bwd_done.
+    let mut exposed_ms: Vec<(&str, f64)> = Vec::new();
+    for (tag, mode) in [("off", exec::OverlapMode::Off),
+                        ("dw+comm", exec::OverlapMode::DwComm)] {
+        exec::set_overlap(Some(mode));
+        let dist = DistConfig::new(2, rounds);
+        let fleet: Vec<(Model, WorkerConfig)> = (0..2)
+            .map(|i| {
+                (compile_gpt2s(),
+                 WorkerConfig::new("", &format!("bench-dist-ov{i}")))
+            })
+            .collect();
+        let t0 = Instant::now();
+        let (coord, workers) =
+            dist::run_local(dist, fleet).expect("overlap fleet run");
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(coord.excluded.is_empty(), "overlap={tag}: no exclusions");
+        let mut sum = 0.0;
+        let mut cnt = 0.0;
+        for w in workers {
+            let w = w.expect("worker");
+            assert!(w.comm_exposed_ms.is_finite() && w.comm_exposed_ms >= 0.0);
+            sum += w.comm_exposed_ms;
+            cnt += 1.0;
+        }
+        let ce = sum / cnt;
+        exposed_ms.push((tag, ce));
+        let mut ns = vec![wall * 1e9 / rounds as f64];
+        let safe = if tag == "off" { "off" } else { "dwcomm" };
+        suite.results.push(BenchResult {
+            name: format!("comm_overlap_{safe}_ranks2"),
+            summary: Summary::from_ns(&mut ns),
+            gflops: None,
+            scratch_bytes: None,
+            phases: None,
+            bytes_moved: None,
+            note: format!("{rounds} rounds, comm_exposed_ms={ce:.3} \
+                           (mean per worker per round), overlap={tag}"),
+        });
+        println!("overlap={tag}: comm_exposed {ce:.3} ms/round at 2 ranks");
+    }
+    exec::set_overlap(None);
+    let off_ms = exposed_ms[0].1;
+    let ov_ms = exposed_ms[1].1;
+    println!("overlap hides {:.3} ms/round of upload ({off_ms:.3} -> {ov_ms:.3})",
+             off_ms - ov_ms);
+    if suite.quick {
+        // quick rounds are few and loopback timings jittery: only guard
+        // against overlap making the exposed time meaningfully WORSE
+        assert!(ov_ms <= off_ms * 1.5 + 0.5,
+                "dw+comm must not inflate exposed upload time at 2 ranks \
+                 ({ov_ms:.3} ms vs {off_ms:.3} ms serial)");
+    } else {
+        assert!(ov_ms < off_ms,
+                "dw+comm must expose less upload time than the serial \
+                 schedule at 2 ranks ({ov_ms:.3} ms vs {off_ms:.3} ms)");
     }
 
     let sps1 = samples_per_s[0].1;

@@ -52,6 +52,16 @@ pub struct TrainReport {
     /// (`sparse::exec::calibration()`; infinity on single-core hosts);
     /// 0 when unrecorded
     pub par_threshold_flops: f64,
+    /// overlap scheduler mode during the run
+    /// (`sparse::exec::overlap_mode().name()`: "off" / "dw" / "dw+comm");
+    /// empty when the run never engaged the scheduler
+    pub overlap: String,
+    /// dW/update time absorbed into pool idle slots by the overlap
+    /// scheduler (already inside `bwd_time`, split out for the
+    /// exposed-vs-hidden view); `None` when the scheduler never engaged
+    pub ov_hidden_time: Option<Summary>,
+    /// overlap-scope drain time the critical path actually waited on
+    pub ov_exposed_time: Option<Summary>,
     /// measured pool dispatch overhead feeding that cutover, ns; 0 when
     /// unrecorded or when `PIXELFLY_PAR_FLOPS` pinned the threshold
     pub dispatch_ns: f64,
@@ -112,6 +122,17 @@ impl TrainReport {
             thr
         } else {
             format!("{thr} prec={}", self.precision)
+        };
+        // overlap scheduler: only runs that engaged it get the column
+        // (off-mode and engine-path runs leave these unset)
+        let thr = match (&self.ov_hidden_time, &self.ov_exposed_time) {
+            (Some(h), Some(e)) if !self.overlap.is_empty() => format!(
+                "{thr} overlap={} (hidden={:.1} exposed={:.1})",
+                self.overlap,
+                h.mean_ms(),
+                e.mean_ms()
+            ),
+            _ => thr,
         };
         // calibrated cutover (finite ⇔ parallelism is ever worth it)
         let thr = if self.par_threshold_flops > 0.0 && self.par_threshold_flops.is_finite()
@@ -193,6 +214,26 @@ mod tests {
         assert!(!r.summary_line().contains("prec="), "default tier stays out");
         r.precision = "bf16".into();
         assert!(r.summary_line().contains("prec=bf16"), "{}", r.summary_line());
+    }
+
+    #[test]
+    fn summary_line_shows_overlap_only_when_engaged() {
+        let mut r = TrainReport::default();
+        r.preset = "p".into();
+        r.loss_curve = vec![(0, 1.0)];
+        assert!(!r.summary_line().contains("overlap="), "unrecorded stays out");
+        let s = Summary { mean_ns: 1.5e6, p50_ns: 1.5e6, p95_ns: 1.5e6,
+                          ..Default::default() };
+        // mode name without the timing split (or vice versa) stays out —
+        // both land together or not at all
+        r.overlap = "dw".into();
+        assert!(!r.summary_line().contains("overlap="), "no split, stays out");
+        r.ov_hidden_time = Some(s.clone());
+        r.ov_exposed_time = Some(s);
+        let line = r.summary_line();
+        assert!(line.contains("overlap=dw"), "{line}");
+        assert!(line.contains("hidden=1.5"), "{line}");
+        assert!(line.contains("exposed=1.5"), "{line}");
     }
 
     #[test]

@@ -74,6 +74,20 @@ pub struct CoordReport {
     pub rounds: u64,
 }
 
+/// Poison-tolerant accessors for a rank's shared liveness clock. The
+/// `Instant` inside is always valid as a whole (no partially-written
+/// state a panic could expose), so a reader thread that panicked while
+/// holding the lock must not cascade: the stamping side would otherwise
+/// panic on the next frame and the freshness check would take the whole
+/// fleet down with it.
+fn stamp_now(clock: &Mutex<Instant>) {
+    *clock.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = Instant::now();
+}
+
+fn clock_elapsed(clock: &Mutex<Instant>) -> Duration {
+    clock.lock().unwrap_or_else(std::sync::PoisonError::into_inner).elapsed()
+}
+
 struct HelloInfo {
     fingerprint: u64,
     grads_len: u64,
@@ -222,7 +236,7 @@ fn reader_loop(conn: TcpStream, rank: u32, contrib_len: usize, params_len: usize
             }
             Ok(m) => m,
         };
-        *last_seen.lock().unwrap() = Instant::now();
+        stamp_now(&last_seen);
         match msg {
             Msg::Chunk { stream, round, offset, data } => {
                 if stream == proto::STREAM_CONTRIB {
@@ -555,6 +569,8 @@ fn drive(dist: &DistConfig, spec: &FleetSpec, bell: &Arc<Doorbell<Shared>>,
             let mut loss_sum = 0f64;
             // rank order — the exact arithmetic of the sim oracle
             for &i in &contributing {
+                // unreachable-by-construction: `have_all` above proved a
+                // round-`round` contribution exists for every index here
                 let c = slots[i].contribs.iter().find(|c| c.0 == round).unwrap();
                 loss_sum += c.1;
                 for (a, v) in acc.iter_mut().zip(&c.2) {
@@ -595,12 +611,34 @@ fn drive(dist: &DistConfig, spec: &FleetSpec, bell: &Arc<Doorbell<Shared>>,
                 .filter(|&i| !slots[i].contribs.iter().any(|c| c.0 == round))
                 .collect();
             for i in missing {
-                let fresh =
-                    slots[i].last_seen.lock().unwrap().elapsed() < dist.round_timeout;
+                let fresh = clock_elapsed(&slots[i].last_seen) < dist.round_timeout;
                 if hard || !fresh {
                     kill_slot(slots, i, &mut excluded);
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn liveness_clock_survives_poisoning() {
+        // a reader thread dying while holding a rank's liveness clock
+        // must not cascade: both the stamp (reader side) and the
+        // freshness check (barrier side) go through poison-tolerant
+        // accessors
+        let clock = Arc::new(Mutex::new(Instant::now()));
+        let c2 = Arc::clone(&clock);
+        let _ = thread::spawn(move || {
+            let _g = c2.lock().unwrap();
+            panic!("poison the clock");
+        })
+        .join();
+        assert!(clock.is_poisoned(), "setup must poison the lock");
+        stamp_now(&clock);
+        assert!(clock_elapsed(&clock) < Duration::from_secs(5));
     }
 }

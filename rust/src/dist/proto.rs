@@ -161,6 +161,13 @@ fn push_u64(buf: &mut Vec<u8>, v: u64) {
 
 /// A bounds-checked little-endian payload reader; every shortage is a
 /// typed `Truncated`, never a slice panic.
+///
+/// Unwrap audit (the dist wire path must never panic on peer bytes): the
+/// `try_into().unwrap()` in each fixed-width reader below is unreachable
+/// by construction — `bytes(n)` either returns exactly `n` bytes or a
+/// typed `Truncated` first, and `<[u8; N]>::try_from` on an `N`-byte
+/// slice is infallible. They are conversions of a length the previous
+/// line just proved, not assumptions about peer input, so they stay.
 struct Take<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -398,20 +405,33 @@ pub fn read_frame_socket(conn: &std::net::TcpStream, garble: bool,
     read_msg_garbled(&mut p, garble)
 }
 
-/// Send a flat f32 vector as a chunked stream + its `End` frame.
-pub fn send_flat(w: &mut impl Write, stream: u8, round: u64, data: &[f32],
-                 loss: f64, contributors: u32) -> Result<(), ProtoError> {
+/// Send one sub-range of a flat f32 vector as chunks addressed at
+/// absolute offset `offset`, WITHOUT an `End` frame — the bucket-granular
+/// half of [`send_flat`] that overlapped dist workers use to stream each
+/// layer's gradient slice as it lands. No wire change: the receiver's
+/// [`Assembly::absorb`] is already offset-addressed and order-blind, so a
+/// contribution sent as N bucket calls (any order) + one `End` is
+/// indistinguishable from one `send_flat`.
+pub fn send_range(w: &mut impl Write, stream: u8, round: u64, offset: usize,
+                  data: &[f32]) -> Result<(), ProtoError> {
     let mut off = 0usize;
     while off < data.len() {
         let n = CHUNK_ELEMS.min(data.len() - off);
         write_msg(w, &Msg::Chunk {
             stream,
             round,
-            offset: off as u64,
+            offset: (offset + off) as u64,
             data: data[off..off + n].to_vec(),
         })?;
         off += n;
     }
+    Ok(())
+}
+
+/// Send a flat f32 vector as a chunked stream + its `End` frame.
+pub fn send_flat(w: &mut impl Write, stream: u8, round: u64, data: &[f32],
+                 loss: f64, contributors: u32) -> Result<(), ProtoError> {
+    send_range(w, stream, round, 0, data)?;
     write_msg(w, &Msg::End { stream, round, loss, contributors })
 }
 

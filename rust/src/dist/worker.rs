@@ -21,7 +21,8 @@ use std::time::{Duration, Instant};
 
 use crate::ckpt::Snapshotter;
 use crate::data::shard::{shard_batch, ShardSpec, ShardStream};
-use crate::nn::{Model, TrainTensors};
+use crate::nn::{GradSink, Model, TrainTensors};
+use crate::sparse::exec;
 
 use super::faults::{self, Kind};
 use super::proto::{self, is_timeout, read_msg, send_flat, write_msg, Assembly, Msg,
@@ -80,6 +81,21 @@ pub struct WorkerReport {
     pub losses: Vec<f64>,
     /// PXCK snapshots offered (rank 0 with snapshotting on)
     pub snapshots: u64,
+    /// mean per-round contribution-upload time NOT hidden behind
+    /// backward compute, ms. With `PIXELFLY_OVERLAP=dw+comm` buckets
+    /// stream during backward and only the tail past the last dW is
+    /// exposed; otherwise the whole post-backward send is.
+    pub comm_exposed_ms: f64,
+}
+
+/// Unblocks a parked bucket sender if the backward pass aborts — drops
+/// on both the normal and unwind exits of the overlapped compute block.
+struct FinishGuard<'a>(&'a GradSink);
+
+impl Drop for FinishGuard<'_> {
+    fn drop(&mut self) {
+        self.0.finish();
+    }
 }
 
 /// The run parameters `Welcome` carried back, decoded.
@@ -340,7 +356,13 @@ pub fn run(mut model: Model, cfg: WorkerConfig) -> Result<WorkerReport, DistErro
         Mode::Fedavg => None,
     };
 
+    // comm/compute overlap (grad mode only): per-layer flat grad bucket
+    // layout, streamed over the socket as each layer's dW lands
+    let overlap_comm = matches!(adm.mode, Mode::Grad) && exec::overlap_mode().comm();
+    let buckets = if overlap_comm { model.grad_bucket_ranges() } else { Vec::new() };
+
     let mut contrib: Vec<f32> = Vec::new();
+    let mut comm_exposed: Vec<Duration> = Vec::new();
     for round in adm.first_round..adm.total_rounds {
         if faults::take(Kind::KillConn, round, &cfg.tag) {
             let _ = conn.shutdown(Shutdown::Both);
@@ -349,11 +371,64 @@ pub fn run(mut model: Model, cfg: WorkerConfig) -> Result<WorkerReport, DistErro
         if faults::take(Kind::Stall, round, &cfg.tag) {
             thread::sleep(cfg.stall);
         }
+        // each arm sends its own contribution (the overlapped one
+        // interleaves the sends with backward) and records the comm
+        // time left exposed on the critical path
         let loss = match (&adm.mode, &stream) {
+            (Mode::Grad, Some(stream)) if overlap_comm => {
+                let (x, t) = stream.next();
+                contrib.clear();
+                contrib.resize(glen, 0.0);
+                let sink = GradSink::new(&mut contrib, buckets.clone());
+                let n = buckets.len();
+                // scoped sender: waits on the sink's completion latch
+                // and streams bucket j the moment layer j's dW lands
+                // (reverse-layer order = the worker's completion order);
+                // chunks are offset-addressed, so the coordinator's
+                // assembly needs no End until the loss is known
+                let (loss, exposed) =
+                    thread::scope(|s| -> Result<(f64, Duration), DistError> {
+                        let sender = s.spawn(|| -> Result<Instant, ProtoError> {
+                            for j in (0..n).rev() {
+                                if !sink.wait_completed(n - j) {
+                                    break; // backward aborted
+                                }
+                                let r = sink.ranges()[j].clone();
+                                proto::send_range(&mut &conn, proto::STREAM_CONTRIB,
+                                                  round, r.start, sink.bucket(j))?;
+                            }
+                            Ok(Instant::now())
+                        });
+                        let loss = {
+                            let _finish = FinishGuard(&sink);
+                            model.forward_backward_overlap(&x, &t, &sink)
+                        };
+                        let bwd_done = Instant::now();
+                        let sent_at = sender
+                            .join()
+                            .map_err(|_| DistError::CoordinatorLost(
+                                "contribution sender panicked".into()))?
+                            .map_err(|e| lost(e, "streaming contribution"))?;
+                        Ok((loss, sent_at.saturating_duration_since(bwd_done)))
+                    })?;
+                let t0 = Instant::now();
+                write_msg(&mut &conn, &Msg::End {
+                    stream: proto::STREAM_CONTRIB,
+                    round,
+                    loss,
+                    contributors: 1,
+                }).map_err(|e| lost(e, "sending contribution end"))?;
+                comm_exposed.push(exposed + t0.elapsed());
+                loss
+            }
             (Mode::Grad, Some(stream)) => {
                 let (x, t) = stream.next();
                 let loss = model.forward_backward(&x, &t);
                 model.read_train_flat(TrainTensors::Grads, &mut contrib);
+                let t0 = Instant::now();
+                send_flat(&mut &conn, proto::STREAM_CONTRIB, round, &contrib, loss, 1)
+                    .map_err(|e| lost(e, "sending contribution"))?;
+                comm_exposed.push(t0.elapsed());
                 loss
             }
             _ => {
@@ -367,11 +442,13 @@ pub fn run(mut model: Model, cfg: WorkerConfig) -> Result<WorkerReport, DistErro
                     let _ = write_msg(&mut &conn, &Msg::Heartbeat);
                 }
                 model.read_train_flat(TrainTensors::Params, &mut contrib);
+                let t0 = Instant::now();
+                send_flat(&mut &conn, proto::STREAM_CONTRIB, round, &contrib, last, 1)
+                    .map_err(|e| lost(e, "sending contribution"))?;
+                comm_exposed.push(t0.elapsed());
                 last
             }
         };
-        send_flat(&mut &conn, proto::STREAM_CONTRIB, round, &contrib, loss, 1)
-            .map_err(|e| lost(e, "sending contribution"))?;
         let result = recv_stream(&conn, &cfg, proto::STREAM_RESULT, round, rlen,
                                  Some((&contrib, loss)), &mut model)?;
         apply_result(&mut model, adm.mode, adm.lr, adm.momentum, &result);
@@ -390,5 +467,11 @@ pub fn run(mut model: Model, cfg: WorkerConfig) -> Result<WorkerReport, DistErro
     if let Some((snapper, _)) = snap {
         snapper.finish();
     }
-    Ok(WorkerReport { rank: adm.rank, losses, snapshots })
+    let comm_exposed_ms = if comm_exposed.is_empty() {
+        0.0
+    } else {
+        comm_exposed.iter().sum::<Duration>().as_secs_f64() * 1e3
+            / comm_exposed.len() as f64
+    };
+    Ok(WorkerReport { rank: adm.rank, losses, snapshots, comm_exposed_ms })
 }

@@ -55,6 +55,13 @@ fn main() -> Result<()> {
         })?;
         exec::set_precision(prec);
     }
+    // Overlap scheduler: --overlap beats PIXELFLY_OVERLAP beats dw+comm.
+    if let Some(o) = args.get("overlap") {
+        let mode = exec::OverlapMode::parse(o).ok_or_else(|| {
+            anyhow::anyhow!("--overlap expects off|dw|dw+comm, got {o:?}")
+        })?;
+        exec::set_overlap(Some(mode));
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -118,7 +125,11 @@ fn print_help() {
                  resident = parked long-lived workers, the default),\n\
                  --precision f32|bf16|int8 (storage tier; also PIXELFLY_PREC;\n\
                  bf16 = reduced-storage training with f32 accumulate,\n\
-                 int8 = per-block quantize-at-freeze for serve/inference).\n\
+                 int8 = per-block quantize-at-freeze for serve/inference),\n\
+                 --overlap off|dw|dw+comm (backward overlap scheduler; also\n\
+                 PIXELFLY_OVERLAP; dw = deferred dW + eager fused updates,\n\
+                 dw+comm adds per-bucket gradient streaming in dist workers;\n\
+                 default dw+comm, bit-identical to off by construction).\n\
                  PIXELFLY_PAR_FLOPS pins the calibrated serial-vs-parallel\n\
                  cutover (otherwise measured once at startup).\n\
          Commands that execute artifacts need a build with --features pjrt."

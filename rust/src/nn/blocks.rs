@@ -104,6 +104,20 @@ impl Module for LowRankResidual {
         self.flr.backward_into(x, dy, dx, &mut self.grads, ws);
     }
 
+    fn backward_dx(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        self.db.fill(0.0);
+        let aux = self.act.pick_aux(y, self.pre.as_ref());
+        exec::epilogue_backward(dy, aux, self.act, Some(&mut self.db));
+        if let Some(dx) = dx {
+            self.flr.backward_dx_into(x, dy, dx, ws);
+        }
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, ws: &mut Workspace) {
+        self.flr.backward_dw_into(x, dy, &mut self.grads, ws);
+    }
+
     fn update(&mut self, lr: f32, momentum: f32) {
         exec::sgd_momentum(&mut self.flr.flat.blocks, &self.grads.d_flat,
                            &mut self.m_flat, lr, momentum);
@@ -384,6 +398,64 @@ impl Module for PixelflyAttention {
         }
     }
 
+    /// Same dataflow as the fused backward with every projection's dW
+    /// GEMM peeled off: the attention-kernel backward (dQ/dK/dV) is
+    /// critical-path — the projections' dX legs consume it — so it
+    /// stays here; the four weight sweeps move to
+    /// [`Module::backward_dw`] against the member stashes this phase
+    /// leaves behind (`d_o`/`dq`/`dk`/`dv`, all post-epilogue).
+    fn backward_dx(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   mut dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        let seq = x.rows;
+        let d = self.d_head();
+        ensure_shape(&mut self.dq, seq, d);
+        ensure_shape(&mut self.dk, seq, d);
+        ensure_shape(&mut self.dv, seq, d);
+        ensure_shape(&mut self.d_o, seq, d);
+        if self.residual && dx.is_some() {
+            ensure_shape(&mut self.dres, seq, x.cols);
+            self.dres.data.copy_from_slice(&dy.data);
+        }
+        let wo_out: &Matrix = if self.residual { &self.out_pre } else { y };
+        self.wo.backward_dx(&self.o, wo_out, dy, Some(&mut self.d_o), ws);
+        self.plan.backward(&self.q, &self.k, &self.v, &self.o, &self.d_o,
+                           &self.stats, &mut self.dq, &mut self.dk, &mut self.dv,
+                           ws);
+        match dx.as_deref_mut() {
+            Some(dxm) => {
+                ensure_shape(&mut self.dtmp, seq, x.cols);
+                self.wq.backward_dx(x, &self.q, &mut self.dq, Some(&mut *dxm), ws);
+                self.wk.backward_dx(x, &self.k, &mut self.dk,
+                                    Some(&mut self.dtmp), ws);
+                for (dv, tv) in dxm.data.iter_mut().zip(&self.dtmp.data) {
+                    *dv += tv;
+                }
+                self.wv.backward_dx(x, &self.v, &mut self.dv,
+                                    Some(&mut self.dtmp), ws);
+                for (dv, tv) in dxm.data.iter_mut().zip(&self.dtmp.data) {
+                    *dv += tv;
+                }
+                if self.residual {
+                    for (dv, rv) in dxm.data.iter_mut().zip(&self.dres.data) {
+                        *dv += rv;
+                    }
+                }
+            }
+            None => {
+                self.wq.backward_dx(x, &self.q, &mut self.dq, None, ws);
+                self.wk.backward_dx(x, &self.k, &mut self.dk, None, ws);
+                self.wv.backward_dx(x, &self.v, &mut self.dv, None, ws);
+            }
+        }
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, ws: &mut Workspace) {
+        self.wo.backward_dw(&self.o, dy, ws);
+        self.wq.backward_dw(x, &self.dq, ws);
+        self.wk.backward_dw(x, &self.dk, ws);
+        self.wv.backward_dw(x, &self.dv, ws);
+    }
+
     fn update(&mut self, lr: f32, momentum: f32) {
         self.wq.update(lr, momentum);
         self.wk.update(lr, momentum);
@@ -599,6 +671,33 @@ impl Module for MlpBlock {
         }
     }
 
+    fn backward_dx(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   mut dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        if self.residual && dx.is_some() {
+            ensure_shape(&mut self.dres, x.rows, x.cols);
+            self.dres.data.copy_from_slice(&dy.data);
+        }
+        ensure_shape(&mut self.dhidden, x.rows, self.up.out_dim());
+        let down_out: &Matrix = if self.residual { &self.out_pre } else { y };
+        self.down.backward_dx(&self.hidden, down_out, dy, Some(&mut self.dhidden),
+                              ws);
+        self.up.backward_dx(x, &self.hidden, &mut self.dhidden,
+                            dx.as_deref_mut(), ws);
+        if self.residual {
+            if let Some(dxm) = dx {
+                for (dv, rv) in dxm.data.iter_mut().zip(&self.dres.data) {
+                    *dv += rv;
+                }
+            }
+        }
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, ws: &mut Workspace) {
+        // `dy` and `dhidden` are post-epilogue after backward_dx
+        self.down.backward_dw(&self.hidden, dy, ws);
+        self.up.backward_dw(x, &self.dhidden, ws);
+    }
+
     fn update(&mut self, lr: f32, momentum: f32) {
         self.up.update(lr, momentum);
         self.down.update(lr, momentum);
@@ -748,6 +847,32 @@ impl Module for MixerBlock {
         }
     }
 
+    fn backward_dx(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        let (seq, d) = (x.rows, x.cols);
+        ensure_shape(&mut self.dmid, seq, d);
+        ensure_shape(&mut self.dyt, d, seq);
+        self.channel.backward_dx(&self.mid, y, dy, Some(&mut self.dmid), ws);
+        transpose_into(&self.dmid.data, seq, d, &mut self.dyt.data);
+        match dx {
+            Some(dxm) => {
+                ensure_shape(&mut self.dxt, d, seq);
+                self.token.backward_dx(&self.xt, &self.yt, &mut self.dyt,
+                                       Some(&mut self.dxt), ws);
+                transpose_into(&self.dxt.data, d, seq, &mut dxm.data);
+            }
+            None => {
+                self.token.backward_dx(&self.xt, &self.yt, &mut self.dyt, None, ws);
+            }
+        }
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, ws: &mut Workspace) {
+        let _ = x; // both children read member stashes, not the block input
+        self.channel.backward_dw(&self.mid, dy, ws);
+        self.token.backward_dw(&self.xt, &self.dyt, ws);
+    }
+
     fn update(&mut self, lr: f32, momentum: f32) {
         self.token.update(lr, momentum);
         self.channel.update(lr, momentum);
@@ -844,6 +969,15 @@ impl Module for Embedding {
         self.0.backward_into(x, y, dy, dx, ws)
     }
 
+    fn backward_dx(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        self.0.backward_dx(x, y, dy, dx, ws)
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, ws: &mut Workspace) {
+        self.0.backward_dw(x, dy, ws)
+    }
+
     fn update(&mut self, lr: f32, momentum: f32) {
         self.0.update(lr, momentum)
     }
@@ -906,6 +1040,15 @@ impl Module for ClassifierHead {
     fn backward_into(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
                      dx: Option<&mut Matrix>, ws: &mut Workspace) {
         self.0.backward_into(x, y, dy, dx, ws)
+    }
+
+    fn backward_dx(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        self.0.backward_dx(x, y, dy, dx, ws)
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, ws: &mut Workspace) {
+        self.0.backward_dw(x, dy, ws)
     }
 
     fn update(&mut self, lr: f32, momentum: f32) {
@@ -1172,6 +1315,101 @@ mod tests {
             *wv += cv; // the residual's own gradient
         }
         assert!(dx.max_abs_diff(&want_dx) < 1e-5, "{}", dx.max_abs_diff(&want_dx));
+    }
+
+    #[test]
+    fn composite_split_backward_bit_matches_fused() {
+        // overlap-scheduler contract at the block level: for every
+        // composite, backward_dx + backward_dw must bit-match one fused
+        // backward_into (dx, every gradient buffer, and the params a
+        // subsequent update produces)
+        fn bits(v: &[f32]) -> Vec<u32> {
+            v.iter().map(|f| f.to_bits()).collect()
+        }
+        fn train_bits(m: &mut dyn Module, which: crate::nn::TrainTensors) -> Vec<u32> {
+            let mut out = Vec::new();
+            m.visit_train_f32(which, &mut |s| out.extend(s.iter().map(|f| f.to_bits())));
+            out
+        }
+        fn check(a: &mut dyn Module, b: &mut dyn Module, x: &Matrix, seed: u64,
+                 tag: &str) {
+            use crate::nn::TrainTensors;
+            let mut rng = Rng::new(seed);
+            let mut ws = Workspace::new();
+            let mut ya = Matrix::zeros(x.rows, a.out_dim());
+            let mut yb = Matrix::zeros(x.rows, b.out_dim());
+            a.forward_into(x, &mut ya, &mut ws);
+            b.forward_into(x, &mut yb, &mut ws);
+            assert_eq!(bits(&ya.data), bits(&yb.data), "{tag}: fwd");
+            let dy0 = Matrix::randn(x.rows, ya.cols, 0.5, &mut rng);
+            let (mut dya, mut dyb) = (dy0.clone(), dy0.clone());
+            let mut dxa = Matrix::zeros(x.rows, x.cols);
+            let mut dxb = Matrix::zeros(x.rows, x.cols);
+            a.backward_into(x, &ya, &mut dya, Some(&mut dxa), &mut ws);
+            b.backward_dx(x, &yb, &mut dyb, Some(&mut dxb), &mut ws);
+            b.backward_dw(x, &dyb, &mut ws);
+            assert_eq!(bits(&dxa.data), bits(&dxb.data), "{tag}: dx");
+            assert_eq!(train_bits(a, TrainTensors::Grads),
+                       train_bits(b, TrainTensors::Grads), "{tag}: grads");
+            a.update(1e-2, 0.9);
+            b.update(1e-2, 0.9);
+            assert_eq!(train_bits(a, TrainTensors::Params),
+                       train_bits(b, TrainTensors::Params), "{tag}: params");
+        }
+        let n = 32usize;
+        let mut rng = Rng::new(200);
+        // MLP block: sparse up + dense down, residual on
+        let build_mlp = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let scale = 1.0 / (n as f32).sqrt();
+            let mask = baselines::random_mask(n / 8, 2 * n / 8, 0.5, &mut rng);
+            MlpBlock::new(
+                Box::new(crate::nn::SparseLinear::random(&mask, 8, Activation::Gelu,
+                                                         scale, &mut rng)),
+                Box::new(DenseLinear::random(2 * n, n, Activation::Identity, scale,
+                                             &mut rng)),
+                true,
+            )
+        };
+        let x = Matrix::randn(6, n, 1.0, &mut rng);
+        check(&mut build_mlp(201), &mut build_mlp(201), &x, 202, "mlp");
+        // attention block with residual (dense projections)
+        let (seq, d, block) = (32usize, 16usize, 8usize);
+        let mut r1 = Rng::new(203);
+        let mut r2 = Rng::new(203);
+        let (mut aa, _, _) = attn_block(seq, d, block, true, &mut r1);
+        let (mut ab, _, _) = attn_block(seq, d, block, true, &mut r2);
+        let xa = Matrix::randn(seq, d, 0.5, &mut rng);
+        check(&mut aa, &mut ab, &xa, 204, "attn");
+        // mixer block (token + channel MLPs, residuals inside)
+        let build_mixer = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let (seq, d) = (16usize, 24usize);
+            let scale = 0.3;
+            let token = MlpBlock::new(
+                Box::new(DenseLinear::random(seq, 2 * seq, Activation::Gelu, scale,
+                                             &mut rng)),
+                Box::new(DenseLinear::random(2 * seq, seq, Activation::Identity,
+                                             scale, &mut rng)),
+                true,
+            );
+            let channel = MlpBlock::new(
+                Box::new(DenseLinear::random(d, 2 * d, Activation::Gelu, scale,
+                                             &mut rng)),
+                Box::new(DenseLinear::random(2 * d, d, Activation::Identity, scale,
+                                             &mut rng)),
+                true,
+            );
+            MixerBlock::new(token, channel)
+        };
+        let xm = Matrix::randn(16, 24, 0.5, &mut rng);
+        check(&mut build_mixer(205), &mut build_mixer(205), &xm, 206, "mixer");
+        // the paper's flat + low-rank composite
+        let build_lr = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            LowRankResidual::random(n, n, 8, 4, 8, Activation::Gelu, 0.4, &mut rng)
+        };
+        check(&mut build_lr(207), &mut build_lr(207), &x, 208, "lowrank");
     }
 
     #[test]

@@ -348,10 +348,26 @@ impl Model {
             ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
             let Model { body, ws, y, gy, .. } = self;
             let loss = mse_loss_grad(y, target, gy);
-            body.backward_into(x, y, gy, None, ws);
-            timer.bwd_done();
-            self.body.update(lr, momentum);
-            timer.update_done();
+            if exec::overlap_mode().dw() {
+                // Overlapped step: per-layer dW (and its eager
+                // sgd_momentum sweep) runs on the overlap worker while
+                // the next layer's dX propagates on this thread. The
+                // scope drains inside backward_overlap, so by bwd_done
+                // the params are fully updated — no separate update
+                // pass. Bit-identical to the sequential path (FIFO
+                // worker, serial scatter schedules, disjoint per-module
+                // updates).
+                let stats = body.backward_overlap(x, y, gy, None, ws,
+                                                  Some((lr, momentum)), None);
+                timer.overlap(stats);
+                timer.bwd_done();
+                timer.update_done();
+            } else {
+                body.backward_into(x, y, gy, None, ws);
+                timer.bwd_done();
+                self.body.update(lr, momentum);
+                timer.update_done();
+            }
             (loss, timer.finish())
         })
     }
@@ -502,6 +518,30 @@ impl Model {
             body.backward_into(x, y, gy, None, ws);
             loss
         })
+    }
+
+    /// [`Model::forward_backward`] with the overlap scheduler and a
+    /// [`GradSink`](super::GradSink): each layer's flat grad bucket is
+    /// published to `sink` the moment its dW lands, so a comm thread can
+    /// stream bucket `i` while layers `< i` are still in backward. No
+    /// eager update — dist grad mode averages raw gradients first. The
+    /// caller owns `sink.finish()` (see the dist worker's drop guard).
+    pub fn forward_backward_overlap(&mut self, x: &Matrix, target: &Matrix,
+                                    sink: &super::GradSink) -> f64 {
+        exec::step_scope(|| {
+            self.forward_only(x);
+            ensure_shape(&mut self.gy, x.rows, self.body.out_dim());
+            let Model { body, ws, y, gy, .. } = self;
+            let loss = mse_loss_grad(y, target, gy);
+            body.backward_overlap(x, y, gy, None, ws, None, Some(sink));
+            loss
+        })
+    }
+
+    /// Per-top-level-module tiling of the flat `Grads` buffer — the comm
+    /// bucket layout of the overlapped distributed exchange.
+    pub fn grad_bucket_ranges(&mut self) -> Vec<std::ops::Range<usize>> {
+        self.body.grad_bucket_ranges()
     }
 
     /// The optimizer half of [`Model::train_step`]: consume whatever the

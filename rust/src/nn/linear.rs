@@ -93,6 +93,24 @@ impl Module for SparseLinear {
         }
     }
 
+    /// Critical path only: epilogue transform (+db) and the dX GEMM.
+    /// dW runs in [`Module::backward_dw`] against the same transformed
+    /// `dy`; dX and dW both only READ `dy`, so splitting the fused
+    /// sweep reorders nothing a float ever sees — bit-identical.
+    fn backward_dx(&mut self, _x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   dx: Option<&mut Matrix>, _ws: &mut Workspace) {
+        self.db.fill(0.0);
+        let aux = self.act.pick_aux(y, self.pre.as_ref());
+        exec::epilogue_backward(dy, aux, self.act, Some(&mut self.db));
+        if let Some(dx) = dx {
+            self.w.matmul_dx_into(dy, dx);
+        }
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, _ws: &mut Workspace) {
+        self.w.matmul_dw_into(x, dy, &mut self.dw);
+    }
+
     fn update(&mut self, lr: f32, momentum: f32) {
         exec::sgd_momentum(&mut self.w.blocks, &self.dw, &mut self.mw, lr, momentum);
         exec::sgd_momentum(&mut self.bias, &self.db, &mut self.mb, lr, momentum);
@@ -240,6 +258,20 @@ impl Module for DenseLinear {
         }
     }
 
+    fn backward_dx(&mut self, _x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   dx: Option<&mut Matrix>, _ws: &mut Workspace) {
+        self.db.fill(0.0);
+        let aux = self.act.pick_aux(y, self.pre.as_ref());
+        exec::epilogue_backward(dy, aux, self.act, Some(&mut self.db));
+        if let Some(dx) = dx {
+            dense::matmul_abt_into(dy, &self.w, dx);
+        }
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, _ws: &mut Workspace) {
+        dense::matmul_atb_into(x, dy, &mut self.dw);
+    }
+
     fn update(&mut self, lr: f32, momentum: f32) {
         exec::sgd_momentum(&mut self.w.data, &self.dw.data, &mut self.mw, lr, momentum);
         exec::sgd_momentum(&mut self.bias, &self.db, &mut self.mb, lr, momentum);
@@ -379,6 +411,21 @@ impl Module for Linear {
         }
     }
 
+    fn backward_dx(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        match self {
+            Linear::Sparse(l) => l.backward_dx(x, y, dy, dx, ws),
+            Linear::Dense(l) => l.backward_dx(x, y, dy, dx, ws),
+        }
+    }
+
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, ws: &mut Workspace) {
+        match self {
+            Linear::Sparse(l) => l.backward_dw(x, dy, ws),
+            Linear::Dense(l) => l.backward_dw(x, dy, ws),
+        }
+    }
+
     fn update(&mut self, lr: f32, momentum: f32) {
         match self {
             Linear::Sparse(l) => Module::update(l, lr, momentum),
@@ -484,6 +531,65 @@ mod tests {
         s.backward_into(&x, &y, &mut dy, Some(&mut dx), &mut ws);
         let want = dense::matmul_blocked(&dy0, &s.w.to_dense().transpose());
         assert!(dx.max_abs_diff(&want) < 1e-4, "{}", dx.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn split_backward_bit_matches_fused_backward() {
+        // overlap-scheduler contract: backward_dx + backward_dw must be
+        // BIT-identical to one fused backward_into — dw/db/dx/dy all
+        // compared on their u32 bit patterns
+        fn bits(v: &[f32]) -> Vec<u32> {
+            v.iter().map(|f| f.to_bits()).collect()
+        }
+        fn grad_bits(m: &mut dyn Module) -> Vec<u32> {
+            let mut out = Vec::new();
+            m.visit_train_f32(super::super::TrainTensors::Grads,
+                              &mut |s| out.extend(s.iter().map(|f| f.to_bits())));
+            out
+        }
+        let (n, block, batch) = (32usize, 8usize, 6usize);
+        let mut mrng = Rng::new(84);
+        let mask = baselines::random_mask(n / block, n / block, 0.6, &mut mrng);
+        let x = Matrix::randn(batch, n, 1.0, &mut mrng);
+        let dy0 = Matrix::randn(batch, n, 1.0, &mut mrng);
+        let mut ws = Workspace::new();
+        for act in [Activation::Identity, Activation::Relu, Activation::Gelu] {
+            // same seed twice → bit-identical twin layers
+            let mut r1 = Rng::new(85);
+            let mut r2 = Rng::new(85);
+            let mut a = SparseLinear::random(&mask, block, act, 0.4, &mut r1);
+            let mut b = SparseLinear::random(&mask, block, act, 0.4, &mut r2);
+            let mut ya = Matrix::zeros(batch, n);
+            let mut yb = Matrix::zeros(batch, n);
+            a.forward_into(&x, &mut ya, &mut ws);
+            b.forward_into(&x, &mut yb, &mut ws);
+            let (mut dya, mut dyb) = (dy0.clone(), dy0.clone());
+            let mut dxa = Matrix::zeros(batch, n);
+            let mut dxb = Matrix::zeros(batch, n);
+            a.backward_into(&x, &ya, &mut dya, Some(&mut dxa), &mut ws);
+            b.backward_dx(&x, &yb, &mut dyb, Some(&mut dxb), &mut ws);
+            b.backward_dw(&x, &dyb, &mut ws);
+            assert_eq!(bits(&dya.data), bits(&dyb.data), "{}: dy", act.name());
+            assert_eq!(bits(&dxa.data), bits(&dxb.data), "{}: dx", act.name());
+            assert_eq!(grad_bits(&mut a), grad_bits(&mut b), "{}: grads", act.name());
+        }
+        // dense twin, same contract
+        let mut r1 = Rng::new(86);
+        let mut r2 = Rng::new(86);
+        let mut a = DenseLinear::random(n, n, Activation::Gelu, 0.4, &mut r1);
+        let mut b = DenseLinear::random(n, n, Activation::Gelu, 0.4, &mut r2);
+        let mut ya = Matrix::zeros(batch, n);
+        let mut yb = Matrix::zeros(batch, n);
+        a.forward_into(&x, &mut ya, &mut ws);
+        b.forward_into(&x, &mut yb, &mut ws);
+        let (mut dya, mut dyb) = (dy0.clone(), dy0.clone());
+        let mut dxa = Matrix::zeros(batch, n);
+        let mut dxb = Matrix::zeros(batch, n);
+        a.backward_into(&x, &ya, &mut dya, Some(&mut dxa), &mut ws);
+        b.backward_dx(&x, &yb, &mut dyb, Some(&mut dxb), &mut ws);
+        b.backward_dw(&x, &dyb, &mut ws);
+        assert_eq!(bits(&dxa.data), bits(&dxb.data), "dense: dx");
+        assert_eq!(grad_bits(&mut a), grad_bits(&mut b), "dense: grads");
     }
 
     #[test]

@@ -35,6 +35,8 @@ pub use compile::{compile, CkptInfo, CompileStats, InferenceSession, Model};
 pub use decode::{DecodeCtx, DecodeSession, KvLayer, SessionError};
 pub use linear::{DenseLinear, Linear, SparseLinear};
 
+use std::ops::Range;
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::ckpt::{CkptError, StateItem, StateSource};
@@ -119,6 +121,33 @@ pub trait Module: Send {
     /// first module of a chain has no upstream to feed).
     fn backward_into(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
                      dx: Option<&mut Matrix>, ws: &mut Workspace);
+
+    /// Critical-path half of the backward split (overlap scheduler,
+    /// ISSUE 10): everything layer i−1 needs to start ITS backward —
+    /// the epilogue transform of `dy` (plus db, which rides in the same
+    /// sweep) and the dX GEMM — but NOT the weight-gradient GEMM.
+    ///
+    /// Contract: `backward_dx` followed by [`Module::backward_dw`] with
+    /// the post-epilogue `dy` must be bit-identical to one fused
+    /// [`Module::backward_into`] call. `backward_dw` only READS `dy`
+    /// and the module's forward stash, so it may run on the overlap
+    /// worker while upstream layers' dX GEMMs proceed. The default
+    /// keeps the module unsplit: `backward_dx` does the whole fused
+    /// backward and `backward_dw` is a no-op — unconditionally correct
+    /// for any implementor, it just hides nothing.
+    fn backward_dx(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                   dx: Option<&mut Matrix>, ws: &mut Workspace) {
+        self.backward_into(x, y, dy, dx, ws);
+    }
+
+    /// Deferred half of the backward split: the weight-gradient GEMM(s)
+    /// consuming the `dy` that [`Module::backward_dx`] already
+    /// epilogue-transformed in place. Must not write `dy` or anything a
+    /// later `backward_dx` reads. Default: no-op (the default
+    /// `backward_dx` already produced every gradient).
+    fn backward_dw(&mut self, x: &Matrix, dy: &Matrix, ws: &mut Workspace) {
+        let _ = (x, dy, ws);
+    }
 
     /// Fused SGD-with-momentum sweep over every parameter buffer,
     /// consuming the gradients of the latest `backward_into`.
@@ -293,10 +322,18 @@ pub struct StepTimings {
     pub fwd: Duration,
     pub bwd: Duration,
     pub update: Duration,
+    /// Overlap scheduler only: deferred dW/update time that ran hidden
+    /// under the dX critical path (inside `bwd`'s wall time).
+    pub ov_hidden: Duration,
+    /// Overlap scheduler only: drain wait the overlapped backward still
+    /// exposed at the end of the step.
+    pub ov_exposed: Duration,
 }
 
 impl StepTimings {
     pub fn total(&self) -> Duration {
+        // ov_* are an attribution of time already inside `bwd`, not an
+        // extra phase
         self.fwd + self.bwd + self.update
     }
 }
@@ -327,6 +364,12 @@ impl StepTimer {
     pub fn update_done(&mut self) {
         self.timings.update = self.t.elapsed();
         self.t = Instant::now();
+    }
+
+    /// Record the hidden/exposed split an overlapped backward reported.
+    pub fn overlap(&mut self, stats: exec::OverlapStats) {
+        self.timings.ov_hidden = stats.hidden;
+        self.timings.ov_exposed = stats.exposed;
     }
 
     pub fn finish(self) -> StepTimings {
@@ -365,12 +408,16 @@ pub fn drive_substrate_training(
     let mut fwds = Vec::with_capacity(steps);
     let mut bwds = Vec::with_capacity(steps);
     let mut upds = Vec::with_capacity(steps);
+    let mut ov_hidden = Vec::with_capacity(steps);
+    let mut ov_exposed = Vec::with_capacity(steps);
     for s in 0..steps {
         let (loss, t) = step_fn(s);
         totals.push(t.total());
         fwds.push(t.fwd);
         bwds.push(t.bwd);
         upds.push(t.update);
+        ov_hidden.push(t.ov_hidden);
+        ov_exposed.push(t.ov_exposed);
         if s % log_every == 0 || s + 1 == steps {
             report.loss_curve.push((s, loss));
         }
@@ -385,7 +432,140 @@ pub fn drive_substrate_training(
     report.fwd_time = Some(hot(&fwds));
     report.bwd_time = Some(hot(&bwds));
     report.update_time = Some(hot(&upds));
+    // the ov split only exists where a driver ran the overlap scheduler
+    // (the engine trainer and overlap=off steps report all-zero samples
+    // — leave the report fields empty so summary_line stays clean)
+    if ov_hidden.iter().chain(&ov_exposed).any(|d| !d.is_zero()) {
+        report.overlap = exec::overlap_mode().name().to_string();
+        report.ov_hidden_time = Some(hot(&ov_hidden));
+        report.ov_exposed_time = Some(hot(&ov_exposed));
+    }
     report
+}
+
+// ---------------------------------------------------------------------
+// Overlap scheduler support
+// ---------------------------------------------------------------------
+
+/// Raw module pointer smuggled into an overlap-deferred closure. Safety
+/// rests on the scheduling discipline in [`Sequential::backward_overlap`]:
+/// the pointer is only dereferenced by the single FIFO overlap worker,
+/// after the main thread has finished every access that aliases this
+/// module (its `backward_dx` ran before the defer; nothing later touches
+/// module `i` again until the scope drains).
+#[derive(Clone, Copy)]
+struct ModPtr(*mut dyn Module);
+unsafe impl Send for ModPtr {}
+
+/// Raw matrix pointer for the read-only inputs a deferred dW task needs
+/// (`x` and the post-epilogue `dy`). Both stay frozen for the lifetime of
+/// the scope: the backward walk only writes gradient buffers *below*
+/// layer `i`, and `backward_dw` is contractually read-only on `dy`.
+#[derive(Clone, Copy)]
+struct MatPtr(*const Matrix);
+unsafe impl Send for MatPtr {}
+
+/// Destination for per-layer flat gradient buckets, written by the
+/// overlap worker the moment each layer's dW lands and drained by a
+/// consumer (the dist worker's comm thread) in reverse-layer order.
+///
+/// Layout mirrors `read_train_flat(TrainTensors::Grads, ..)`: one
+/// contiguous `f32` buffer tiled by `ranges[i]` = the grads of top-level
+/// module `i`, in `visit_train_f32` order. Because the single overlap
+/// worker runs deferred tasks FIFO and `backward_overlap` defers layers
+/// in reverse order, module `i` completing means modules `i..n` are all
+/// complete — `wait_completed(n - i)` is the bucket-`i`-ready latch.
+///
+/// Safety: disjoint ranges are written by exactly one task each; readers
+/// call [`GradSink::bucket`] only after `wait_completed` covers that
+/// range, and the underlying buffer outlives the sink (enforced by the
+/// caller holding `&mut` on it across the scope — see the dist worker).
+pub struct GradSink {
+    buf: *mut f32,
+    len: usize,
+    ranges: Vec<Range<usize>>,
+    /// (modules completed so far, no-more-completions flag)
+    board: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+unsafe impl Send for GradSink {}
+unsafe impl Sync for GradSink {}
+
+impl GradSink {
+    /// Wrap `buf` (sized like `read_train_flat(Grads, ..)` output) with
+    /// the per-module tiling from [`Sequential::grad_bucket_ranges`].
+    pub fn new(buf: &mut [f32], ranges: Vec<Range<usize>>) -> GradSink {
+        let mut off = 0;
+        for r in &ranges {
+            assert_eq!(r.start, off, "bucket ranges must tile the buffer");
+            assert!(r.end >= r.start);
+            off = r.end;
+        }
+        assert_eq!(off, buf.len(), "bucket ranges must cover the buffer");
+        GradSink {
+            buf: buf.as_mut_ptr(),
+            len: buf.len(),
+            ranges,
+            board: Mutex::new((0, false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+
+    /// Copy module `idx`'s grads into its bucket and bump the completion
+    /// count. Called by the overlap worker only.
+    fn write_module(&self, idx: usize, m: &mut dyn Module) {
+        let range = self.ranges[idx].clone();
+        let mut off = range.start;
+        m.visit_train_f32(TrainTensors::Grads, &mut |s| {
+            assert!(off + s.len() <= range.end, "grad bucket overflow");
+            unsafe {
+                std::ptr::copy_nonoverlapping(s.as_ptr(), self.buf.add(off), s.len());
+            }
+            off += s.len();
+        });
+        assert_eq!(off, range.end, "grad bucket underfill");
+        let mut b = self.board.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        b.0 += 1;
+        self.cv.notify_all();
+    }
+
+    /// Signal that no further completions will arrive (backward finished
+    /// or aborted). Unblocks any `wait_completed` caller so a panic in
+    /// the backward pass cannot deadlock the comm thread.
+    pub fn finish(&self) {
+        let mut b = self.board.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        b.1 = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until at least `k` modules have completed. Returns `false`
+    /// if [`finish`](GradSink::finish) fired first with fewer than `k`
+    /// completions (the consumer should bail out).
+    pub fn wait_completed(&self, k: usize) -> bool {
+        let mut b = self.board.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        loop {
+            if b.0 >= k {
+                return true;
+            }
+            if b.1 {
+                return false;
+            }
+            b = self.cv.wait(b).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Bucket `idx` of the flat gradient buffer. Only call after
+    /// `wait_completed` confirms the bucket landed.
+    pub fn bucket(&self, idx: usize) -> &[f32] {
+        let r = &self.ranges[idx];
+        debug_assert!(r.end <= self.len);
+        unsafe { std::slice::from_raw_parts(self.buf.add(r.start), r.end - r.start) }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -428,6 +608,107 @@ impl Sequential {
 
     pub fn modules(&self) -> &[Box<dyn Module>] {
         &self.mods
+    }
+
+    /// Per-top-level-module tiling of the flat `Grads` buffer, in
+    /// `read_train_flat` order. `ranges[i]` is module `i`'s slice; the
+    /// dist runtime streams these as comm buckets.
+    pub fn grad_bucket_ranges(&mut self) -> Vec<Range<usize>> {
+        let mut ranges = Vec::with_capacity(self.mods.len());
+        let mut off = 0;
+        for m in &mut self.mods {
+            let mut n = 0;
+            m.visit_train_f32(TrainTensors::Grads, &mut |s| n += s.len());
+            ranges.push(off..off + n);
+            off += n;
+        }
+        ranges
+    }
+
+    /// Backward pass with the dW ∥ dX overlap scheduler: each layer's
+    /// critical-path `backward_dx` runs on the calling thread, and its
+    /// `backward_dw` is deferred to the FIFO overlap worker so it fills
+    /// pool idle slots while layer `i-1`'s dX is propagating.
+    ///
+    /// Bit-identity with [`Module::backward_into`]: the single FIFO
+    /// worker preserves the exact reverse-layer dW order of the serial
+    /// pass, each dW keeps its serial scatter schedule (worker-count
+    /// invariant, see `exec::pool`), and the dX/dW split contract pins
+    /// both halves to the fused arithmetic.
+    ///
+    /// `eager = Some((lr, momentum))` runs each layer's `sgd_momentum`
+    /// sweep on the worker the moment its dW lands, replacing the
+    /// separate whole-model update pass (caller must then skip
+    /// `update`). `sink` receives per-layer flat grad buckets as they
+    /// complete (dist comm overlap); eager and sink compose but dist
+    /// grad mode wants raw grads, so it passes `eager = None`.
+    pub fn backward_overlap(&mut self, x: &Matrix, y: &Matrix, dy: &mut Matrix,
+                            mut dx: Option<&mut Matrix>, ws: &mut Workspace,
+                            eager: Option<(f32, f32)>, sink: Option<&GradSink>)
+                            -> exec::OverlapStats {
+        let n = self.mods.len();
+        for i in 0..n - 1 {
+            let cols = self.mods[i].out_dim();
+            ensure_shape(&mut self.grads[i], x.rows, cols);
+        }
+        if let Some(s) = sink {
+            assert_eq!(s.ranges().len(), n, "sink bucket count must match modules");
+        }
+        // One raw pointer per module, all derived from a single
+        // `iter_mut` pass so later derivations don't invalidate earlier
+        // ones. Module `i` is touched by exactly two parties in a fixed
+        // order: the main thread (backward_dx, before defer) then the
+        // overlap worker (backward_dw [+ sink write + eager update]);
+        // the scope drain below is the barrier that ends the worker's
+        // access before `&mut self` escapes again.
+        let mod_ptrs: Vec<*mut dyn Module> =
+            self.mods.iter_mut().map(|m| &mut **m as *mut dyn Module).collect();
+        // Same trick for the inter-stage gradient buffers: per-element
+        // raw pointers, so iteration i' never materialises a `&mut`
+        // slice spanning the `grads[i]` (i > i') the worker is reading.
+        let grad_ptrs: Vec<*mut Matrix> =
+            self.grads.iter_mut().map(|g| g as *mut Matrix).collect();
+        let mut scope = exec::OverlapScope::new();
+        for i in (0..n).rev() {
+            let is_last = i + 1 == n;
+            let input: &Matrix = if i == 0 { x } else { &self.acts[i - 1] };
+            let out: &Matrix = if is_last { y } else { &self.acts[i] };
+            let dxi: Option<&mut Matrix> = if i == 0 {
+                dx.as_deref_mut()
+            } else {
+                Some(unsafe { &mut *grad_ptrs[i - 1] })
+            };
+            let m = unsafe { &mut *mod_ptrs[i] };
+            if is_last {
+                m.backward_dx(input, out, dy, dxi, ws);
+            } else {
+                m.backward_dx(input, out, unsafe { &mut *grad_ptrs[i] }, dxi, ws);
+            }
+            // dy for the dW half is the post-epilogue gradient the dx
+            // half just finished transforming in place — frozen from
+            // here on (nothing below layer i writes it).
+            let dy_ptr = if is_last {
+                MatPtr(&*dy as *const Matrix)
+            } else {
+                MatPtr(grad_ptrs[i] as *const Matrix)
+            };
+            let x_ptr = MatPtr(input as *const Matrix);
+            let mp = ModPtr(mod_ptrs[i]);
+            let sink_ref = sink;
+            scope.defer(move |wsw| {
+                let m = unsafe { &mut *mp.0 };
+                let xin = unsafe { &*x_ptr.0 };
+                let dyv = unsafe { &*dy_ptr.0 };
+                m.backward_dw(xin, dyv, wsw);
+                if let Some(s) = sink_ref {
+                    s.write_module(i, m);
+                }
+                if let Some((lr, momentum)) = eager {
+                    m.update(lr, momentum);
+                }
+            });
+        }
+        scope.drain()
     }
 }
 

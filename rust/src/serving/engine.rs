@@ -83,18 +83,22 @@ struct ResponseCell {
 }
 
 impl ResponseCell {
+    // poison-tolerant on both sides: delivery runs on the engine thread
+    // (possibly during an unwind — the panic-containment path delivers
+    // EngineDown to every parked client) and a poisoned cell must hand
+    // the client its typed result, not a second panic
     fn deliver(&self, r: Result<Matrix, RequestError>) {
-        *self.slot.lock().unwrap() = Some(r);
+        *self.slot.lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
         self.cv.notify_all();
     }
 
     fn wait(&self) -> Result<Matrix, RequestError> {
-        let mut g = self.slot.lock().unwrap();
+        let mut g = self.slot.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if let Some(r) = g.take() {
                 return r;
             }
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -436,7 +440,9 @@ impl ServeEngine {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.lock().unwrap().snapshot()
+        // same poison tolerance as the engine loop's `lock` helper: a
+        // crashed engine thread must not take the metrics path with it
+        lock(&self.shared.metrics).snapshot()
     }
 
     pub fn shutdown(mut self) {
@@ -483,5 +489,42 @@ mod tests {
     fn config_defaults_are_sane() {
         let c = EngineConfig::default();
         assert!(c.max_batch >= 1 && c.queue_depth >= c.max_batch);
+    }
+
+    #[test]
+    fn response_cell_survives_poisoned_slot() {
+        // an engine thread dying while holding the cell lock poisons it;
+        // deliver/wait must still hand the client its result, not a
+        // cascading poison panic
+        let cell = Arc::new(ResponseCell {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+        });
+        let c2 = Arc::clone(&cell);
+        let _ = thread::spawn(move || {
+            let _g = c2.slot.lock().unwrap();
+            panic!("poison the slot");
+        })
+        .join();
+        assert!(cell.slot.is_poisoned(), "setup must poison the lock");
+        cell.deliver(Err(RequestError::EngineDown("crashed".into())));
+        match cell.wait() {
+            Err(RequestError::EngineDown(msg)) => assert!(msg.contains("crashed")),
+            Err(other) => panic!("expected EngineDown, got {other:?}"),
+            Ok(_) => panic!("expected EngineDown, got a matrix"),
+        }
+    }
+
+    #[test]
+    fn metrics_lock_helper_survives_poison() {
+        let m = Mutex::new(Recorder::default());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the metrics");
+        }));
+        assert!(r.is_err() && m.is_poisoned(), "setup must poison the lock");
+        // the exact accessor `ServeEngine::metrics` routes through
+        let snap = lock(&m).snapshot();
+        assert_eq!(snap.requests, 0);
     }
 }

@@ -321,6 +321,58 @@ impl FlatLowRank {
         }
     }
 
+    /// Critical-path half of [`FlatLowRank::backward_into`]: the input
+    /// gradient only (flat dX term + low-rank dX term). The shared
+    /// `dyv = dY·Vᵀ` intermediate is recomputed by each half — the same
+    /// kernel over the same inputs, so the split stays bit-identical to
+    /// the fused sweep at the cost of one skinny `m×r` GEMM.
+    pub fn backward_dx_into(&self, x: &Matrix, dy: &Matrix, dx: &mut Matrix,
+                            ws: &mut Workspace) {
+        let (m, n) = (x.rows, self.flat.cols_elems());
+        assert_eq!(x.cols, self.flat.rows());
+        assert_eq!((dy.rows, dy.cols), (m, n));
+        assert_eq!((dx.rows, dx.cols), (m, self.flat.rows()));
+        self.plan.execute_dx(&self.flat, dy, dx);
+        let r = self.rank();
+        if r > 0 {
+            let mut dyv = Matrix { rows: m, cols: r, data: ws.take(m * r) };
+            crate::sparse::dense::matmul_abt_into(dy, &self.v, &mut dyv);
+            let mut dxlr =
+                Matrix { rows: m, cols: dx.cols, data: ws.take(m * dx.cols) };
+            crate::sparse::dense::matmul_abt_into(&dyv, &self.u, &mut dxlr);
+            for (dv, lv) in dx.data.iter_mut().zip(&dxlr.data) {
+                *dv += lv;
+            }
+            ws.give(dxlr.data);
+            ws.give(dyv.data);
+        }
+    }
+
+    /// Deferred half of [`FlatLowRank::backward_into`]: every weight
+    /// gradient (flat scatter + dU/dV), no dX. Reads `x`/`dy` only, so
+    /// the overlap scheduler may run it off the critical path.
+    pub fn backward_dw_into(&self, x: &Matrix, dy: &Matrix, g: &mut FlatLowRankGrads,
+                            ws: &mut Workspace) {
+        let (m, n) = (x.rows, self.flat.cols_elems());
+        assert_eq!(x.cols, self.flat.rows());
+        assert_eq!((dy.rows, dy.cols), (m, n));
+        assert_eq!(g.d_flat.len(), self.flat.blocks.len());
+        self.plan.execute_dw(&self.flat, x, dy, &mut g.d_flat);
+        let r = self.rank();
+        if r > 0 {
+            assert_eq!((g.du.rows, g.du.cols), (self.u.rows, r));
+            assert_eq!((g.dv.rows, g.dv.cols), (r, n));
+            let mut t = Matrix { rows: m, cols: r, data: ws.take(m * r) };
+            crate::sparse::dense::matmul_blocked_into(x, &self.u, &mut t);
+            crate::sparse::dense::matmul_atb_into(&t, dy, &mut g.dv);
+            let mut dyv = Matrix { rows: m, cols: r, data: ws.take(m * r) };
+            crate::sparse::dense::matmul_abt_into(dy, &self.v, &mut dyv);
+            crate::sparse::dense::matmul_atb_into(x, &dyv, &mut g.du);
+            ws.give(t.data);
+            ws.give(dyv.data);
+        }
+    }
+
     /// Dense materialisation (tests / inspection).
     pub fn to_dense(&self) -> Matrix {
         let mut w = self.flat.to_dense();

@@ -35,12 +35,14 @@
 //! and [`sgd_momentum`] (the fused optimizer sweep over stored blocks).
 
 pub mod micro;
+pub mod overlap;
 pub mod plan;
 pub mod pool;
 pub mod quant;
 pub mod simd;
 pub mod workspace;
 
+pub use overlap::{overlap_mode, set_overlap, OverlapMode, OverlapScope, OverlapStats};
 pub use plan::{Epilogue, GemmPlan};
 pub use pool::{pool_mode, set_pool_mode, step_scope, worker_alloc_events, PoolMode};
 pub use quant::{precision, precision_name, set_precision, Precision};

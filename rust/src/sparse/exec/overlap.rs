@@ -1,0 +1,393 @@
+//! Overlap scheduler: dW ∥ dX dependency-driven backward (ISSUE 10).
+//!
+//! The sequential backward runs every layer as dX-then-dW under one
+//! latch, so the pool idles while layer i−1's dX (the only thing the
+//! critical path actually needs) is still propagating. This module
+//! provides the runtime half of the split: a single persistent FIFO
+//! worker thread that executes *deferred* dW/db (and, when enabled,
+//! eager-update) tasks off the critical path, plus the mode axis that
+//! controls it (`PIXELFLY_OVERLAP={off,dw,dw+comm}` / `--overlap`).
+//!
+//! Why ONE worker, and why FIFO: bit-exactness. Each deferred task is
+//! an entire layer's dW sweep (which internally fans out over the
+//! resident pool with its worker-count-invariant scatter schedule, see
+//! [`super::pool`]) followed optionally by a grad-sink copy and an
+//! eager `sgd_momentum` sweep. A single FIFO consumer executes those
+//! layer tasks in exactly the order the serial backward would have —
+//! reverse layer order — so every float is produced by the same
+//! operation sequence as `PIXELFLY_OVERLAP=off`, just at a different
+//! wall-clock time. The dX critical path on the calling thread never
+//! reads anything a deferred task writes (grad buffers are layer-owned;
+//! weights are only mutated by the eager update *after* every consumer
+//! of that layer's weights has run), so overlap changes timing, not
+//! bits — the proptests pin this.
+//!
+//! Scopes are per-call ([`OverlapScope`]): each backward owns an
+//! `Arc`-shared completion board, so concurrent train steps (parallel
+//! tests) sharing the one worker thread only wait on their own tasks.
+//! Task panics are caught on the worker, parked on the board, and
+//! re-thrown on the scope's thread at drain — same surface behavior as
+//! the pool's dispatch protocol.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+use super::workspace::Workspace;
+
+// ---------------------------------------------------------------------
+// Mode axis
+// ---------------------------------------------------------------------
+
+/// How much of the train step runs off the critical path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// fused serial backward + whole-model update pass (the pre-overlap
+    /// schedule — and the bit-oracle the other modes are pinned to)
+    Off,
+    /// dW/db deferred to the overlap worker; eager per-layer updates
+    Dw,
+    /// `Dw` plus dist grad streaming: a worker ships gradient bucket k
+    /// the moment layer k's dW lands, instead of after the full backward
+    DwComm,
+}
+
+impl OverlapMode {
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s {
+            "off" => Some(OverlapMode::Off),
+            "dw" => Some(OverlapMode::Dw),
+            "dw+comm" => Some(OverlapMode::DwComm),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OverlapMode::Off => "off",
+            OverlapMode::Dw => "dw",
+            OverlapMode::DwComm => "dw+comm",
+        }
+    }
+
+    /// Deferred-dW scheduling engaged (either overlap tier).
+    pub fn dw(self) -> bool {
+        !matches!(self, OverlapMode::Off)
+    }
+
+    /// Comm/compute overlap engaged (dist workers stream buckets).
+    pub fn comm(self) -> bool {
+        matches!(self, OverlapMode::DwComm)
+    }
+}
+
+/// Runtime override: 0 = unset (fall through to env), else mode + 1.
+static OVERLAP_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Env resolution happens once; tests that need to flip modes use
+/// [`set_overlap`], which wins over the cached env value.
+static OVERLAP_ENV: OnceLock<OverlapMode> = OnceLock::new();
+
+/// Force an overlap mode (`Some`) or drop back to env/default (`None`).
+/// Process-global, like [`super::pool::set_pool_mode`] — tests that flip
+/// it must restore under a drop guard.
+pub fn set_overlap(mode: Option<OverlapMode>) {
+    let v = match mode {
+        None => 0,
+        Some(OverlapMode::Off) => 1,
+        Some(OverlapMode::Dw) => 2,
+        Some(OverlapMode::DwComm) => 3,
+    };
+    OVERLAP_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The active overlap mode: [`set_overlap`] override, then the
+/// `PIXELFLY_OVERLAP` environment variable, then the default `dw+comm`.
+/// An unrecognized env value falls back to the default.
+pub fn overlap_mode() -> OverlapMode {
+    match OVERLAP_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return OverlapMode::Off,
+        2 => return OverlapMode::Dw,
+        3 => return OverlapMode::DwComm,
+        _ => {}
+    }
+    *OVERLAP_ENV.get_or_init(|| {
+        std::env::var("PIXELFLY_OVERLAP")
+            .ok()
+            .and_then(|s| OverlapMode::parse(&s))
+            .unwrap_or(OverlapMode::DwComm)
+    })
+}
+
+// ---------------------------------------------------------------------
+// The overlap worker + scope protocol
+// ---------------------------------------------------------------------
+
+/// What the overlap thread measured for one scope: `exposed` is how
+/// long the scope's own thread had to wait at drain for stragglers,
+/// `hidden` is the rest of the worker's busy time — deferred work that
+/// genuinely ran under the dX critical path.
+/// `hidden + exposed ≈ serial dW+update time`; a perfect overlap has
+/// `exposed ≈ 0`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapStats {
+    pub hidden: Duration,
+    pub exposed: Duration,
+}
+
+type Task = Box<dyn FnOnce(&mut Workspace) + Send + 'static>;
+
+struct Job {
+    state: Arc<ScopeState>,
+    task: Task,
+}
+
+/// Per-scope completion board. `done`/`busy` are written by the worker
+/// under the mutex (the release gives the draining thread its
+/// happens-before edge on everything the tasks wrote), `panic` parks
+/// the first task panic for re-throw at drain.
+struct Board {
+    done: usize,
+    busy: Duration,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct ScopeState {
+    board: Mutex<Board>,
+    cv: Condvar,
+}
+
+impl ScopeState {
+    fn new() -> Arc<ScopeState> {
+        Arc::new(ScopeState {
+            board: Mutex::new(Board { done: 0, busy: Duration::ZERO, panic: None }),
+            cv: Condvar::new(),
+        })
+    }
+}
+
+/// The single worker thread's inbox. A `Mutex` around the `Sender`
+/// keeps enqueue order identical to program order across one scope
+/// (scopes enqueue from one thread anyway; the lock is for cheap
+/// cross-scope safety).
+static INBOX: OnceLock<Mutex<Sender<Job>>> = OnceLock::new();
+
+fn inbox() -> &'static Mutex<Sender<Job>> {
+    INBOX.get_or_init(|| {
+        let (tx, rx) = channel::<Job>();
+        std::thread::Builder::new()
+            .name("pixelfly-overlap".into())
+            .spawn(move || worker_entry(rx))
+            .expect("spawn overlap worker");
+        Mutex::new(tx)
+    })
+}
+
+/// Worker body: FIFO-execute deferred tasks with a pinned [`Workspace`],
+/// catching panics per task so one bad scope can't kill the thread.
+fn worker_entry(rx: Receiver<Job>) {
+    let mut ws = Workspace::new();
+    for job in rx {
+        let t0 = Instant::now();
+        let result = catch_unwind(AssertUnwindSafe(|| (job.task)(&mut ws)));
+        let busy = t0.elapsed();
+        let mut b = job.state.board.lock().unwrap_or_else(PoisonError::into_inner);
+        b.done += 1;
+        b.busy += busy;
+        if let Err(p) = result {
+            if b.panic.is_none() {
+                b.panic = Some(p);
+            }
+        }
+        drop(b);
+        job.state.cv.notify_all();
+    }
+}
+
+/// A borrow-scoped batch of deferred tasks. `defer` hands a closure to
+/// the overlap worker; `drain` blocks until every deferred task of THIS
+/// scope finished and returns the hidden/exposed split. Dropping the
+/// scope without draining still waits (drop guard), so borrows captured
+/// by the tasks provably outlive every worker access even on unwind.
+pub struct OverlapScope<'a> {
+    state: Arc<ScopeState>,
+    submitted: usize,
+    drained: bool,
+    _anchor: std::marker::PhantomData<&'a mut ()>,
+}
+
+impl<'a> OverlapScope<'a> {
+    pub fn new() -> OverlapScope<'a> {
+        OverlapScope {
+            state: ScopeState::new(),
+            submitted: 0,
+            drained: false,
+            _anchor: std::marker::PhantomData,
+        }
+    }
+
+    /// Queue `f` on the overlap worker. Tasks run in FIFO submission
+    /// order — the caller is responsible for submitting in the serial
+    /// schedule's order (reverse layer order for a backward).
+    pub fn defer(&mut self, f: impl FnOnce(&mut Workspace) + Send + 'a) {
+        let boxed: Box<dyn FnOnce(&mut Workspace) + Send + 'a> = Box::new(f);
+        // Safety: lifetime erasure only — `drain` (or the drop guard)
+        // blocks this thread until the worker has finished every task
+        // of this scope, so the 'a borrows inside the closure are live
+        // for the whole time the worker can touch them.
+        let boxed: Task = unsafe { std::mem::transmute(boxed) };
+        let job = Job { state: Arc::clone(&self.state), task: boxed };
+        let tx = inbox().lock().unwrap_or_else(PoisonError::into_inner);
+        tx.send(job).expect("overlap worker alive for the process lifetime");
+        drop(tx);
+        self.submitted += 1;
+    }
+
+    fn wait_all(&self) -> (Duration, Option<Box<dyn std::any::Any + Send>>) {
+        let t0 = Instant::now();
+        let mut b = self.state.board.lock().unwrap_or_else(PoisonError::into_inner);
+        while b.done < self.submitted {
+            b = self
+                .state
+                .cv
+                .wait(b)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+        let exposed = t0.elapsed();
+        (exposed, b.panic.take())
+    }
+
+    /// Block until every deferred task completed; re-throw the first
+    /// task panic, otherwise report the hidden/exposed timing split.
+    pub fn drain(mut self) -> OverlapStats {
+        let (exposed, panic) = self.wait_all();
+        self.drained = true;
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+        let b = self.state.board.lock().unwrap_or_else(PoisonError::into_inner);
+        let busy = b.busy;
+        drop(b);
+        OverlapStats { hidden: busy.saturating_sub(exposed), exposed }
+    }
+}
+
+impl Drop for OverlapScope<'_> {
+    fn drop(&mut self) {
+        if self.drained {
+            return;
+        }
+        // Unwind path: the deferred closures borrow the caller's frames,
+        // so we MUST outwait the worker before those frames die. Panics
+        // recorded on the board are swallowed here — either the thread
+        // is already panicking, or the caller chose not to drain.
+        let _ = self.wait_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_mode_parses_and_defaults() {
+        assert_eq!(OverlapMode::parse("off"), Some(OverlapMode::Off));
+        assert_eq!(OverlapMode::parse("dw"), Some(OverlapMode::Dw));
+        assert_eq!(OverlapMode::parse("dw+comm"), Some(OverlapMode::DwComm));
+        assert_eq!(OverlapMode::parse("dwcomm"), None);
+        assert_eq!(OverlapMode::parse(""), None);
+        assert_eq!(OverlapMode::Off.name(), "off");
+        assert_eq!(OverlapMode::Dw.name(), "dw");
+        assert_eq!(OverlapMode::DwComm.name(), "dw+comm");
+        assert!(!OverlapMode::Off.dw());
+        assert!(OverlapMode::Dw.dw() && !OverlapMode::Dw.comm());
+        assert!(OverlapMode::DwComm.dw() && OverlapMode::DwComm.comm());
+    }
+
+    #[test]
+    fn set_overlap_overrides_and_restores() {
+        set_overlap(Some(OverlapMode::Off));
+        assert_eq!(overlap_mode(), OverlapMode::Off);
+        set_overlap(Some(OverlapMode::Dw));
+        assert_eq!(overlap_mode(), OverlapMode::Dw);
+        set_overlap(None);
+        // back to env/default — either way a valid mode
+        let m = overlap_mode();
+        assert!(!m.name().is_empty());
+    }
+
+    #[test]
+    fn scope_runs_tasks_in_fifo_order() {
+        let mut order: Vec<usize> = Vec::new();
+        {
+            let mut scope = OverlapScope::new();
+            let cell = Mutex::new(&mut order);
+            for i in 0..16 {
+                scope.defer(|_ws| {
+                    cell.lock().unwrap().push(i);
+                });
+            }
+            scope.drain();
+        }
+        assert_eq!(order, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concurrent_scopes_only_wait_on_their_own_tasks() {
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let total = std::sync::atomic::AtomicUsize::new(0);
+                    let mut scope = OverlapScope::new();
+                    for _ in 0..8 {
+                        scope.defer(|_ws| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                    scope.drain();
+                    assert_eq!(total.load(Ordering::Relaxed), 8);
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn task_panic_rethrows_at_drain_and_worker_survives() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let mut scope = OverlapScope::new();
+            scope.defer(|_ws| panic!("deferred boom"));
+            scope.drain();
+        }));
+        assert!(caught.is_err());
+        // the worker thread must still be serving tasks afterwards
+        let mut ok = false;
+        {
+            let mut scope = OverlapScope::new();
+            let flag = Mutex::new(&mut ok);
+            scope.defer(|_ws| {
+                **flag.lock().unwrap() = true;
+            });
+            scope.drain();
+        }
+        assert!(ok);
+    }
+
+    #[test]
+    fn drop_without_drain_still_waits() {
+        let mut hits = 0usize;
+        {
+            // declared before the scope so it outlives the drop guard's
+            // wait (drop order is reverse declaration order)
+            let cell = Mutex::new(&mut hits);
+            let mut scope = OverlapScope::new();
+            scope.defer(|_ws| {
+                std::thread::sleep(Duration::from_millis(5));
+                **cell.lock().unwrap() += 1;
+            });
+            // dropped un-drained: the guard must block until the task ran
+        }
+        assert_eq!(hits, 1);
+    }
+}

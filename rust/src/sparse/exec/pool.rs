@@ -38,6 +38,18 @@
 //! The pre-PR-5 `std::thread::scope` spawn-per-call path survives as the
 //! `PIXELFLY_POOL=scoped` fallback and as the oracle the parity tests
 //! and the `pool_dispatch` bench compare the resident runtime against.
+//!
+//! Two properties here are load-bearing for the overlap scheduler
+//! ([`super::overlap`]), which dispatches pool jobs from its own thread
+//! *concurrently* with the training thread's dX chain: every job's
+//! completion is guaranteed by its own caller's participation (resident
+//! help is best-effort, so concurrent dispatchers can never deadlock
+//! each other), and [`STEP_DEPTH`] is process-wide, so deferred dW
+//! sweeps dispatched off-thread inside a [`step_scope`] still get the
+//! spin-before-park fast path. dW bit-identity across worker counts
+//! (each stored slot is swept by exactly one task in a fixed order) is
+//! what lets the overlap worker re-run the same scatter schedule the
+//! serial backward would have.
 
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};

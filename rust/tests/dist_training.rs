@@ -113,6 +113,49 @@ fn grad_fleet_bit_matches_the_single_process_oracle() {
 }
 
 #[test]
+fn overlapped_grad_fleet_bit_matches_the_oracle() {
+    // comm/compute overlap pin: with `PIXELFLY_OVERLAP=dw+comm` forced
+    // on (not just defaulted), workers stream per-layer grad buckets
+    // over PXD1 WHILE backward is still running, and the run must still
+    // bit-match the single-process oracle — the offset-addressed chunk
+    // protocol and the coordinator's rank-ordered averaging make the
+    // overlapped exchange indistinguishable from a post-backward
+    // send_flat. The guard restores the default even on panic.
+    use pixelfly::sparse::exec;
+
+    struct ModeGuard;
+    impl Drop for ModeGuard {
+        fn drop(&mut self) {
+            exec::set_overlap(None);
+        }
+    }
+    exec::set_overlap(Some(exec::OverlapMode::DwComm));
+    let _g = ModeGuard;
+
+    let dist = DistConfig::new(2, 5);
+    let mut oracle = compile_vit(31);
+    let want = simulate_grad_allreduce(&mut oracle, &dist);
+    assert!(want.iter().all(|l| l.is_finite()));
+
+    let (coord, workers) = dist::run_local(
+        dist,
+        vec![(compile_vit(31), WorkerConfig::new("", "pxd-it-ov-w0")),
+             (compile_vit(31), WorkerConfig::new("", "pxd-it-ov-w1"))],
+    )
+    .unwrap();
+
+    assert!(coord.excluded.is_empty());
+    assert_eq!(coord.replacements, 0);
+    assert_loss_bits(&coord.losses, &want, "overlapped coordinator");
+    for w in workers {
+        let w = w.unwrap();
+        assert_loss_bits(&w.losses, &want, "overlapped worker");
+        assert!(w.comm_exposed_ms.is_finite() && w.comm_exposed_ms >= 0.0,
+                "rank {}: exposed comm must be recorded", w.rank);
+    }
+}
+
+#[test]
 fn fedavg_fleet_bit_matches_its_oracle() {
     // federated averaging: 3 local steps per round, params averaged in
     // rank order — fewer, fatter exchanges, same bit-exactness bar

@@ -238,6 +238,60 @@ fn into_decode_rejects_non_causal_models() {
     }
 }
 
+/// Tentpole bit-exactness pin for the overlap scheduler: with
+/// `PIXELFLY_OVERLAP=dw` (deferred dW on the FIFO overlap worker + eager
+/// fused updates) a train step must produce bit-identical gradients AND
+/// bit-identical post-update parameters to the sequential `off`
+/// schedule — across every preset, substrate thread count {1, 4}, and
+/// both pool runtimes. Two steps per leg so momentum state is pinned
+/// too. Off/dw legs run inside ONE test because the mode is
+/// process-global (the guard restores defaults even on panic).
+#[test]
+fn overlap_dw_bit_matches_off_across_presets_threads_and_pools() {
+    use pixelfly::nn::TrainTensors;
+    use pixelfly::sparse::exec::{self, OverlapMode, PoolMode};
+
+    struct ModeGuard;
+    impl Drop for ModeGuard {
+        fn drop(&mut self) {
+            exec::set_overlap(None);
+            exec::set_pool_mode(None);
+            exec::set_threads(0);
+        }
+    }
+    let _g = ModeGuard;
+
+    let run = |mode: OverlapMode, name: &str, seed: u64| -> (Vec<u32>, Vec<u32>) {
+        exec::set_overlap(Some(mode));
+        let mut model = compile_preset(name, 0.2, seed);
+        let mut rng = Rng::new(seed ^ 0xB17);
+        let x = Matrix::randn(model.seq, model.in_dim(), 1.0, &mut rng);
+        let t = Matrix::randn(model.seq, model.out_dim(), 0.5, &mut rng);
+        model.train_step(&x, &t, 5e-3, 0.9);
+        model.train_step(&x, &t, 5e-3, 0.9);
+        let mut flat = Vec::new();
+        model.read_train_flat(TrainTensors::Grads, &mut flat);
+        let grads: Vec<u32> = flat.iter().map(|f| f.to_bits()).collect();
+        model.read_train_flat(TrainTensors::Params, &mut flat);
+        let params: Vec<u32> = flat.iter().map(|f| f.to_bits()).collect();
+        (grads, params)
+    };
+
+    for pool in [PoolMode::Resident, PoolMode::Scoped] {
+        for threads in [1usize, 4] {
+            exec::set_pool_mode(Some(pool));
+            exec::set_threads(threads);
+            for name in PRESETS {
+                let tag = format!("{name} pool={pool:?} threads={threads}");
+                let (g_off, p_off) = run(OverlapMode::Off, name, 41);
+                let (g_dw, p_dw) = run(OverlapMode::Dw, name, 41);
+                assert_eq!(g_off, g_dw, "{tag}: gradients must bit-match");
+                assert_eq!(p_off, p_dw, "{tag}: post-update params must bit-match");
+            }
+        }
+    }
+}
+
 #[test]
 fn different_budgets_compile_to_different_sizes() {
     let lean = compile_preset("vit-s", 0.1, 23);
